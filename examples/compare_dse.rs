@@ -1,0 +1,68 @@
+//! Mini Table-5: GAN vs Large MLP vs DRL vs SA on one design model, with
+//! reduced sizes so it completes in a couple of minutes.  The full
+//! regeneration lives in `gandse bench --exp all` (see EXPERIMENTS.md).
+//!
+//! Run: `make artifacts && cargo run --release --example compare_dse
+//!       [model] [epochs] [n_tasks]`
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use gandse::baselines::DrlConfig;
+use gandse::dataset;
+use gandse::gan::TrainConfig;
+use gandse::harness::{self, tasks_from_dataset};
+use gandse::runtime::Runtime;
+use gandse::space::Meta;
+
+fn main() -> Result<()> {
+    let mut argv = std::env::args().skip(1);
+    let model = argv.next().unwrap_or_else(|| "dnnweaver".into());
+    let epochs: usize = argv.next().and_then(|s| s.parse().ok()).unwrap_or(6);
+    let n_tasks: usize =
+        argv.next().and_then(|s| s.parse().ok()).unwrap_or(100);
+
+    let dir = Path::new("artifacts");
+    let meta = Meta::load(dir)?;
+    let rt = Runtime::new(dir)?;
+    let mm = meta.model(&model)?;
+    let ds = dataset::generate(&mm.spec, 2048, n_tasks, 42);
+    let tasks = tasks_from_dataset(&ds);
+
+    let mut results = Vec::new();
+    eprintln!("running SA...");
+    results.push(harness::run_sa_method(&model, &meta, &tasks, 7)?);
+    eprintln!("running DRL...");
+    results.push(harness::run_drl_method(
+        &model,
+        &meta,
+        &ds,
+        &tasks,
+        DrlConfig { episodes: 200, ..Default::default() },
+        8,
+    )?);
+    eprintln!("running Large MLP...");
+    let mlp = TrainConfig { mlp_mode: true, epochs, ..Default::default() };
+    results.push(harness::run_gan_method(
+        &rt, &meta, &model, &ds, &tasks, &mlp, "Large MLP", 21,
+    )?);
+    for w in [0.0f32, 0.5, 1.0] {
+        eprintln!("running GAN w_critic={w}...");
+        let cfg = TrainConfig { w_critic: w, epochs, ..Default::default() };
+        results.push(harness::run_gan_method(
+            &rt,
+            &meta,
+            &model,
+            &ds,
+            &tasks,
+            &cfg,
+            &format!("GAN w={w}"),
+            22,
+        )?);
+    }
+
+    print!("\n{}", harness::table5(&model, &results));
+    print!("\n{}", harness::fig5(&model, &results));
+    Ok(())
+}

@@ -1,0 +1,80 @@
+//! Quickstart: the full GANDSE pipeline on the DnnWeaver design model.
+//!
+//! 1. generate a labeled dataset (Dataset Generator),
+//! 2. train the GAN for a few epochs through the AOT train-step artifact,
+//! 3. explore: given a conv layer and latency/power objectives, generate
+//!    candidate configurations and select the best (Algorithm 2),
+//! 4. emit the synthesizable Verilog (Implementation Phase).
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use gandse::dataset;
+use gandse::explorer::{DseRequest, Explorer};
+use gandse::gan::{GanState, TrainConfig, Trainer};
+use gandse::rtl;
+use gandse::runtime::Runtime;
+use gandse::space::Meta;
+
+fn main() -> Result<()> {
+    let model = "dnnweaver";
+    let dir = Path::new("artifacts");
+    let meta = Meta::load(dir)?;
+    let rt = Runtime::new(dir)?;
+    let mm = meta.model(model)?;
+
+    // 1. Dataset Generator: even sampling + design-model labels.
+    println!("== generating dataset ==");
+    let ds = dataset::generate(&mm.spec, 2048, 64, 42);
+    println!(
+        "{} train / {} test samples over a {}-point space",
+        ds.train.len(),
+        ds.test.len(),
+        mm.spec.space_size()
+    );
+
+    // 2. Training Phase (Algorithm 1 via the AOT HLO train step).
+    println!("== training GAN (w_critic = 1.0) ==");
+    let state = GanState::init(mm, model, 1);
+    let mut tr = Trainer::new(&rt, &meta, model, state)?;
+    let cfg = TrainConfig {
+        w_critic: 1.0,
+        epochs: 6,
+        lr: 1e-4,
+        log_every: 8,
+        ..Default::default()
+    };
+    tr.train(&ds, &cfg)?;
+    println!("trained {} steps", tr.state.step);
+
+    // 3. Exploration Phase: a 32x32x3x3 conv layer, explicit objectives.
+    println!("== exploring ==");
+    let mut ex =
+        Explorer::new(&rt, &meta, model, tr.state.g.clone(),
+                      ds.stats.to_vec())?;
+    let req = DseRequest {
+        net: [32.0, 32.0, 32.0, 32.0, 3.0, 3.0],
+        lo: 0.01, // latency <= 10 ms
+        po: 1.4,  // power   <= 1.4 W
+    };
+    let res = &ex.explore(&[req])?[0];
+    println!(
+        "satisfied={} latency={:.3e}s power={:.3}W ({} candidates)",
+        res.satisfied, res.latency, res.power, res.n_candidates
+    );
+    for (g, &v) in ex.spec.groups.iter().zip(&res.cfg_raw) {
+        println!("  {} = {}", g.name, v);
+    }
+
+    // 4. Implementation Phase: emit the configured RTL.
+    let verilog = rtl::generate(ex.spec, &res.cfg_raw, "gandse_acc")?;
+    std::fs::write("quickstart_acc.v", &verilog)?;
+    println!(
+        "== wrote quickstart_acc.v ({} lines of Verilog) ==",
+        verilog.lines().count()
+    );
+    Ok(())
+}

@@ -1,0 +1,111 @@
+//! DSE-as-a-service demo: starts the batching DSE server on an ephemeral
+//! port, fires concurrent client requests at it (JSON-lines over TCP), and
+//! reports latency percentiles + throughput + achieved batch sizes — the
+//! router-style serving measurement for EXPERIMENTS.md.
+//!
+//! Run: `make artifacts && cargo run --release --example serve_dse
+//!       [n_clients] [reqs_per_client]`
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use gandse::dataset;
+use gandse::explorer::Explorer;
+use gandse::gan::{GanState, TrainConfig, Trainer};
+use gandse::runtime::Runtime;
+use gandse::server;
+use gandse::space::Meta;
+use gandse::util::json::Json;
+use gandse::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let mut argv = std::env::args().skip(1);
+    let n_clients: usize =
+        argv.next().and_then(|s| s.parse().ok()).unwrap_or(8);
+    let per_client: usize =
+        argv.next().and_then(|s| s.parse().ok()).unwrap_or(50);
+
+    let model = "dnnweaver";
+    let dir = Path::new("artifacts");
+    let meta: &'static Meta = Box::leak(Box::new(Meta::load(dir)?));
+    let rt: &'static Runtime = Box::leak(Box::new(Runtime::new(dir)?));
+    let mm = meta.model(model)?;
+
+    // quick training so the server answers with a real generator
+    let ds = dataset::generate(&mm.spec, 1024, 32, 42);
+    let mut tr =
+        Trainer::new(rt, meta, model, GanState::init(mm, model, 1))?;
+    tr.train(&ds, &TrainConfig { epochs: 4, ..Default::default() })?;
+    let ex = Explorer::new(rt, meta, model, tr.state.g.clone(),
+                           ds.stats.to_vec())?;
+
+    let handle =
+        server::serve("127.0.0.1:0", ex, meta.infer_batch,
+                      Duration::from_millis(4))?;
+    let addr = handle.addr;
+    println!("server on {addr}; {n_clients} clients x {per_client} requests");
+
+    let t0 = Instant::now();
+    let mut threads = Vec::new();
+    for c in 0..n_clients {
+        threads.push(std::thread::spawn(move || -> Vec<f64> {
+            let mut rng = Rng::new(c as u64 + 100);
+            let stream = TcpStream::connect(addr).unwrap();
+            stream.set_nodelay(true).unwrap();
+            let mut writer = stream.try_clone().unwrap();
+            let mut reader = BufReader::new(stream);
+            let mut latencies = Vec::with_capacity(per_client);
+            let mut line = String::new();
+            for _ in 0..per_client {
+                let req = format!(
+                    r#"{{"net":[{},{},32,32,3,3],"lo":{},"po":{}}}"#,
+                    [16, 32, 64][rng.below(3)],
+                    [16, 32, 64][rng.below(3)],
+                    0.001 + rng.f32() * 0.05,
+                    1.0 + rng.f32()
+                );
+                let t = Instant::now();
+                writer.write_all(req.as_bytes()).unwrap();
+                writer.write_all(b"\n").unwrap();
+                line.clear();
+                reader.read_line(&mut line).unwrap();
+                latencies.push(t.elapsed().as_secs_f64());
+                let v = Json::parse(line.trim()).expect("valid response");
+                assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true));
+            }
+            latencies
+        }));
+    }
+    let mut all: Vec<f64> = Vec::new();
+    for t in threads {
+        all.extend(t.join().unwrap());
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct =
+        |p: f64| all[((all.len() as f64 * p) as usize).min(all.len() - 1)];
+    let (batches, items) = handle.stats();
+    println!(
+        "throughput: {:.0} req/s over {:.2}s ({} requests)",
+        all.len() as f64 / wall,
+        wall,
+        all.len()
+    );
+    println!(
+        "latency: p50={:.1}ms p90={:.1}ms p99={:.1}ms",
+        pct(0.50) * 1e3,
+        pct(0.90) * 1e3,
+        pct(0.99) * 1e3
+    );
+    println!(
+        "dynamic batching: {} batches, avg {:.1} reqs/batch",
+        batches,
+        items as f64 / batches.max(1) as f64
+    );
+    handle.shutdown();
+    Ok(())
+}

@@ -1,0 +1,216 @@
+"""AOT compile path: lower the L2/L1 graph to HLO text for the Rust runtime.
+
+Emits, per design model (im2col, dnnweaver):
+
+  artifacts/train_step_<model>.hlo.txt   one Algorithm-1 mini-batch
+  artifacts/g_infer_<model>.hlo.txt      generator inference (batch)
+  artifacts/d_infer_<model>.hlo.txt      discriminator inference (batch)
+  artifacts/design_eval_<model>.hlo.txt  batched design-model evaluation
+
+plus ``artifacts/meta.json`` (design-space spec + parameter layouts + batch
+sizes — the Rust side's contract) and ``artifacts/golden_<model>.json``
+(design-model input/output vectors checked by ``cargo test``).
+
+HLO *text* is the interchange format, NOT ``lowered.compile()`` or proto
+``.serialize()``: jax >= 0.5 emits HloModuleProto with 64-bit instruction
+ids which xla_extension 0.5.1 (the published ``xla`` 0.1.6 crate's XLA)
+rejects; the text parser reassigns ids and round-trips cleanly.
+See /opt/xla-example/load_hlo and its gen_hlo.py.
+
+Python runs ONCE here (``make artifacts``); it is never on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as gm
+from .dse_spec import N_NET, N_OBJ, NOISE_DIM, SPECS
+from .kernels.design_eval import design_eval
+
+STATS_LEN = 2 * N_NET + 2 * N_OBJ  # net mean/std + obj mean/std
+
+
+def to_hlo_text(lowered, return_tuple: bool = True) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=return_tuple
+    )
+    return comp.as_hlo_text()
+
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def lower_train_step(cfg: gm.GanConfig, batch: int) -> str:
+    spec = cfg.spec
+    gl, dl = cfg.g_layout.total, cfg.d_layout.total
+
+    def fn(g, d, mg, vg, md, vd, net, onehot, obj, noise, stats, knobs):
+        return gm.train_step(cfg, g, d, mg, vg, md, vd, net, onehot, obj,
+                             noise, stats, knobs)
+
+    lowered = jax.jit(fn).lower(
+        _f32(gl), _f32(dl), _f32(gl), _f32(gl), _f32(dl), _f32(dl),
+        _f32(batch, N_NET), _f32(batch, spec.onehot_dim),
+        _f32(batch, N_OBJ), _f32(batch, NOISE_DIM),
+        _f32(STATS_LEN), _f32(4),
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_train_step_fused(cfg: gm.GanConfig, batch: int) -> str:
+    """Single-array-in/out variant for device-resident training state
+    (return_tuple=False => the result buffer feeds back as an input)."""
+    spec = cfg.spec
+    fl = gm.fused_state_len(cfg)
+
+    def fn(fused, net, onehot, obj, noise, stats, knobs):
+        return gm.train_step_fused(cfg, fused, net, onehot, obj, noise,
+                                   stats, knobs)
+
+    lowered = jax.jit(fn).lower(
+        _f32(fl),
+        _f32(batch, N_NET), _f32(batch, spec.onehot_dim),
+        _f32(batch, N_OBJ), _f32(batch, NOISE_DIM),
+        _f32(STATS_LEN), _f32(4),
+    )
+    return to_hlo_text(lowered, return_tuple=False)
+
+
+def lower_g_infer(cfg: gm.GanConfig, batch: int) -> str:
+    def fn(g, net, obj, noise, stats):
+        return (gm.g_infer(cfg, g, net, obj, noise, stats),)
+
+    lowered = jax.jit(fn).lower(
+        _f32(cfg.g_layout.total), _f32(batch, N_NET), _f32(batch, N_OBJ),
+        _f32(batch, NOISE_DIM), _f32(STATS_LEN),
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_d_infer(cfg: gm.GanConfig, batch: int) -> str:
+    spec = cfg.spec
+
+    def fn(d, net, probs, obj, stats):
+        return (gm.d_infer(cfg, d, net, probs, obj, stats),)
+
+    lowered = jax.jit(fn).lower(
+        _f32(cfg.d_layout.total), _f32(batch, N_NET),
+        _f32(batch, spec.onehot_dim), _f32(batch, N_OBJ), _f32(STATS_LEN),
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_design_eval(model: str, n_groups: int, batch: int) -> str:
+    fn = functools.partial(design_eval, model)
+    lowered = jax.jit(fn).lower(_f32(batch, N_NET), _f32(batch, n_groups))
+    return to_hlo_text(lowered)
+
+
+def golden_design_model(model: str, n: int = 64, seed: int = 7) -> dict:
+    """Deterministic design-model vectors for the Rust parity test."""
+    from .dse_spec import NET_CHOICES, NET_FIELDS
+    spec = SPECS[model]
+    rng = np.random.default_rng(seed)
+    net = np.stack(
+        [rng.choice(NET_CHOICES[f], size=n) for f in NET_FIELDS], axis=-1
+    ).astype(np.float32)
+    cfg = np.stack(
+        [rng.choice(g.choices, size=n) for g in spec.groups], axis=-1
+    ).astype(np.float32)
+    from . import design_models
+    lat, pw = design_models.eval_model(model, jnp.asarray(net),
+                                       jnp.asarray(cfg))
+    return {
+        "net": net.tolist(),
+        "cfg": cfg.tolist(),
+        "latency": np.asarray(lat).tolist(),
+        "power": np.asarray(pw).tolist(),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/model.hlo.txt",
+                    help="Makefile stamp path; artifacts land in its dir")
+    ap.add_argument("--width", type=int, default=256)
+    ap.add_argument("--g-depth", type=int, default=6)
+    ap.add_argument("--d-depth", type=int, default=6)
+    ap.add_argument("--train-batch", type=int, default=256)
+    ap.add_argument("--infer-batch", type=int, default=256)
+    ap.add_argument("--models", default="im2col,dnnweaver")
+    args = ap.parse_args()
+
+    out_dir = os.path.dirname(os.path.abspath(args.out))
+    os.makedirs(out_dir, exist_ok=True)
+
+    meta = {
+        "stats_len": STATS_LEN,
+        "train_batch": args.train_batch,
+        "infer_batch": args.infer_batch,
+        "width": args.width,
+        "g_depth": args.g_depth,
+        "d_depth": args.d_depth,
+        "noise_dim": NOISE_DIM,
+        "adam": {"b1": gm.ADAM_B1, "b2": gm.ADAM_B2, "eps": gm.ADAM_EPS},
+        "models": {},
+    }
+
+    for name in args.models.split(","):
+        spec = SPECS[name]
+        cfg = gm.GanConfig(spec, width=args.width, g_depth=args.g_depth,
+                           d_depth=args.d_depth)
+        arts = {
+            f"train_step_{name}.hlo.txt":
+                lambda: lower_train_step(cfg, args.train_batch),
+            f"train_step_fused_{name}.hlo.txt":
+                lambda: lower_train_step_fused(cfg, args.train_batch),
+            f"g_infer_{name}.hlo.txt":
+                lambda: lower_g_infer(cfg, args.infer_batch),
+            f"d_infer_{name}.hlo.txt":
+                lambda: lower_d_infer(cfg, args.infer_batch),
+            f"design_eval_{name}.hlo.txt":
+                lambda: lower_design_eval(name, len(spec.groups),
+                                          args.infer_batch),
+        }
+        for fname, thunk in arts.items():
+            text = thunk()
+            path = os.path.join(out_dir, fname)
+            with open(path, "w") as f:
+                f.write(text)
+            print(f"wrote {path} ({len(text)} chars)")
+
+        with open(os.path.join(out_dir, f"golden_{name}.json"), "w") as f:
+            json.dump(golden_design_model(name), f)
+
+        meta["models"][name] = {
+            "spec": spec.to_json(),
+            "g_params": cfg.g_layout.total,
+            "d_params": cfg.d_layout.total,
+            "fused_state_len": gm.fused_state_len(cfg),
+            "fused_metrics": gm.FUSED_METRICS,
+            "g_dims": list(cfg.g_layout.dims),
+            "d_dims": list(cfg.d_layout.dims),
+            "artifacts": sorted(arts.keys()),
+        }
+
+    with open(os.path.join(out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    # Makefile stamp file.
+    with open(os.path.join(out_dir, "model.hlo.txt"), "w") as f:
+        f.write("see per-model artifacts in this directory\n")
+    print(f"wrote {out_dir}/meta.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,170 @@
+"""Analytical design models (Section 7.1.1), batched jnp implementations.
+
+Two models, both output-stationary CNN accelerators:
+
+* ``im2col`` — a GPU-like im2col dataflow with a 3-phase pipelined tile
+  schedule (load / compute / write-back, Section 7.1).  Latency comes from a
+  roofline over DRAM->SRAM bandwidth (DSB), SRAM->DRAM bandwidth (SDB) and
+  on-chip compute (PEN); power combines a static model (leakage ~ resources)
+  with a dynamic model (energy per MAC / SRAM access / DRAM byte divided by
+  latency).  12 configuration groups (Table 1).
+
+* ``dnnweaver`` — a systolic-array model calibrated in the paper against the
+  DnnWeaver v2 RTL.  4 configuration groups: PE count + 3 SRAM sizes; DRAM
+  bandwidths are fixed properties of the template.
+
+The Rust twins live in ``rust/src/model/`` and follow the SAME operation
+order so f32 results match bit-for-bit; ``aot.py`` emits golden vectors that
+``cargo test`` checks against.
+
+These functions are evaluated *forward only* inside the GAN train step
+(wrapped in ``stop_gradient``): Algorithm 1 uses them to decide which loss
+applies and to label D — exactly the property (Section 4) that makes the
+naive Figure 3(b) scheme non-viable and motivates the GAN.
+
+Raw inputs, raw outputs: latency in seconds at a 1 GHz clock, power in watts.
+Normalization (by dataset std, Section 6.1) happens outside.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+CLOCK_HZ = 1.0e9  # 1 GHz target clock for both templates
+
+# Energy / leakage calibration constants.  The paper calibrates against
+# Vivado synthesis of the DnnWeaver RTL; we substitute fixed constants in
+# the same structural model (see DESIGN.md "Substitutions").
+IM2COL_P0 = 0.05       # base static power (W)
+IM2COL_P_PE = 5.0e-4   # W per PE
+IM2COL_P_SRAM = 2.0e-6  # W per SRAM byte
+IM2COL_P_BW = 2.0e-4   # W per byte/cycle of DRAM interface width
+IM2COL_E_MAC = 1.0e-12   # J per MAC
+IM2COL_E_SRAM = 0.5e-12  # J per SRAM byte access
+IM2COL_E_DRAM = 20.0e-12  # J per DRAM byte
+
+DNNW_P0 = 0.02
+DNNW_P_PE = 2.0e-3
+DNNW_P_SRAM = 5.0e-6
+DNNW_E_MAC = 0.8e-12
+DNNW_E_SRAM = 0.5e-12
+DNNW_E_DRAM = 20.0e-12
+DNNW_BW = 64.0  # bytes/cycle, fixed for the DnnWeaver template
+
+
+def _ceil_div(a, b):
+    return jnp.ceil(a / b)
+
+
+def im2col_model(net, cfg):
+    """im2col design model.
+
+    net: f32[..., 6]  = (IC, OC, OW, OH, KW, KH)
+    cfg: f32[..., 12] = (PEN, SDB, DSB, ISS, WSS, OSS,
+                         TIC, TOC, TOW, TOH, TKW, TKH)
+    returns (latency_s, power_w) with shape net.shape[:-1].
+    """
+    ic, oc, ow, oh, kw, kh = [net[..., i] for i in range(6)]
+    (pen, sdb, dsb, iss, wss, oss,
+     tic, toc, tow, toh, tkw, tkh) = [cfg[..., i] for i in range(12)]
+
+    # Effective tile never exceeds the layer dimension.
+    tic = jnp.minimum(tic, ic)
+    toc = jnp.minimum(toc, oc)
+    tow = jnp.minimum(tow, ow)
+    toh = jnp.minimum(toh, oh)
+    tkw = jnp.minimum(tkw, kw)
+    tkh = jnp.minimum(tkh, kh)
+
+    n_tiles = (_ceil_div(ic, tic) * _ceil_div(oc, toc)
+               * _ceil_div(ow, tow) * _ceil_div(oh, toh)
+               * _ceil_div(kw, tkw) * _ceil_div(kh, tkh))
+
+    tile_macs = tic * toc * tow * toh * tkw * tkh
+    compute = _ceil_div(tile_macs, pen)
+
+    # im2col input patch for one tile (int8 activations, 1 byte/element).
+    in_bytes = tic * (tow + tkw - 1.0) * (toh + tkh - 1.0)
+    w_bytes = toc * tic * tkw * tkh
+    o_bytes = toc * tow * toh
+
+    # SRAM overflow => re-fetch from DRAM (capacity-miss factor).
+    f_in = jnp.maximum(1.0, in_bytes / iss)
+    f_w = jnp.maximum(1.0, w_bytes / wss)
+    f_o = jnp.maximum(1.0, o_bytes / oss)
+
+    load = _ceil_div(in_bytes * f_in + w_bytes * f_w, dsb)
+    # Output-stationary: partial sums stay on chip across the reduction
+    # (IC, KW, KH) tiles; write-back is amortized over them.
+    red_tiles = (_ceil_div(ic, tic) * _ceil_div(kw, tkw)
+                 * _ceil_div(kh, tkh))
+    wb = _ceil_div(o_bytes * f_o / red_tiles, sdb)
+
+    bottleneck = jnp.maximum(load, jnp.maximum(compute, wb))
+    # 3-phase pipeline: steady state at the bottleneck + fill/drain.
+    cycles = n_tiles * bottleneck + (load + compute + wb - bottleneck)
+    latency = cycles / CLOCK_HZ
+
+    # Power = static + dynamic (total energy / latency).
+    p_static = (IM2COL_P0 + IM2COL_P_PE * pen
+                + IM2COL_P_SRAM * (iss + wss + oss)
+                + IM2COL_P_BW * (sdb + dsb))
+    macs_total = n_tiles * tile_macs
+    sram_acc = 3.0 * macs_total  # read act, read weight, update psum
+    dram_bytes = n_tiles * (in_bytes * f_in + w_bytes * f_w) \
+        + (oc * ow * oh) * f_o
+    energy = (IM2COL_E_MAC * macs_total + IM2COL_E_SRAM * sram_acc
+              + IM2COL_E_DRAM * dram_bytes)
+    power = p_static + energy / latency
+    return latency, power
+
+
+def dnnweaver_model(net, cfg):
+    """DnnWeaver systolic-array design model.
+
+    net: f32[..., 6] = (IC, OC, OW, OH, KW, KH)
+    cfg: f32[..., 4] = (PEN, ISS, WSS, OSS)
+    returns (latency_s, power_w).
+    """
+    ic, oc, ow, oh, kw, kh = [net[..., i] for i in range(6)]
+    pen, iss, wss, oss = [cfg[..., i] for i in range(4)]
+
+    macs = ic * oc * ow * oh * kw * kh
+    # Systolic under-utilization when the mapped dimension is narrower
+    # than the array.
+    eff_pe = jnp.minimum(pen, oc * kw * kh)
+    compute = _ceil_div(macs, eff_pe)
+
+    in_total = ic * (ow + kw - 1.0) * (oh + kh - 1.0)
+    w_total = ic * oc * kw * kh
+    out_total = oc * ow * oh
+
+    # Weight-stationary passes: if the weight buffer can't hold all
+    # filters, inputs are streamed once per pass.
+    n_pass = _ceil_div(w_total, wss)
+    f_in = jnp.maximum(1.0, in_total / iss)
+    f_out = jnp.maximum(1.0, out_total / oss)
+
+    load = _ceil_div(in_total * n_pass * f_in + w_total, DNNW_BW)
+    wb = _ceil_div(out_total * f_out, DNNW_BW)
+
+    bottleneck = jnp.maximum(load, jnp.maximum(compute, wb))
+    cycles = bottleneck + (load + compute + wb - bottleneck)
+    latency = cycles / CLOCK_HZ
+
+    p_static = DNNW_P0 + DNNW_P_PE * pen + DNNW_P_SRAM * (iss + wss + oss)
+    sram_acc = 3.0 * macs
+    dram_bytes = in_total * n_pass * f_in + w_total + out_total * f_out
+    energy = (DNNW_E_MAC * macs + DNNW_E_SRAM * sram_acc
+              + DNNW_E_DRAM * dram_bytes)
+    power = p_static + energy / latency
+    return latency, power
+
+
+def eval_model(model: str, net, cfg):
+    """Dispatch by design-model name."""
+    if model == "im2col":
+        return im2col_model(net, cfg)
+    if model == "dnnweaver":
+        return dnnweaver_model(net, cfg)
+    raise ValueError(f"unknown design model {model!r}")

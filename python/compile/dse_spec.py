@@ -1,0 +1,130 @@
+"""Design-space specification — the single source of truth shared with Rust.
+
+Defines, per design model (``im2col`` and ``dnnweaver``):
+  * the network-parameter fields (a single CNN layer's shape, Table 1),
+  * the configuration groups (architecture parameters + mapping strategies)
+    with their discrete choice lists (one-hot encoded, Section 6.1),
+  * the input encodings of G and D,
+  * the flattened-parameter layout of the GAN.
+
+``aot.py`` serializes this into ``artifacts/meta.json``; the Rust
+coordinator (``rust/src/space``) parses that file so that both sides agree
+bit-for-bit on encodings and layouts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+
+@dataclasses.dataclass(frozen=True)
+class ConfigGroup:
+    """One one-hot-encoded configuration (e.g. "PE Number")."""
+
+    name: str  # short name used in tables (PEN, ISS, ...)
+    choices: List[float]  # the discrete values a user may pick
+
+    @property
+    def size(self) -> int:
+        return len(self.choices)
+
+
+# Network-parameter fields: a single CNN layer (Table 1 / Table 2).
+NET_FIELDS = ["IC", "OC", "OW", "OH", "KW", "KH"]
+
+# Values the dataset generator samples network parameters from (Table 2
+# shows IC/OC in {16..128}, OW/OH in {16..64}, KW/KH in {1,3,5}).
+NET_CHOICES = {
+    "IC": [16.0, 32.0, 64.0, 128.0],
+    "OC": [16.0, 32.0, 64.0, 128.0],
+    "OW": [16.0, 32.0, 64.0],
+    "OH": [16.0, 32.0, 64.0],
+    "KW": [1.0, 3.0, 5.0],
+    "KH": [1.0, 3.0, 5.0],
+}
+
+# --- im2col model: 12 configuration groups, 61 one-hot slots, ---------------
+# |space| = 6 * 5^11 ~ 2.9e8 ("high dimension large design space").
+IM2COL_GROUPS = [
+    ConfigGroup("PEN", [64.0, 128.0, 256.0, 512.0, 1024.0, 2048.0]),
+    ConfigGroup("SDB", [32.0, 64.0, 128.0, 256.0, 512.0]),
+    ConfigGroup("DSB", [32.0, 64.0, 128.0, 256.0, 512.0]),
+    ConfigGroup("ISS", [512.0, 1024.0, 2048.0, 4096.0, 8192.0]),
+    ConfigGroup("WSS", [512.0, 1024.0, 2048.0, 4096.0, 8192.0]),
+    ConfigGroup("OSS", [512.0, 1024.0, 2048.0, 4096.0, 8192.0]),
+    ConfigGroup("TIC", [4.0, 8.0, 16.0, 32.0, 64.0]),
+    ConfigGroup("TOC", [4.0, 8.0, 16.0, 32.0, 64.0]),
+    ConfigGroup("TOW", [4.0, 8.0, 16.0, 32.0, 64.0]),
+    ConfigGroup("TOH", [4.0, 8.0, 16.0, 32.0, 64.0]),
+    ConfigGroup("TKW", [1.0, 2.0, 3.0, 4.0, 5.0]),
+    ConfigGroup("TKH", [1.0, 2.0, 3.0, 4.0, 5.0]),
+]
+
+# --- DnnWeaver model: 4 groups, 21 slots, |space| = 750 (small). ------------
+DNNW_GROUPS = [
+    ConfigGroup("PEN", [8.0, 16.0, 32.0, 64.0, 128.0, 256.0]),
+    ConfigGroup("ISS", [128.0, 256.0, 512.0, 1024.0, 2048.0]),
+    ConfigGroup("WSS", [128.0, 256.0, 512.0, 1024.0, 2048.0]),
+    ConfigGroup("OSS", [128.0, 256.0, 512.0, 1024.0, 2048.0]),
+]
+
+NOISE_DIM = 8  # G's small random-noise input (Fig. 2 note)
+N_NET = len(NET_FIELDS)
+N_OBJ = 2  # latency, power
+
+
+@dataclasses.dataclass(frozen=True)
+class SpaceSpec:
+    """Full specification of one design model's exploration problem."""
+
+    model: str  # "im2col" | "dnnweaver"
+    groups: List[ConfigGroup]
+
+    @property
+    def onehot_dim(self) -> int:
+        return sum(g.size for g in self.groups)
+
+    @property
+    def group_offsets(self) -> List[int]:
+        offs, acc = [], 0
+        for g in self.groups:
+            offs.append(acc)
+            acc += g.size
+        return offs
+
+    # NN input dims -----------------------------------------------------
+    @property
+    def g_in(self) -> int:
+        return N_NET + N_OBJ + NOISE_DIM
+
+    @property
+    def d_in(self) -> int:
+        return N_NET + self.onehot_dim + N_OBJ
+
+    def to_json(self) -> dict:
+        return {
+            "model": self.model,
+            "net_fields": NET_FIELDS,
+            "net_choices": NET_CHOICES,
+            "noise_dim": NOISE_DIM,
+            "groups": [
+                {"name": g.name, "choices": g.choices} for g in self.groups
+            ],
+            "onehot_dim": self.onehot_dim,
+            "g_in": self.g_in,
+            "d_in": self.d_in,
+        }
+
+
+IM2COL = SpaceSpec("im2col", IM2COL_GROUPS)
+DNNWEAVER = SpaceSpec("dnnweaver", DNNW_GROUPS)
+
+SPECS = {"im2col": IM2COL, "dnnweaver": DNNWEAVER}
+
+
+def spec_for(model: str) -> SpaceSpec:
+    try:
+        return SPECS[model]
+    except KeyError:  # pragma: no cover - CLI misuse
+        raise ValueError(f"unknown design model {model!r}") from None

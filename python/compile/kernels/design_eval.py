@@ -1,0 +1,60 @@
+"""L1 Pallas kernel: batched design-model evaluation.
+
+The Algorithm-1 train step evaluates the analytical design model on every
+generated configuration of every batch (Lines 7-8), and the Rust explorer
+may evaluate thousands of candidate sets per DSE task — this is the design
+model's hot loop.  The kernel blocks the batch dimension (pure VPU
+elementwise work, no MXU) and reuses the jnp model bodies from
+``design_models`` inside the kernel, so the Pallas kernel and the L2 oracle
+cannot drift.
+
+``interpret=True`` — see fused_linear.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import design_models
+
+BLOCK = 128
+
+
+def _eval_kernel(net_ref, cfg_ref, lat_ref, pow_ref, *, model: str):
+    lat, pw = design_models.eval_model(model, net_ref[...], cfg_ref[...])
+    lat_ref[...] = lat
+    pow_ref[...] = pw
+
+
+def design_eval(model: str, net: jax.Array, cfg: jax.Array):
+    """Evaluate the design model over a batch.
+
+    net: f32[B, 6] raw network parameters.
+    cfg: f32[B, n_groups] raw configuration values.
+    returns (latency_s f32[B], power_w f32[B]).
+    """
+    b, _ = net.shape
+    n_cfg = cfg.shape[1]
+    blk = BLOCK if b % BLOCK == 0 else b
+    kern = functools.partial(_eval_kernel, model=model)
+    return pl.pallas_call(
+        kern,
+        grid=(b // blk,),
+        in_specs=[
+            pl.BlockSpec((blk, 6), lambda i: (i, 0)),
+            pl.BlockSpec((blk, n_cfg), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+        ],
+        interpret=True,
+    )(net, cfg)

@@ -1,0 +1,125 @@
+"""L1 Pallas kernels: fused linear layer (matmul + bias + ReLU) fwd/bwd.
+
+Every hidden layer of both GAN networks (G and D) runs through
+``fused_linear``; the backward pass is wired with ``jax.custom_vjp`` onto
+Pallas matmul kernels, so the whole Algorithm-1 train step's FLOPs live in
+these kernels.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): blocks target the MXU — when a
+dimension is a multiple of 128 we tile it at 128 (MXU systolic edge), else
+the dimension is small (e.g. the 61-slot one-hot head) and we keep it whole;
+the contraction dim stays unblocked (max 2048 here => x-block + w-block +
+o-block ≤ ~2.5 MB f32, comfortably inside 16 MB VMEM with room for double
+buffering).  BlockSpec expresses the HBM<->VMEM schedule.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret-mode lowers to plain HLO so the Rust runtime can run
+the artifacts.  Correctness vs the pure-jnp oracle is asserted in
+``python/tests/test_kernels.py`` (hypothesis shape/dtype sweeps).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+MXU_EDGE = 128
+
+# Tiling policy switch (§Perf).  On a real TPU the MXU-aligned 128-edge
+# tiling is what you want; under interpret=True on CPU every grid step
+# lowers to an HLO while-loop + dynamic-slice, which costs far more than
+# it saves (measured: ~1.9x on the train step).  The CPU artifacts
+# therefore default to whole-array blocks (grid=1); set
+# GANDSE_TPU_TILING=1 when lowering for a TPU target.
+import os
+
+TPU_TILING = os.environ.get("GANDSE_TPU_TILING", "0") == "1"
+
+
+def _block(dim: int, pref: int = MXU_EDGE) -> int:
+    """Block size for one dimension: MXU-aligned when tiling for TPU,
+    whole-array for the CPU interpret path."""
+    if TPU_TILING and dim % pref == 0:
+        return pref
+    return dim
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    o_ref[...] = jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Tiled Pallas matmul: f32[M,K] @ f32[K,N] -> f32[M,N]."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    bm, bn = _block(m), _block(n)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w)
+
+
+def _fused_linear_kernel(x_ref, w_ref, b_ref, o_ref, *, activate: bool):
+    y = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    y = y + b_ref[...][None, :]
+    if activate:
+        y = jnp.maximum(y, 0.0)
+    o_ref[...] = y
+
+
+def _fused_linear_fwd_call(x, w, b, activate: bool):
+    m, k = x.shape
+    _, n = w.shape
+    bm, bn = _block(m), _block(n)
+    kern = functools.partial(_fused_linear_kernel, activate=activate)
+    return pl.pallas_call(
+        kern,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w, b)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def fused_linear(x, w, b, activate: bool = True):
+    """y = relu(x @ w + b) (or affine only when ``activate=False``)."""
+    return _fused_linear_fwd_call(x, w, b, activate)
+
+
+def _fused_linear_vjp_fwd(x, w, b, activate):
+    y = _fused_linear_fwd_call(x, w, b, activate)
+    return y, (x, w, y)
+
+
+def _fused_linear_vjp_bwd(activate, res, g):
+    x, w, y = res
+    if activate:
+        # ReLU residual: the post-activation output doubles as the mask.
+        g = g * (y > 0.0).astype(g.dtype)
+    # dx = g @ w^T ; dw = x^T @ g — both through the Pallas matmul kernel.
+    dx = matmul(g, w.T)
+    dw = matmul(x.T, g)
+    db = jnp.sum(g, axis=0)
+    return dx, dw, db
+
+
+fused_linear.defvjp(_fused_linear_vjp_fwd, _fused_linear_vjp_bwd)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracles for the Pallas kernels (the CORE correctness signal).
+
+``python/tests/test_kernels.py`` asserts allclose between each Pallas kernel
+and its oracle across hypothesis-driven shape/dtype sweeps, including the
+custom-vjp backward passes (checked against ``jax.vjp`` of the oracle).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .. import design_models
+
+
+def matmul_ref(x, w):
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def fused_linear_ref(x, w, b, activate: bool = True):
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32) + b[None, :]
+    if activate:
+        y = jnp.maximum(y, 0.0)
+    return y
+
+
+def design_eval_ref(model: str, net, cfg):
+    return design_models.eval_model(model, net, cfg)

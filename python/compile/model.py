@@ -1,0 +1,316 @@
+"""L2 JAX model: the GANDSE GAN (G + D) and the Algorithm-1 train step.
+
+Everything here is a *pure function* of flat f32 parameter vectors so the
+Rust coordinator can drive training and inference through single-literal
+PJRT inputs/outputs:
+
+  * ``g_forward`` / ``d_forward`` — Pallas-backed MLPs (fused_linear).
+  * ``train_step`` — one mini-batch of Algorithm 1: forward G, decode the
+    generated configuration, evaluate the analytical design model
+    (stop-gradient, Lines 7-8), build the three losses (config / critic /
+    dis, Lines 9-16), backprop and Adam-update both networks (Lines 18-19).
+  * ``g_infer`` / ``d_infer`` — exploration-phase inference.
+
+Encodings (Section 6.1):
+  * configurations are one-hot per group; G emits per-group softmax
+    probabilities (differentiable input to D; thresholded into candidate
+    sets by the Rust explorer),
+  * network parameters and objectives are standardized ((x-mean)/std) with
+    dataset statistics supplied by Rust as an input vector,
+  * D's satisfaction output is a 2-way softmax (one-hot "True"/"False").
+
+The ``mlp_mode`` scalar switches the same artifact into the Large-MLP
+baseline (Figure 3(a) / AIRCHITECT): the config loss applies to every
+sample and the critic loss weight is forced to 0.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import design_models
+from .dse_spec import N_NET, N_OBJ, NOISE_DIM, SpaceSpec
+from .kernels.fused_linear import fused_linear
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+
+# ---------------------------------------------------------------------------
+# Flat-parameter MLP plumbing
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MlpLayout:
+    """Shapes + flat offsets of one MLP's parameters."""
+
+    dims: Tuple[int, ...]  # (in, h, h, ..., out)
+
+    @property
+    def layers(self) -> List[Tuple[int, int]]:
+        return list(zip(self.dims[:-1], self.dims[1:]))
+
+    @property
+    def total(self) -> int:
+        return sum(i * o + o for i, o in self.layers)
+
+    def offsets(self) -> List[Tuple[int, int, int]]:
+        """Per layer: (w_offset, b_offset, end)."""
+        out, acc = [], 0
+        for i, o in self.layers:
+            out.append((acc, acc + i * o, acc + i * o + o))
+            acc += i * o + o
+        return out
+
+    def unflatten(self, flat: jax.Array) -> List[Tuple[jax.Array, jax.Array]]:
+        params = []
+        for (i, o), (wo, bo, end) in zip(self.layers, self.offsets()):
+            w = flat[wo:bo].reshape(i, o)
+            b = flat[bo:end]
+            params.append((w, b))
+        return params
+
+
+def mlp_layout(in_dim: int, width: int, depth: int, out_dim: int) -> MlpLayout:
+    return MlpLayout(tuple([in_dim] + [width] * depth + [out_dim]))
+
+
+def mlp_forward(layout: MlpLayout, flat: jax.Array, x: jax.Array) -> jax.Array:
+    """Unrolled MLP through the Pallas fused_linear kernel; returns logits."""
+    params = layout.unflatten(flat)
+    h = x
+    last = len(params) - 1
+    for i, (w, b) in enumerate(params):
+        h = fused_linear(h, w, b, i != last)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# GANDSE networks
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GanConfig:
+    spec: SpaceSpec
+    width: int = 256
+    g_depth: int = 6
+    d_depth: int = 6
+
+    @property
+    def g_layout(self) -> MlpLayout:
+        return mlp_layout(self.spec.g_in, self.width, self.g_depth,
+                          self.spec.onehot_dim)
+
+    @property
+    def d_layout(self) -> MlpLayout:
+        return mlp_layout(self.spec.d_in, self.width, self.d_depth, 2)
+
+
+def _normalize(x, mean, std):
+    return (x - mean) / std
+
+
+def group_softmax(spec: SpaceSpec, logits: jax.Array) -> jax.Array:
+    """Per-configuration-group softmax over the concatenated one-hot slots."""
+    outs = []
+    for g, off in zip(spec.groups, spec.group_offsets):
+        outs.append(jax.nn.softmax(logits[:, off:off + g.size], axis=-1))
+    return jnp.concatenate(outs, axis=-1)
+
+
+def group_log_softmax(spec: SpaceSpec, logits: jax.Array) -> jax.Array:
+    outs = []
+    for g, off in zip(spec.groups, spec.group_offsets):
+        outs.append(jax.nn.log_softmax(logits[:, off:off + g.size], axis=-1))
+    return jnp.concatenate(outs, axis=-1)
+
+
+def decode_probs(spec: SpaceSpec, probs: jax.Array) -> jax.Array:
+    """Argmax-decode per-group probabilities to raw configuration values."""
+    cols = []
+    for g, off in zip(spec.groups, spec.group_offsets):
+        idx = jnp.argmax(probs[:, off:off + g.size], axis=-1)
+        vals = jnp.asarray(g.choices, dtype=jnp.float32)
+        cols.append(vals[idx])
+    return jnp.stack(cols, axis=-1)
+
+
+def g_forward(cfg: GanConfig, g_flat, net_n, obj_n, noise):
+    """G: (normalized net params, normalized objectives, noise) -> logits."""
+    x = jnp.concatenate([net_n, obj_n, noise], axis=-1)
+    return mlp_forward(cfg.g_layout, g_flat, x)
+
+
+def d_forward(cfg: GanConfig, d_flat, net_n, cfg_probs, obj_n):
+    """D: (normalized net params, config one-hot/probs, objectives) -> 2 logits."""
+    x = jnp.concatenate([net_n, cfg_probs, obj_n], axis=-1)
+    return mlp_forward(cfg.d_layout, d_flat, x)
+
+
+def _split_stats(stats):
+    """stats = [net_mean(6), net_std(6), obj_mean(2), obj_std(2)]."""
+    return (stats[0:N_NET], stats[N_NET:2 * N_NET],
+            stats[2 * N_NET:2 * N_NET + N_OBJ],
+            stats[2 * N_NET + N_OBJ:2 * N_NET + 2 * N_OBJ])
+
+
+def _ce_with_onehot(log_probs, onehot):
+    """Cross entropy, summed over slots, per sample."""
+    return -jnp.sum(onehot * log_probs, axis=-1)
+
+
+def _binary_ce(logits, true_frac):
+    """CE against a one-hot label: true_frac in {0,1} per sample.
+
+    logits: [B, 2] with column 0 = "True", column 1 = "False".
+    """
+    lsm = jax.nn.log_softmax(logits, axis=-1)
+    return -(true_frac * lsm[:, 0] + (1.0 - true_frac) * lsm[:, 1])
+
+
+# ---------------------------------------------------------------------------
+# Adam
+# ---------------------------------------------------------------------------
+
+def adam_update(p, g, m, v, t, lr):
+    m = ADAM_B1 * m + (1.0 - ADAM_B1) * g
+    v = ADAM_B2 * v + (1.0 - ADAM_B2) * g * g
+    mhat = m / (1.0 - ADAM_B1 ** t)
+    vhat = v / (1.0 - ADAM_B2 ** t)
+    return p - lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS), m, v
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1: one training step
+# ---------------------------------------------------------------------------
+
+def train_step(cfg: GanConfig,
+               g_flat, d_flat, m_g, v_g, m_d, v_d,
+               net_raw, cfg_onehot, obj_raw, noise,
+               stats, knobs):
+    """One mini-batch of Algorithm 1 (both networks updated).
+
+    knobs = [lr, w_critic, mlp_mode, t]  (f32[4])
+    Returns (g', d', m_g', v_g', m_d', v_d', metrics[4]) where metrics =
+    (loss_config, loss_critic, loss_dis, sat_frac).
+    """
+    spec = cfg.spec
+    lr, w_critic, mlp_mode, t = knobs[0], knobs[1], knobs[2], knobs[3]
+    nm, ns, om, os_ = _split_stats(stats)
+    net_n = _normalize(net_raw, nm, ns)
+    obj_n = _normalize(obj_raw, om, os_)
+
+    def g_loss_fn(g_p):
+        logits = g_forward(cfg, g_p, net_n, obj_n, noise)
+        log_probs = group_log_softmax(spec, logits)
+        probs = group_softmax(spec, logits)
+        # Lines 7-8: evaluate the design model on the decoded generated
+        # configuration.  stop_gradient: the model only *labels*; this is
+        # exactly why Figure 3(b) is non-viable and the GAN is needed.
+        cfg_g = jax.lax.stop_gradient(decode_probs(spec, probs))
+        l_g, p_g = design_models.eval_model(spec.model, net_raw, cfg_g)
+        sat = jnp.logical_and(l_g <= obj_raw[:, 0], p_g <= obj_raw[:, 1])
+        sat_f = jax.lax.stop_gradient(sat.astype(jnp.float32))
+
+        # Line 14: config loss only for unsatisfied samples (Line 11: zero
+        # otherwise).  mlp_mode forces Figure 3(a): always-on config loss.
+        mask = jnp.where(mlp_mode > 0.5, 1.0, 1.0 - sat_f)
+        ce_cfg = _ce_with_onehot(log_probs, cfg_onehot)
+        loss_config = jnp.mean(mask * ce_cfg)
+
+        # Line 9: critic loss — D should call the generated config "True".
+        d_logits = d_forward(cfg, d_flat, net_n, probs, obj_n)
+        loss_critic = jnp.mean(_binary_ce(d_logits, jnp.ones_like(sat_f)))
+
+        wc = jnp.where(mlp_mode > 0.5, 0.0, w_critic)
+        total = loss_config + wc * loss_critic
+        return total, (probs, sat_f, loss_config, loss_critic)
+
+    (_, (probs, sat_f, loss_config, loss_critic)), g_grad = \
+        jax.value_and_grad(g_loss_fn, has_aux=True)(g_flat)
+
+    probs_sg = jax.lax.stop_gradient(probs)
+
+    def d_loss_fn(d_p):
+        # Lines 12/15: D's label is the *actual* satisfaction from the
+        # design model (a constant w.r.t. D's weights).
+        d_logits = d_forward(cfg, d_p, net_n, probs_sg, obj_n)
+        return jnp.mean(_binary_ce(d_logits, sat_f))
+
+    loss_dis, d_grad = jax.value_and_grad(d_loss_fn)(d_flat)
+
+    # Lines 18-19: update G then D (Adam, matching Table 4).
+    g_new, m_g, v_g = adam_update(g_flat, g_grad, m_g, v_g, t, lr)
+    d_new, m_d, v_d = adam_update(d_flat, d_grad, m_d, v_d, t, lr)
+
+    metrics = jnp.stack(
+        [loss_config, loss_critic, loss_dis, jnp.mean(sat_f)])
+    return g_new, d_new, m_g, v_g, m_d, v_d, metrics
+
+
+# ---------------------------------------------------------------------------
+# Fused train step (performance variant)
+# ---------------------------------------------------------------------------
+#
+# The PJRT path in the `xla` crate returns tuple results as ONE tuple
+# buffer, which cannot be fed back as executable inputs.  For the Rust
+# training hot loop we therefore lower a variant whose state is a single
+# flat vector `[metrics(4), g, d, m_g, v_g, m_d, v_d]` and whose output is
+# the same single vector — lowered with return_tuple=False so the result
+# buffer is an array that feeds straight back into the next step (device-
+# resident training state, EXPERIMENTS.md §Perf).  Metrics live at the
+# HEAD so Rust can read them with a 4-element raw host copy.
+
+FUSED_METRICS = 4
+
+
+def fused_state_len(cfg: GanConfig) -> int:
+    return FUSED_METRICS + 3 * (cfg.g_layout.total + cfg.d_layout.total)
+
+
+def pack_fused(metrics, g, d, m_g, v_g, m_d, v_d):
+    return jnp.concatenate([metrics, g, d, m_g, v_g, m_d, v_d])
+
+
+def unpack_fused(cfg: GanConfig, fused):
+    gl, dl = cfg.g_layout.total, cfg.d_layout.total
+    o = FUSED_METRICS
+    parts = []
+    for n in (gl, dl, gl, gl, dl, dl):
+        parts.append(fused[o:o + n])
+        o += n
+    return tuple(parts)  # g, d, m_g, v_g, m_d, v_d
+
+
+def train_step_fused(cfg: GanConfig, fused, net_raw, cfg_onehot, obj_raw,
+                     noise, stats, knobs):
+    g, d, m_g, v_g, m_d, v_d = unpack_fused(cfg, fused)
+    out = train_step(cfg, g, d, m_g, v_g, m_d, v_d, net_raw, cfg_onehot,
+                     obj_raw, noise, stats, knobs)
+    g2, d2, m_g2, v_g2, m_d2, v_d2, metrics = out
+    return pack_fused(metrics, g2, d2, m_g2, v_g2, m_d2, v_d2)
+
+
+# ---------------------------------------------------------------------------
+# Exploration-phase inference
+# ---------------------------------------------------------------------------
+
+def g_infer(cfg: GanConfig, g_flat, net_raw, obj_raw, noise, stats):
+    """Generator inference: per-group choice probabilities, f32[B, onehot]."""
+    nm, ns, om, os_ = _split_stats(stats)
+    logits = g_forward(cfg, g_flat, _normalize(net_raw, nm, ns),
+                       _normalize(obj_raw, om, os_), noise)
+    return group_softmax(cfg.spec, logits)
+
+
+def d_infer(cfg: GanConfig, d_flat, net_raw, cfg_probs, obj_raw, stats):
+    """Discriminator inference: P(satisfied), f32[B]."""
+    nm, ns, om, os_ = _split_stats(stats)
+    logits = d_forward(cfg, d_flat, _normalize(net_raw, nm, ns), cfg_probs,
+                       _normalize(obj_raw, om, os_))
+    return jax.nn.softmax(logits, axis=-1)[:, 0]

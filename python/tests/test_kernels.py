@@ -1,0 +1,121 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Hypothesis sweeps shapes (and the activation flag); every property asserts
+allclose between the interpret-mode Pallas kernel and ``kernels.ref``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.dse_spec import SPECS
+from compile.kernels import ref
+from compile.kernels.design_eval import design_eval
+from compile.kernels.fused_linear import fused_linear, matmul
+
+DIMS = st.sampled_from([1, 2, 3, 5, 8, 16, 61, 128, 256])
+
+
+def _rand(rng, *shape):
+    return rng.normal(size=shape).astype(np.float32)
+
+
+class TestMatmul:
+    @settings(deadline=None, max_examples=25)
+    @given(m=DIMS, k=DIMS, n=DIMS, seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, m, k, n, seed):
+        rng = np.random.default_rng(seed)
+        x, w = _rand(rng, m, k), _rand(rng, k, n)
+        np.testing.assert_allclose(
+            matmul(x, w), ref.matmul_ref(x, w), rtol=1e-5, atol=1e-5)
+
+    def test_mxu_aligned_blocks(self):
+        # 256x256x256 uses 128-edge blocks; result must still be exact.
+        rng = np.random.default_rng(0)
+        x, w = _rand(rng, 256, 256), _rand(rng, 256, 256)
+        np.testing.assert_allclose(
+            matmul(x, w), ref.matmul_ref(x, w), rtol=1e-4, atol=1e-4)
+
+
+class TestFusedLinear:
+    @settings(deadline=None, max_examples=25)
+    @given(m=DIMS, k=DIMS, n=DIMS, act=st.booleans(),
+           seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, m, k, n, act, seed):
+        rng = np.random.default_rng(seed)
+        x, w, b = _rand(rng, m, k), _rand(rng, k, n), _rand(rng, n)
+        np.testing.assert_allclose(
+            fused_linear(x, w, b, act), ref.fused_linear_ref(x, w, b, act),
+            rtol=1e-5, atol=1e-5)
+
+    @settings(deadline=None, max_examples=10)
+    @given(m=st.sampled_from([2, 8, 32]), k=st.sampled_from([4, 16]),
+           n=st.sampled_from([3, 8]), act=st.booleans(),
+           seed=st.integers(0, 2**31 - 1))
+    def test_custom_vjp_matches_ref_grad(self, m, k, n, act, seed):
+        rng = np.random.default_rng(seed)
+        x, w, b = _rand(rng, m, k), _rand(rng, k, n), _rand(rng, n)
+
+        def f(x, w, b):
+            return jnp.sum(jnp.sin(fused_linear(x, w, b, act)))
+
+        def fr(x, w, b):
+            return jnp.sum(jnp.sin(ref.fused_linear_ref(x, w, b, act)))
+
+        got = jax.grad(f, argnums=(0, 1, 2))(x, w, b)
+        want = jax.grad(fr, argnums=(0, 1, 2))(x, w, b)
+        for g, wnt in zip(got, want):
+            np.testing.assert_allclose(g, wnt, rtol=1e-4, atol=1e-5)
+
+    def test_relu_gates_gradient(self):
+        # All-negative pre-activation => zero gradient through ReLU.
+        x = np.full((4, 4), -1.0, np.float32)
+        w = np.eye(4, dtype=np.float32)
+        b = np.zeros(4, np.float32)
+        g = jax.grad(lambda x: jnp.sum(fused_linear(x, w, b, True)))(x)
+        np.testing.assert_array_equal(np.asarray(g), np.zeros((4, 4)))
+
+    def test_jit_composes(self):
+        rng = np.random.default_rng(1)
+        x, w, b = _rand(rng, 8, 8), _rand(rng, 8, 8), _rand(rng, 8)
+        jitted = jax.jit(lambda x, w, b: fused_linear(x, w, b, True))
+        np.testing.assert_allclose(
+            jitted(x, w, b), ref.fused_linear_ref(x, w, b, True),
+            rtol=1e-5, atol=1e-5)
+
+
+class TestDesignEval:
+    @pytest.mark.parametrize("model", ["im2col", "dnnweaver"])
+    @settings(deadline=None, max_examples=15)
+    @given(b=st.sampled_from([1, 7, 64, 128, 256]),
+           seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, model, b, seed):
+        spec = SPECS[model]
+        rng = np.random.default_rng(seed)
+        net = np.stack(
+            [rng.choice([16.0, 32.0, 64.0, 128.0], size=b) for _ in range(4)]
+            + [rng.choice([1.0, 3.0, 5.0], size=b) for _ in range(2)],
+            axis=-1).astype(np.float32)
+        cfg = np.stack([rng.choice(g.choices, size=b) for g in spec.groups],
+                       axis=-1).astype(np.float32)
+        lat, pw = design_eval(model, net, cfg)
+        lat_r, pw_r = ref.design_eval_ref(model, net, cfg)
+        np.testing.assert_allclose(lat, lat_r, rtol=1e-6)
+        np.testing.assert_allclose(pw, pw_r, rtol=1e-6)
+
+    @pytest.mark.parametrize("model", ["im2col", "dnnweaver"])
+    def test_outputs_positive_finite(self, model):
+        spec = SPECS[model]
+        rng = np.random.default_rng(3)
+        b = 128
+        net = np.stack(
+            [rng.choice([16.0, 64.0, 128.0], size=b) for _ in range(4)]
+            + [rng.choice([1.0, 3.0, 5.0], size=b) for _ in range(2)],
+            axis=-1).astype(np.float32)
+        cfg = np.stack([rng.choice(g.choices, size=b) for g in spec.groups],
+                       axis=-1).astype(np.float32)
+        lat, pw = design_eval(model, net, cfg)
+        assert np.all(np.isfinite(lat)) and np.all(np.asarray(lat) > 0)
+        assert np.all(np.isfinite(pw)) and np.all(np.asarray(pw) > 0)

@@ -1,0 +1,269 @@
+"""L2 model tests: encodings, Adam, Algorithm-1 train step behaviour."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as gm
+from compile.dse_spec import SPECS, NET_CHOICES, NET_FIELDS
+
+RNG = np.random.default_rng(42)
+
+
+def _tiny_cfg(model="dnnweaver", width=32, depth=2):
+    return gm.GanConfig(SPECS[model], width=width, g_depth=depth,
+                        d_depth=depth)
+
+
+def _batch(spec, b, rng):
+    net = np.stack([rng.choice(NET_CHOICES[f], size=b) for f in NET_FIELDS],
+                   axis=-1).astype(np.float32)
+    onehot = np.zeros((b, spec.onehot_dim), np.float32)
+    cfg_raw = np.zeros((b, len(spec.groups)), np.float32)
+    for i in range(b):
+        off = 0
+        for j, g in enumerate(spec.groups):
+            c = rng.integers(g.size)
+            onehot[i, off + c] = 1.0
+            cfg_raw[i, j] = g.choices[c]
+            off += g.size
+    from compile import design_models
+    lat, pw = design_models.eval_model(spec.model, jnp.asarray(net),
+                                       jnp.asarray(cfg_raw))
+    obj = np.stack([np.asarray(lat), np.asarray(pw)], axis=-1)
+    noise = rng.normal(size=(b, 8)).astype(np.float32)
+    stats = np.concatenate([net.mean(0), net.std(0) + 1e-6,
+                            obj.mean(0), obj.std(0) + 1e-6]).astype(np.float32)
+    return net, onehot, cfg_raw, obj.astype(np.float32), noise, stats
+
+
+def _init(total, rng, scale=0.05):
+    return (rng.normal(size=total) * scale).astype(np.float32)
+
+
+class TestLayout:
+    def test_offsets_cover_everything(self):
+        lay = gm.mlp_layout(16, 32, 3, 5)
+        assert lay.total == 16 * 32 + 32 + 32 * 32 + 32 + 32 * 32 + 32 \
+            + 32 * 5 + 5
+        assert lay.offsets()[-1][2] == lay.total
+
+    def test_unflatten_roundtrip(self):
+        lay = gm.mlp_layout(4, 8, 2, 3)
+        flat = jnp.arange(lay.total, dtype=jnp.float32)
+        params = lay.unflatten(flat)
+        rebuilt = jnp.concatenate(
+            [jnp.concatenate([w.reshape(-1), b]) for w, b in params])
+        np.testing.assert_array_equal(rebuilt, flat)
+
+    @pytest.mark.parametrize("model", ["im2col", "dnnweaver"])
+    def test_network_io_dims(self, model):
+        spec = SPECS[model]
+        assert spec.g_in == 6 + 2 + 8
+        assert spec.d_in == 6 + spec.onehot_dim + 2
+        assert spec.onehot_dim == sum(g.size for g in spec.groups)
+
+
+class TestEncodings:
+    def test_group_softmax_sums_to_one_per_group(self):
+        cfg = _tiny_cfg()
+        spec = cfg.spec
+        logits = jnp.asarray(RNG.normal(size=(5, spec.onehot_dim)),
+                             jnp.float32)
+        probs = gm.group_softmax(spec, logits)
+        for g, off in zip(spec.groups, spec.group_offsets):
+            s = jnp.sum(probs[:, off:off + g.size], axis=-1)
+            np.testing.assert_allclose(s, np.ones(5), rtol=1e-5)
+
+    def test_decode_probs_returns_valid_choices(self):
+        spec = SPECS["im2col"]
+        probs = jnp.asarray(RNG.random((7, spec.onehot_dim)), jnp.float32)
+        raw = gm.decode_probs(spec, probs)
+        raw = np.asarray(raw)
+        for j, g in enumerate(spec.groups):
+            assert all(v in g.choices for v in raw[:, j])
+
+    def test_decode_picks_argmax(self):
+        spec = SPECS["dnnweaver"]
+        onehot = np.zeros((1, spec.onehot_dim), np.float32)
+        # pick choice 2 of group 0 (PEN=32), choice 0 elsewhere
+        onehot[0, 2] = 1.0
+        for g, off in zip(spec.groups[1:], spec.group_offsets[1:]):
+            onehot[0, off] = 1.0
+        raw = np.asarray(gm.decode_probs(spec, jnp.asarray(onehot)))
+        assert raw[0, 0] == spec.groups[0].choices[2]
+        assert raw[0, 1] == spec.groups[1].choices[0]
+
+
+class TestAdam:
+    def test_first_step_is_lr_sized(self):
+        p = jnp.zeros(4)
+        g = jnp.asarray([1.0, -1.0, 2.0, 0.0])
+        p2, m, v = gm.adam_update(p, g, jnp.zeros(4), jnp.zeros(4),
+                                  t=1.0, lr=0.1)
+        # after bias correction, |step| ~= lr * sign(g) on step 1
+        np.testing.assert_allclose(
+            np.asarray(p2)[:3], [-0.1, 0.1, -0.1], rtol=1e-3)
+        assert float(p2[3]) == 0.0
+
+    def test_moments_accumulate(self):
+        p = jnp.zeros(2)
+        g = jnp.asarray([1.0, 1.0])
+        _, m, v = gm.adam_update(p, g, jnp.zeros(2), jnp.zeros(2), 1.0, 0.1)
+        np.testing.assert_allclose(np.asarray(m), [0.1, 0.1], rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(v), [1e-3, 1e-3], rtol=1e-5)
+
+
+class TestTrainStep:
+    @pytest.mark.parametrize("model", ["dnnweaver", "im2col"])
+    def test_shapes_and_finiteness(self, model):
+        cfg = _tiny_cfg(model)
+        spec = cfg.spec
+        rng = np.random.default_rng(0)
+        net, onehot, _, obj, noise, stats = _batch(spec, 16, rng)
+        gp = _init(cfg.g_layout.total, rng)
+        dp = _init(cfg.d_layout.total, rng)
+        z = np.zeros_like
+        knobs = np.asarray([1e-3, 0.5, 0.0, 1.0], np.float32)
+        out = jax.jit(lambda *a: gm.train_step(cfg, *a))(
+            gp, dp, z(gp), z(gp), z(dp), z(dp),
+            net, onehot, obj, noise, stats, knobs)
+        assert out[0].shape == (cfg.g_layout.total,)
+        assert out[1].shape == (cfg.d_layout.total,)
+        assert out[6].shape == (4,)
+        for o in out:
+            assert np.all(np.isfinite(np.asarray(o)))
+
+    def test_losses_decrease_over_steps(self):
+        cfg = _tiny_cfg("dnnweaver", width=64, depth=2)
+        spec = cfg.spec
+        rng = np.random.default_rng(1)
+        net, onehot, _, obj, noise, stats = _batch(spec, 64, rng)
+        gp = _init(cfg.g_layout.total, rng)
+        dp = _init(cfg.d_layout.total, rng)
+        mg, vg = np.zeros_like(gp), np.zeros_like(gp)
+        md, vd = np.zeros_like(dp), np.zeros_like(dp)
+        step = jax.jit(lambda *a: gm.train_step(cfg, *a))
+        first = None
+        for t in range(1, 41):
+            knobs = np.asarray([1e-3, 0.5, 0.0, float(t)], np.float32)
+            gp, dp, mg, vg, md, vd, metrics = step(
+                gp, dp, mg, vg, md, vd, net, onehot, obj, noise, stats,
+                knobs)
+            if first is None:
+                first = np.asarray(metrics)
+        last = np.asarray(metrics)
+        # Config loss shrinks on a fixed batch.  The discriminator loss is
+        # adversarial (its target moves as G learns), so only require it
+        # stays bounded rather than monotone.
+        assert last[0] < first[0]
+        assert last[2] < 2.0 * first[2] + 0.1
+
+    def test_mlp_mode_ignores_critic(self):
+        """mlp_mode=1 must produce updates independent of w_critic."""
+        cfg = _tiny_cfg()
+        spec = cfg.spec
+        rng = np.random.default_rng(2)
+        net, onehot, _, obj, noise, stats = _batch(spec, 8, rng)
+        gp = _init(cfg.g_layout.total, np.random.default_rng(9))
+        dp = _init(cfg.d_layout.total, np.random.default_rng(10))
+        z = np.zeros_like
+        step = jax.jit(lambda *a: gm.train_step(cfg, *a))
+        outs = []
+        for wc in (0.0, 5.0):
+            knobs = np.asarray([1e-3, wc, 1.0, 1.0], np.float32)
+            outs.append(step(gp, dp, z(gp), z(gp), z(dp), z(dp),
+                             net, onehot, obj, noise, stats, knobs))
+        np.testing.assert_allclose(outs[0][0], outs[1][0], atol=1e-7)
+
+    def test_satisfied_samples_skip_config_loss(self):
+        """With impossible objectives (0), nothing satisfies => full config
+        loss; with infinite objectives everything satisfies => zero
+        config loss."""
+        cfg = _tiny_cfg()
+        spec = cfg.spec
+        rng = np.random.default_rng(3)
+        net, onehot, _, obj, noise, stats = _batch(spec, 8, rng)
+        gp = _init(cfg.g_layout.total, rng)
+        dp = _init(cfg.d_layout.total, rng)
+        z = np.zeros_like
+        step = jax.jit(lambda *a: gm.train_step(cfg, *a))
+        knobs = np.asarray([1e-3, 0.0, 0.0, 1.0], np.float32)
+        hard = step(gp, dp, z(gp), z(gp), z(dp), z(dp), net, onehot,
+                    np.zeros_like(obj), noise, stats, knobs)
+        easy = step(gp, dp, z(gp), z(gp), z(dp), z(dp), net, onehot,
+                    np.full_like(obj, 1e30), noise, stats, knobs)
+        assert float(hard[6][0]) > 0.0  # loss_config
+        assert float(easy[6][0]) == 0.0
+        assert float(hard[6][3]) == 0.0  # sat_frac
+        assert float(easy[6][3]) == 1.0
+
+
+class TestFusedTrainStep:
+    def test_fused_matches_tupled(self):
+        """The perf-variant (single fused state vector, metrics at the
+        head) must produce bit-identical results to the tupled step."""
+        cfg = _tiny_cfg()
+        spec = cfg.spec
+        rng = np.random.default_rng(11)
+        net, onehot, _, obj, noise, stats = _batch(spec, 8, rng)
+        gp = _init(cfg.g_layout.total, rng)
+        dp = _init(cfg.d_layout.total, rng)
+        z = np.zeros_like
+        knobs = np.asarray([1e-3, 0.5, 0.0, 1.0], np.float32)
+        ref = jax.jit(lambda *a: gm.train_step(cfg, *a))(
+            gp, dp, z(gp), z(gp), z(dp), z(dp),
+            net, onehot, obj, noise, stats, knobs)
+        fused_in = gm.pack_fused(
+            jnp.zeros(gm.FUSED_METRICS),
+            jnp.asarray(gp), jnp.asarray(dp),
+            jnp.zeros_like(jnp.asarray(gp)), jnp.zeros_like(jnp.asarray(gp)),
+            jnp.zeros_like(jnp.asarray(dp)), jnp.zeros_like(jnp.asarray(dp)))
+        fused_out = jax.jit(lambda *a: gm.train_step_fused(cfg, *a))(
+            fused_in, net, onehot, obj, noise, stats, knobs)
+        # metrics at the head
+        np.testing.assert_array_equal(
+            np.asarray(fused_out[:gm.FUSED_METRICS]), np.asarray(ref[6]))
+        g2, d2, mg2, vg2, md2, vd2 = gm.unpack_fused(cfg, fused_out)
+        for got, want in zip((g2, d2, mg2, vg2, md2, vd2), ref[:6]):
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_fused_state_len(self):
+        cfg = _tiny_cfg()
+        assert gm.fused_state_len(cfg) == gm.FUSED_METRICS + 3 * (
+            cfg.g_layout.total + cfg.d_layout.total)
+
+    def test_pack_unpack_roundtrip(self):
+        cfg = _tiny_cfg()
+        rng = np.random.default_rng(12)
+        gl, dl = cfg.g_layout.total, cfg.d_layout.total
+        parts = [jnp.asarray(rng.normal(size=n).astype(np.float32))
+                 for n in (gl, dl, gl, gl, dl, dl)]
+        fused = gm.pack_fused(jnp.zeros(4), *parts)
+        back = gm.unpack_fused(cfg, fused)
+        for a, b in zip(parts, back):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestInference:
+    def test_g_infer_probabilities(self):
+        cfg = _tiny_cfg()
+        spec = cfg.spec
+        rng = np.random.default_rng(4)
+        net, _, _, obj, noise, stats = _batch(spec, 8, rng)
+        gp = _init(cfg.g_layout.total, rng)
+        probs = gm.g_infer(cfg, gp, net, obj, noise, stats)
+        probs = np.asarray(probs)
+        assert probs.shape == (8, spec.onehot_dim)
+        assert np.all(probs >= 0) and np.all(probs <= 1)
+
+    def test_d_infer_in_unit_interval(self):
+        cfg = _tiny_cfg()
+        spec = cfg.spec
+        rng = np.random.default_rng(5)
+        net, onehot, _, obj, _, stats = _batch(spec, 8, rng)
+        dp = _init(cfg.d_layout.total, rng)
+        p = np.asarray(gm.d_infer(cfg, dp, net, onehot, obj, stats))
+        assert p.shape == (8,)
+        assert np.all(p >= 0) and np.all(p <= 1)

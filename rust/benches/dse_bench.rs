@@ -1,0 +1,230 @@
+//! Benchmark harness (`cargo bench`) — times every hot path behind the
+//! paper's Table 5 "DSE Time" column plus the per-layer components, for
+//! both design models.  Hand-rolled timing loop (no criterion in the
+//! offline crate cache): warmup + N timed iterations, reporting
+//! mean / min / p50.
+//!
+//! Requires `make artifacts`.
+
+use std::path::Path;
+use std::time::Instant;
+
+use gandse::baselines::{sa_search, SaConfig};
+use gandse::dataset;
+use gandse::explorer::{Candidates, DseRequest, Explorer, Selector};
+use gandse::gan::{GanState, TrainConfig, Trainer};
+use gandse::model;
+use gandse::runtime::Runtime;
+use gandse::space::Meta;
+use gandse::util::rng::Rng;
+
+struct Bench {
+    rows: Vec<(String, f64, f64, f64, usize)>,
+}
+
+impl Bench {
+    fn new() -> Bench {
+        Bench { rows: Vec::new() }
+    }
+
+    /// Time `f` (which processes `items` logical items per call).
+    fn run(
+        &mut self,
+        name: &str,
+        iters: usize,
+        items: usize,
+        mut f: impl FnMut(),
+    ) {
+        for _ in 0..2.min(iters) {
+            f(); // warmup
+        }
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let min = samples[0];
+        let p50 = samples[samples.len() / 2];
+        println!(
+            "{name:<44} mean {:>10.3}ms  min {:>10.3}ms  p50 {:>10.3}ms{}",
+            mean * 1e3,
+            min * 1e3,
+            p50 * 1e3,
+            if items > 1 {
+                format!("  ({:.1} us/item)", mean * 1e6 / items as f64)
+            } else {
+                String::new()
+            }
+        );
+        self.rows.push((name.to_string(), mean, min, p50, items));
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let dir = Path::new("artifacts");
+    if !dir.join("meta.json").exists() {
+        eprintln!("run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let meta = Meta::load(dir)?;
+    let rt = Runtime::new(dir)?;
+    let mut b = Bench::new();
+    println!("== gandse benchmarks (CPU PJRT, batch {}) ==",
+             meta.infer_batch);
+
+    for model_name in ["dnnweaver", "im2col"] {
+        println!("\n-- design model: {model_name} --");
+        let mm = meta.model(model_name)?;
+        let spec = mm.spec.clone();
+        let ds = dataset::generate(&spec, 2 * meta.train_batch, 200, 42);
+        let tasks: Vec<DseRequest> = ds
+            .test
+            .iter()
+            .map(|s| DseRequest { net: s.net, lo: s.latency, po: s.power })
+            .collect();
+
+        // L3: pure-Rust design model evaluation (selector's inner loop).
+        let mut rng = Rng::new(1);
+        let nets: Vec<[f32; 6]> =
+            (0..1000).map(|_| spec.sample_net(&mut rng)).collect();
+        let cfgs: Vec<Vec<f32>> = (0..1000)
+            .map(|_| spec.raw_values(&spec.sample_config(&mut rng)))
+            .collect();
+        b.run(
+            &format!("design_model_eval_rust/{model_name} x1000"),
+            50,
+            1000,
+            || {
+                let mut acc = 0f32;
+                for (n, c) in nets.iter().zip(&cfgs) {
+                    let (l, p) = model::eval(model_name, n, c);
+                    acc += l + p;
+                }
+                std::hint::black_box(acc);
+            },
+        );
+
+        // L2+L1 via PJRT: batched design-eval artifact.
+        let exe = rt.load(&format!("design_eval_{model_name}.hlo.txt"))?;
+        let bsz = meta.infer_batch;
+        let mut net_flat = Vec::with_capacity(bsz * 6);
+        let mut cfg_flat = Vec::with_capacity(bsz * spec.groups.len());
+        for i in 0..bsz {
+            net_flat.extend_from_slice(&nets[i % nets.len()]);
+            cfg_flat.extend_from_slice(&cfgs[i % cfgs.len()]);
+        }
+        b.run(
+            &format!("design_eval_pjrt/{model_name} batch{bsz}"),
+            30,
+            bsz,
+            || {
+                let out = exe
+                    .run(&[
+                        gandse::runtime::lit_f32(&net_flat, &[bsz, 6])
+                            .unwrap(),
+                        gandse::runtime::lit_f32(
+                            &cfg_flat,
+                            &[bsz, spec.groups.len()],
+                        )
+                        .unwrap(),
+                    ])
+                    .unwrap();
+                std::hint::black_box(out.len());
+            },
+        );
+
+        // Training step (Algorithm 1, both networks, full AOT graph).
+        let state = GanState::init(mm, model_name, 1);
+        let mut tr = Trainer::new(&rt, &meta, model_name, state)?;
+        let tcfg = TrainConfig::default();
+        let idx: Vec<usize> = (0..meta.train_batch).collect();
+        let mut rng2 = Rng::new(2);
+        b.run(
+            &format!("train_step/{model_name} batch{}", meta.train_batch),
+            20,
+            meta.train_batch,
+            || {
+                tr.step(&ds, &idx, &tcfg, &mut rng2).unwrap();
+            },
+        );
+
+        // Exploration phase end-to-end (Table 5 "DSE Time").
+        let mut ex = Explorer::new(&rt, &meta, model_name,
+                                   tr.state.g.clone(), ds.stats.to_vec())?;
+        b.run(
+            &format!("explore_e2e/{model_name} x{} tasks", tasks.len()),
+            10,
+            tasks.len(),
+            || {
+                let r = ex.explore(&tasks).unwrap();
+                std::hint::black_box(r.len());
+            },
+        );
+
+        // G inference alone (the PJRT portion of exploration).
+        b.run(
+            &format!("g_infer/{model_name} x{} tasks", tasks.len()),
+            10,
+            tasks.len(),
+            || {
+                let p = ex.infer_probs(&tasks).unwrap();
+                std::hint::black_box(p.len());
+            },
+        );
+
+        // Candidate expansion + Algorithm-2 selection alone.
+        let probs = ex.infer_probs(&tasks)?;
+        b.run(
+            &format!("select/{model_name} x{} tasks", tasks.len()),
+            10,
+            tasks.len(),
+            || {
+                for (t, p) in tasks.iter().zip(&probs) {
+                    let r = ex.select_from_probs(t, p);
+                    std::hint::black_box(r.satisfied);
+                }
+            },
+        );
+
+        // Candidate machinery microbench.
+        let spec2 = spec.clone();
+        let p0 = probs[0].clone();
+        b.run(
+            &format!("candidate_expand/{model_name} x1000"),
+            20,
+            1000,
+            || {
+                for _ in 0..1000 {
+                    let c = Candidates::from_probs(&spec2, &p0, 0.2);
+                    let mut sel = Selector::new(1.0, 1.0);
+                    for (i, idx) in c.enumerate(64).enumerate() {
+                        sel.offer(i, idx[0] as f32, 1.0);
+                    }
+                    std::hint::black_box(sel.result());
+                }
+            },
+        );
+
+        // SA baseline per-task time (Table 5's slowest row).
+        let mut rng3 = Rng::new(3);
+        let sa_tasks = &tasks[..tasks.len().min(20)];
+        b.run(
+            &format!("sa_search/{model_name} x{} tasks", sa_tasks.len()),
+            5,
+            sa_tasks.len(),
+            || {
+                for t in sa_tasks {
+                    let r = sa_search(&spec, t, &SaConfig::default(),
+                                      &mut rng3);
+                    std::hint::black_box(r.evals);
+                }
+            },
+        );
+    }
+    println!("\n(benches map to Table 5's DSE-time column; see \
+              EXPERIMENTS.md for paper-vs-measured)");
+    Ok(())
+}

@@ -1,0 +1,308 @@
+//! Deep-RL baseline (Section 7.1.4), ConfuciuX-style.
+//!
+//! Policy-gradient (REINFORCE) agent: the state is (network parameters,
+//! objectives, current configuration), actions are single-group
+//! modifications (+1 / -1 on each group's choice index), reward is shaped
+//! by the change in objective violation with a bonus when the state
+//! satisfies both objectives.  The actor network is the pure-Rust MLP of
+//! [`super::net`].
+
+use crate::explorer::DseRequest;
+use crate::model;
+use crate::space::{SpaceSpec, N_NET};
+use crate::util::rng::Rng;
+
+use super::net::{softmax, Mlp};
+
+#[derive(Debug, Clone, Copy)]
+pub struct DrlConfig {
+    pub hidden: usize,
+    pub lr: f32,
+    pub episodes: usize,
+    pub steps_per_episode: usize,
+    pub gamma: f32,
+    /// Reward bonus when both objectives are satisfied.
+    pub sat_bonus: f32,
+}
+
+impl Default for DrlConfig {
+    fn default() -> Self {
+        DrlConfig {
+            hidden: 64,
+            lr: 1e-3,
+            episodes: 400,
+            steps_per_episode: 24,
+            gamma: 0.95,
+            sat_bonus: 1.0,
+        }
+    }
+}
+
+/// REINFORCE agent over configuration-modification actions.
+pub struct DrlAgent {
+    pub policy: Mlp,
+    spec_groups: usize,
+    state_dim: usize,
+    n_actions: usize,
+    cfg: DrlConfig,
+}
+
+fn violation(l: f32, p: f32, lo: f32, po: f32) -> f32 {
+    ((l - lo) / lo).max(0.0) + ((p - po) / po).max(0.0)
+}
+
+impl DrlAgent {
+    pub fn new(spec: &SpaceSpec, cfg: DrlConfig, rng: &mut Rng) -> DrlAgent {
+        let state_dim = N_NET + 2 + spec.groups.len();
+        let n_actions = 2 * spec.groups.len();
+        let policy = Mlp::new(&[state_dim, cfg.hidden, cfg.hidden, n_actions],
+                              rng);
+        DrlAgent {
+            policy,
+            spec_groups: spec.groups.len(),
+            state_dim,
+            n_actions,
+            cfg,
+        }
+    }
+
+    fn encode_state(
+        &self,
+        spec: &SpaceSpec,
+        req: &DseRequest,
+        idx: &[usize],
+        out: &mut Vec<f32>,
+    ) {
+        out.clear();
+        for v in &req.net {
+            out.push(v / 128.0);
+        }
+        // log-scale objectives: latencies span orders of magnitude
+        out.push(req.lo.max(1e-30).ln());
+        out.push(req.po.max(1e-30).ln());
+        for (g, &i) in spec.groups.iter().zip(idx) {
+            out.push(i as f32 / (g.size() - 1).max(1) as f32);
+        }
+    }
+
+    fn apply_action(
+        &self,
+        spec: &SpaceSpec,
+        idx: &mut [usize],
+        action: usize,
+    ) {
+        let g = action / 2;
+        let up = action % 2 == 0;
+        if up {
+            if idx[g] + 1 < spec.groups[g].size() {
+                idx[g] += 1;
+            }
+        } else if idx[g] > 0 {
+            idx[g] -= 1;
+        }
+    }
+
+    /// Train on randomly drawn DSE tasks (the offline phase whose wallclock
+    /// is the "Training Time" column of Table 5 for DRL).
+    pub fn train(
+        &mut self,
+        spec: &SpaceSpec,
+        tasks: &[DseRequest],
+        rng: &mut Rng,
+    ) {
+        let mut grads = vec![0.0f32; self.policy.n_params()];
+        let mut state = Vec::with_capacity(self.state_dim);
+        let mut raw = vec![0f32; self.spec_groups];
+        for _ in 0..self.cfg.episodes {
+            let req = tasks[rng.below(tasks.len())];
+            let mut idx = spec.sample_config(rng);
+            // episode rollout
+            let mut log_steps: Vec<(Vec<f32>, usize, f32)> = Vec::new();
+            for ((r, g), &ci) in
+                raw.iter_mut().zip(&spec.groups).zip(idx.iter())
+            {
+                *r = g.choices[ci];
+            }
+            let (mut l, mut p) = model::eval(&spec.model, &req.net, &raw);
+            let mut prev_viol = violation(l, p, req.lo, req.po);
+            for _ in 0..self.cfg.steps_per_episode {
+                self.encode_state(spec, &req, &idx, &mut state);
+                let (logits, _) = self.policy.forward(&state);
+                let probs = softmax(&logits);
+                // sample an action
+                let u = rng.f32();
+                let mut acc = 0.0;
+                let mut action = self.n_actions - 1;
+                for (a, &pr) in probs.iter().enumerate() {
+                    acc += pr;
+                    if u < acc {
+                        action = a;
+                        break;
+                    }
+                }
+                self.apply_action(spec, &mut idx, action);
+                for ((r, g), &ci) in
+                    raw.iter_mut().zip(&spec.groups).zip(idx.iter())
+                {
+                    *r = g.choices[ci];
+                }
+                let e = model::eval(&spec.model, &req.net, &raw);
+                l = e.0;
+                p = e.1;
+                let viol = violation(l, p, req.lo, req.po);
+                // reward: approach the satisfying region + bonus inside it
+                let mut reward = prev_viol - viol;
+                if viol == 0.0 {
+                    reward += self.cfg.sat_bonus;
+                }
+                prev_viol = viol;
+                log_steps.push((state.clone(), action, reward));
+                if viol == 0.0 {
+                    break;
+                }
+            }
+            // REINFORCE with discounted returns
+            let mut ret = 0.0f32;
+            let mut returns = vec![0.0f32; log_steps.len()];
+            for (i, (_, _, r)) in log_steps.iter().enumerate().rev() {
+                ret = r + self.cfg.gamma * ret;
+                returns[i] = ret;
+            }
+            grads.iter_mut().for_each(|g| *g = 0.0);
+            for ((s, a, _), &ret) in log_steps.iter().zip(&returns) {
+                let (logits, tape) = self.policy.forward(s);
+                let probs = softmax(&logits);
+                // d(-ret * log pi(a|s))/dlogits = ret * (probs - onehot_a)
+                let mut d: Vec<f32> =
+                    probs.iter().map(|&pr| ret * pr).collect();
+                d[*a] -= ret;
+                self.policy.backward(&tape, &d, &mut grads);
+            }
+            if !log_steps.is_empty() {
+                let scale = 1.0 / log_steps.len() as f32;
+                grads.iter_mut().for_each(|g| *g *= scale);
+                self.policy.adam_step(&grads, self.cfg.lr);
+            }
+        }
+    }
+
+    /// DSE inference: greedy rollout from a random start; returns the best
+    /// configuration seen.
+    pub fn solve(
+        &self,
+        spec: &SpaceSpec,
+        req: &DseRequest,
+        rng: &mut Rng,
+    ) -> (Vec<usize>, f32, f32) {
+        let mut idx = spec.sample_config(rng);
+        let mut state = Vec::with_capacity(self.state_dim);
+        let mut raw = vec![0f32; self.spec_groups];
+        let eval_idx = |idx: &[usize], raw: &mut [f32]| {
+            for ((r, g), &ci) in raw.iter_mut().zip(&spec.groups).zip(idx) {
+                *r = g.choices[ci];
+            }
+            model::eval(&spec.model, &req.net, raw)
+        };
+        let (mut best_l, mut best_p) = eval_idx(&idx, &mut raw);
+        let mut best_idx = idx.clone();
+        let mut best_viol = violation(best_l, best_p, req.lo, req.po);
+        for _ in 0..3 * self.cfg.steps_per_episode {
+            self.encode_state(spec, req, &idx, &mut state);
+            let (logits, _) = self.policy.forward(&state);
+            let mut a = 0;
+            for (i, &v) in logits.iter().enumerate() {
+                if v > logits[a] {
+                    a = i;
+                }
+            }
+            let mut next = idx.clone();
+            self.apply_action(spec, &mut next, a);
+            if next == idx {
+                // greedy action is a no-op at the boundary: random restart
+                idx = spec.sample_config(rng);
+            } else {
+                idx = next;
+            }
+            let (l, p) = eval_idx(&idx, &mut raw);
+            let viol = violation(l, p, req.lo, req.po);
+            let better_inside =
+                viol == 0.0 && (best_viol > 0.0 || l + p < best_l + best_p);
+            if viol < best_viol || better_inside {
+                best_viol = viol;
+                best_idx = idx.clone();
+                best_l = l;
+                best_p = p;
+            }
+            if viol == 0.0 && best_viol == 0.0 {
+                break;
+            }
+        }
+        (best_idx, best_l, best_p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::builtin_spec;
+
+    fn req(lo: f32, po: f32) -> DseRequest {
+        DseRequest { net: [32.0, 32.0, 32.0, 32.0, 3.0, 3.0], lo, po }
+    }
+
+    #[test]
+    fn action_application_clamps() {
+        let spec = builtin_spec("dnnweaver").unwrap();
+        let mut rng = Rng::new(1);
+        let agent = DrlAgent::new(&spec, DrlConfig::default(), &mut rng);
+        let mut idx = vec![0usize, 0, 0, 0];
+        agent.apply_action(&spec, &mut idx, 1); // group 0 down at floor
+        assert_eq!(idx[0], 0);
+        agent.apply_action(&spec, &mut idx, 0); // group 0 up
+        assert_eq!(idx[0], 1);
+    }
+
+    #[test]
+    fn solve_returns_valid_config() {
+        let spec = builtin_spec("dnnweaver").unwrap();
+        let mut rng = Rng::new(2);
+        let agent = DrlAgent::new(&spec, DrlConfig::default(), &mut rng);
+        let (idx, l, p) = agent.solve(&spec, &req(1.0, 10.0), &mut rng);
+        assert_eq!(idx.len(), spec.groups.len());
+        assert!(l > 0.0 && p > 0.0);
+    }
+
+    #[test]
+    fn training_improves_easy_task_satisfaction() {
+        let spec = builtin_spec("dnnweaver").unwrap();
+        let mut rng = Rng::new(3);
+        // moderately easy objectives drawn from real samples
+        let ds = crate::dataset::generate(&spec, 64, 0, 9);
+        let tasks: Vec<DseRequest> = ds
+            .train
+            .iter()
+            .map(|s| DseRequest {
+                net: s.net,
+                lo: s.latency * 1.5,
+                po: s.power * 1.5,
+            })
+            .collect();
+        let cfg = DrlConfig { episodes: 150, ..Default::default() };
+        let mut agent = DrlAgent::new(&spec, cfg, &mut rng);
+        let sat_rate = |agent: &DrlAgent, rng: &mut Rng| -> f32 {
+            let n_ok = tasks
+                .iter()
+                .filter(|r| {
+                    let (_, l, p) = agent.solve(&spec, r, rng);
+                    l <= r.lo && p <= r.po
+                })
+                .count();
+            n_ok as f32 / tasks.len() as f32
+        };
+        let before = sat_rate(&agent, &mut Rng::new(100));
+        agent.train(&spec, &tasks, &mut rng);
+        let after = sat_rate(&agent, &mut Rng::new(100));
+        // trained policy should not be worse (usually clearly better)
+        assert!(after + 0.1 >= before, "before={before} after={after}");
+    }
+}

@@ -1,0 +1,24 @@
+//! Compared DSE algorithms (Section 7.1.4).
+//!
+//! * [`sa`] — Simulated Annealing: the classic iterative DSE flow of
+//!   Figure 1 (configuration-updating algorithm + design model in a loop).
+//! * [`drl`] — Deep Reinforcement Learning: ConfuciuX-style policy
+//!   gradient; the policy network is a pure-Rust MLP ([`net`]) trained with
+//!   REINFORCE over configuration-modification actions.
+//! * Large MLP — AIRCHITECT-style, Figure 3(a): **not a separate module**;
+//!   it is the same AOT train-step artifact run with `mlp_mode = 1`
+//!   (config loss always on, critic loss off) via
+//!   [`crate::gan::TrainConfig::mlp_mode`], and explored through the same
+//!   [`crate::explorer::Explorer`].  This matches the paper's setup where
+//!   the MLP is parameter-matched to the GAN and uses the same design
+//!   selector.
+//!
+//! All baselines evaluate candidates against the same analytical design
+//! models as GANDSE (fair comparison, Section 7.1.4).
+
+pub mod drl;
+pub mod net;
+pub mod sa;
+
+pub use drl::{DrlAgent, DrlConfig};
+pub use sa::{sa_search, SaConfig};

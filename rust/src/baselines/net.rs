@@ -1,0 +1,252 @@
+//! Tiny pure-Rust MLP with manual backprop — the substrate for the DRL
+//! baseline's policy network (the paper's actor network).
+//!
+//! Deliberately separate from the PJRT path: the baselines must not lean
+//! on GANDSE's own artifacts, mirroring the paper where DRL uses its own
+//! network.  f32, fully connected, ReLU hidden layers, linear output,
+//! Adam optimizer.
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct Layer {
+    pub w: Vec<f32>, // [in, out], row-major
+    pub b: Vec<f32>, // [out]
+    pub din: usize,
+    pub dout: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Mlp {
+    pub layers: Vec<Layer>,
+    // Adam state
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: u64,
+}
+
+/// Cached activations from a forward pass (needed for backprop).
+pub struct Tape {
+    /// Input plus post-activation of every layer.
+    acts: Vec<Vec<f32>>,
+}
+
+impl Mlp {
+    pub fn new(dims: &[usize], rng: &mut Rng) -> Mlp {
+        let mut layers = Vec::new();
+        let mut total = 0;
+        for w in dims.windows(2) {
+            let (i, o) = (w[0], w[1]);
+            let scale = (2.0 / i as f32).sqrt();
+            layers.push(Layer {
+                w: rng.normal_vec(i * o, scale),
+                b: vec![0.0; o],
+                din: i,
+                dout: o,
+            });
+            total += i * o + o;
+        }
+        Mlp { layers, m: vec![0.0; total], v: vec![0.0; total], t: 0 }
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.m.len()
+    }
+
+    /// Forward pass; returns output logits and the activation tape.
+    pub fn forward(&self, x: &[f32]) -> (Vec<f32>, Tape) {
+        let mut acts = vec![x.to_vec()];
+        let last = self.layers.len() - 1;
+        for (li, l) in self.layers.iter().enumerate() {
+            let inp = acts.last().unwrap();
+            let mut out = l.b.clone();
+            for i in 0..l.din {
+                let xi = inp[i];
+                if xi != 0.0 {
+                    let row = &l.w[i * l.dout..(i + 1) * l.dout];
+                    for (o, &w) in out.iter_mut().zip(row) {
+                        *o += xi * w;
+                    }
+                }
+            }
+            if li != last {
+                for o in out.iter_mut() {
+                    *o = o.max(0.0);
+                }
+            }
+            acts.push(out);
+        }
+        (acts.last().unwrap().clone(), Tape { acts })
+    }
+
+    /// Backprop from output-gradient `dout`; accumulates parameter
+    /// gradients into `grads` (same flat layout as Adam state).
+    pub fn backward(&self, tape: &Tape, dout: &[f32], grads: &mut [f32]) {
+        assert_eq!(grads.len(), self.m.len());
+        let mut delta = dout.to_vec();
+        let mut offset_end = self.m.len();
+        for (li, l) in self.layers.iter().enumerate().rev() {
+            let inp = &tape.acts[li];
+            let outp = &tape.acts[li + 1];
+            // ReLU mask for hidden layers (post-activation stored).
+            if li != self.layers.len() - 1 {
+                for (d, &o) in delta.iter_mut().zip(outp) {
+                    if o <= 0.0 {
+                        *d = 0.0;
+                    }
+                }
+            }
+            let nb = l.dout;
+            let nw = l.din * l.dout;
+            let b_off = offset_end - nb;
+            let w_off = b_off - nw;
+            // db += delta; dW += inp^T delta; dx = delta W^T
+            for (g, &d) in grads[b_off..offset_end].iter_mut().zip(&delta) {
+                *g += d;
+            }
+            let mut dx = vec![0.0f32; l.din];
+            for i in 0..l.din {
+                let xi = inp[i];
+                let row = &l.w[i * l.dout..(i + 1) * l.dout];
+                let grow = &mut grads[w_off + i * l.dout..w_off + (i + 1) * l.dout];
+                let mut acc = 0.0f32;
+                for o in 0..l.dout {
+                    grow[o] += xi * delta[o];
+                    acc += delta[o] * row[o];
+                }
+                dx[i] = acc;
+            }
+            delta = dx;
+            offset_end = w_off;
+        }
+        debug_assert_eq!(offset_end, 0);
+    }
+
+    /// Adam update with the accumulated gradients (then caller zeroes them).
+    pub fn adam_step(&mut self, grads: &[f32], lr: f32) {
+        const B1: f32 = 0.9;
+        const B2: f32 = 0.999;
+        const EPS: f32 = 1e-8;
+        self.t += 1;
+        let t = self.t as f32;
+        let bc1 = 1.0 - B1.powf(t);
+        let bc2 = 1.0 - B2.powf(t);
+        let mut k = 0;
+        for l in self.layers.iter_mut() {
+            for p in l.w.iter_mut().chain(l.b.iter_mut()) {
+                let g = grads[k];
+                self.m[k] = B1 * self.m[k] + (1.0 - B1) * g;
+                self.v[k] = B2 * self.v[k] + (1.0 - B2) * g * g;
+                let mh = self.m[k] / bc1;
+                let vh = self.v[k] / bc2;
+                *p -= lr * mh / (vh.sqrt() + EPS);
+                k += 1;
+            }
+        }
+        debug_assert_eq!(k, grads.len());
+    }
+}
+
+/// Numerically stable softmax.
+pub fn softmax(logits: &[f32]) -> Vec<f32> {
+    let mx = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = logits.iter().map(|&x| (x - mx).exp()).collect();
+    let z: f32 = exps.iter().sum();
+    exps.iter().map(|&e| e / z).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forward_shapes() {
+        let mut rng = Rng::new(1);
+        let net = Mlp::new(&[4, 16, 3], &mut rng);
+        let (y, tape) = net.forward(&[0.1, -0.2, 0.3, 0.4]);
+        assert_eq!(y.len(), 3);
+        assert_eq!(tape.acts.len(), 3);
+        assert_eq!(net.n_params(), 4 * 16 + 16 + 16 * 3 + 3);
+    }
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        let mut rng = Rng::new(2);
+        let mut net = Mlp::new(&[3, 8, 2], &mut rng);
+        let x = [0.5f32, -0.3, 0.8];
+        // loss = sum(y^2) / 2 ; dL/dy = y
+        let (y, tape) = net.forward(&x);
+        let mut grads = vec![0.0f32; net.n_params()];
+        net.backward(&tape, &y, &mut grads);
+
+        let eps = 1e-3f32;
+        // check a handful of weights in each layer against central diff
+        for (li, wi) in [(0usize, 0usize), (0, 7), (1, 3)] {
+            let orig = net.layers[li].w[wi];
+            net.layers[li].w[wi] = orig + eps;
+            let (yp, _) = net.forward(&x);
+            net.layers[li].w[wi] = orig - eps;
+            let (ym, _) = net.forward(&x);
+            net.layers[li].w[wi] = orig;
+            let lp: f32 = yp.iter().map(|v| v * v).sum::<f32>() / 2.0;
+            let lm: f32 = ym.iter().map(|v| v * v).sum::<f32>() / 2.0;
+            let fd = (lp - lm) / (2.0 * eps);
+            // locate flat index of layers[li].w[wi]
+            let mut off = 0;
+            for l in &net.layers[..li] {
+                off += l.din * l.dout + l.dout;
+            }
+            let an = grads[off + wi];
+            assert!(
+                (fd - an).abs() < 2e-2 * (1.0 + fd.abs()),
+                "layer {li} w{wi}: fd={fd} an={an}"
+            );
+        }
+    }
+
+    #[test]
+    fn adam_reduces_regression_loss() {
+        let mut rng = Rng::new(3);
+        let mut net = Mlp::new(&[2, 16, 1], &mut rng);
+        // fit y = x0 + 2*x1 on a tiny fixed set
+        let data: Vec<([f32; 2], f32)> = (0..16)
+            .map(|_| {
+                let a = rng.f32() - 0.5;
+                let b = rng.f32() - 0.5;
+                ([a, b], a + 2.0 * b)
+            })
+            .collect();
+        let loss = |net: &Mlp| -> f32 {
+            data.iter()
+                .map(|(x, t)| {
+                    let (y, _) = net.forward(x);
+                    (y[0] - t).powi(2)
+                })
+                .sum::<f32>()
+                / data.len() as f32
+        };
+        let l0 = loss(&net);
+        let mut grads = vec![0.0f32; net.n_params()];
+        for _ in 0..300 {
+            grads.iter_mut().for_each(|g| *g = 0.0);
+            for (x, t) in &data {
+                let (y, tape) = net.forward(x);
+                let d = vec![2.0 * (y[0] - t) / data.len() as f32];
+                net.backward(&tape, &d, &mut grads);
+            }
+            net.adam_step(&grads, 1e-2);
+        }
+        let l1 = loss(&net);
+        assert!(l1 < l0 * 0.1, "loss {l0} -> {l1}");
+    }
+
+    #[test]
+    fn softmax_normalizes() {
+        let p = softmax(&[1.0, 2.0, 3.0]);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+        // large logits stay finite
+        let p = softmax(&[1000.0, 1000.0]);
+        assert!((p[0] - 0.5).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,371 @@
+//! Dataset Generator (Section 5.1 / Section 7.1.2).
+//!
+//! Evenly samples network parameters and configurations over the design
+//! space, labels each sample with the analytical design model, and computes
+//! the normalization statistics (std-normalization of objectives and
+//! network parameters, Section 6.1).  The paper uses 23,420 train + 1,000
+//! test samples for im2col and 31,250 + 1,000 for DnnWeaver; sizes here are
+//! CLI-configurable (defaults scaled down, see DESIGN.md).
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::model;
+use crate::space::{SpaceSpec, N_NET, N_OBJ};
+use crate::util::rng::Rng;
+
+/// One labeled design point: a layer shape, a configuration (choice
+/// indices), and the design model's objectives for it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sample {
+    pub net: [f32; N_NET],
+    pub cfg_idx: Vec<u16>,
+    pub latency: f32,
+    pub power: f32,
+}
+
+/// Normalization statistics ((x - mean) / std), Section 6.1.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Stats {
+    pub net_mean: [f32; N_NET],
+    pub net_std: [f32; N_NET],
+    pub obj_mean: [f32; N_OBJ],
+    pub obj_std: [f32; N_OBJ],
+}
+
+impl Stats {
+    /// Flat layout consumed by the HLO artifacts:
+    /// [net_mean(6), net_std(6), obj_mean(2), obj_std(2)].
+    pub fn to_vec(&self) -> Vec<f32> {
+        let mut v = Vec::with_capacity(2 * N_NET + 2 * N_OBJ);
+        v.extend_from_slice(&self.net_mean);
+        v.extend_from_slice(&self.net_std);
+        v.extend_from_slice(&self.obj_mean);
+        v.extend_from_slice(&self.obj_std);
+        v
+    }
+}
+
+#[derive(Debug)]
+pub struct Dataset {
+    pub model: String,
+    pub train: Vec<Sample>,
+    pub test: Vec<Sample>,
+    pub stats: Stats,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum DatasetError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("corrupt dataset file: {0}")]
+    Corrupt(&'static str),
+}
+
+/// Generate a labeled dataset by even sampling (the Dataset Generator box
+/// of Figure 4).
+pub fn generate(
+    spec: &SpaceSpec,
+    n_train: usize,
+    n_test: usize,
+    seed: u64,
+) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut make = |n: usize| -> Vec<Sample> {
+        (0..n)
+            .map(|_| {
+                let net = spec.sample_net(&mut rng);
+                let idx = spec.sample_config(&mut rng);
+                let raw = spec.raw_values(&idx);
+                let (latency, power) = model::eval(&spec.model, &net, &raw);
+                Sample {
+                    net,
+                    cfg_idx: idx.iter().map(|&i| i as u16).collect(),
+                    latency,
+                    power,
+                }
+            })
+            .collect()
+    };
+    let train = make(n_train);
+    let test = make(n_test);
+    let stats = compute_stats(&train);
+    Dataset { model: spec.model.clone(), train, test, stats }
+}
+
+/// Mean/std over the training split (std floored to avoid division blowup).
+pub fn compute_stats(samples: &[Sample]) -> Stats {
+    let n = samples.len().max(1) as f64;
+    let mut net_mean = [0f64; N_NET];
+    let mut obj_mean = [0f64; N_OBJ];
+    for s in samples {
+        for (m, v) in net_mean.iter_mut().zip(&s.net) {
+            *m += *v as f64;
+        }
+        obj_mean[0] += s.latency as f64;
+        obj_mean[1] += s.power as f64;
+    }
+    net_mean.iter_mut().for_each(|m| *m /= n);
+    obj_mean.iter_mut().for_each(|m| *m /= n);
+    let mut net_var = [0f64; N_NET];
+    let mut obj_var = [0f64; N_OBJ];
+    for s in samples {
+        for ((v, m), acc) in s.net.iter().zip(&net_mean).zip(net_var.iter_mut()) {
+            *acc += (*v as f64 - m).powi(2);
+        }
+        obj_var[0] += (s.latency as f64 - obj_mean[0]).powi(2);
+        obj_var[1] += (s.power as f64 - obj_mean[1]).powi(2);
+    }
+    let std = |v: f64| ((v / n).sqrt() as f32).max(1e-9);
+    Stats {
+        net_mean: net_mean.map(|m| m as f32),
+        net_std: net_var.map(std),
+        obj_mean: obj_mean.map(|m| m as f32),
+        obj_std: obj_var.map(std),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Compact binary persistence (no serde in the offline cache).
+// Layout: magic, model name, group count, per-sample fixed-width records.
+// ---------------------------------------------------------------------------
+
+const MAGIC: &[u8; 8] = b"GANDSEd1";
+
+impl Dataset {
+    pub fn save(&self, path: &Path) -> Result<(), DatasetError> {
+        let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+        w.write_all(MAGIC)?;
+        let name = self.model.as_bytes();
+        w.write_all(&(name.len() as u32).to_le_bytes())?;
+        w.write_all(name)?;
+        let n_groups = self
+            .train
+            .first()
+            .or(self.test.first())
+            .map(|s| s.cfg_idx.len())
+            .unwrap_or(0) as u32;
+        w.write_all(&n_groups.to_le_bytes())?;
+        for arr in [
+            &self.stats.net_mean[..],
+            &self.stats.net_std[..],
+            &self.stats.obj_mean[..],
+            &self.stats.obj_std[..],
+        ] {
+            for x in arr {
+                w.write_all(&x.to_le_bytes())?;
+            }
+        }
+        for split in [&self.train, &self.test] {
+            w.write_all(&(split.len() as u64).to_le_bytes())?;
+            for s in split {
+                for x in &s.net {
+                    w.write_all(&x.to_le_bytes())?;
+                }
+                for i in &s.cfg_idx {
+                    w.write_all(&i.to_le_bytes())?;
+                }
+                w.write_all(&s.latency.to_le_bytes())?;
+                w.write_all(&s.power.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Dataset, DatasetError> {
+        let mut r = std::io::BufReader::new(std::fs::File::open(path)?);
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            return Err(DatasetError::Corrupt("bad magic"));
+        }
+        let name_len = read_u32(&mut r)? as usize;
+        if name_len > 64 {
+            return Err(DatasetError::Corrupt("model name too long"));
+        }
+        let mut name = vec![0u8; name_len];
+        r.read_exact(&mut name)?;
+        let model = String::from_utf8(name)
+            .map_err(|_| DatasetError::Corrupt("model name not utf8"))?;
+        let n_groups = read_u32(&mut r)? as usize;
+        let mut stats = Stats {
+            net_mean: [0.0; N_NET],
+            net_std: [0.0; N_NET],
+            obj_mean: [0.0; N_OBJ],
+            obj_std: [0.0; N_OBJ],
+        };
+        for arr in [
+            &mut stats.net_mean[..],
+            &mut stats.net_std[..],
+            &mut stats.obj_mean[..],
+            &mut stats.obj_std[..],
+        ] {
+            for x in arr.iter_mut() {
+                *x = read_f32(&mut r)?;
+            }
+        }
+        let mut splits = Vec::new();
+        for _ in 0..2 {
+            let n = read_u64(&mut r)? as usize;
+            let mut out = Vec::with_capacity(n.min(1 << 24));
+            for _ in 0..n {
+                let mut net = [0f32; N_NET];
+                for x in net.iter_mut() {
+                    *x = read_f32(&mut r)?;
+                }
+                let mut cfg_idx = Vec::with_capacity(n_groups);
+                for _ in 0..n_groups {
+                    cfg_idx.push(read_u16(&mut r)?);
+                }
+                let latency = read_f32(&mut r)?;
+                let power = read_f32(&mut r)?;
+                out.push(Sample { net, cfg_idx, latency, power });
+            }
+            splits.push(out);
+        }
+        let test = splits.pop().unwrap();
+        let train = splits.pop().unwrap();
+        Ok(Dataset { model, train, test, stats })
+    }
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32, DatasetError> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+fn read_u64(r: &mut impl Read) -> Result<u64, DatasetError> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+fn read_u16(r: &mut impl Read) -> Result<u16, DatasetError> {
+    let mut b = [0u8; 2];
+    r.read_exact(&mut b)?;
+    Ok(u16::from_le_bytes(b))
+}
+fn read_f32(r: &mut impl Read) -> Result<f32, DatasetError> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(f32::from_le_bytes(b))
+}
+
+/// Mini-batch assembly for the AOT train-step artifact: fills flat f32
+/// buffers in the layouts the HLO expects.
+pub struct BatchBuffers {
+    pub net: Vec<f32>,     // [B, 6]
+    pub onehot: Vec<f32>,  // [B, onehot_dim]
+    pub obj: Vec<f32>,     // [B, 2]  (LO_s, PO_s) = the sample's own labels
+    pub noise: Vec<f32>,   // [B, noise_dim]
+}
+
+pub fn build_batch(
+    spec: &SpaceSpec,
+    samples: &[Sample],
+    indices: &[usize],
+    rng: &mut Rng,
+) -> BatchBuffers {
+    let b = indices.len();
+    let mut net = Vec::with_capacity(b * N_NET);
+    let mut onehot = vec![0f32; b * spec.onehot_dim];
+    let mut obj = Vec::with_capacity(b * N_OBJ);
+    let mut noise = Vec::with_capacity(b * spec.noise_dim);
+    for (row, &i) in indices.iter().enumerate() {
+        let s = &samples[i];
+        net.extend_from_slice(&s.net);
+        let idx: Vec<usize> = s.cfg_idx.iter().map(|&x| x as usize).collect();
+        spec.encode_onehot(
+            &idx,
+            &mut onehot[row * spec.onehot_dim..(row + 1) * spec.onehot_dim],
+        );
+        obj.push(s.latency);
+        obj.push(s.power);
+        for _ in 0..spec.noise_dim {
+            noise.push(rng.normal() * 0.1);
+        }
+    }
+    BatchBuffers { net, onehot, obj, noise }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::builtin_spec;
+
+    #[test]
+    fn generate_is_deterministic() {
+        let spec = builtin_spec("dnnweaver").unwrap();
+        let a = generate(&spec, 50, 10, 42);
+        let b = generate(&spec, 50, 10, 42);
+        assert_eq!(a.train, b.train);
+        assert_eq!(a.test, b.test);
+        assert_eq!(a.stats, b.stats);
+    }
+
+    #[test]
+    fn labels_match_design_model(){
+        let spec = builtin_spec("im2col").unwrap();
+        let d = generate(&spec, 20, 5, 1);
+        for s in d.train.iter().chain(&d.test) {
+            let idx: Vec<usize> =
+                s.cfg_idx.iter().map(|&x| x as usize).collect();
+            let raw = spec.raw_values(&idx);
+            let (l, p) = crate::model::eval("im2col", &s.net, &raw);
+            assert_eq!(l, s.latency);
+            assert_eq!(p, s.power);
+        }
+    }
+
+    #[test]
+    fn stats_are_sane() {
+        let spec = builtin_spec("dnnweaver").unwrap();
+        let d = generate(&spec, 500, 0, 2);
+        for (m, choices) in d.stats.net_mean.iter().zip(&spec.net_choices) {
+            let lo = choices.first().unwrap();
+            let hi = choices.last().unwrap();
+            assert!(m >= lo && m <= hi, "mean {m} outside [{lo},{hi}]");
+        }
+        assert!(d.stats.obj_std[0] > 0.0 && d.stats.obj_std[1] > 0.0);
+        assert_eq!(d.stats.to_vec().len(), 16);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let spec = builtin_spec("dnnweaver").unwrap();
+        let d = generate(&spec, 30, 7, 3);
+        let tmp = std::env::temp_dir().join("gandse_ds_test.bin");
+        d.save(&tmp).unwrap();
+        let d2 = Dataset::load(&tmp).unwrap();
+        assert_eq!(d.model, d2.model);
+        assert_eq!(d.train, d2.train);
+        assert_eq!(d.test, d2.test);
+        assert_eq!(d.stats, d2.stats);
+        std::fs::remove_file(&tmp).ok();
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let tmp = std::env::temp_dir().join("gandse_ds_garbage.bin");
+        std::fs::write(&tmp, b"not a dataset").unwrap();
+        assert!(Dataset::load(&tmp).is_err());
+        std::fs::remove_file(&tmp).ok();
+    }
+
+    #[test]
+    fn batch_layout() {
+        let spec = builtin_spec("dnnweaver").unwrap();
+        let d = generate(&spec, 10, 0, 4);
+        let mut rng = Rng::new(5);
+        let b = build_batch(&spec, &d.train, &[0, 3, 7], &mut rng);
+        assert_eq!(b.net.len(), 3 * 6);
+        assert_eq!(b.onehot.len(), 3 * spec.onehot_dim);
+        assert_eq!(b.obj.len(), 3 * 2);
+        assert_eq!(b.noise.len(), 3 * spec.noise_dim);
+        // row 1 one-hot has exactly one 1 per group
+        let row = &b.onehot[spec.onehot_dim..2 * spec.onehot_dim];
+        assert_eq!(row.iter().sum::<f32>() as usize, spec.groups.len());
+        // objectives are the sample's own labels
+        assert_eq!(b.obj[2], d.train[3].latency);
+        assert_eq!(b.obj[3], d.train[3].power);
+    }
+}

@@ -1,0 +1,574 @@
+//! Exploration Phase (Fig. 4): generator inference → probability-threshold
+//! candidate expansion → Design Selector (Algorithm 2).
+//!
+//! This is the request path.  One DSE task = one (network parameters,
+//! latency objective, power objective) triple; the trained G produces
+//! per-group choice probabilities through the AOT `g_infer` artifact, every
+//! choice whose probability exceeds the **probability threshold** (Section
+//! 6.1, default 0.2) is kept, and the candidate configuration sets are the
+//! cartesian product of kept choices.  The selector scans them with the
+//! analytical design model and applies the paper's 3-scenario update rule.
+
+use anyhow::{bail, Result};
+
+use crate::model;
+use crate::runtime::{lit_f32, to_f32_vec, Runtime};
+use crate::space::{Meta, SpaceSpec, N_NET, N_OBJ};
+use crate::util::rng::Rng;
+
+/// Default probability threshold (Section 6.1's example value).
+pub const DEFAULT_THRESHOLD: f32 = 0.2;
+/// Safety cap on enumerated candidates per task (the true candidate count
+/// is still reported for Table 5).
+pub const MAX_ENUMERATED: usize = 100_000;
+
+/// One DSE task.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DseRequest {
+    pub net: [f32; N_NET],
+    /// Latency objective: need latency <= lo.
+    pub lo: f32,
+    /// Power objective: need power <= po.
+    pub po: f32,
+}
+
+/// Outcome of one DSE task.
+#[derive(Debug, Clone)]
+pub struct DseResult {
+    /// Chosen configuration as per-group choice indices.
+    pub cfg_idx: Vec<usize>,
+    /// Chosen configuration as raw values.
+    pub cfg_raw: Vec<f32>,
+    /// Design-model objectives of the chosen configuration.
+    pub latency: f32,
+    pub power: f32,
+    /// Number of candidate configuration sets implied by the threshold
+    /// (product of per-group kept-choice counts; Table 5 column).
+    pub n_candidates: f64,
+    /// Both objectives met (with the paper's 1% evaluation noise applied
+    /// by the harness, not here).
+    pub satisfied: bool,
+}
+
+/// The per-group choices whose probability exceeded the threshold.
+#[derive(Debug, Clone)]
+pub struct Candidates {
+    pub kept: Vec<Vec<usize>>,
+}
+
+impl Candidates {
+    /// Extract from one row of G probabilities.  Guarantees at least one
+    /// choice per group (argmax fallback when nothing passes threshold).
+    pub fn from_probs(
+        spec: &SpaceSpec,
+        probs: &[f32],
+        threshold: f32,
+    ) -> Candidates {
+        debug_assert_eq!(probs.len(), spec.onehot_dim);
+        let mut kept = Vec::with_capacity(spec.groups.len());
+        let mut off = 0;
+        for g in &spec.groups {
+            let slice = &probs[off..off + g.size()];
+            let mut ks: Vec<usize> = (0..g.size())
+                .filter(|&i| slice[i] > threshold)
+                .collect();
+            if ks.is_empty() {
+                let mut best = 0;
+                for (i, &p) in slice.iter().enumerate() {
+                    if p > slice[best] {
+                        best = i;
+                    }
+                }
+                ks.push(best);
+            }
+            kept.push(ks);
+            off += g.size();
+        }
+        Candidates { kept }
+    }
+
+    /// Total number of candidate configuration sets (cartesian product).
+    pub fn count(&self) -> f64 {
+        self.kept.iter().map(|k| k.len() as f64).product()
+    }
+
+    /// Enumerate candidate index-vectors in mixed-radix order, capped.
+    pub fn enumerate(&self, cap: usize) -> CandidateIter<'_> {
+        CandidateIter {
+            kept: &self.kept,
+            counter: vec![0; self.kept.len()],
+            done: self.kept.is_empty(),
+            emitted: 0,
+            cap,
+        }
+    }
+
+    /// Allocation-free enumeration for the selection hot loop: `f` is
+    /// called with a reused index buffer for up to `cap` candidates.
+    pub fn for_each_capped(&self, cap: usize, mut f: impl FnMut(&[usize])) {
+        if self.kept.is_empty() {
+            return;
+        }
+        let n = self.kept.len();
+        let mut counter = vec![0usize; n];
+        let mut idx: Vec<usize> =
+            self.kept.iter().map(|ks| ks[0]).collect();
+        let mut emitted = 0usize;
+        loop {
+            f(&idx);
+            emitted += 1;
+            if emitted >= cap {
+                return;
+            }
+            // increment mixed-radix counter, updating idx in place
+            let mut i = n;
+            loop {
+                if i == 0 {
+                    return; // wrapped: enumeration complete
+                }
+                i -= 1;
+                counter[i] += 1;
+                if counter[i] < self.kept[i].len() {
+                    idx[i] = self.kept[i][counter[i]];
+                    break;
+                }
+                counter[i] = 0;
+                idx[i] = self.kept[i][0];
+            }
+        }
+    }
+}
+
+/// Lazy mixed-radix enumeration of the cartesian product — the selector
+/// consumes candidates without materializing the full set.
+pub struct CandidateIter<'a> {
+    kept: &'a [Vec<usize>],
+    counter: Vec<usize>,
+    done: bool,
+    emitted: usize,
+    cap: usize,
+}
+
+impl<'a> Iterator for CandidateIter<'a> {
+    type Item = Vec<usize>;
+
+    fn next(&mut self) -> Option<Vec<usize>> {
+        if self.done || self.emitted >= self.cap {
+            return None;
+        }
+        let item: Vec<usize> = self
+            .counter
+            .iter()
+            .zip(self.kept)
+            .map(|(&c, ks)| ks[c])
+            .collect();
+        self.emitted += 1;
+        // increment mixed-radix counter
+        let mut i = self.kept.len();
+        loop {
+            if i == 0 {
+                self.done = true;
+                break;
+            }
+            i -= 1;
+            self.counter[i] += 1;
+            if self.counter[i] < self.kept[i].len() {
+                break;
+            }
+            self.counter[i] = 0;
+        }
+        Some(item)
+    }
+}
+
+/// Design Selector: Algorithm 2, verbatim.
+///
+/// Scans candidate configurations, tracking the best (L_opt, P_opt) under
+/// the paper's three update scenarios, and returns the chosen candidate's
+/// index in iteration order (plus its objectives).
+pub struct Selector {
+    pub lo: f32,
+    pub po: f32,
+    l_opt: f32,
+    p_opt: f32,
+    best: Option<usize>,
+}
+
+impl Selector {
+    pub fn new(lo: f32, po: f32) -> Selector {
+        // Lines 1-2: L_opt <- 0, P_opt <- 0 (sentinel for "never updated").
+        Selector { lo, po, l_opt: 0.0, p_opt: 0.0, best: None }
+    }
+
+    /// Lines 4-30 for one candidate; `i` is the candidate's ordinal.
+    pub fn offer(&mut self, i: usize, l_g: f32, p_g: f32) {
+        let (lo, po) = (self.lo, self.po);
+        let mut update = false; // Line 6
+        if self.l_opt == 0.0 && self.p_opt == 0.0 {
+            update = true; // Lines 7-8: first candidate initializes
+        } else if (self.l_opt > lo && self.p_opt > po)
+            || (self.l_opt < lo && self.p_opt < po)
+        {
+            // Scenario 1 (Line 10): both worse or both better than the
+            // user's objectives — take strict improvements on both.
+            if l_g < self.l_opt && p_g < self.p_opt {
+                update = true; // Lines 11-13
+            }
+        } else if self.l_opt > lo && self.p_opt < po {
+            // Scenario 2 (Lines 15-18): latency unsatisfied, power ok —
+            // chase latency while power stays within the objective.
+            if l_g < self.l_opt && p_g < po {
+                update = true;
+            }
+        } else if p_g < self.p_opt && self.l_opt < lo && l_g < lo {
+            // Scenario 3 (Lines 20-22), mirrored.
+            update = true;
+        }
+        if update {
+            self.l_opt = l_g;
+            self.p_opt = p_g;
+            self.best = Some(i);
+        }
+    }
+
+    pub fn result(&self) -> Option<(usize, f32, f32)> {
+        self.best.map(|i| (i, self.l_opt, self.p_opt))
+    }
+}
+
+/// The Design Explorer: batched G inference + selection.
+pub struct Explorer<'a> {
+    rt: &'a Runtime,
+    meta: &'a Meta,
+    pub spec: &'a SpaceSpec,
+    g_exe: std::sync::Arc<crate::runtime::Executable>,
+    g_params: Vec<f32>,
+    stats: Vec<f32>,
+    pub threshold: f32,
+    noise_rng: Rng,
+}
+
+impl<'a> Explorer<'a> {
+    pub fn new(
+        rt: &'a Runtime,
+        meta: &'a Meta,
+        model: &'a str,
+        g_params: Vec<f32>,
+        stats: Vec<f32>,
+    ) -> Result<Explorer<'a>> {
+        let mm = meta.model(model)?;
+        if g_params.len() != mm.g_params {
+            bail!(
+                "checkpoint has {} G params, artifact expects {}",
+                g_params.len(),
+                mm.g_params
+            );
+        }
+        if stats.len() != meta.stats_len {
+            bail!("stats length {} != {}", stats.len(), meta.stats_len);
+        }
+        let g_exe = rt.load(&format!("g_infer_{model}.hlo.txt"))?;
+        Ok(Explorer {
+            rt,
+            meta,
+            spec: &mm.spec,
+            g_exe,
+            g_params,
+            stats,
+            threshold: DEFAULT_THRESHOLD,
+            noise_rng: Rng::new(0x5EED),
+        })
+    }
+
+    /// Run G on up to `infer_batch` requests (padded); returns one
+    /// probability row per request.
+    pub fn infer_probs(
+        &mut self,
+        reqs: &[DseRequest],
+    ) -> Result<Vec<Vec<f32>>> {
+        let b = self.meta.infer_batch;
+        let spec = self.spec;
+        let mut out = Vec::with_capacity(reqs.len());
+        for chunk in reqs.chunks(b) {
+            let mut net = Vec::with_capacity(b * N_NET);
+            let mut obj = Vec::with_capacity(b * N_OBJ);
+            let mut noise = Vec::with_capacity(b * spec.noise_dim);
+            for r in chunk {
+                net.extend_from_slice(&r.net);
+                obj.push(r.lo);
+                obj.push(r.po);
+            }
+            for _ in chunk.len()..b {
+                net.extend_from_slice(&[0.0; N_NET]);
+                obj.extend_from_slice(&[0.0; N_OBJ]);
+            }
+            for _ in 0..b * spec.noise_dim {
+                noise.push(self.noise_rng.normal() * 0.1);
+            }
+            let inputs = [
+                lit_f32(&self.g_params, &[self.g_params.len()])?,
+                lit_f32(&net, &[b, N_NET])?,
+                lit_f32(&obj, &[b, N_OBJ])?,
+                lit_f32(&noise, &[b, spec.noise_dim])?,
+                lit_f32(&self.stats, &[self.meta.stats_len])?,
+            ];
+            let res = self.g_exe.run(&inputs)?;
+            let probs = to_f32_vec(&res[0])?;
+            for (i, _) in chunk.iter().enumerate() {
+                out.push(
+                    probs[i * spec.onehot_dim..(i + 1) * spec.onehot_dim]
+                        .to_vec(),
+                );
+            }
+        }
+        Ok(out)
+    }
+
+    /// Full exploration for a batch of DSE tasks: inference, candidate
+    /// expansion, design-model evaluation, Algorithm-2 selection.
+    pub fn explore(&mut self, reqs: &[DseRequest]) -> Result<Vec<DseResult>> {
+        let probs = self.infer_probs(reqs)?;
+        Ok(reqs
+            .iter()
+            .zip(&probs)
+            .map(|(r, p)| self.select_from_probs(r, p))
+            .collect())
+    }
+
+    /// Candidate expansion + selection for one request given G's output.
+    pub fn select_from_probs(
+        &self,
+        req: &DseRequest,
+        probs: &[f32],
+    ) -> DseResult {
+        let spec = self.spec;
+        let cands = Candidates::from_probs(spec, probs, self.threshold);
+        let mut sel = Selector::new(req.lo, req.po);
+        // Hot loop (§Perf): allocation-free enumeration; only the current
+        // best candidate's indices are kept (copied on the rare update).
+        let mut raw = vec![0f32; spec.groups.len()];
+        let mut kept_best: Vec<usize> = vec![0; spec.groups.len()];
+        let mut i = 0usize;
+        cands.for_each_capped(MAX_ENUMERATED, |idx| {
+            for ((r, g), &ci) in raw.iter_mut().zip(&spec.groups).zip(idx) {
+                *r = g.choices[ci];
+            }
+            let (l, p) = model::eval(&spec.model, &req.net, &raw);
+            let before = sel.result().map(|(b, _, _)| b);
+            sel.offer(i, l, p);
+            if sel.result().map(|(b, _, _)| b) != before {
+                kept_best.copy_from_slice(idx);
+            }
+            i += 1;
+        });
+        let (_, l_opt, p_opt) =
+            sel.result().expect("at least one candidate is guaranteed");
+        let cfg_raw = spec.raw_values(&kept_best);
+        DseResult {
+            cfg_idx: kept_best,
+            cfg_raw,
+            latency: l_opt,
+            power: p_opt,
+            n_candidates: cands.count(),
+            satisfied: l_opt <= req.lo && p_opt <= req.po,
+        }
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        self.rt
+    }
+
+    /// Whole-network exploration: one accelerator configuration shared by
+    /// every conv layer of a network (the deployment case the paper's
+    /// intro motivates).  G proposes candidates per layer; the union is
+    /// selected with Algorithm 2 against the network-level objectives —
+    /// summed latency across layers, maximum power.
+    pub fn explore_network(
+        &mut self,
+        layers: &[[f32; N_NET]],
+        lo: f32,
+        po: f32,
+    ) -> Result<DseResult> {
+        if layers.is_empty() {
+            bail!("explore_network needs at least one layer");
+        }
+        let spec = self.spec;
+        // Per-layer inference: give each layer a proportional share of the
+        // latency budget as its conditioning objective.
+        let share = lo / layers.len() as f32;
+        let reqs: Vec<DseRequest> = layers
+            .iter()
+            .map(|&net| DseRequest { net, lo: share, po })
+            .collect();
+        let probs = self.infer_probs(&reqs)?;
+        // Union of per-layer kept choices per group.
+        let mut union: Vec<Vec<usize>> = vec![Vec::new(); spec.groups.len()];
+        for p in &probs {
+            let c = Candidates::from_probs(spec, p, self.threshold);
+            for (u, ks) in union.iter_mut().zip(&c.kept) {
+                for &k in ks {
+                    if !u.contains(&k) {
+                        u.push(k);
+                    }
+                }
+            }
+        }
+        union.iter_mut().for_each(|u| u.sort_unstable());
+        let cands = Candidates { kept: union };
+        // Select on network-level objectives.
+        let mut sel = Selector::new(lo, po);
+        let mut raw = vec![0f32; spec.groups.len()];
+        let mut kept_best: Vec<usize> = vec![0; spec.groups.len()];
+        let mut i = 0usize;
+        cands.for_each_capped(MAX_ENUMERATED, |idx| {
+            for ((r, g), &ci) in raw.iter_mut().zip(&spec.groups).zip(idx) {
+                *r = g.choices[ci];
+            }
+            let mut total_l = 0f32;
+            let mut max_p = 0f32;
+            for net in layers {
+                let (l, p) = model::eval(&spec.model, net, &raw);
+                total_l += l;
+                max_p = max_p.max(p);
+            }
+            let before = sel.result().map(|(b, _, _)| b);
+            sel.offer(i, total_l, max_p);
+            if sel.result().map(|(b, _, _)| b) != before {
+                kept_best.copy_from_slice(idx);
+            }
+            i += 1;
+        });
+        let (_, l_opt, p_opt) = sel.result().expect("non-empty candidates");
+        let cfg_raw = spec.raw_values(&kept_best);
+        Ok(DseResult {
+            cfg_idx: kept_best,
+            cfg_raw,
+            latency: l_opt,
+            power: p_opt,
+            n_candidates: cands.count(),
+            satisfied: l_opt <= lo && p_opt <= po,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::builtin_spec;
+
+    fn probs_for(spec: &SpaceSpec, hot: &[(usize, &[usize])]) -> Vec<f32> {
+        // distribute mass over the requested hot choices, rest tiny
+        let mut p = vec![0.001f32; spec.onehot_dim];
+        let offs = spec.group_offsets();
+        for &(g, choices) in hot {
+            let share = 1.0 / choices.len() as f32;
+            for &c in choices {
+                p[offs[g] + c] = share;
+            }
+        }
+        p
+    }
+
+    #[test]
+    fn candidates_threshold_and_fallback() {
+        let spec = builtin_spec("dnnweaver").unwrap();
+        // group 0: two hot choices; others: nothing above threshold
+        let mut p = probs_for(&spec, &[(0, &[1, 3])]);
+        let offs = spec.group_offsets();
+        p[offs[1] + 2] = 0.009; // argmax fallback target for group 1
+        let c = Candidates::from_probs(&spec, &p, 0.2);
+        assert_eq!(c.kept[0], vec![1, 3]);
+        assert_eq!(c.kept[1], vec![2]); // fallback argmax
+        assert_eq!(c.count(), 2.0);
+    }
+
+    #[test]
+    fn candidate_count_is_product() {
+        let spec = builtin_spec("dnnweaver").unwrap();
+        let p = probs_for(&spec, &[(0, &[0, 1, 2]), (1, &[0, 1]), (2, &[4]),
+                                    (3, &[0, 1])]);
+        let c = Candidates::from_probs(&spec, &p, 0.2);
+        assert_eq!(c.count(), 12.0);
+        let v: Vec<_> = c.enumerate(usize::MAX).collect();
+        assert_eq!(v.len(), 12);
+        // paper's worked example: candidates are all combinations
+        assert!(v.contains(&vec![0, 0, 4, 0]));
+        assert!(v.contains(&vec![2, 1, 4, 1]));
+    }
+
+    #[test]
+    fn enumeration_respects_cap() {
+        let spec = builtin_spec("im2col").unwrap();
+        let hot: Vec<(usize, Vec<usize>)> =
+            (0..spec.groups.len()).map(|g| (g, vec![0, 1, 2])).collect();
+        let hot_ref: Vec<(usize, &[usize])> =
+            hot.iter().map(|(g, v)| (*g, v.as_slice())).collect();
+        let p = probs_for(&spec, &hot_ref);
+        let c = Candidates::from_probs(&spec, &p, 0.2);
+        assert!(c.count() > 500_000.0);
+        assert_eq!(c.enumerate(1000).count(), 1000);
+    }
+
+    #[test]
+    fn for_each_capped_matches_enumerate() {
+        let spec = builtin_spec("dnnweaver").unwrap();
+        let p = probs_for(&spec, &[(0, &[0, 2, 5]), (1, &[1, 3]), (2, &[0]),
+                                    (3, &[2, 4])]);
+        let c = Candidates::from_probs(&spec, &p, 0.2);
+        let via_iter: Vec<Vec<usize>> = c.enumerate(7).collect();
+        let mut via_fe: Vec<Vec<usize>> = Vec::new();
+        c.for_each_capped(7, |idx| via_fe.push(idx.to_vec()));
+        assert_eq!(via_iter, via_fe);
+        // uncapped full product too
+        let all_iter: Vec<Vec<usize>> = c.enumerate(usize::MAX).collect();
+        let mut all_fe: Vec<Vec<usize>> = Vec::new();
+        c.for_each_capped(usize::MAX, |idx| all_fe.push(idx.to_vec()));
+        assert_eq!(all_iter, all_fe);
+        assert_eq!(all_fe.len() as f64, c.count());
+    }
+
+    #[test]
+    fn selector_takes_first_then_improves() {
+        let mut s = Selector::new(10.0, 10.0);
+        s.offer(0, 20.0, 20.0); // initializes (Lines 7-8)
+        assert_eq!(s.result().unwrap().0, 0);
+        // both worse than objectives (scenario 1): strict improvement
+        s.offer(1, 15.0, 25.0); // power worse -> no update
+        assert_eq!(s.result().unwrap().0, 0);
+        s.offer(2, 15.0, 15.0); // both better -> update
+        assert_eq!(s.result().unwrap().0, 2);
+    }
+
+    #[test]
+    fn selector_scenario2_prioritizes_satisfaction() {
+        // L_opt worse than LO, P_opt satisfied: accept higher power while
+        // chasing latency, as long as power stays within PO.
+        let mut s = Selector::new(10.0, 10.0);
+        s.offer(0, 20.0, 5.0);
+        // latency improves, power worsens but still <= PO -> update
+        s.offer(1, 12.0, 9.0);
+        assert_eq!(s.result().unwrap().0, 1);
+        // power above PO -> rejected
+        s.offer(2, 11.0, 11.0);
+        assert_eq!(s.result().unwrap().0, 1);
+    }
+
+    #[test]
+    fn selector_scenario3_mirrored() {
+        let mut s = Selector::new(10.0, 10.0);
+        s.offer(0, 5.0, 20.0); // latency ok, power not
+        s.offer(1, 9.0, 15.0); // power improves, latency stays <= LO
+        assert_eq!(s.result().unwrap().0, 1);
+        s.offer(2, 11.0, 12.0); // latency would break LO -> rejected
+        assert_eq!(s.result().unwrap().0, 1);
+    }
+
+    #[test]
+    fn selector_both_satisfied_keeps_optimizing() {
+        let mut s = Selector::new(10.0, 10.0);
+        s.offer(0, 8.0, 8.0);
+        s.offer(1, 6.0, 7.0); // both better -> update (scenario 1, branch 2)
+        let (i, l, p) = s.result().unwrap();
+        assert_eq!((i, l, p), (1, 6.0, 7.0));
+    }
+}

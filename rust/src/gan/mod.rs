@@ -1,0 +1,476 @@
+//! GAN state + Algorithm-1 training driver (the Training Phase of Fig. 4).
+//!
+//! The Rust coordinator owns the parameter/optimizer state as flat f32
+//! vectors and loops the AOT-compiled `train_step_<model>.hlo.txt` through
+//! the PJRT runtime.  Python is never involved: the dataset comes from
+//! `dataset::generate`, batches are assembled in Rust, and the HLO artifact
+//! performs forward/backward/Adam for both networks in one execution.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::dataset::{build_batch, Dataset};
+use crate::runtime::Runtime;
+use crate::space::{Meta, ModelMeta, N_NET, N_OBJ};
+use crate::util::rng::Rng;
+
+/// Flat parameter + Adam state for one GAN (G and D).
+#[derive(Debug, Clone)]
+pub struct GanState {
+    pub model: String,
+    pub g: Vec<f32>,
+    pub d: Vec<f32>,
+    pub m_g: Vec<f32>,
+    pub v_g: Vec<f32>,
+    pub m_d: Vec<f32>,
+    pub v_d: Vec<f32>,
+    /// Adam timestep (number of completed updates).
+    pub step: u64,
+}
+
+/// Per-step training metrics (Algorithm 1's three losses + batch
+/// satisfaction rate) — the raw series behind Figures 10/11.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StepMetrics {
+    pub loss_config: f32,
+    pub loss_critic: f32,
+    pub loss_dis: f32,
+    pub sat_frac: f32,
+}
+
+/// Training knobs (Table 4 + Algorithm 1's w_critic).
+#[derive(Debug, Clone, Copy)]
+pub struct TrainConfig {
+    pub lr: f32,
+    pub w_critic: f32,
+    /// Figure 3(a) baseline: config loss always on, critic loss off.
+    pub mlp_mode: bool,
+    pub epochs: usize,
+    pub seed: u64,
+    /// Print a progress line every n steps (0 = silent).
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            lr: 1e-4,
+            w_critic: 0.5,
+            mlp_mode: false,
+            epochs: 10,
+            seed: 0xC0FFEE,
+            log_every: 0,
+        }
+    }
+}
+
+/// He-style initialization of one MLP's flat parameter vector: weights
+/// scaled by sqrt(2/fan_in), biases zero.  Layout matches
+/// `model.MlpLayout` on the Python side (W then b, layer by layer).
+pub fn init_mlp_flat(dims: &[usize], rng: &mut Rng) -> Vec<f32> {
+    let total: usize = dims.windows(2).map(|w| w[0] * w[1] + w[1]).sum();
+    let mut out = Vec::with_capacity(total);
+    for w in dims.windows(2) {
+        let (i, o) = (w[0], w[1]);
+        let scale = (2.0 / i as f32).sqrt();
+        for _ in 0..i * o {
+            out.push(rng.normal() * scale);
+        }
+        out.extend(std::iter::repeat(0.0).take(o));
+    }
+    out
+}
+
+impl GanState {
+    /// Fresh state for a design model described by meta.json.
+    pub fn init(mm: &ModelMeta, model: &str, seed: u64) -> GanState {
+        let mut rng = Rng::new(seed);
+        let g = init_mlp_flat(&mm.g_dims, &mut rng);
+        let d = init_mlp_flat(&mm.d_dims, &mut rng);
+        assert_eq!(g.len(), mm.g_params, "G layout mismatch vs meta.json");
+        assert_eq!(d.len(), mm.d_params, "D layout mismatch vs meta.json");
+        let z = |n: usize| vec![0f32; n];
+        GanState {
+            model: model.to_string(),
+            m_g: z(g.len()),
+            v_g: z(g.len()),
+            m_d: z(d.len()),
+            v_d: z(d.len()),
+            g,
+            d,
+            step: 0,
+        }
+    }
+
+    // -- checkpointing ---------------------------------------------------
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+        w.write_all(b"GANDSEc1")?;
+        let name = self.model.as_bytes();
+        w.write_all(&(name.len() as u32).to_le_bytes())?;
+        w.write_all(name)?;
+        w.write_all(&self.step.to_le_bytes())?;
+        for v in [&self.g, &self.d, &self.m_g, &self.v_g, &self.m_d, &self.v_d]
+        {
+            w.write_all(&(v.len() as u64).to_le_bytes())?;
+            for x in v {
+                w.write_all(&x.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<GanState> {
+        let mut r = std::io::BufReader::new(
+            std::fs::File::open(path)
+                .with_context(|| format!("opening checkpoint {path:?}"))?,
+        );
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        if &magic != b"GANDSEc1" {
+            bail!("bad checkpoint magic in {path:?}");
+        }
+        let mut b4 = [0u8; 4];
+        r.read_exact(&mut b4)?;
+        let mut name = vec![0u8; u32::from_le_bytes(b4) as usize];
+        r.read_exact(&mut name)?;
+        let mut b8 = [0u8; 8];
+        r.read_exact(&mut b8)?;
+        let step = u64::from_le_bytes(b8);
+        let mut vecs = Vec::with_capacity(6);
+        for _ in 0..6 {
+            r.read_exact(&mut b8)?;
+            let n = u64::from_le_bytes(b8) as usize;
+            let mut v = vec![0f32; n];
+            let mut buf = vec![0u8; n * 4];
+            r.read_exact(&mut buf)?;
+            for (x, c) in v.iter_mut().zip(buf.chunks_exact(4)) {
+                *x = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+            }
+            vecs.push(v);
+        }
+        let v_d = vecs.pop().unwrap();
+        let m_d = vecs.pop().unwrap();
+        let v_g = vecs.pop().unwrap();
+        let m_g = vecs.pop().unwrap();
+        let d = vecs.pop().unwrap();
+        let g = vecs.pop().unwrap();
+        Ok(GanState {
+            model: String::from_utf8_lossy(&name).into_owned(),
+            g,
+            d,
+            m_g,
+            v_g,
+            m_d,
+            v_d,
+            step,
+        })
+    }
+}
+
+/// The Algorithm-1 training driver.
+pub struct Trainer<'a> {
+    rt: &'a Runtime,
+    meta: &'a Meta,
+    mm: &'a ModelMeta,
+    step_exe: std::sync::Arc<crate::runtime::Executable>,
+    pub state: GanState,
+    /// (epoch-averaged) loss history: the Figure 10/11 series.
+    pub history: Vec<StepMetrics>,
+    /// Device-resident fused state (§Perf): `[metrics(4), g, d, m_g, v_g,
+    /// m_d, v_d]` stays on the PJRT device across steps — the fused
+    /// train-step artifact is lowered with return_tuple=False so its
+    /// output array feeds straight back as the next step's input.  Only
+    /// the mini-batch goes up and only 4 metrics come down per step.
+    /// `state` is refreshed lazily via [`Trainer::sync_state`].
+    device: Option<xla::PjRtBuffer>,
+    /// Cached stats buffer (constant across a training run).
+    stats_buf: Option<xla::PjRtBuffer>,
+    dirty: bool,
+}
+
+impl<'a> Trainer<'a> {
+    pub fn new(
+        rt: &'a Runtime,
+        meta: &'a Meta,
+        model: &str,
+        state: GanState,
+    ) -> Result<Trainer<'a>> {
+        let mm = meta.model(model)?;
+        let step_exe =
+            rt.load(&format!("train_step_fused_{model}.hlo.txt"))?;
+        Ok(Trainer {
+            rt,
+            meta,
+            mm,
+            step_exe,
+            state,
+            history: Vec::new(),
+            device: None,
+            stats_buf: None,
+            dirty: false,
+        })
+    }
+
+    /// Upload host state to the device as one fused vector (first step or
+    /// after external mutation of `state`).
+    fn ensure_device(&mut self) -> Result<()> {
+        if self.device.is_none() {
+            let s = &self.state;
+            let nm = self.mm.fused_metrics;
+            let mut fused =
+                Vec::with_capacity(self.mm.fused_state_len);
+            fused.extend(std::iter::repeat(0.0f32).take(nm));
+            for v in [&s.g, &s.d, &s.m_g, &s.v_g, &s.m_d, &s.v_d] {
+                fused.extend_from_slice(v);
+            }
+            if fused.len() != self.mm.fused_state_len {
+                bail!(
+                    "state length {} != fused_state_len {}",
+                    fused.len(),
+                    self.mm.fused_state_len
+                );
+            }
+            self.device = Some(self.rt.to_device(&fused, &[fused.len()])?);
+        }
+        Ok(())
+    }
+
+    /// Pull device-resident state back into `self.state` (no-op when the
+    /// host copy is already current).
+    pub fn sync_state(&mut self) -> Result<()> {
+        if !self.dirty {
+            return Ok(());
+        }
+        let buf = self.device.as_ref().expect("dirty implies device state");
+        let fused = crate::runtime::buf_to_f32_vec(buf)?;
+        let mut o = self.mm.fused_metrics;
+        let mut take = |n: usize| {
+            let v = fused[o..o + n].to_vec();
+            o += n;
+            v
+        };
+        let (gl, dl) = (self.mm.g_params, self.mm.d_params);
+        self.state.g = take(gl);
+        self.state.d = take(dl);
+        self.state.m_g = take(gl);
+        self.state.v_g = take(gl);
+        self.state.m_d = take(dl);
+        self.state.v_d = take(dl);
+        self.dirty = false;
+        Ok(())
+    }
+
+    /// Run one mini-batch through the AOT train step; returns metrics.
+    pub fn step(
+        &mut self,
+        ds: &Dataset,
+        indices: &[usize],
+        cfg: &TrainConfig,
+        rng: &mut Rng,
+    ) -> Result<StepMetrics> {
+        let spec = &self.mm.spec;
+        let b = self.meta.train_batch;
+        if indices.len() != b {
+            bail!("batch size {} != artifact batch {b}", indices.len());
+        }
+        let batch = build_batch(spec, &ds.train, indices, rng);
+        let stats = ds.stats.to_vec();
+        let t = (self.state.step + 1) as f32;
+        let knobs = [
+            cfg.lr,
+            cfg.w_critic,
+            if cfg.mlp_mode { 1.0 } else { 0.0 },
+            t,
+        ];
+        // §Perf: the fused state buffer stays device-resident across
+        // steps; only the batch goes up and only 4 metrics come down.
+        self.ensure_device()?;
+        if self.stats_buf.is_none() {
+            self.stats_buf =
+                Some(self.rt.to_device(&stats, &[self.meta.stats_len])?);
+        }
+        let spec_onehot = spec.onehot_dim;
+        let noise_dim = spec.noise_dim;
+        let batch_bufs = [
+            self.rt.to_device(&batch.net, &[b, N_NET])?,
+            self.rt.to_device(&batch.onehot, &[b, spec_onehot])?,
+            self.rt.to_device(&batch.obj, &[b, N_OBJ])?,
+            self.rt.to_device(&batch.noise, &[b, noise_dim])?,
+            self.rt.to_device(&knobs, &[4])?,
+        ];
+        let inputs: Vec<&xla::PjRtBuffer> = vec![
+            self.device.as_ref().unwrap(),
+            &batch_bufs[0],
+            &batch_bufs[1],
+            &batch_bufs[2],
+            &batch_bufs[3],
+            self.stats_buf.as_ref().unwrap(),
+            &batch_bufs[4],
+        ];
+        let mut out = self.step_exe.run_b(&inputs)?;
+        if out.len() != 1 {
+            bail!(
+                "fused train_step returned {} buffers, expected 1",
+                out.len()
+            );
+        }
+        let fused = out.pop().unwrap();
+        // CopyRawToHost is unimplemented on the CPU plugin, so the metrics
+        // read is a full literal download (~8 MB, ~1 ms) — still far
+        // cheaper than the literal-path round trip of all 6 state vectors.
+        let lit = fused.to_literal_sync()?;
+        let m = crate::runtime::to_f32_vec(&lit)?;
+        let m = &m[..self.mm.fused_metrics];
+        self.device = Some(fused);
+        self.dirty = true;
+        self.state.step += 1;
+        Ok(StepMetrics {
+            loss_config: m[0],
+            loss_critic: m[1],
+            loss_dis: m[2],
+            sat_frac: m[3],
+        })
+    }
+
+    /// Full training run: `cfg.epochs` shuffled passes over `ds.train`.
+    /// Appends epoch-averaged metrics to `self.history`.
+    pub fn train(&mut self, ds: &Dataset, cfg: &TrainConfig) -> Result<()> {
+        let b = self.meta.train_batch;
+        if ds.train.len() < b {
+            bail!(
+                "dataset of {} samples is smaller than one batch ({b})",
+                ds.train.len()
+            );
+        }
+        let mut rng = Rng::new(cfg.seed);
+        for epoch in 0..cfg.epochs {
+            let perm = rng.permutation(ds.train.len());
+            let mut acc = [0f64; 4];
+            let mut n_steps = 0usize;
+            for chunk in perm.chunks_exact(b) {
+                let m = self.step(ds, chunk, cfg, &mut rng)?;
+                acc[0] += m.loss_config as f64;
+                acc[1] += m.loss_critic as f64;
+                acc[2] += m.loss_dis as f64;
+                acc[3] += m.sat_frac as f64;
+                n_steps += 1;
+                if cfg.log_every > 0
+                    && self.state.step as usize % cfg.log_every == 0
+                {
+                    eprintln!(
+                        "[train {}] step {} cfg={:.4} critic={:.4} dis={:.4} sat={:.3}",
+                        self.state.model,
+                        self.state.step,
+                        m.loss_config,
+                        m.loss_critic,
+                        m.loss_dis,
+                        m.sat_frac
+                    );
+                }
+            }
+            let n = n_steps.max(1) as f64;
+            let em = StepMetrics {
+                loss_config: (acc[0] / n) as f32,
+                loss_critic: (acc[1] / n) as f32,
+                loss_dis: (acc[2] / n) as f32,
+                sat_frac: (acc[3] / n) as f32,
+            };
+            self.history.push(em);
+            if cfg.log_every > 0 {
+                eprintln!(
+                    "[train {}] epoch {epoch} avg cfg={:.4} critic={:.4} dis={:.4} sat={:.3}",
+                    self.state.model,
+                    em.loss_config,
+                    em.loss_critic,
+                    em.loss_dis,
+                    em.sat_frac
+                );
+            }
+        }
+        // Refresh the host copy so callers (checkpointing, the explorer)
+        // see the trained parameters.
+        self.sync_state()?;
+        Ok(())
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        self.rt
+    }
+}
+
+/// Write the loss history as CSV (epoch, loss_config, loss_critic,
+/// loss_dis, sat_frac) — consumed by the Fig 10/11 harness.
+pub fn history_csv(history: &[StepMetrics]) -> String {
+    let mut out =
+        String::from("epoch,loss_config,loss_critic,loss_dis,sat_frac\n");
+    for (i, m) in history.iter().enumerate() {
+        out.push_str(&format!(
+            "{},{},{},{},{}\n",
+            i, m.loss_config, m.loss_critic, m.loss_dis, m.sat_frac
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_mlp_flat_layout() {
+        let mut rng = Rng::new(1);
+        let dims = [4, 8, 3];
+        let v = init_mlp_flat(&dims, &mut rng);
+        assert_eq!(v.len(), 4 * 8 + 8 + 8 * 3 + 3);
+        // biases of layer 0 are zero
+        assert!(v[32..40].iter().all(|&x| x == 0.0));
+        // weights are not all zero
+        assert!(v[..32].iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let st = GanState {
+            model: "dnnweaver".into(),
+            g: vec![1.0, 2.0],
+            d: vec![3.0],
+            m_g: vec![0.1, 0.2],
+            v_g: vec![0.3, 0.4],
+            m_d: vec![0.5],
+            v_d: vec![0.6],
+            step: 17,
+        };
+        let tmp = std::env::temp_dir().join("gandse_ckpt_test.bin");
+        st.save(&tmp).unwrap();
+        let st2 = GanState::load(&tmp).unwrap();
+        assert_eq!(st2.model, "dnnweaver");
+        assert_eq!(st2.step, 17);
+        assert_eq!(st2.g, st.g);
+        assert_eq!(st2.v_d, st.v_d);
+        std::fs::remove_file(&tmp).ok();
+    }
+
+    #[test]
+    fn checkpoint_rejects_garbage() {
+        let tmp = std::env::temp_dir().join("gandse_ckpt_garbage.bin");
+        std::fs::write(&tmp, b"GARBAGE!").unwrap();
+        assert!(GanState::load(&tmp).is_err());
+        std::fs::remove_file(&tmp).ok();
+    }
+
+    #[test]
+    fn history_csv_format() {
+        let h = vec![StepMetrics {
+            loss_config: 1.0,
+            loss_critic: 2.0,
+            loss_dis: 3.0,
+            sat_frac: 0.5,
+        }];
+        let csv = history_csv(&h);
+        assert!(csv.starts_with("epoch,"));
+        assert!(csv.contains("0,1,2,3,0.5"));
+    }
+}

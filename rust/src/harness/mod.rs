@@ -1,0 +1,489 @@
+//! Experiment harness: regenerates every table and figure of Section 7.
+//!
+//! * Table 5 — per-method training time, candidate-set size, DSE time,
+//!   satisfied count, improvement ratio (both design models, several
+//!   `w_critic` values).
+//! * Fig. 5  — stddev of latency/power errors per method.
+//! * Figs. 6/7 — satisfied % vs top-n% objective difficulty (Pareto
+//!   distance, Section 7.4).
+//! * Figs. 8/9 — per-task (log2(LO/L), log2(PO/P)) scatter series.
+//! * Figs. 10/11 — training loss curves per `w_critic`.
+//!
+//! The protocol mirrors the paper: the test tasks are the test split's own
+//! (network, latency, power) triples — every task is feasible by
+//! construction (its generating configuration achieves the objectives
+//! exactly), and task difficulty varies with distance to the Pareto
+//! frontier.  Output: ASCII tables on stdout + CSV files for plotting.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::baselines::{sa_search, DrlAgent, DrlConfig, SaConfig};
+use crate::dataset::Dataset;
+use crate::explorer::{DseRequest, Explorer};
+use crate::gan::{GanState, TrainConfig, Trainer};
+use crate::metrics;
+use crate::runtime::Runtime;
+use crate::space::Meta;
+use crate::util::rng::Rng;
+
+/// One DSE task outcome (a dot in Figs. 8/9).
+#[derive(Debug, Clone, Copy)]
+pub struct TaskOutcome {
+    pub lo: f32,
+    pub po: f32,
+    pub latency: f32,
+    pub power: f32,
+    pub n_candidates: f64,
+}
+
+impl TaskOutcome {
+    pub fn satisfied(&self) -> bool {
+        metrics::satisfied(self.latency, self.power, self.lo, self.po)
+    }
+}
+
+/// Everything Table 5 / Fig. 5 needs for one method.
+#[derive(Debug, Clone)]
+pub struct MethodResult {
+    pub method: String,
+    pub train_time_s: f64,
+    pub dse_time_s: f64,
+    pub nn_params: usize,
+    pub outcomes: Vec<TaskOutcome>,
+    /// Epoch-averaged training losses (only NN methods) — Figs. 10/11.
+    pub history: Vec<crate::gan::StepMetrics>,
+}
+
+impl MethodResult {
+    pub fn n_satisfied(&self) -> usize {
+        self.outcomes.iter().filter(|o| o.satisfied()).count()
+    }
+
+    pub fn avg_candidates(&self) -> f64 {
+        if self.outcomes.is_empty() {
+            return 0.0;
+        }
+        self.outcomes.iter().map(|o| o.n_candidates).sum::<f64>()
+            / self.outcomes.len() as f64
+    }
+
+    /// Mean improvement ratio over *satisfied* results (Section 7.2).
+    pub fn improvement_ratio(&self) -> f64 {
+        let rs: Vec<f32> = self
+            .outcomes
+            .iter()
+            .filter_map(|o| {
+                metrics::improvement_ratio(o.latency, o.power, o.lo, o.po)
+            })
+            .collect();
+        if rs.is_empty() {
+            return 0.0;
+        }
+        rs.iter().map(|&r| r as f64).sum::<f64>() / rs.len() as f64
+    }
+
+    /// (stddev of latency errors, stddev of power errors) — Fig. 5.
+    pub fn error_stds(&self) -> (f32, f32) {
+        let mut le = Vec::with_capacity(self.outcomes.len());
+        let mut pe = Vec::with_capacity(self.outcomes.len());
+        for o in &self.outcomes {
+            let (l, p) = metrics::errors(o.latency, o.power, o.lo, o.po);
+            le.push(l);
+            pe.push(p);
+        }
+        (metrics::std_dev(&le), metrics::std_dev(&pe))
+    }
+}
+
+/// Test tasks from the test split (objectives = the split's own labels).
+pub fn tasks_from_dataset(ds: &Dataset) -> Vec<DseRequest> {
+    ds.test
+        .iter()
+        .map(|s| DseRequest { net: s.net, lo: s.latency, po: s.power })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Per-method runners
+// ---------------------------------------------------------------------------
+
+/// Train + evaluate the GAN (or, with `mlp_mode`, the Large-MLP baseline).
+#[allow(clippy::too_many_arguments)]
+pub fn run_gan_method(
+    rt: &Runtime,
+    meta: &Meta,
+    model: &str,
+    ds: &Dataset,
+    tasks: &[DseRequest],
+    train_cfg: &TrainConfig,
+    label: &str,
+    init_seed: u64,
+) -> Result<MethodResult> {
+    let mm = meta.model(model)?;
+    let state = GanState::init(mm, model, init_seed);
+    let mut tr = Trainer::new(rt, meta, model, state)?;
+    let t0 = Instant::now();
+    tr.train(ds, train_cfg)?;
+    let train_time_s = t0.elapsed().as_secs_f64();
+    let nn_params = mm.g_params + mm.d_params;
+    let history = tr.history.clone();
+    let state = tr.state;
+
+    let mut ex =
+        Explorer::new(rt, meta, model, state.g.clone(), ds.stats.to_vec())?;
+    let t1 = Instant::now();
+    let results = ex.explore(tasks)?;
+    let dse_time_s = t1.elapsed().as_secs_f64() / tasks.len().max(1) as f64;
+    let outcomes = results
+        .iter()
+        .zip(tasks)
+        .map(|(r, t)| TaskOutcome {
+            lo: t.lo,
+            po: t.po,
+            latency: r.latency,
+            power: r.power,
+            n_candidates: r.n_candidates,
+        })
+        .collect();
+    Ok(MethodResult {
+        method: label.to_string(),
+        train_time_s,
+        dse_time_s,
+        nn_params,
+        outcomes,
+        history,
+    })
+}
+
+/// Simulated annealing over all tasks.
+pub fn run_sa_method(
+    model: &str,
+    meta: &Meta,
+    tasks: &[DseRequest],
+    seed: u64,
+) -> Result<MethodResult> {
+    let spec = &meta.model(model)?.spec;
+    let mut rng = Rng::new(seed);
+    let cfg = SaConfig::default();
+    let t0 = Instant::now();
+    let outcomes: Vec<TaskOutcome> = tasks
+        .iter()
+        .map(|t| {
+            let r = sa_search(spec, t, &cfg, &mut rng);
+            TaskOutcome {
+                lo: t.lo,
+                po: t.po,
+                latency: r.latency,
+                power: r.power,
+                n_candidates: r.evals as f64,
+            }
+        })
+        .collect();
+    let dse_time_s = t0.elapsed().as_secs_f64() / tasks.len().max(1) as f64;
+    Ok(MethodResult {
+        method: "SA".into(),
+        train_time_s: 0.0,
+        dse_time_s,
+        nn_params: 0,
+        outcomes,
+        history: Vec::new(),
+    })
+}
+
+/// DRL baseline: REINFORCE training on train-split tasks, greedy solve.
+pub fn run_drl_method(
+    model: &str,
+    meta: &Meta,
+    ds: &Dataset,
+    tasks: &[DseRequest],
+    drl_cfg: DrlConfig,
+    seed: u64,
+) -> Result<MethodResult> {
+    let spec = &meta.model(model)?.spec;
+    let mut rng = Rng::new(seed);
+    let train_tasks: Vec<DseRequest> = ds
+        .train
+        .iter()
+        .map(|s| DseRequest { net: s.net, lo: s.latency, po: s.power })
+        .collect();
+    let mut agent = DrlAgent::new(spec, drl_cfg, &mut rng);
+    let t0 = Instant::now();
+    agent.train(spec, &train_tasks, &mut rng);
+    let train_time_s = t0.elapsed().as_secs_f64();
+    let t1 = Instant::now();
+    let outcomes: Vec<TaskOutcome> = tasks
+        .iter()
+        .map(|t| {
+            let (_, l, p) = agent.solve(spec, t, &mut rng);
+            TaskOutcome {
+                lo: t.lo,
+                po: t.po,
+                latency: l,
+                power: p,
+                n_candidates: 0.0,
+            }
+        })
+        .collect();
+    let dse_time_s = t1.elapsed().as_secs_f64() / tasks.len().max(1) as f64;
+    Ok(MethodResult {
+        method: "DRL".into(),
+        train_time_s,
+        dse_time_s,
+        nn_params: agent.policy.n_params(),
+        outcomes,
+        history: Vec::new(),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Table / figure rendering
+// ---------------------------------------------------------------------------
+
+/// Table 5 for one design model.
+pub fn table5(model: &str, results: &[MethodResult]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Table 5 ({model}): DSE results\n\
+         {:<14} {:>12} {:>14} {:>12} {:>10} {:>12} {:>12}\n",
+        "Method",
+        "TrainTime(s)",
+        "#Cand.Config.",
+        "#NN Param.",
+        "DSE(ms)",
+        "#Sat.",
+        "Impr.Ratio"
+    ));
+    for r in results {
+        out.push_str(&format!(
+            "{:<14} {:>12.1} {:>14.2} {:>12} {:>10.3} {:>9}/{} {:>12.4}\n",
+            r.method,
+            r.train_time_s,
+            r.avg_candidates(),
+            r.nn_params,
+            r.dse_time_s * 1e3,
+            r.n_satisfied(),
+            r.outcomes.len(),
+            r.improvement_ratio(),
+        ));
+    }
+    out
+}
+
+pub fn table5_csv(results: &[MethodResult]) -> String {
+    let mut out = String::from(
+        "method,train_time_s,avg_candidates,nn_params,dse_time_s,\
+         n_satisfied,n_tasks,improvement_ratio\n",
+    );
+    for r in results {
+        out.push_str(&format!(
+            "{},{},{},{},{},{},{},{}\n",
+            r.method,
+            r.train_time_s,
+            r.avg_candidates(),
+            r.nn_params,
+            r.dse_time_s,
+            r.n_satisfied(),
+            r.outcomes.len(),
+            r.improvement_ratio()
+        ));
+    }
+    out
+}
+
+/// Fig. 5: stddev of latency/power errors per method.
+pub fn fig5(model: &str, results: &[MethodResult]) -> String {
+    let mut out = format!(
+        "Figure 5 ({model}): stddev of latency/power errors\n\
+         {:<14} {:>12} {:>12}\n",
+        "Method", "std(lat err)", "std(pow err)"
+    );
+    for r in results {
+        let (l, p) = r.error_stds();
+        out.push_str(&format!("{:<14} {:>12.4} {:>12.4}\n", r.method, l, p));
+    }
+    out
+}
+
+pub fn fig5_csv(results: &[MethodResult]) -> String {
+    let mut out = String::from("method,std_lat_err,std_pow_err\n");
+    for r in results {
+        let (l, p) = r.error_stds();
+        out.push_str(&format!("{},{},{}\n", r.method, l, p));
+    }
+    out
+}
+
+/// Figs. 6/7: satisfied % among the top-n% most difficult objectives.
+/// Difficulty = normalized distance to the train-split Pareto frontier.
+pub fn fig67_csv(ds: &Dataset, results: &[MethodResult]) -> String {
+    let frontier = metrics::pareto_frontier(&ds.train);
+    let mut out = String::from("top_pct");
+    for r in results {
+        out.push_str(&format!(",{}", r.method));
+    }
+    out.push('\n');
+    // rank tasks hardest-first once (all methods share the same task list)
+    let objs: Vec<(f32, f32)> = results
+        .first()
+        .map(|r| r.outcomes.iter().map(|o| (o.lo, o.po)).collect())
+        .unwrap_or_default();
+    let order = metrics::rank_by_difficulty(&objs, &frontier);
+    for pct in (10..=100).step_by(10) {
+        let k = (order.len() * pct) / 100;
+        out.push_str(&format!("{pct}"));
+        for r in results {
+            let sat = order[..k.max(1)]
+                .iter()
+                .filter(|&&i| r.outcomes[i].satisfied())
+                .count();
+            out.push_str(&format!(
+                ",{:.4}",
+                sat as f64 / k.max(1) as f64
+            ));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Figs. 8/9: scatter series, one CSV block per method.
+pub fn fig89_csv(results: &[MethodResult]) -> String {
+    let mut out = String::from("method,log2_lat_impr,log2_pow_impr\n");
+    for r in results {
+        for o in &r.outcomes {
+            let (x, y) =
+                metrics::log2_improvement(o.latency, o.power, o.lo, o.po);
+            out.push_str(&format!("{},{},{}\n", r.method, x, y));
+        }
+    }
+    out
+}
+
+/// Ablation (DESIGN.md §4): probability-threshold sweep for the GAN —
+/// satisfied count and candidate-set size vs threshold.  Reuses one
+/// trained generator; only the explorer threshold changes.
+pub fn ablate_threshold(
+    rt: &Runtime,
+    meta: &Meta,
+    model: &str,
+    ds: &Dataset,
+    tasks: &[DseRequest],
+    g_params: Vec<f32>,
+    thresholds: &[f32],
+) -> Result<String> {
+    let mut out =
+        String::from("threshold,n_satisfied,n_tasks,avg_candidates,dse_s\n");
+    for &thr in thresholds {
+        let mut ex =
+            Explorer::new(rt, meta, model, g_params.clone(),
+                          ds.stats.to_vec())?;
+        ex.threshold = thr;
+        let t0 = Instant::now();
+        let results = ex.explore(tasks)?;
+        let dse = t0.elapsed().as_secs_f64() / tasks.len().max(1) as f64;
+        let sat = results
+            .iter()
+            .zip(tasks)
+            .filter(|(r, t)| {
+                metrics::satisfied(r.latency, r.power, t.lo, t.po)
+            })
+            .count();
+        let cand = results.iter().map(|r| r.n_candidates).sum::<f64>()
+            / results.len().max(1) as f64;
+        out.push_str(&format!(
+            "{thr},{sat},{},{cand:.2},{dse:.6}\n",
+            tasks.len()
+        ));
+    }
+    Ok(out)
+}
+
+/// Figs. 10/11: training loss curves (epoch series per method).
+pub fn fig1011_csv(results: &[MethodResult]) -> String {
+    let mut out = String::from(
+        "method,epoch,loss_config,loss_critic,loss_dis,sat_frac\n",
+    );
+    for r in results {
+        for (e, m) in r.history.iter().enumerate() {
+            out.push_str(&format!(
+                "{},{},{},{},{},{}\n",
+                r.method, e, m.loss_config, m.loss_critic, m.loss_dis,
+                m.sat_frac
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outcome(lo: f32, po: f32, l: f32, p: f32) -> TaskOutcome {
+        TaskOutcome { lo, po, latency: l, power: p, n_candidates: 4.0 }
+    }
+
+    fn method(name: &str, outs: Vec<TaskOutcome>) -> MethodResult {
+        MethodResult {
+            method: name.into(),
+            train_time_s: 1.0,
+            dse_time_s: 0.001,
+            nn_params: 100,
+            outcomes: outs,
+            history: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn satisfied_counting_and_ratio() {
+        let m = method(
+            "x",
+            vec![
+                outcome(10.0, 10.0, 8.0, 8.0),  // satisfied, ratio 0.2
+                outcome(10.0, 10.0, 12.0, 8.0), // not satisfied
+            ],
+        );
+        assert_eq!(m.n_satisfied(), 1);
+        assert!((m.improvement_ratio() - 0.2).abs() < 1e-6);
+        assert_eq!(m.avg_candidates(), 4.0);
+    }
+
+    #[test]
+    fn table5_renders_all_methods() {
+        let rs = vec![
+            method("GAN w=0.5", vec![outcome(1.0, 1.0, 0.9, 0.9)]),
+            method("SA", vec![outcome(1.0, 1.0, 1.5, 0.9)]),
+        ];
+        let t = table5("dnnweaver", &rs);
+        assert!(t.contains("GAN w=0.5"));
+        assert!(t.contains("SA"));
+        let csv = table5_csv(&rs);
+        assert_eq!(csv.lines().count(), 3);
+    }
+
+    #[test]
+    fn fig5_stddev_zero_for_perfect() {
+        let rs = vec![method(
+            "x",
+            vec![outcome(1.0, 1.0, 0.5, 0.5), outcome(2.0, 2.0, 1.0, 1.0)],
+        )];
+        // all errors identical (-0.5) => stddev 0
+        let (l, p) = rs[0].error_stds();
+        assert!(l.abs() < 1e-6 && p.abs() < 1e-6);
+        assert!(fig5_csv(&rs).contains("x,0"));
+    }
+
+    #[test]
+    fn fig89_has_one_row_per_outcome() {
+        let rs = vec![method(
+            "m",
+            vec![outcome(1.0, 1.0, 0.5, 2.0), outcome(1.0, 1.0, 1.0, 1.0)],
+        )];
+        let csv = fig89_csv(&rs);
+        assert_eq!(csv.lines().count(), 3);
+        // first outcome: latency 2x better (log2=1), power 2x worse (-1)
+        assert!(csv.contains("m,1,-1"));
+    }
+}

@@ -1,0 +1,23 @@
+//! GANDSE: GAN-based Design Space Exploration for NN accelerator design.
+//!
+//! Reproduction of Feng et al., ACM TODAES 2022 (DOI 10.1145/3570926) as a
+//! three-layer rust + JAX + Pallas system: Pallas kernels (L1) and the JAX
+//! GAN/Algorithm-1 graph (L2) are AOT-lowered to HLO text once; this crate
+//! (L3) owns everything at runtime — dataset generation, training loop,
+//! exploration, selection, baselines, RTL emission, serving, benchmarks.
+//!
+//! See DESIGN.md for the architecture and EXPERIMENTS.md for results.
+
+pub mod baselines;
+pub mod dataset;
+pub mod explorer;
+pub mod gan;
+pub mod harness;
+pub mod metrics;
+pub mod model;
+pub mod parser;
+pub mod rtl;
+pub mod runtime;
+pub mod server;
+pub mod space;
+pub mod util;

@@ -1,0 +1,501 @@
+//! GANDSE command-line launcher (the L3 leader entrypoint).
+//!
+//! Subcommands:
+//!   dataset  — generate + save a labeled dataset (Dataset Generator)
+//!   train    — Training Phase: Algorithm 1 over the AOT train step
+//!   explore  — Parsing + Exploration + Implementation phases for a task
+//!   serve    — run the batching DSE server (JSON-lines over TCP)
+//!   bench    — regenerate the paper's tables/figures (Table 5, Figs 5-11)
+//!   rtl      — Implementation Phase only: emit Verilog for a config
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use gandse::baselines::DrlConfig;
+use gandse::dataset::{self, Dataset};
+use gandse::explorer::{DseRequest, Explorer};
+use gandse::gan::{history_csv, GanState, TrainConfig, Trainer};
+use gandse::harness;
+use gandse::parser;
+use gandse::rtl;
+use gandse::runtime::Runtime;
+use gandse::space::{builtin_spec, Meta};
+use gandse::util::args::Args;
+
+const USAGE: &str = "\
+GANDSE: GAN-based design space exploration for NN accelerators
+
+USAGE: gandse <command> [--option value]...
+
+COMMANDS
+  dataset   --model <im2col|dnnweaver> [--train N] [--test N] [--seed S]
+            [--out file.bin] [--show]
+  train     --model M [--dataset file.bin] [--epochs E] [--wcritic W]
+            [--lr LR] [--mlp] [--ckpt out.ckpt] [--loss-csv out.csv]
+  explore   --model M --ckpt c.ckpt (--net-file f | --lo L --po P
+            --ic .. --oc .. --ow .. --oh .. --kw .. --kh ..)
+            [--rtl out.v] [--threshold T]
+  eval      --model M --ckpt c.ckpt [--test N] [--threshold T]
+            (held-out satisfaction / improvement-ratio / difficulty report)
+  serve     --model M --ckpt c.ckpt [--addr 127.0.0.1:7878]
+            [--max-wait-ms 5]
+  bench     --exp <table5|fig5|fig67|fig89|fig1011|all> --model M
+            [--train N] [--test N] [--epochs E] [--out-dir results/]
+  rtl       --model M --cfg v1,v2,... [--out file.v]
+
+COMMON
+  --artifacts DIR   artifact directory (default: ./artifacts)
+";
+
+fn main() {
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let cmd = args.subcommand.clone().unwrap_or_default();
+    let res = match cmd.as_str() {
+        "dataset" => cmd_dataset(&args),
+        "train" => cmd_train(&args),
+        "explore" => cmd_explore(&args),
+        "eval" => cmd_eval(&args),
+        "serve" => cmd_serve(&args),
+        "bench" => cmd_bench(&args),
+        "rtl" => cmd_rtl(&args),
+        _ => {
+            eprintln!("{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = res {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.get_or("artifacts", "artifacts"))
+}
+
+fn load_or_generate_dataset(
+    args: &Args,
+    model: &str,
+    default_train: usize,
+    default_test: usize,
+) -> Result<Dataset> {
+    if let Some(path) = args.get("dataset") {
+        let ds = Dataset::load(Path::new(path))?;
+        if ds.model != model {
+            bail!("dataset is for model {:?}, requested {model:?}", ds.model);
+        }
+        return Ok(ds);
+    }
+    let spec = builtin_spec(model)?;
+    let n_train = args.get_usize("train", default_train)?;
+    let n_test = args.get_usize("test", default_test)?;
+    let seed = args.get_u64("seed", 42)?;
+    Ok(dataset::generate(&spec, n_train, n_test, seed))
+}
+
+fn cmd_dataset(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "dnnweaver");
+    let spec = builtin_spec(&model)?;
+    let n_train = args.get_usize("train", 8192)?;
+    let n_test = args.get_usize("test", 1000)?;
+    let seed = args.get_u64("seed", 42)?;
+    let ds = dataset::generate(&spec, n_train, n_test, seed);
+    if args.has_flag("show") {
+        println!(
+            "model={} |space|={} train={} test={}",
+            model,
+            spec.space_size(),
+            ds.train.len(),
+            ds.test.len()
+        );
+        println!(
+            "groups: {:?}",
+            spec.groups.iter().map(|g| &g.name).collect::<Vec<_>>()
+        );
+        for s in ds.train.iter().take(5) {
+            println!(
+                "net={:?} cfg={:?} L={:.6e} P={:.4}",
+                s.net, s.cfg_idx, s.latency, s.power
+            );
+        }
+        println!("stats: {:?}", ds.stats);
+    }
+    if let Some(out) = args.get("out") {
+        ds.save(Path::new(out))?;
+        println!("wrote {out}");
+    }
+    args.reject_unknown()?;
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "dnnweaver");
+    let dir = artifacts_dir(args);
+    let meta = Meta::load(&dir)?;
+    let rt = Runtime::new(&dir)?;
+    let ds = load_or_generate_dataset(args, &model, 8192, 256)?;
+    let cfg = TrainConfig {
+        lr: args.get_f32("lr", 1e-4)?,
+        w_critic: args.get_f32("wcritic", 0.5)?,
+        mlp_mode: args.has_flag("mlp"),
+        epochs: args.get_usize("epochs", 10)?,
+        seed: args.get_u64("train-seed", 0xC0FFEE)?,
+        log_every: args.get_usize("log-every", 8)?,
+    };
+    let mm = meta.model(&model)?;
+    let state = match args.get("resume") {
+        Some(p) => GanState::load(Path::new(p))?,
+        None => GanState::init(mm, &model, args.get_u64("init-seed", 1)?),
+    };
+    let mut tr = Trainer::new(&rt, &meta, &model, state)?;
+    let t0 = std::time::Instant::now();
+    tr.train(&ds, &cfg)?;
+    println!(
+        "trained {} steps in {:.1}s (G+D = {} params)",
+        tr.state.step,
+        t0.elapsed().as_secs_f64(),
+        mm.g_params + mm.d_params
+    );
+    if let Some(csv) = args.get("loss-csv") {
+        std::fs::write(csv, history_csv(&tr.history))?;
+        println!("wrote {csv}");
+    }
+    let ckpt = args.get_or("ckpt", &format!("gandse_{model}.ckpt"));
+    tr.state.save(Path::new(&ckpt))?;
+    println!("wrote {ckpt}");
+    args.reject_unknown()?;
+    Ok(())
+}
+
+fn cmd_explore(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "dnnweaver");
+    let dir = artifacts_dir(args);
+    let meta = Meta::load(&dir)?;
+    let rt = Runtime::new(&dir)?;
+    let ckpt = args
+        .get("ckpt")
+        .context("--ckpt <file> is required (run `gandse train` first)")?;
+    let state = GanState::load(Path::new(ckpt))?;
+    let ds = load_or_generate_dataset(args, &model, 2048, 16)?;
+    let mut ex =
+        Explorer::new(&rt, &meta, &model, state.g, ds.stats.to_vec())?;
+    ex.threshold = args.get_f32("threshold", 0.2)?;
+
+    let lo = args.get_f32("lo", 0.0)?;
+    let po = args.get_f32("po", 0.0)?;
+    let network_mode = args.has_flag("network");
+    let layers = if let Some(f) = args.get("net-file") {
+        parser::parse(&std::fs::read_to_string(f)?)?
+    } else {
+        let net = [
+            args.get_f32("ic", 32.0)?,
+            args.get_f32("oc", 32.0)?,
+            args.get_f32("ow", 32.0)?,
+            args.get_f32("oh", 32.0)?,
+            args.get_f32("kw", 3.0)?,
+            args.get_f32("kh", 3.0)?,
+        ];
+        vec![parser::ConvLayer { name: "conv0".into(), net }]
+    };
+    if lo <= 0.0 || po <= 0.0 {
+        bail!("--lo and --po (positive objectives) are required");
+    }
+    if network_mode {
+        // One shared accelerator configuration for the whole network:
+        // summed latency across layers, max power.
+        let nets: Vec<[f32; 6]> = layers.iter().map(|l| l.net).collect();
+        let t0 = std::time::Instant::now();
+        let r = ex.explore_network(&nets, lo, po)?;
+        println!(
+            "network ({} conv layers): satisfied={} total_latency={:.6e}s \
+             max_power={:.4}W candidates={}",
+            nets.len(),
+            r.satisfied,
+            r.latency,
+            r.power,
+            r.n_candidates
+        );
+        for (g, &v) in ex.spec.groups.iter().zip(&r.cfg_raw) {
+            print!("  {}={}", g.name, v);
+        }
+        println!("\nDSE time: {:.3} ms", t0.elapsed().as_secs_f64() * 1e3);
+        if let Some(out) = args.get("rtl") {
+            let v = rtl::generate(ex.spec, &r.cfg_raw, "gandse_acc")?;
+            std::fs::write(out, v)?;
+            println!("wrote {out}");
+        }
+        args.reject_unknown()?;
+        return Ok(());
+    }
+    let reqs: Vec<DseRequest> =
+        layers.iter().map(|l| DseRequest { net: l.net, lo, po }).collect();
+    let t0 = std::time::Instant::now();
+    let results = ex.explore(&reqs)?;
+    let dt = t0.elapsed();
+    for (layer, r) in layers.iter().zip(&results) {
+        println!(
+            "{}: satisfied={} latency={:.6e}s power={:.4}W candidates={}",
+            layer.name, r.satisfied, r.latency, r.power, r.n_candidates
+        );
+        for (g, &v) in ex.spec.groups.iter().zip(&r.cfg_raw) {
+            print!("  {}={}", g.name, v);
+        }
+        println!();
+    }
+    println!("DSE time: {:.3} ms total", dt.as_secs_f64() * 1e3);
+    if let Some(out) = args.get("rtl") {
+        let v = rtl::generate(ex.spec, &results[0].cfg_raw, "gandse_acc")?;
+        std::fs::write(out, v)?;
+        println!("wrote {out}");
+    }
+    args.reject_unknown()?;
+    Ok(())
+}
+
+/// Evaluate a trained checkpoint on held-out tasks: satisfaction,
+/// improvement ratio, error stddevs and a per-difficulty-decile breakdown.
+fn cmd_eval(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "dnnweaver");
+    let dir = artifacts_dir(args);
+    let meta = Meta::load(&dir)?;
+    let rt = Runtime::new(&dir)?;
+    let ckpt = args.get("ckpt").context("--ckpt <file> is required")?;
+    let state = GanState::load(Path::new(ckpt))?;
+    let ds = load_or_generate_dataset(args, &model, 4096, 500)?;
+    let tasks = harness::tasks_from_dataset(&ds);
+    let mut ex =
+        Explorer::new(&rt, &meta, &model, state.g, ds.stats.to_vec())?;
+    ex.threshold = args.get_f32("threshold", 0.2)?;
+    args.reject_unknown()?;
+
+    let t0 = std::time::Instant::now();
+    let results = ex.explore(&tasks)?;
+    let dse = t0.elapsed().as_secs_f64() / tasks.len().max(1) as f64;
+    use gandse::metrics;
+    let mut sat = 0usize;
+    let mut ratios = Vec::new();
+    let mut lerr = Vec::new();
+    let mut perr = Vec::new();
+    for (r, t) in results.iter().zip(&tasks) {
+        if metrics::satisfied(r.latency, r.power, t.lo, t.po) {
+            sat += 1;
+        }
+        if let Some(x) =
+            metrics::improvement_ratio(r.latency, r.power, t.lo, t.po)
+        {
+            ratios.push(x);
+        }
+        let (le, pe) = metrics::errors(r.latency, r.power, t.lo, t.po);
+        lerr.push(le);
+        perr.push(pe);
+    }
+    println!(
+        "checkpoint {ckpt} on {} tasks (threshold {}):",
+        tasks.len(),
+        ex.threshold
+    );
+    println!(
+        "  satisfied          {sat}/{} ({:.1}%)",
+        tasks.len(),
+        100.0 * sat as f64 / tasks.len().max(1) as f64
+    );
+    println!("  improvement ratio  {:.4}", metrics::mean(&ratios));
+    println!(
+        "  err stddev         lat {:.4}  pow {:.4}",
+        metrics::std_dev(&lerr),
+        metrics::std_dev(&perr)
+    );
+    println!("  DSE time           {:.3} ms/task", dse * 1e3);
+    // per-difficulty deciles (hardest first)
+    let frontier = metrics::pareto_frontier(&ds.train);
+    let objs: Vec<(f32, f32)> =
+        tasks.iter().map(|t| (t.lo, t.po)).collect();
+    let order = metrics::rank_by_difficulty(&objs, &frontier);
+    println!("  satisfied by difficulty decile (hardest -> easiest):");
+    for d in 0..10 {
+        let a = order.len() * d / 10;
+        let b = order.len() * (d + 1) / 10;
+        if a == b {
+            continue;
+        }
+        let s = order[a..b]
+            .iter()
+            .filter(|&&i| {
+                let (r, t) = (&results[i], &tasks[i]);
+                metrics::satisfied(r.latency, r.power, t.lo, t.po)
+            })
+            .count();
+        println!("    decile {d}: {s}/{}", b - a);
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "dnnweaver");
+    let dir = artifacts_dir(args);
+    // serving needs 'static: leak runtime + meta (process-lifetime server)
+    let meta: &'static Meta = Box::leak(Box::new(Meta::load(&dir)?));
+    let rt: &'static Runtime = Box::leak(Box::new(Runtime::new(&dir)?));
+    let ckpt = args.get("ckpt").context("--ckpt <file> is required")?;
+    let state = GanState::load(Path::new(ckpt))?;
+    let ds = load_or_generate_dataset(args, &model, 2048, 16)?;
+    let model: &'static str = Box::leak(model.into_boxed_str());
+    let mut ex = Explorer::new(rt, meta, model, state.g, ds.stats.to_vec())?;
+    ex.threshold = args.get_f32("threshold", 0.2)?;
+    let addr = args.get_or("addr", "127.0.0.1:7878");
+    let max_wait = Duration::from_millis(args.get_u64("max-wait-ms", 5)?);
+    let max_batch = args.get_usize("max-batch", meta.infer_batch)?;
+    args.reject_unknown()?;
+    let handle = gandse::server::serve(&addr, ex, max_batch, max_wait)?;
+    println!("gandse dse server listening on {}", handle.addr);
+    loop {
+        std::thread::sleep(Duration::from_secs(60));
+        let (batches, items) = handle.stats();
+        println!("served {items} requests in {batches} batches");
+    }
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let exp = args.get_or("exp", "all");
+    let model = args.get_or("model", "dnnweaver");
+    let dir = artifacts_dir(args);
+    let meta = Meta::load(&dir)?;
+    let rt = Runtime::new(&dir)?;
+    let ds = load_or_generate_dataset(args, &model, 4096, 200)?;
+    let tasks = harness::tasks_from_dataset(&ds);
+    let epochs = args.get_usize("epochs", 8)?;
+    let out_dir = PathBuf::from(args.get_or("out-dir", "results"));
+    std::fs::create_dir_all(&out_dir)?;
+    let wcritics: Vec<f32> = args
+        .get_or("wcritics", "0,0.5,1.0")
+        .split(',')
+        .map(|s| s.parse().unwrap_or(0.5))
+        .collect();
+    args.reject_unknown()?;
+
+    if exp == "ablate" {
+        // Threshold ablation: train one GAN, sweep the probability
+        // threshold of the explorer (Section 6.1's knob).
+        eprintln!("[bench] training GAN for threshold ablation...");
+        let mm = meta.model(&model)?;
+        let state = GanState::init(mm, &model, 22);
+        let mut tr = Trainer::new(&rt, &meta, &model, state)?;
+        tr.train(&ds, &TrainConfig { epochs, ..Default::default() })?;
+        let csv = harness::ablate_threshold(
+            &rt,
+            &meta,
+            &model,
+            &ds,
+            &tasks,
+            tr.state.g.clone(),
+            &[0.05, 0.1, 0.2, 0.3, 0.4, 0.5],
+        )?;
+        print!("{csv}");
+        std::fs::write(out_dir.join(format!("ablate_threshold_{model}.csv")),
+                       &csv)?;
+        return Ok(());
+    }
+
+    let mut results = Vec::new();
+    eprintln!("[bench] SA over {} tasks...", tasks.len());
+    results.push(harness::run_sa_method(&model, &meta, &tasks, 7)?);
+    eprintln!("[bench] DRL...");
+    results.push(harness::run_drl_method(
+        &model,
+        &meta,
+        &ds,
+        &tasks,
+        DrlConfig::default(),
+        8,
+    )?);
+    eprintln!("[bench] Large MLP ({epochs} epochs)...");
+    let mlp_cfg =
+        TrainConfig { mlp_mode: true, epochs, ..TrainConfig::default() };
+    results.push(harness::run_gan_method(
+        &rt, &meta, &model, &ds, &tasks, &mlp_cfg, "Large MLP", 21,
+    )?);
+    for &w in &wcritics {
+        eprintln!("[bench] GAN w_critic={w} ({epochs} epochs)...");
+        let cfg =
+            TrainConfig { w_critic: w, epochs, ..TrainConfig::default() };
+        results.push(harness::run_gan_method(
+            &rt,
+            &meta,
+            &model,
+            &ds,
+            &tasks,
+            &cfg,
+            &format!("GAN w={w}"),
+            22,
+        )?);
+    }
+
+    let write = |name: &str, text: &str| -> Result<()> {
+        let p = out_dir.join(name);
+        std::fs::write(&p, text)?;
+        eprintln!("wrote {}", p.display());
+        Ok(())
+    };
+    if exp == "table5" || exp == "all" {
+        print!("{}", harness::table5(&model, &results));
+        write(&format!("table5_{model}.csv"),
+              &harness::table5_csv(&results))?;
+    }
+    if exp == "fig5" || exp == "all" {
+        print!("{}", harness::fig5(&model, &results));
+        write(&format!("fig5_{model}.csv"), &harness::fig5_csv(&results))?;
+    }
+    if exp == "fig67" || exp == "all" {
+        write(
+            &format!("fig67_{model}.csv"),
+            &harness::fig67_csv(&ds, &results),
+        )?;
+    }
+    if exp == "fig89" || exp == "all" {
+        write(&format!("fig89_{model}.csv"), &harness::fig89_csv(&results))?;
+    }
+    if exp == "fig1011" || exp == "all" {
+        write(
+            &format!("fig1011_{model}.csv"),
+            &harness::fig1011_csv(&results),
+        )?;
+    }
+    Ok(())
+}
+
+fn cmd_rtl(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "dnnweaver");
+    let spec = builtin_spec(&model)?;
+    let cfg_str = args.get("cfg").context(
+        "--cfg v1,v2,... (raw config values in group order) is required",
+    )?;
+    let cfg: Vec<f32> = cfg_str
+        .split(',')
+        .map(|s| s.trim().parse::<f32>())
+        .collect::<Result<_, _>>()
+        .context("parsing --cfg")?;
+    let v = rtl::generate(&spec, &cfg, "gandse_acc")?;
+    match args.get("out") {
+        Some(p) => {
+            std::fs::write(p, v)?;
+            println!("wrote {p}");
+        }
+        None => print!("{v}"),
+    }
+    if let Some(tb_path) = args.get("tb") {
+        let params = rtl::template_params(&spec, &cfg)?;
+        let tb = rtl::testbench::generate_testbench("gandse_acc", &params)?;
+        std::fs::write(tb_path, tb)?;
+        println!("wrote {tb_path}");
+    }
+    args.reject_unknown()?;
+    Ok(())
+}

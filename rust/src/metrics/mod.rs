@@ -1,0 +1,185 @@
+//! Evaluation metrics from Section 7: satisfaction (with 1% noise),
+//! improvement ratio, latency/power error statistics (Fig. 5), Pareto
+//! distance based objective difficulty (Section 7.4), and the log2
+//! improvement coordinates of Figs. 8/9.
+
+use crate::dataset::Sample;
+
+/// The paper's evaluation noise: an objective missed by <= 1% still counts
+/// as satisfied (Section 7.2).
+pub const EVAL_NOISE: f32 = 0.01;
+
+/// Satisfaction check with the 1% noise allowance.
+pub fn satisfied(l_opt: f32, p_opt: f32, lo: f32, po: f32) -> bool {
+    l_opt <= lo * (1.0 + EVAL_NOISE) && p_opt <= po * (1.0 + EVAL_NOISE)
+}
+
+/// Improvement ratio (Section 7.2):
+/// sqrt(1/2 ((L-LO)/LO)^2 + 1/2 ((P-PO)/PO)^2) — defined only when both
+/// objectives are met (otherwise the result is invalid → None).
+pub fn improvement_ratio(
+    l_opt: f32,
+    p_opt: f32,
+    lo: f32,
+    po: f32,
+) -> Option<f32> {
+    if l_opt <= lo && p_opt <= po {
+        let dl = (l_opt - lo) / lo;
+        let dp = (p_opt - po) / po;
+        Some((0.5 * (dl * dl + dp * dp)).sqrt())
+    } else {
+        None
+    }
+}
+
+/// Latency / power errors ((X_opt - XO)/XO), the Fig. 5 quantities.
+pub fn errors(l_opt: f32, p_opt: f32, lo: f32, po: f32) -> (f32, f32) {
+    ((l_opt - lo) / lo, (p_opt - po) / po)
+}
+
+/// Fig. 8/9 scatter coordinates: (log2(LO/L_opt), log2(PO/P_opt)).
+pub fn log2_improvement(
+    l_opt: f32,
+    p_opt: f32,
+    lo: f32,
+    po: f32,
+) -> (f32, f32) {
+    ((lo / l_opt).log2(), (po / p_opt).log2())
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f32]) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let n = xs.len() as f64;
+    let mean = xs.iter().map(|&x| x as f64).sum::<f64>() / n;
+    let var =
+        xs.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n;
+    var.sqrt() as f32
+}
+
+/// Mean of a slice.
+pub fn mean(xs: &[f32]) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    (xs.iter().map(|&x| x as f64).sum::<f64>() / xs.len() as f64) as f32
+}
+
+// ---------------------------------------------------------------------------
+// Objective difficulty via Pareto-frontier distance (Section 7.4)
+// ---------------------------------------------------------------------------
+
+/// Extract the Pareto frontier of (latency, power) points: a sample is on
+/// the frontier if no other sample is at least as good on both objectives
+/// and strictly better on one.
+pub fn pareto_frontier(samples: &[Sample]) -> Vec<(f32, f32)> {
+    let mut pts: Vec<(f32, f32)> =
+        samples.iter().map(|s| (s.latency, s.power)).collect();
+    // Sort by latency asc, power asc; sweep keeping min power so far.
+    pts.sort_by(|a, b| {
+        a.0.partial_cmp(&b.0).unwrap().then(a.1.partial_cmp(&b.1).unwrap())
+    });
+    let mut frontier = Vec::new();
+    let mut best_p = f32::INFINITY;
+    for (l, p) in pts {
+        if p < best_p {
+            frontier.push((l, p));
+            best_p = p;
+        }
+    }
+    frontier
+}
+
+/// Difficulty of an objective pair: Euclidean distance to the closest
+/// Pareto point, normalized by that point's module (Section 7.4).
+/// Smaller distance = harder objective.
+pub fn difficulty(lo: f32, po: f32, frontier: &[(f32, f32)]) -> f32 {
+    let mut best = f32::INFINITY;
+    for &(l, p) in frontier {
+        let d = ((lo - l).powi(2) + (po - p).powi(2)).sqrt();
+        let module = (l * l + p * p).sqrt().max(1e-30);
+        best = best.min(d / module);
+    }
+    best
+}
+
+/// Rank objective difficulties: returns indices of `objs` sorted hardest
+/// (smallest normalized Pareto distance) first.
+pub fn rank_by_difficulty(
+    objs: &[(f32, f32)],
+    frontier: &[(f32, f32)],
+) -> Vec<usize> {
+    let mut scored: Vec<(usize, f32)> = objs
+        .iter()
+        .enumerate()
+        .map(|(i, &(lo, po))| (i, difficulty(lo, po, frontier)))
+        .collect();
+    scored.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    scored.into_iter().map(|(i, _)| i).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn satisfied_with_noise_band() {
+        assert!(satisfied(10.0, 10.0, 10.0, 10.0));
+        assert!(satisfied(10.05, 10.0, 10.0, 10.0)); // within 1%
+        assert!(!satisfied(10.2, 10.0, 10.0, 10.0)); // 2% over
+    }
+
+    #[test]
+    fn improvement_ratio_formula() {
+        // 20% better on both objectives -> ratio = 0.2
+        let r = improvement_ratio(8.0, 8.0, 10.0, 10.0).unwrap();
+        assert!((r - 0.2).abs() < 1e-6);
+        // unsatisfied -> None
+        assert!(improvement_ratio(12.0, 8.0, 10.0, 10.0).is_none());
+    }
+
+    #[test]
+    fn log2_improvement_signs() {
+        let (x, y) = log2_improvement(5.0, 20.0, 10.0, 10.0);
+        assert!(x > 0.0); // latency better than objective
+        assert!(y < 0.0); // power worse
+        assert!((x - 1.0).abs() < 1e-6); // 2x better => log2 = 1
+    }
+
+    #[test]
+    fn std_dev_known_values() {
+        assert_eq!(std_dev(&[]), 0.0);
+        assert_eq!(std_dev(&[3.0, 3.0, 3.0]), 0.0);
+        let s = std_dev(&[1.0, 3.0]);
+        assert!((s - 1.0).abs() < 1e-6);
+    }
+
+    fn sample(l: f32, p: f32) -> Sample {
+        Sample { net: [0.0; 6], cfg_idx: vec![], latency: l, power: p }
+    }
+
+    #[test]
+    fn pareto_frontier_filters_dominated() {
+        let samples = vec![
+            sample(1.0, 10.0),
+            sample(2.0, 5.0),
+            sample(3.0, 6.0),  // dominated by (2,5)
+            sample(4.0, 1.0),
+            sample(1.5, 10.0), // dominated by (1,10)
+        ];
+        let f = pareto_frontier(&samples);
+        assert_eq!(f, vec![(1.0, 10.0), (2.0, 5.0), (4.0, 1.0)]);
+    }
+
+    #[test]
+    fn difficulty_ranks_closer_as_harder() {
+        let frontier = vec![(1.0, 1.0)];
+        let near = difficulty(1.1, 1.1, &frontier);
+        let far = difficulty(5.0, 5.0, &frontier);
+        assert!(near < far);
+        let order = rank_by_difficulty(&[(5.0, 5.0), (1.1, 1.1)], &frontier);
+        assert_eq!(order, vec![1, 0]); // index of the nearer pair first
+    }
+}

@@ -1,0 +1,143 @@
+//! im2col design model (Section 7.1.1): roofline latency over a 3-phase
+//! pipelined tile schedule + static/dynamic power.  Mirrors
+//! `design_models.im2col_model` operation-for-operation in f32.
+
+use super::CLOCK_HZ;
+
+// Calibration constants — keep in lockstep with design_models.py.
+const P0: f32 = 0.05;
+const P_PE: f32 = 5.0e-4;
+const P_SRAM: f32 = 2.0e-6;
+const P_BW: f32 = 2.0e-4;
+const E_MAC: f32 = 1.0e-12;
+const E_SRAM: f32 = 0.5e-12;
+const E_DRAM: f32 = 20.0e-12;
+
+#[inline]
+fn ceil_div(a: f32, b: f32) -> f32 {
+    (a / b).ceil()
+}
+
+/// `net = [IC, OC, OW, OH, KW, KH]`,
+/// `cfg = [PEN, SDB, DSB, ISS, WSS, OSS, TIC, TOC, TOW, TOH, TKW, TKH]`.
+/// Returns `(latency_s, power_w)`.
+#[inline]
+pub fn im2col_model(net: &[f32], cfg: &[f32]) -> (f32, f32) {
+    debug_assert_eq!(net.len(), 6);
+    debug_assert_eq!(cfg.len(), 12);
+    let (ic, oc, ow, oh, kw, kh) = (net[0], net[1], net[2], net[3], net[4], net[5]);
+    let (pen, sdb, dsb, iss, wss, oss) =
+        (cfg[0], cfg[1], cfg[2], cfg[3], cfg[4], cfg[5]);
+    // Effective tile never exceeds the layer dimension.
+    let tic = cfg[6].min(ic);
+    let toc = cfg[7].min(oc);
+    let tow = cfg[8].min(ow);
+    let toh = cfg[9].min(oh);
+    let tkw = cfg[10].min(kw);
+    let tkh = cfg[11].min(kh);
+
+    let n_tiles = ceil_div(ic, tic)
+        * ceil_div(oc, toc)
+        * ceil_div(ow, tow)
+        * ceil_div(oh, toh)
+        * ceil_div(kw, tkw)
+        * ceil_div(kh, tkh);
+
+    let tile_macs = tic * toc * tow * toh * tkw * tkh;
+    let compute = ceil_div(tile_macs, pen);
+
+    // im2col input patch for one tile (int8 activations, 1 byte/element).
+    let in_bytes = tic * (tow + tkw - 1.0) * (toh + tkh - 1.0);
+    let w_bytes = toc * tic * tkw * tkh;
+    let o_bytes = toc * tow * toh;
+
+    // SRAM overflow => re-fetch from DRAM (capacity-miss factor).
+    let f_in = 1.0f32.max(in_bytes / iss);
+    let f_w = 1.0f32.max(w_bytes / wss);
+    let f_o = 1.0f32.max(o_bytes / oss);
+
+    let load = ceil_div(in_bytes * f_in + w_bytes * f_w, dsb);
+    // Output-stationary: write-back amortized over the reduction tiles.
+    let red_tiles = ceil_div(ic, tic) * ceil_div(kw, tkw) * ceil_div(kh, tkh);
+    let wb = ceil_div(o_bytes * f_o / red_tiles, sdb);
+
+    let bottleneck = load.max(compute.max(wb));
+    // 3-phase pipeline: steady state at the bottleneck + fill/drain.
+    let cycles = n_tiles * bottleneck + (load + compute + wb - bottleneck);
+    let latency = cycles / CLOCK_HZ;
+
+    let p_static =
+        P0 + P_PE * pen + P_SRAM * (iss + wss + oss) + P_BW * (sdb + dsb);
+    let macs_total = n_tiles * tile_macs;
+    let sram_acc = 3.0 * macs_total;
+    let dram_bytes =
+        n_tiles * (in_bytes * f_in + w_bytes * f_w) + (oc * ow * oh) * f_o;
+    let energy = E_MAC * macs_total + E_SRAM * sram_acc + E_DRAM * dram_bytes;
+    let power = p_static + energy / latency;
+    (latency, power)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const NET: [f32; 6] = [32.0, 32.0, 32.0, 32.0, 3.0, 3.0];
+
+    fn cfg(pen: f32, dsb: f32, tic: f32) -> [f32; 12] {
+        [pen, 128.0, dsb, 4096.0, 4096.0, 4096.0, tic, 16.0, 16.0, 16.0,
+         3.0, 3.0]
+    }
+
+    #[test]
+    fn positive_finite() {
+        let (l, p) = im2col_model(&NET, &cfg(512.0, 128.0, 16.0));
+        assert!(l.is_finite() && l > 0.0);
+        assert!(p.is_finite() && p > 0.0);
+    }
+
+    #[test]
+    fn more_pes_never_slower() {
+        let (l_small, _) = im2col_model(&NET, &cfg(64.0, 128.0, 16.0));
+        let (l_big, _) = im2col_model(&NET, &cfg(2048.0, 128.0, 16.0));
+        assert!(l_big <= l_small);
+    }
+
+    #[test]
+    fn bandwidth_relieves_memory_bound() {
+        // Tiny tiles on a big array => memory bound.
+        let (l_lo, _) = im2col_model(&NET, &cfg(2048.0, 32.0, 4.0));
+        let (l_hi, _) = im2col_model(&NET, &cfg(2048.0, 512.0, 4.0));
+        assert!(l_hi <= l_lo);
+    }
+
+    #[test]
+    fn sram_overflow_penalized() {
+        let mut fit = cfg(512.0, 128.0, 64.0);
+        let mut ovf = fit;
+        fit[3] = 8192.0; // ISS
+        ovf[3] = 512.0;
+        let (l_fit, _) = im2col_model(&NET, &fit);
+        let (l_ovf, _) = im2col_model(&NET, &ovf);
+        assert!(l_ovf >= l_fit);
+    }
+
+    #[test]
+    fn tile_clamped_to_layer() {
+        // Kernel tile larger than the 1x1 kernel == tile of exactly 1.
+        let net = [32.0, 32.0, 32.0, 32.0, 1.0, 1.0];
+        let mut a = cfg(512.0, 128.0, 16.0);
+        a[10] = 5.0;
+        a[11] = 5.0;
+        let mut b = cfg(512.0, 128.0, 16.0);
+        b[10] = 1.0;
+        b[11] = 1.0;
+        assert_eq!(im2col_model(&net, &a), im2col_model(&net, &b));
+    }
+
+    #[test]
+    fn power_includes_static_floor() {
+        let (_, p) = im2col_model(&NET, &cfg(2048.0, 128.0, 16.0));
+        let static_floor = P0 + P_PE * 2048.0;
+        assert!(p > static_floor);
+    }
+}

@@ -1,0 +1,55 @@
+//! Analytical design models — Rust twins of `python/compile/design_models.py`.
+//!
+//! These run on the request path: the Design Selector (Algorithm 2) and all
+//! baseline DSE algorithms evaluate thousands of candidate configurations
+//! per task, so the models are plain scalar f32 code, allocation-free.
+//!
+//! Every arithmetic operation mirrors the jnp implementation **in the same
+//! order** so f32 results match bit-for-bit; `cargo test` checks this
+//! against `artifacts/golden_<model>.json` emitted by the AOT path.
+
+pub mod dnnweaver;
+pub mod im2col;
+
+pub use dnnweaver::dnnweaver_model;
+pub use im2col::im2col_model;
+
+/// 1 GHz target clock for both templates (matches design_models.CLOCK_HZ).
+pub const CLOCK_HZ: f32 = 1.0e9;
+
+/// Evaluate a design model by name on raw values.
+///
+/// `net`: the 6 network parameters (IC, OC, OW, OH, KW, KH).
+/// `cfg`: raw configuration values (12 for im2col, 4 for dnnweaver).
+/// Returns `(latency_seconds, power_watts)`.
+pub fn eval(model: &str, net: &[f32], cfg: &[f32]) -> (f32, f32) {
+    match model {
+        "im2col" => im2col_model(net, cfg),
+        "dnnweaver" => dnnweaver_model(net, cfg),
+        other => panic!("unknown design model {other:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dispatch_matches_direct() {
+        let net = [32.0, 32.0, 32.0, 32.0, 3.0, 3.0];
+        let cfg12 = [512.0, 128.0, 128.0, 4096.0, 4096.0, 4096.0, 16.0,
+                     16.0, 16.0, 16.0, 3.0, 3.0];
+        assert_eq!(eval("im2col", &net, &cfg12), im2col_model(&net, &cfg12));
+        let cfg4 = [32.0, 512.0, 512.0, 512.0];
+        assert_eq!(
+            eval("dnnweaver", &net, &cfg4),
+            dnnweaver_model(&net, &cfg4)
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown design model")]
+    fn unknown_model_panics() {
+        eval("nope", &[0.0; 6], &[0.0; 4]);
+    }
+}

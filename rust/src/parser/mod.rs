@@ -1,0 +1,205 @@
+//! Network Parser (Parsing Phase, Fig. 4).
+//!
+//! Parses the user's abstract network description into the network
+//! parameters GANDSE consumes.  Two input formats:
+//!
+//! * JSON: `{"layers": [{"type": "conv", "in_channels": 32, ...}, ...]}`
+//!   (the shape PyTorch/Caffe exporters produce);
+//! * a compact text form, one layer per line:
+//!   `conv ic=32 oc=64 ow=32 oh=32 kw=3 kh=3`.
+//!
+//! Each conv layer maps to one 6-vector (IC, OC, OW, OH, KW, KH);
+//! non-conv layers (relu, pool, flatten, fc) are accepted and skipped —
+//! the accelerator template only offloads convolutions, matching the
+//! paper's CNN focus.
+
+use crate::space::N_NET;
+use crate::util::json::Json;
+
+/// One parsed conv layer = one DSE network-parameter vector.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ConvLayer {
+    pub name: String,
+    pub net: [f32; N_NET],
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ParseError {
+    #[error("json: {0}")]
+    Json(#[from] crate::util::json::JsonError),
+    #[error("layer {layer}: missing field {field:?}")]
+    Missing { layer: usize, field: &'static str },
+    #[error("layer {layer}: field {field:?} must be a positive number")]
+    BadField { layer: usize, field: &'static str },
+    #[error("line {line}: malformed entry {entry:?}")]
+    BadLine { line: usize, entry: String },
+    #[error("no convolution layers found in the description")]
+    NoConvLayers,
+}
+
+const FIELDS: [(&str, &str); 6] = [
+    ("in_channels", "ic"),
+    ("out_channels", "oc"),
+    ("out_w", "ow"),
+    ("out_h", "oh"),
+    ("k_w", "kw"),
+    ("k_h", "kh"),
+];
+
+/// Parse a JSON network description.
+pub fn parse_json(text: &str) -> Result<Vec<ConvLayer>, ParseError> {
+    let v = Json::parse(text)?;
+    let layers = v
+        .get("layers")
+        .and_then(Json::as_arr)
+        .ok_or(ParseError::Missing { layer: 0, field: "layers" })?;
+    let mut out = Vec::new();
+    for (li, l) in layers.iter().enumerate() {
+        let ty = l.get("type").and_then(Json::as_str).unwrap_or("conv");
+        if !ty.eq_ignore_ascii_case("conv") {
+            continue; // pooling / activation / fc: not offloaded
+        }
+        let mut net = [0f32; N_NET];
+        for (slot, (long, short)) in net.iter_mut().zip(FIELDS) {
+            let val = l
+                .get(long)
+                .or_else(|| l.get(short))
+                .ok_or(ParseError::Missing { layer: li, field: long })?
+                .as_f64()
+                .ok_or(ParseError::BadField { layer: li, field: long })?;
+            if val <= 0.0 || !val.is_finite() {
+                return Err(ParseError::BadField { layer: li, field: long });
+            }
+            *slot = val as f32;
+        }
+        let name = l
+            .get("name")
+            .and_then(Json::as_str)
+            .map(String::from)
+            .unwrap_or_else(|| format!("conv{li}"));
+        out.push(ConvLayer { name, net });
+    }
+    if out.is_empty() {
+        return Err(ParseError::NoConvLayers);
+    }
+    Ok(out)
+}
+
+/// Parse the compact text form (`conv ic=32 oc=64 ow=32 oh=32 kw=3 kh=3`).
+pub fn parse_text(text: &str) -> Result<Vec<ConvLayer>, ParseError> {
+    let mut out = Vec::new();
+    for (ln, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut toks = line.split_whitespace();
+        let kind = toks.next().unwrap_or_default();
+        if !kind.eq_ignore_ascii_case("conv") {
+            continue;
+        }
+        let mut net = [0f32; N_NET];
+        let mut seen = [false; N_NET];
+        for tok in toks {
+            let (k, v) = tok.split_once('=').ok_or_else(|| {
+                ParseError::BadLine { line: ln + 1, entry: tok.to_string() }
+            })?;
+            let idx = FIELDS
+                .iter()
+                .position(|(_, short)| *short == k.to_ascii_lowercase())
+                .ok_or_else(|| ParseError::BadLine {
+                    line: ln + 1,
+                    entry: tok.to_string(),
+                })?;
+            let val: f32 = v.parse().map_err(|_| ParseError::BadLine {
+                line: ln + 1,
+                entry: tok.to_string(),
+            })?;
+            if val <= 0.0 {
+                return Err(ParseError::BadLine {
+                    line: ln + 1,
+                    entry: tok.to_string(),
+                });
+            }
+            net[idx] = val;
+            seen[idx] = true;
+        }
+        if let Some(i) = seen.iter().position(|&s| !s) {
+            return Err(ParseError::Missing {
+                layer: out.len(),
+                field: FIELDS[i].0,
+            });
+        }
+        out.push(ConvLayer { name: format!("conv{}", out.len()), net });
+    }
+    if out.is_empty() {
+        return Err(ParseError::NoConvLayers);
+    }
+    Ok(out)
+}
+
+/// Dispatch on the leading character (JSON object vs text form).
+pub fn parse(text: &str) -> Result<Vec<ConvLayer>, ParseError> {
+    if text.trim_start().starts_with('{') {
+        parse_json(text)
+    } else {
+        parse_text(text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_json_layers() {
+        let t = r#"{"layers": [
+          {"type": "conv", "name": "c1", "in_channels": 3,
+           "out_channels": 32, "out_w": 32, "out_h": 32, "k_w": 3, "k_h": 3},
+          {"type": "relu"},
+          {"type": "conv", "ic": 32, "oc": 64, "ow": 16, "oh": 16,
+           "kw": 5, "kh": 5}
+        ]}"#;
+        let layers = parse(t).unwrap();
+        assert_eq!(layers.len(), 2);
+        assert_eq!(layers[0].name, "c1");
+        assert_eq!(layers[0].net, [3.0, 32.0, 32.0, 32.0, 3.0, 3.0]);
+        assert_eq!(layers[1].net, [32.0, 64.0, 16.0, 16.0, 5.0, 5.0]);
+    }
+
+    #[test]
+    fn parses_text_layers() {
+        let t = "# a comment\nconv ic=16 oc=32 ow=28 oh=28 kw=3 kh=3\n\
+                 relu\nconv ic=32 oc=32 ow=14 oh=14 kw=1 kh=1\n";
+        let layers = parse(t).unwrap();
+        assert_eq!(layers.len(), 2);
+        assert_eq!(layers[1].net, [32.0, 32.0, 14.0, 14.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn missing_field_is_error() {
+        let t = r#"{"layers": [{"type": "conv", "in_channels": 3}]}"#;
+        assert!(matches!(
+            parse(t),
+            Err(ParseError::Missing { field: "out_channels", .. })
+        ));
+        assert!(parse("conv ic=16 oc=32 ow=28 oh=28 kw=3").is_err());
+    }
+
+    #[test]
+    fn rejects_nonpositive_dims() {
+        let t = r#"{"layers": [{"type":"conv","ic":0,"oc":1,"ow":1,
+                    "oh":1,"kw":1,"kh":1}]}"#;
+        assert!(parse(t).is_err());
+        assert!(parse("conv ic=-3 oc=32 ow=28 oh=28 kw=3 kh=3").is_err());
+    }
+
+    #[test]
+    fn empty_description_is_error() {
+        assert!(matches!(
+            parse(r#"{"layers":[{"type":"relu"}]}"#),
+            Err(ParseError::NoConvLayers)
+        ));
+        assert!(matches!(parse("relu\n"), Err(ParseError::NoConvLayers)));
+    }
+}

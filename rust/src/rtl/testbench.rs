@@ -1,0 +1,153 @@
+//! Self-checking Verilog testbench emitter for the generated accelerator.
+//!
+//! The paper validates generated RTL through simulation + synthesis
+//! (Vivado); offline we emit a behavioural testbench alongside the design
+//! so any simulator (iverilog/verilator/xsim) can drive the module through
+//! a LOAD → COMPUTE → DRAIN round and check the handshake protocol.
+//! `rtl::check_structure` covers the static side; this covers the
+//! dynamic contract.
+
+use std::collections::BTreeMap;
+
+use super::RtlError;
+
+/// Emit a testbench for a module generated with the given parameters.
+pub fn generate_testbench(
+    module_name: &str,
+    params: &BTreeMap<String, u64>,
+) -> Result<String, RtlError> {
+    let need = |k: &str| -> Result<u64, RtlError> {
+        params
+            .get(k)
+            .copied()
+            .ok_or_else(|| RtlError::Structure(format!("missing param {k}")))
+    };
+    let dsb = need("DSB")?;
+    let sdb = need("SDB")?;
+    let iss = need("ISS")?;
+    let wss = need("WSS")?;
+    let oss = need("OSS")?;
+    // generous cycle budget: fill both buffers + compute + drain
+    let budget = 16 * (iss + wss + oss) / dsb.max(1) + 4 * oss + 1024;
+    Ok(format!(
+        r#"// Auto-generated self-checking testbench for {module}
+`timescale 1ns/1ps
+
+module {module}_tb;
+    reg clk = 0;
+    reg rst_n = 0;
+    reg start = 0;
+    reg  [8*{dsb}-1:0] dram_rd_data = 0;
+    reg                dram_rd_valid = 0;
+    wire               dram_rd_ready;
+    wire [8*{sdb}-1:0] dram_wr_data;
+    wire               dram_wr_valid;
+    reg                dram_wr_ready = 1;
+    wire               done;
+
+    {module} dut (
+        .clk(clk), .rst_n(rst_n),
+        .dram_rd_data(dram_rd_data), .dram_rd_valid(dram_rd_valid),
+        .dram_rd_ready(dram_rd_ready),
+        .dram_wr_data(dram_wr_data), .dram_wr_valid(dram_wr_valid),
+        .dram_wr_ready(dram_wr_ready),
+        .start(start), .done(done)
+    );
+
+    always #5 clk = ~clk;
+
+    integer cycles = 0;
+    integer wr_beats = 0;
+    always @(posedge clk) begin
+        cycles <= cycles + 1;
+        if (dram_wr_valid && dram_wr_ready) wr_beats <= wr_beats + 1;
+        // protocol check: no write activity while loading
+        if (dram_rd_ready && dram_wr_valid) begin
+            $display("TB FAIL: simultaneous load and drain");
+            $fatal;
+        end
+        if (cycles > {budget}) begin
+            $display("TB FAIL: timeout after {budget} cycles");
+            $fatal;
+        end
+    end
+
+    integer k;
+    initial begin
+        repeat (4) @(posedge clk);
+        rst_n = 1;
+        @(posedge clk);
+        start = 1;
+        @(posedge clk);
+        start = 0;
+        // stream pseudo-random bytes while the DUT asks for them
+        dram_rd_valid = 1;
+        for (k = 0; k < {budget}; k = k + 1) begin
+            @(posedge clk);
+            dram_rd_data = {{8*{dsb}{{1'b0}}}} | (k * 32'h9E3779B9);
+            if (done) begin
+                if (wr_beats == 0) begin
+                    $display("TB FAIL: done with no output drained");
+                    $fatal;
+                end
+                $display("TB PASS: done after %0d cycles, %0d beats",
+                         cycles, wr_beats);
+                $finish;
+            end
+        end
+        $display("TB FAIL: never finished");
+        $fatal;
+    end
+endmodule
+"#,
+        module = module_name,
+        dsb = dsb,
+        sdb = sdb,
+        budget = budget,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{check_structure, template_params};
+    use super::*;
+    use crate::space::builtin_spec;
+
+    #[test]
+    fn testbench_generates_and_is_structurally_sound() {
+        let spec = builtin_spec("dnnweaver").unwrap();
+        let params =
+            template_params(&spec, &[32.0, 512.0, 512.0, 512.0]).unwrap();
+        let tb = generate_testbench("gandse_acc", &params).unwrap();
+        assert!(tb.contains("module gandse_acc_tb"));
+        assert!(tb.contains("gandse_acc dut"));
+        check_structure(&tb).unwrap();
+    }
+
+    #[test]
+    fn testbench_budget_scales_with_buffers() {
+        let spec = builtin_spec("dnnweaver").unwrap();
+        let small =
+            template_params(&spec, &[8.0, 128.0, 128.0, 128.0]).unwrap();
+        let big =
+            template_params(&spec, &[8.0, 2048.0, 2048.0, 2048.0]).unwrap();
+        let tb_s = generate_testbench("m", &small).unwrap();
+        let tb_b = generate_testbench("m", &big).unwrap();
+        let budget = |s: &str| -> u64 {
+            s.lines()
+                .find(|l| l.contains("timeout after"))
+                .and_then(|l| {
+                    l.split_whitespace()
+                        .find_map(|t| t.parse::<u64>().ok())
+                })
+                .unwrap()
+        };
+        assert!(budget(&tb_b) > budget(&tb_s));
+    }
+
+    #[test]
+    fn missing_params_rejected() {
+        let empty = BTreeMap::new();
+        assert!(generate_testbench("m", &empty).is_err());
+    }
+}

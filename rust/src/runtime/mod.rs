@@ -1,0 +1,179 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU plugin):
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `client.compile` → `execute`.
+//!
+//! HLO **text** is the interchange format (not serialized protos): jax
+//! ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1 rejects;
+//! the text parser reassigns ids (see python/compile/aot.py and
+//! /opt/xla-example/load_hlo).
+//!
+//! All artifacts are lowered with `return_tuple=True`, so every execution
+//! returns one tuple literal which `run` decomposes.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+/// Shared PJRT client + executable cache (compilation is expensive; each
+/// artifact is compiled once per process).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifact_dir: PathBuf,
+    cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+}
+
+/// One compiled artifact.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+// SAFETY: the PJRT C API is thread-safe (clients, executables and buffers
+// may be used concurrently from multiple threads; the CPU plugin serializes
+// internally where needed).  The `xla` crate only omits these impls because
+// it stores raw pointers.  We never hand out the raw pointers and all
+// mutation of the cache map is behind a Mutex.
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+impl Runtime {
+    /// Create a CPU PJRT client rooted at an artifact directory.
+    pub fn new(artifact_dir: &Path) -> Result<Runtime> {
+        let client =
+            xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            artifact_dir: artifact_dir.to_path_buf(),
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.artifact_dir
+    }
+
+    /// Load + compile an HLO-text artifact by file name (cached).
+    pub fn load(&self, name: &str) -> Result<std::sync::Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let path = self.artifact_dir.join(name);
+        if !path.exists() {
+            bail!("artifact {path:?} not found — run `make artifacts` first");
+        }
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        let exe =
+            std::sync::Arc::new(Executable { exe, name: name.to_string() });
+        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Upload a host f32 slice to a device buffer with the given dims.
+    ///
+    /// Uses `buffer_from_host_buffer` (kImmutableOnlyDuringCall: the data
+    /// is copied before the call returns).  Do NOT switch this to
+    /// `buffer_from_host_literal`: that path is asynchronous and the shim
+    /// never awaits the transfer, so dropping the literal races the DMA
+    /// and corrupts the buffer (observed as nondeterministic
+    /// PRIMITIVE_TYPE_INVALID aborts).
+    pub fn to_device(
+        &self,
+        data: &[f32],
+        dims: &[usize],
+    ) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .context("uploading buffer")
+    }
+}
+
+impl Executable {
+    /// Execute with literal inputs; decompose the output tuple.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let bufs = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.name))?;
+        let out = bufs[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        Ok(out.to_tuple()?)
+    }
+
+    /// Execute with device-buffer inputs (hot path: state tensors stay on
+    /// device across steps, only the batch is re-uploaded).
+    pub fn run_b(
+        &self,
+        inputs: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<xla::PjRtBuffer>> {
+        let mut bufs = self
+            .exe
+            .execute_b(inputs)
+            .with_context(|| format!("executing {}", self.name))?;
+        Ok(bufs.pop().unwrap_or_default())
+    }
+}
+
+/// Build an f32 literal with the given dimensions.
+pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    if n != data.len() {
+        bail!("literal shape {dims:?} != data len {}", data.len());
+    }
+    let l = xla::Literal::vec1(data);
+    let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(l.reshape(&dims)?)
+}
+
+/// Scalar f32 literal.
+pub fn lit_scalar(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Extract an f32 vector from a literal (any shape, row-major).
+pub fn to_f32_vec(l: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(l.to_vec::<f32>()?)
+}
+
+/// Extract an f32 vector from a device buffer.
+pub fn buf_to_f32_vec(b: &xla::PjRtBuffer) -> Result<Vec<f32>> {
+    to_f32_vec(&b.to_literal_sync()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lit_f32_checks_shape() {
+        assert!(lit_f32(&[1.0, 2.0, 3.0], &[2, 2]).is_err());
+        let l = lit_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(to_f32_vec(&l).unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn missing_artifact_is_an_error() {
+        let rt = Runtime::new(Path::new("/nonexistent-dir")).unwrap();
+        let err = match rt.load("nope.hlo.txt") {
+            Ok(_) => panic!("expected error"),
+            Err(e) => e,
+        };
+        assert!(format!("{err}").contains("make artifacts"));
+    }
+}

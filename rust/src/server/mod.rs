@@ -1,0 +1,455 @@
+//! DSE service: TCP JSON-lines protocol with dynamic request batching.
+//!
+//! The exploration artifacts are AOT-compiled for a **fixed** batch shape
+//! (`meta.infer_batch`), so the serving problem is the classic router one:
+//! coalesce concurrently arriving requests into full inference batches
+//! without letting a lone request wait forever.  [`Batcher`] implements
+//! the policy (size-or-deadline, like vLLM's scheduler at 1/1000 scale);
+//! [`serve`] wires it to a `std::net` TCP listener with one light thread
+//! per connection (the offline crate cache has no tokio — see DESIGN.md).
+//!
+//! Protocol (one JSON object per line, newline-terminated):
+//!   request:  {"net": [ic,oc,ow,oh,kw,kh], "lo": <f>, "po": <f>,
+//!              "rtl": <bool, optional>}
+//!   response: {"ok": true, "cfg": {...}, "latency": <f>, "power": <f>,
+//!              "satisfied": <bool>, "n_candidates": <f>,
+//!              "batch_size": <n>, "queue_us": <n>, "rtl": "..."}
+//!   errors:   {"ok": false, "error": "..."}
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::explorer::{DseRequest, DseResult, Explorer};
+use crate::rtl;
+use crate::space::{SpaceSpec, N_NET};
+use crate::util::json::Json;
+
+/// Per-response batching metadata surfaced to clients.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchInfo {
+    pub batch_size: usize,
+    pub queue_us: u64,
+}
+
+struct BatchState<T, R> {
+    queue: Vec<(T, mpsc::Sender<(R, BatchInfo)>)>,
+    oldest: Option<Instant>,
+}
+
+/// Dynamic batching queue: collect items until `max_batch` are pending or
+/// `max_wait` has elapsed since the oldest arrival, then hand the whole
+/// batch to the worker.
+pub struct Batcher<T, R> {
+    inner: Mutex<BatchState<T, R>>,
+    cv: Condvar,
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    closed: AtomicBool,
+    /// Served-batch statistics for throughput metrics.
+    pub batches: AtomicU64,
+    pub items: AtomicU64,
+}
+
+impl<T, R> Batcher<T, R> {
+    pub fn new(max_batch: usize, max_wait: Duration) -> Self {
+        assert!(max_batch > 0);
+        Batcher {
+            inner: Mutex::new(BatchState { queue: Vec::new(), oldest: None }),
+            cv: Condvar::new(),
+            max_batch,
+            max_wait,
+            closed: AtomicBool::new(false),
+            batches: AtomicU64::new(0),
+            items: AtomicU64::new(0),
+        }
+    }
+
+    /// Enqueue one item; the result arrives on the returned channel.
+    pub fn submit(&self, item: T) -> mpsc::Receiver<(R, BatchInfo)> {
+        let (tx, rx) = mpsc::channel();
+        let mut st = self.inner.lock().unwrap();
+        st.queue.push((item, tx));
+        if st.oldest.is_none() {
+            st.oldest = Some(Instant::now());
+        }
+        drop(st);
+        self.cv.notify_all();
+        rx
+    }
+
+    /// Signal workers to exit once the queue drains.
+    pub fn close(&self) {
+        self.closed.store(true, Ordering::SeqCst);
+        self.cv.notify_all();
+    }
+
+    /// Worker loop: repeatedly collect a batch and answer it with `f`.
+    /// `f` must return exactly one result per input (checked).
+    pub fn run_worker(&self, mut f: impl FnMut(&[T]) -> Vec<R>) {
+        loop {
+            let mut st = self.inner.lock().unwrap();
+            loop {
+                if st.queue.len() >= self.max_batch {
+                    break;
+                }
+                let deadline_hit = st
+                    .oldest
+                    .map(|t| t.elapsed() >= self.max_wait)
+                    .unwrap_or(false);
+                if deadline_hit && !st.queue.is_empty() {
+                    break;
+                }
+                if self.closed.load(Ordering::SeqCst) {
+                    if st.queue.is_empty() {
+                        return;
+                    }
+                    break;
+                }
+                let wait = st
+                    .oldest
+                    .map(|t| self.max_wait.saturating_sub(t.elapsed()))
+                    .unwrap_or(self.max_wait);
+                let (g, _) = self
+                    .cv
+                    .wait_timeout(st, wait.max(Duration::from_micros(50)))
+                    .unwrap();
+                st = g;
+            }
+            let oldest = st.oldest.take();
+            let n = st.queue.len().min(self.max_batch);
+            let batch: Vec<_> = st.queue.drain(..n).collect();
+            if !st.queue.is_empty() {
+                st.oldest = Some(Instant::now());
+            }
+            drop(st);
+
+            let queue_us =
+                oldest.map(|t| t.elapsed().as_micros() as u64).unwrap_or(0);
+            let (items, senders): (Vec<T>, Vec<mpsc::Sender<(R, BatchInfo)>>) =
+                batch.into_iter().unzip();
+            let results = f(&items);
+            assert_eq!(
+                results.len(),
+                senders.len(),
+                "batch fn must return one result per input"
+            );
+            self.batches.fetch_add(1, Ordering::Relaxed);
+            self.items.fetch_add(items.len() as u64, Ordering::Relaxed);
+            let info =
+                BatchInfo { batch_size: items.len(), queue_us };
+            for (r, tx) in results.into_iter().zip(senders) {
+                let _ = tx.send((r, info)); // receiver may have hung up
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Protocol encode/decode
+// ---------------------------------------------------------------------------
+
+/// Parse one request line.  `rtl=true` asks for generated Verilog inline.
+pub fn parse_request(line: &str) -> Result<(DseRequest, bool), String> {
+    let v = Json::parse(line).map_err(|e| e.to_string())?;
+    let net = v
+        .get("net")
+        .and_then(Json::as_f32_vec)
+        .ok_or("missing field \"net\" ([ic,oc,ow,oh,kw,kh])")?;
+    if net.len() != N_NET {
+        return Err(format!("\"net\" must have {N_NET} entries"));
+    }
+    let lo = v
+        .get("lo")
+        .and_then(Json::as_f64)
+        .ok_or("missing numeric field \"lo\"")? as f32;
+    let po = v
+        .get("po")
+        .and_then(Json::as_f64)
+        .ok_or("missing numeric field \"po\"")? as f32;
+    if lo <= 0.0 || po <= 0.0 {
+        return Err("objectives must be positive".into());
+    }
+    let want_rtl = v.get("rtl").and_then(Json::as_bool).unwrap_or(false);
+    let mut n = [0f32; N_NET];
+    n.copy_from_slice(&net);
+    Ok((DseRequest { net: n, lo, po }, want_rtl))
+}
+
+/// Encode one response line.
+pub fn encode_response(
+    spec: &SpaceSpec,
+    res: &DseResult,
+    info: BatchInfo,
+    verilog: Option<String>,
+) -> String {
+    let cfg = Json::Obj(
+        spec.groups
+            .iter()
+            .zip(&res.cfg_raw)
+            .map(|(g, &v)| (g.name.clone(), Json::Num(v as f64)))
+            .collect(),
+    );
+    let mut fields = vec![
+        ("ok", Json::Bool(true)),
+        ("cfg", cfg),
+        ("latency", Json::Num(res.latency as f64)),
+        ("power", Json::Num(res.power as f64)),
+        ("satisfied", Json::Bool(res.satisfied)),
+        ("n_candidates", Json::Num(res.n_candidates)),
+        ("batch_size", Json::Num(info.batch_size as f64)),
+        ("queue_us", Json::Num(info.queue_us as f64)),
+    ];
+    if let Some(v) = verilog {
+        fields.push(("rtl", Json::Str(v)));
+    }
+    Json::obj(fields).to_string()
+}
+
+pub fn encode_error(msg: &str) -> String {
+    Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::str(msg))])
+        .to_string()
+}
+
+// ---------------------------------------------------------------------------
+// TCP server
+// ---------------------------------------------------------------------------
+
+/// Handle to a running server (for tests/examples).
+pub struct ServerHandle {
+    pub addr: std::net::SocketAddr,
+    batcher: Arc<Batcher<DseRequest, DseResult>>,
+    worker: Option<std::thread::JoinHandle<()>>,
+    acceptor: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    pub fn shutdown(mut self) {
+        self.batcher.close();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+        // acceptor blocks in accept(); connect once to unblock it
+        let _ = TcpStream::connect(self.addr);
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
+    }
+
+    pub fn stats(&self) -> (u64, u64) {
+        (
+            self.batcher.batches.load(Ordering::Relaxed),
+            self.batcher.items.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// Start serving DSE requests on `addr` (e.g. "127.0.0.1:0").
+///
+/// `explorer` is consumed by the single inference worker thread; requests
+/// are coalesced up to the artifact batch size with `max_wait` latency
+/// budget.
+pub fn serve(
+    addr: &str,
+    mut explorer: Explorer<'static>,
+    max_batch: usize,
+    max_wait: Duration,
+) -> Result<ServerHandle> {
+    let listener = TcpListener::bind(addr)?;
+    let local = listener.local_addr()?;
+    let batcher: Arc<Batcher<DseRequest, DseResult>> =
+        Arc::new(Batcher::new(max_batch, max_wait));
+    let spec: SpaceSpec = explorer.spec.clone();
+
+    let worker = {
+        let b = batcher.clone();
+        std::thread::spawn(move || {
+            b.run_worker(|reqs: &[DseRequest]| {
+                explorer.explore(reqs).expect("exploration failed")
+            });
+        })
+    };
+
+    let acceptor = {
+        let b = batcher.clone();
+        std::thread::spawn(move || {
+            for stream in listener.incoming() {
+                let Ok(stream) = stream else { continue };
+                // §Perf: small JSON lines + request/response ping-pong —
+                // Nagle + delayed ACK adds ~40-90 ms per round trip.
+                let _ = stream.set_nodelay(true);
+                if b.closed.load(Ordering::SeqCst) {
+                    break;
+                }
+                let b = b.clone();
+                let spec = spec.clone();
+                std::thread::spawn(move || handle_conn(stream, &b, &spec));
+            }
+        })
+    };
+
+    Ok(ServerHandle {
+        addr: local,
+        batcher,
+        worker: Some(worker),
+        acceptor: Some(acceptor),
+    })
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    batcher: &Batcher<DseRequest, DseResult>,
+    spec: &SpaceSpec,
+) {
+    let peer = stream.peer_addr().ok();
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = match parse_request(&line) {
+            Err(e) => encode_error(&e),
+            Ok((req, want_rtl)) => {
+                let rx = batcher.submit(req);
+                match rx.recv() {
+                    Err(_) => encode_error("server shutting down"),
+                    Ok((res, info)) => {
+                        let verilog = want_rtl.then(|| {
+                            rtl::generate(spec, &res.cfg_raw, "gandse_acc")
+                                .unwrap_or_else(|e| format!("// error: {e}"))
+                        });
+                        encode_response(spec, &res, info, verilog)
+                    }
+                }
+            }
+        };
+        if writer
+            .write_all(reply.as_bytes())
+            .and_then(|_| writer.write_all(b"\n"))
+            .is_err()
+        {
+            break;
+        }
+    }
+    let _ = peer;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::builtin_spec;
+
+    #[test]
+    fn batcher_full_batch_dispatches_immediately() {
+        let b: Arc<Batcher<u32, u32>> =
+            Arc::new(Batcher::new(4, Duration::from_secs(10)));
+        let worker = {
+            let b = b.clone();
+            std::thread::spawn(move || {
+                b.run_worker(|xs| xs.iter().map(|x| x * 2).collect())
+            })
+        };
+        let rxs: Vec<_> = (0..4).map(|i| b.submit(i)).collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let (r, info) = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert_eq!(r, 2 * i as u32);
+            assert_eq!(info.batch_size, 4);
+        }
+        b.close();
+        worker.join().unwrap();
+    }
+
+    #[test]
+    fn batcher_deadline_flushes_partial_batch() {
+        let b: Arc<Batcher<u32, u32>> =
+            Arc::new(Batcher::new(64, Duration::from_millis(10)));
+        let worker = {
+            let b = b.clone();
+            std::thread::spawn(move || b.run_worker(|xs| xs.to_vec()))
+        };
+        let rx = b.submit(7);
+        let (r, info) = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(r, 7);
+        assert_eq!(info.batch_size, 1);
+        assert!(info.queue_us >= 9_000, "waited {}us", info.queue_us);
+        b.close();
+        worker.join().unwrap();
+    }
+
+    #[test]
+    fn batcher_splits_oversized_queue() {
+        let b: Arc<Batcher<u32, u32>> =
+            Arc::new(Batcher::new(2, Duration::from_millis(5)));
+        let rxs: Vec<_> = (0..5).map(|i| b.submit(i)).collect();
+        let worker = {
+            let b = b.clone();
+            std::thread::spawn(move || b.run_worker(|xs| xs.to_vec()))
+        };
+        let mut sizes = Vec::new();
+        for rx in rxs {
+            let (_, info) = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            sizes.push(info.batch_size);
+        }
+        assert!(sizes.iter().all(|&s| s <= 2));
+        b.close();
+        worker.join().unwrap();
+        assert_eq!(b.items.load(Ordering::Relaxed), 5);
+        assert!(b.batches.load(Ordering::Relaxed) >= 3);
+    }
+
+    #[test]
+    fn request_parsing() {
+        let (req, want_rtl) = parse_request(
+            r#"{"net":[16,32,28,28,3,3],"lo":0.01,"po":1.5,"rtl":true}"#,
+        )
+        .unwrap();
+        assert_eq!(req.net, [16.0, 32.0, 28.0, 28.0, 3.0, 3.0]);
+        assert_eq!(req.lo, 0.01);
+        assert!(want_rtl);
+        assert!(parse_request("{}").is_err());
+        assert!(parse_request(r#"{"net":[1,2],"lo":1,"po":1}"#).is_err());
+        assert!(
+            parse_request(r#"{"net":[1,2,3,4,5,6],"lo":-1,"po":1}"#).is_err()
+        );
+        assert!(parse_request("not json").is_err());
+    }
+
+    #[test]
+    fn response_encoding_roundtrips() {
+        let spec = builtin_spec("dnnweaver").unwrap();
+        let res = DseResult {
+            cfg_idx: vec![1, 2, 3, 4],
+            cfg_raw: spec.raw_values(&[1, 2, 3, 4]),
+            latency: 0.01,
+            power: 1.0,
+            n_candidates: 6.0,
+            satisfied: true,
+        };
+        let line = encode_response(
+            &spec,
+            &res,
+            BatchInfo { batch_size: 3, queue_us: 42 },
+            None,
+        );
+        let v = Json::parse(&line).unwrap();
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(
+            v.get("cfg").unwrap().get("PEN").unwrap().as_f64(),
+            Some(16.0)
+        );
+        assert_eq!(v.get("batch_size").unwrap().as_usize(), Some(3));
+        let err = encode_error("boom");
+        let v = Json::parse(&err).unwrap();
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(false));
+    }
+}

@@ -1,0 +1,436 @@
+//! Design-space specification (Rust twin of `python/compile/dse_spec.py`).
+//!
+//! Loaded from `artifacts/meta.json` — the contract the AOT compile path
+//! emits — so encode/decode layouts, parameter counts and batch shapes are
+//! guaranteed to match the HLO artifacts bit-for-bit.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+pub const N_NET: usize = 6;
+pub const N_OBJ: usize = 2;
+
+/// One one-hot-encoded configuration group (e.g. "PEN": PE count).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ConfigGroup {
+    pub name: String,
+    pub choices: Vec<f32>,
+}
+
+impl ConfigGroup {
+    pub fn size(&self) -> usize {
+        self.choices.len()
+    }
+}
+
+/// Full design-space specification for one design model.
+#[derive(Debug, Clone)]
+pub struct SpaceSpec {
+    pub model: String,
+    pub groups: Vec<ConfigGroup>,
+    pub net_fields: Vec<String>,
+    /// Values the dataset generator samples each net field from.
+    pub net_choices: Vec<Vec<f32>>,
+    pub noise_dim: usize,
+    pub onehot_dim: usize,
+    pub g_in: usize,
+    pub d_in: usize,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum SpecError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("json: {0}")]
+    Json(#[from] crate::util::json::JsonError),
+    #[error("meta.json: missing or malformed field {0:?}")]
+    Field(&'static str),
+    #[error("unknown design model {0:?}")]
+    UnknownModel(String),
+}
+
+impl SpaceSpec {
+    pub fn from_json(v: &Json) -> Result<SpaceSpec, SpecError> {
+        let model = v
+            .get("model")
+            .and_then(Json::as_str)
+            .ok_or(SpecError::Field("model"))?
+            .to_string();
+        let groups = v
+            .get("groups")
+            .and_then(Json::as_arr)
+            .ok_or(SpecError::Field("groups"))?
+            .iter()
+            .map(|g| {
+                Ok(ConfigGroup {
+                    name: g
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .ok_or(SpecError::Field("groups[].name"))?
+                        .to_string(),
+                    choices: g
+                        .get("choices")
+                        .and_then(Json::as_f32_vec)
+                        .ok_or(SpecError::Field("groups[].choices"))?,
+                })
+            })
+            .collect::<Result<Vec<_>, SpecError>>()?;
+        let net_fields: Vec<String> = v
+            .get("net_fields")
+            .and_then(Json::as_arr)
+            .ok_or(SpecError::Field("net_fields"))?
+            .iter()
+            .map(|s| s.as_str().unwrap_or_default().to_string())
+            .collect();
+        let choice_map = v
+            .get("net_choices")
+            .and_then(Json::as_obj)
+            .ok_or(SpecError::Field("net_choices"))?;
+        let net_choices = net_fields
+            .iter()
+            .map(|f| {
+                choice_map
+                    .get(f)
+                    .and_then(Json::as_f32_vec)
+                    .ok_or(SpecError::Field("net_choices[field]"))
+            })
+            .collect::<Result<Vec<_>, _>>()?;
+        let onehot_dim: usize = groups.iter().map(ConfigGroup::size).sum();
+        let spec = SpaceSpec {
+            model,
+            noise_dim: v
+                .get("noise_dim")
+                .and_then(Json::as_usize)
+                .ok_or(SpecError::Field("noise_dim"))?,
+            g_in: v
+                .get("g_in")
+                .and_then(Json::as_usize)
+                .ok_or(SpecError::Field("g_in"))?,
+            d_in: v
+                .get("d_in")
+                .and_then(Json::as_usize)
+                .ok_or(SpecError::Field("d_in"))?,
+            onehot_dim,
+            net_fields,
+            net_choices,
+            groups,
+        };
+        debug_assert_eq!(
+            spec.onehot_dim,
+            v.get("onehot_dim").and_then(Json::as_usize).unwrap_or(0)
+        );
+        Ok(spec)
+    }
+
+    /// Byte offset of each group inside the one-hot vector.
+    pub fn group_offsets(&self) -> Vec<usize> {
+        let mut offs = Vec::with_capacity(self.groups.len());
+        let mut acc = 0;
+        for g in &self.groups {
+            offs.push(acc);
+            acc += g.size();
+        }
+        offs
+    }
+
+    /// Total number of points in the design space.
+    pub fn space_size(&self) -> u128 {
+        self.groups.iter().map(|g| g.size() as u128).product()
+    }
+
+    /// One-hot-encode configuration choice indices.
+    pub fn encode_onehot(&self, idx: &[usize], out: &mut [f32]) {
+        debug_assert_eq!(idx.len(), self.groups.len());
+        debug_assert_eq!(out.len(), self.onehot_dim);
+        out.fill(0.0);
+        let mut off = 0;
+        for (g, &i) in self.groups.iter().zip(idx) {
+            out[off + i] = 1.0;
+            off += g.size();
+        }
+    }
+
+    /// Raw configuration values from choice indices.
+    pub fn raw_values(&self, idx: &[usize]) -> Vec<f32> {
+        self.groups
+            .iter()
+            .zip(idx)
+            .map(|(g, &i)| g.choices[i])
+            .collect()
+    }
+
+    /// Argmax-decode per-group probabilities to choice indices.
+    pub fn decode_argmax(&self, probs: &[f32]) -> Vec<usize> {
+        debug_assert_eq!(probs.len(), self.onehot_dim);
+        let mut idx = Vec::with_capacity(self.groups.len());
+        let mut off = 0;
+        for g in &self.groups {
+            let slice = &probs[off..off + g.size()];
+            let mut best = 0;
+            for (i, &p) in slice.iter().enumerate() {
+                if p > slice[best] {
+                    best = i;
+                }
+            }
+            idx.push(best);
+            off += g.size();
+        }
+        idx
+    }
+
+    /// Uniformly sample configuration choice indices ("even" sampling of
+    /// the Dataset Generator, Section 5.1).
+    pub fn sample_config(&self, rng: &mut Rng) -> Vec<usize> {
+        self.groups.iter().map(|g| rng.below(g.size())).collect()
+    }
+
+    /// Uniformly sample a network-parameter vector.
+    pub fn sample_net(&self, rng: &mut Rng) -> [f32; N_NET] {
+        let mut out = [0f32; N_NET];
+        for (o, choices) in out.iter_mut().zip(&self.net_choices) {
+            *o = *rng.choose(choices);
+        }
+        out
+    }
+}
+
+/// GAN hyperparameters + per-model metadata from meta.json.
+#[derive(Debug, Clone)]
+pub struct Meta {
+    pub stats_len: usize,
+    pub train_batch: usize,
+    pub infer_batch: usize,
+    pub width: usize,
+    pub g_depth: usize,
+    pub d_depth: usize,
+    pub noise_dim: usize,
+    pub models: BTreeMap<String, ModelMeta>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub spec: SpaceSpec,
+    pub g_params: usize,
+    pub d_params: usize,
+    pub g_dims: Vec<usize>,
+    pub d_dims: Vec<usize>,
+    /// Length of the fused train-step state vector
+    /// `[metrics(4), g, d, m_g, v_g, m_d, v_d]` (§Perf).
+    pub fused_state_len: usize,
+    /// Number of metrics elements at the head of the fused vector.
+    pub fused_metrics: usize,
+    pub artifacts: Vec<String>,
+}
+
+impl Meta {
+    pub fn load(dir: &Path) -> Result<Meta, SpecError> {
+        let text = std::fs::read_to_string(dir.join("meta.json"))?;
+        let v = Json::parse(&text)?;
+        let need =
+            |k: &'static str| v.get(k).and_then(Json::as_usize).ok_or(SpecError::Field(k));
+        let mut models = BTreeMap::new();
+        for (name, m) in v
+            .get("models")
+            .and_then(Json::as_obj)
+            .ok_or(SpecError::Field("models"))?
+        {
+            let spec = SpaceSpec::from_json(
+                m.get("spec").ok_or(SpecError::Field("models[].spec"))?,
+            )?;
+            let dims = |k: &'static str| -> Result<Vec<usize>, SpecError> {
+                Ok(m.get(k)
+                    .and_then(Json::as_arr)
+                    .ok_or(SpecError::Field("models[].dims"))?
+                    .iter()
+                    .filter_map(Json::as_usize)
+                    .collect())
+            };
+            let g_params = m
+                .get("g_params")
+                .and_then(Json::as_usize)
+                .ok_or(SpecError::Field("g_params"))?;
+            let d_params = m
+                .get("d_params")
+                .and_then(Json::as_usize)
+                .ok_or(SpecError::Field("d_params"))?;
+            models.insert(
+                name.clone(),
+                ModelMeta {
+                    spec,
+                    fused_state_len: m
+                        .get("fused_state_len")
+                        .and_then(Json::as_usize)
+                        .unwrap_or(4 + 3 * (g_params + d_params)),
+                    fused_metrics: m
+                        .get("fused_metrics")
+                        .and_then(Json::as_usize)
+                        .unwrap_or(4),
+                    g_params,
+                    d_params,
+                    g_dims: dims("g_dims")?,
+                    d_dims: dims("d_dims")?,
+                    artifacts: m
+                        .get("artifacts")
+                        .and_then(Json::as_arr)
+                        .ok_or(SpecError::Field("artifacts"))?
+                        .iter()
+                        .filter_map(|s| s.as_str().map(String::from))
+                        .collect(),
+                },
+            );
+        }
+        Ok(Meta {
+            stats_len: need("stats_len")?,
+            train_batch: need("train_batch")?,
+            infer_batch: need("infer_batch")?,
+            width: need("width")?,
+            g_depth: need("g_depth")?,
+            d_depth: need("d_depth")?,
+            noise_dim: need("noise_dim")?,
+            models,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelMeta, SpecError> {
+        self.models
+            .get(name)
+            .ok_or_else(|| SpecError::UnknownModel(name.to_string()))
+    }
+}
+
+/// Built-in specs matching dse_spec.py, used when artifacts are absent
+/// (pure-Rust paths: dataset generation, baselines, unit tests).
+pub fn builtin_spec(model: &str) -> Result<SpaceSpec, SpecError> {
+    let g = |name: &str, choices: &[f32]| ConfigGroup {
+        name: name.to_string(),
+        choices: choices.to_vec(),
+    };
+    let groups = match model {
+        "im2col" => vec![
+            g("PEN", &[64.0, 128.0, 256.0, 512.0, 1024.0, 2048.0]),
+            g("SDB", &[32.0, 64.0, 128.0, 256.0, 512.0]),
+            g("DSB", &[32.0, 64.0, 128.0, 256.0, 512.0]),
+            g("ISS", &[512.0, 1024.0, 2048.0, 4096.0, 8192.0]),
+            g("WSS", &[512.0, 1024.0, 2048.0, 4096.0, 8192.0]),
+            g("OSS", &[512.0, 1024.0, 2048.0, 4096.0, 8192.0]),
+            g("TIC", &[4.0, 8.0, 16.0, 32.0, 64.0]),
+            g("TOC", &[4.0, 8.0, 16.0, 32.0, 64.0]),
+            g("TOW", &[4.0, 8.0, 16.0, 32.0, 64.0]),
+            g("TOH", &[4.0, 8.0, 16.0, 32.0, 64.0]),
+            g("TKW", &[1.0, 2.0, 3.0, 4.0, 5.0]),
+            g("TKH", &[1.0, 2.0, 3.0, 4.0, 5.0]),
+        ],
+        "dnnweaver" => vec![
+            g("PEN", &[8.0, 16.0, 32.0, 64.0, 128.0, 256.0]),
+            g("ISS", &[128.0, 256.0, 512.0, 1024.0, 2048.0]),
+            g("WSS", &[128.0, 256.0, 512.0, 1024.0, 2048.0]),
+            g("OSS", &[128.0, 256.0, 512.0, 1024.0, 2048.0]),
+        ],
+        other => return Err(SpecError::UnknownModel(other.to_string())),
+    };
+    let onehot_dim: usize = groups.iter().map(ConfigGroup::size).sum();
+    let net_fields: Vec<String> =
+        ["IC", "OC", "OW", "OH", "KW", "KH"].iter().map(|s| s.to_string()).collect();
+    let net_choices = vec![
+        vec![16.0, 32.0, 64.0, 128.0],
+        vec![16.0, 32.0, 64.0, 128.0],
+        vec![16.0, 32.0, 64.0],
+        vec![16.0, 32.0, 64.0],
+        vec![1.0, 3.0, 5.0],
+        vec![1.0, 3.0, 5.0],
+    ];
+    Ok(SpaceSpec {
+        model: model.to_string(),
+        noise_dim: 8,
+        g_in: N_NET + N_OBJ + 8,
+        d_in: N_NET + onehot_dim + N_OBJ,
+        onehot_dim,
+        net_fields,
+        net_choices,
+        groups,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_im2col_dims() {
+        let s = builtin_spec("im2col").unwrap();
+        assert_eq!(s.groups.len(), 12);
+        assert_eq!(s.onehot_dim, 6 + 5 * 11);
+        assert_eq!(s.g_in, 16);
+        assert_eq!(s.d_in, 6 + 61 + 2);
+        assert_eq!(s.space_size(), 6 * 5u128.pow(11));
+    }
+
+    #[test]
+    fn builtin_dnnweaver_dims() {
+        let s = builtin_spec("dnnweaver").unwrap();
+        assert_eq!(s.groups.len(), 4);
+        assert_eq!(s.onehot_dim, 21);
+        assert_eq!(s.space_size(), 6 * 125);
+    }
+
+    #[test]
+    fn unknown_model_rejected() {
+        assert!(builtin_spec("bogus").is_err());
+    }
+
+    #[test]
+    fn onehot_roundtrip() {
+        let s = builtin_spec("dnnweaver").unwrap();
+        let idx = vec![2usize, 0, 4, 1];
+        let mut onehot = vec![0f32; s.onehot_dim];
+        s.encode_onehot(&idx, &mut onehot);
+        assert_eq!(onehot.iter().map(|&x| x as usize).sum::<usize>(), 4);
+        assert_eq!(s.decode_argmax(&onehot), idx);
+    }
+
+    #[test]
+    fn raw_values_pick_choices() {
+        let s = builtin_spec("dnnweaver").unwrap();
+        let raw = s.raw_values(&[2, 0, 4, 1]);
+        assert_eq!(raw, vec![32.0, 128.0, 2048.0, 256.0]);
+    }
+
+    #[test]
+    fn sampling_in_range() {
+        let s = builtin_spec("im2col").unwrap();
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let idx = s.sample_config(&mut rng);
+            for (g, &i) in s.groups.iter().zip(&idx) {
+                assert!(i < g.size());
+            }
+            let net = s.sample_net(&mut rng);
+            for (v, choices) in net.iter().zip(&s.net_choices) {
+                assert!(choices.contains(v));
+            }
+        }
+    }
+
+    #[test]
+    fn spec_from_json_roundtrip() {
+        // Build the JSON shape aot.py emits and parse it back.
+        let txt = r#"{
+          "model": "dnnweaver",
+          "net_fields": ["IC","OC","OW","OH","KW","KH"],
+          "net_choices": {"IC":[16,32],"OC":[16,32],"OW":[16],"OH":[16],
+                          "KW":[1,3],"KH":[1,3]},
+          "noise_dim": 8,
+          "groups": [{"name":"PEN","choices":[8,16]},
+                     {"name":"ISS","choices":[128,256,512]}],
+          "onehot_dim": 5, "g_in": 16, "d_in": 13
+        }"#;
+        let v = Json::parse(txt).unwrap();
+        let s = SpaceSpec::from_json(&v).unwrap();
+        assert_eq!(s.onehot_dim, 5);
+        assert_eq!(s.groups[1].choices, vec![128.0, 256.0, 512.0]);
+        assert_eq!(s.group_offsets(), vec![0, 2]);
+    }
+}

@@ -1,0 +1,172 @@
+//! Tiny argv parser (no `clap` in the offline cache).
+//!
+//! Grammar: `program subcommand [--key value]... [--flag]...`; values are
+//! typed at the call site (`get_f32`, `get_usize`, ...).  Unknown keys are
+//! reported as errors so typos do not silently fall back to defaults.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    kv: BTreeMap<String, String>,
+    flags: Vec<String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ArgsError {
+    #[error("option --{0} expects a value")]
+    MissingValue(String),
+    #[error("bad value for --{key}: {value:?}")]
+    BadValue { key: String, value: String },
+    #[error("unknown options: {0:?}")]
+    Unknown(Vec<String>),
+}
+
+impl Args {
+    /// Parse `std::env::args().skip(1)`-style iterators.
+    pub fn parse<I, S>(argv: I) -> Result<Args, ArgsError>
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().map(Into::into).peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                out.subcommand = it.next();
+            }
+        }
+        while let Some(a) = it.next() {
+            let key = a
+                .strip_prefix("--")
+                .ok_or_else(|| ArgsError::BadValue {
+                    key: "<positional>".into(),
+                    value: a.clone(),
+                })?
+                .to_string();
+            match it.peek() {
+                Some(v) if !v.starts_with("--") => {
+                    let v = it.next().unwrap();
+                    out.kv.insert(key, v);
+                }
+                _ => out.flags.push(key),
+            }
+        }
+        Ok(out)
+    }
+
+    fn mark(&self, key: &str) {
+        self.consumed.borrow_mut().push(key.to_string());
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.mark(key);
+        self.kv.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.mark(key);
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn get_f32(&self, key: &str, default: f32) -> Result<f32, ArgsError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| ArgsError::BadValue {
+                key: key.into(),
+                value: v.into(),
+            }),
+        }
+    }
+
+    pub fn get_usize(
+        &self,
+        key: &str,
+        default: usize,
+    ) -> Result<usize, ArgsError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| ArgsError::BadValue {
+                key: key.into(),
+                value: v.into(),
+            }),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64, ArgsError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| ArgsError::BadValue {
+                key: key.into(),
+                value: v.into(),
+            }),
+        }
+    }
+
+    /// After all lookups, error on anything the caller never consumed.
+    pub fn reject_unknown(&self) -> Result<(), ArgsError> {
+        let seen = self.consumed.borrow();
+        let unknown: Vec<String> = self
+            .kv
+            .keys()
+            .chain(self.flags.iter())
+            .filter(|k| !seen.contains(k))
+            .cloned()
+            .collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            Err(ArgsError::Unknown(unknown))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_subcommand_and_kv() {
+        let a = Args::parse(["train", "--model", "im2col", "--steps", "10"])
+            .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get("model"), Some("im2col"));
+        assert_eq!(a.get_usize("steps", 0).unwrap(), 10);
+    }
+
+    #[test]
+    fn flags_and_defaults() {
+        let a = Args::parse(["x", "--verbose"]).unwrap();
+        assert!(a.has_flag("verbose"));
+        assert!(!a.has_flag("quiet"));
+        assert_eq!(a.get_f32("lr", 0.5).unwrap(), 0.5);
+    }
+
+    #[test]
+    fn typed_errors() {
+        let a = Args::parse(["x", "--lr", "abc"]).unwrap();
+        assert!(a.get_f32("lr", 0.0).is_err());
+    }
+
+    #[test]
+    fn unknown_rejected() {
+        let a = Args::parse(["x", "--good", "1", "--bad", "2"]).unwrap();
+        let _ = a.get("good");
+        assert!(a.reject_unknown().is_err());
+        let _ = a.get("bad");
+        assert!(a.reject_unknown().is_ok());
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = Args::parse(["--k", "v"]).unwrap();
+        assert_eq!(a.subcommand, None);
+        assert_eq!(a.get("k"), Some("v"));
+    }
+}

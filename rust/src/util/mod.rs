@@ -1,0 +1,4 @@
+//! Shared utilities: minimal JSON, deterministic RNG, argv parsing.
+pub mod args;
+pub mod json;
+pub mod rng;

@@ -1,0 +1,61 @@
+//! Cross-layer parity: the Rust design models must match the jnp models
+//! that were baked into the HLO artifacts, via the golden vectors emitted
+//! by `python/compile/aot.py` (`make artifacts`).
+
+use std::path::Path;
+
+use gandse::model;
+use gandse::util::json::Json;
+
+fn artifacts() -> &'static Path {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts").leak()
+}
+
+trait Leak {
+    fn leak(self) -> &'static Path;
+}
+impl Leak for std::path::PathBuf {
+    fn leak(self) -> &'static Path {
+        Box::leak(self.into_boxed_path())
+    }
+}
+
+fn check_model(name: &str) {
+    let path = artifacts().join(format!("golden_{name}.json"));
+    let Ok(text) = std::fs::read_to_string(&path) else {
+        eprintln!("skipping golden parity for {name}: run `make artifacts`");
+        return;
+    };
+    let v = Json::parse(&text).unwrap();
+    let nets = v.get("net").unwrap().as_arr().unwrap();
+    let cfgs = v.get("cfg").unwrap().as_arr().unwrap();
+    let lats = v.get("latency").unwrap().as_f32_vec().unwrap();
+    let pows = v.get("power").unwrap().as_f32_vec().unwrap();
+    assert!(!nets.is_empty());
+    for i in 0..nets.len() {
+        let net = nets[i].as_f32_vec().unwrap();
+        let cfg = cfgs[i].as_f32_vec().unwrap();
+        let (l, p) = model::eval(name, &net, &cfg);
+        let rel = |a: f32, b: f32| (a - b).abs() / b.abs().max(1e-30);
+        assert!(
+            rel(l, lats[i]) < 1e-5,
+            "{name} sample {i}: latency rust={l} python={}",
+            lats[i]
+        );
+        assert!(
+            rel(p, pows[i]) < 1e-5,
+            "{name} sample {i}: power rust={p} python={}",
+            pows[i]
+        );
+    }
+}
+
+#[test]
+fn im2col_matches_python_golden() {
+    check_model("im2col");
+}
+
+#[test]
+fn dnnweaver_matches_python_golden() {
+    check_model("dnnweaver");
+}

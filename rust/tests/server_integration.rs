@@ -1,0 +1,91 @@
+//! End-to-end DSE server test: real TCP sockets, concurrent clients,
+//! dynamic batching over the PJRT inference path.
+//! Requires `make artifacts` (skips gracefully otherwise).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use gandse::dataset;
+use gandse::explorer::Explorer;
+use gandse::gan::GanState;
+use gandse::runtime::Runtime;
+use gandse::server;
+use gandse::space::Meta;
+use gandse::util::json::Json;
+
+fn artifact_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[test]
+fn server_answers_concurrent_clients_and_batches() {
+    if !artifact_dir().join("meta.json").exists() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let meta: &'static Meta =
+        Box::leak(Box::new(Meta::load(&artifact_dir()).unwrap()));
+    let rt: &'static Runtime =
+        Box::leak(Box::new(Runtime::new(&artifact_dir()).unwrap()));
+    let model = "dnnweaver";
+    let mm = meta.model(model).unwrap();
+    let ds = dataset::generate(&mm.spec, 128, 0, 42);
+    let st = GanState::init(mm, model, 3);
+    let ex = Explorer::new(rt, meta, model, st.g, ds.stats.to_vec()).unwrap();
+    let handle = server::serve(
+        "127.0.0.1:0",
+        ex,
+        meta.infer_batch,
+        Duration::from_millis(3),
+    )
+    .unwrap();
+    let addr = handle.addr;
+
+    let mut clients = Vec::new();
+    for c in 0..4 {
+        clients.push(std::thread::spawn(move || {
+            let stream = TcpStream::connect(addr).unwrap();
+            let mut w = stream.try_clone().unwrap();
+            let mut r = BufReader::new(stream);
+            let mut line = String::new();
+            for i in 0..5 {
+                let req = format!(
+                    r#"{{"net":[32,32,32,32,3,3],"lo":{},"po":2.0{}}}"#,
+                    0.001 * (i + 1) as f64 * (c + 1) as f64,
+                    if i == 0 { r#","rtl":true"# } else { "" }
+                );
+                w.write_all(req.as_bytes()).unwrap();
+                w.write_all(b"\n").unwrap();
+                line.clear();
+                r.read_line(&mut line).unwrap();
+                let v = Json::parse(line.trim()).unwrap();
+                assert_eq!(
+                    v.get("ok").and_then(Json::as_bool),
+                    Some(true),
+                    "response: {line}"
+                );
+                assert!(v.get("cfg").unwrap().get("PEN").is_some());
+                assert!(v.get("latency").unwrap().as_f64().unwrap() > 0.0);
+                if i == 0 {
+                    let rtl = v.get("rtl").unwrap().as_str().unwrap();
+                    assert!(rtl.contains("module gandse_acc"));
+                }
+            }
+            // malformed request gets an error, connection stays usable
+            w.write_all(b"garbage\n").unwrap();
+            line.clear();
+            r.read_line(&mut line).unwrap();
+            let v = Json::parse(line.trim()).unwrap();
+            assert_eq!(v.get("ok").and_then(Json::as_bool), Some(false));
+        }));
+    }
+    for c in clients {
+        c.join().unwrap();
+    }
+    let (batches, items) = handle.stats();
+    assert_eq!(items, 20);
+    assert!(batches <= 20, "some coalescing expected, got {batches}");
+    handle.shutdown();
+}
