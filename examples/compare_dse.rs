@@ -14,6 +14,7 @@ use gandse::dataset;
 use gandse::gan::TrainConfig;
 use gandse::harness::{self, tasks_from_dataset};
 use gandse::runtime::Runtime;
+use gandse::select::SelectEngine;
 use gandse::space::Meta;
 
 fn main() -> Result<()> {
@@ -45,7 +46,15 @@ fn main() -> Result<()> {
     eprintln!("running Large MLP...");
     let mlp = TrainConfig { mlp_mode: true, epochs, ..Default::default() };
     results.push(harness::run_gan_method(
-        &rt, &meta, &model, &ds, &tasks, &mlp, "Large MLP", 21,
+        &rt,
+        &meta,
+        &model,
+        &ds,
+        &tasks,
+        &mlp,
+        "Large MLP",
+        21,
+        SelectEngine::default(),
     )?);
     for w in [0.0f32, 0.5, 1.0] {
         eprintln!("running GAN w_critic={w}...");
@@ -59,6 +68,7 @@ fn main() -> Result<()> {
             &cfg,
             &format!("GAN w={w}"),
             22,
+            SelectEngine::default(),
         )?);
     }
 

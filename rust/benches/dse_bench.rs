@@ -4,7 +4,10 @@
 //! offline crate cache): warmup + N timed iterations, reporting
 //! mean / min / p50.
 //!
-//! Requires `make artifacts`.
+//! The selection-throughput section needs no artifacts and always runs;
+//! it writes machine-readable `BENCH_select.json` (candidates/sec at 1 vs
+//! N threads — the perf trajectory for the parallel selection engine).
+//! The PJRT sections require `make artifacts` and are skipped otherwise.
 
 use std::path::Path;
 use std::time::Instant;
@@ -13,9 +16,10 @@ use gandse::baselines::{sa_search, SaConfig};
 use gandse::dataset;
 use gandse::explorer::{Candidates, DseRequest, Explorer, Selector};
 use gandse::gan::{GanState, TrainConfig, Trainer};
-use gandse::model;
 use gandse::runtime::Runtime;
-use gandse::space::Meta;
+use gandse::select::SelectEngine;
+use gandse::space::{builtin_spec, Meta};
+use gandse::util::json::Json;
 use gandse::util::rng::Rng;
 
 struct Bench {
@@ -63,15 +67,105 @@ impl Bench {
     }
 }
 
+/// Selection-engine throughput: scan the same capped candidate space at
+/// several thread counts, confirm bit-identical outcomes, and record
+/// candidates/sec.  Artifact-free (builtin spec + synthetic G output).
+fn bench_selection_throughput(b: &mut Bench) -> anyhow::Result<()> {
+    println!("== selection engine throughput (no artifacts needed) ==");
+    let spec = builtin_spec("im2col")?;
+    // Three hot choices per group = 3^12 = 531441 candidates; cap at 250k
+    // so one scan stays sub-second even single-threaded.
+    let mut probs = vec![0.01f32; spec.onehot_dim];
+    let offs = spec.group_offsets();
+    for (g, grp) in spec.groups.iter().enumerate() {
+        for c in [0usize, 2, 4] {
+            if c < grp.size() {
+                probs[offs[g] + c] = 0.33;
+            }
+        }
+    }
+    let cands = Candidates::from_probs(&spec, &probs, 0.2);
+    let cap = 250_000usize;
+    let net = [64.0f32, 64.0, 32.0, 32.0, 3.0, 3.0];
+    let (lo, po) = (1e-4f32, 2.0f32);
+    let kind = spec.kind;
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let mut thread_counts = vec![1usize, 2, 4, cores];
+    thread_counts.sort_unstable();
+    thread_counts.dedup();
+
+    let mut baseline: Option<(f64, gandse::select::SelectOutcome)> = None;
+    let mut rows: Vec<Json> = Vec::new();
+    let mut best_cps = 0f64;
+    for &threads in &thread_counts {
+        let engine =
+            SelectEngine { threads, cap, ..SelectEngine::default() };
+        let mut out = None;
+        b.run(
+            &format!("select_engine/im2col cap{cap} threads={threads}"),
+            5,
+            cap,
+            || {
+                let r = engine
+                    .run(&spec, &cands, lo, po, |raw| kind.eval(&net, raw))
+                    .expect("non-empty candidates");
+                out = Some(r);
+            },
+        );
+        let out = out.expect("bench ran at least once");
+        let secs = b.rows.last().expect("bench recorded a row").1; // mean
+        let n = out.n_enumerated;
+        let cps = n as f64 / secs;
+        best_cps = best_cps.max(cps);
+        if baseline.is_none() {
+            baseline = Some((cps, out.clone()));
+        } else {
+            // parity: every thread count returns the same winner
+            let ref_out = &baseline.as_ref().unwrap().1;
+            assert_eq!(&out, ref_out, "threads={threads} diverged");
+        }
+        rows.push(Json::obj(vec![
+            ("threads", Json::Num(threads as f64)),
+            ("secs", Json::Num(secs)),
+            ("candidates", Json::Num(n as f64)),
+            ("cands_per_sec", Json::Num(cps)),
+        ]));
+    }
+    let (cps_1, _) = baseline.expect("at least one thread count");
+    let doc = Json::obj(vec![
+        ("bench", Json::str("select_throughput")),
+        ("model", Json::str("im2col")),
+        ("cap", Json::Num(cap as f64)),
+        ("candidate_space", Json::Num(cands.count())),
+        ("available_parallelism", Json::Num(cores as f64)),
+        ("rows", Json::Arr(rows)),
+        ("speedup_best_vs_1thread", Json::Num(best_cps / cps_1)),
+    ]);
+    std::fs::write("BENCH_select.json", format!("{doc}\n"))?;
+    println!(
+        "wrote BENCH_select.json (best speedup {:.2}x over 1 thread on \
+         {cores} cores)\n",
+        best_cps / cps_1
+    );
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
+    let mut b = Bench::new();
+    bench_selection_throughput(&mut b)?;
+
     let dir = Path::new("artifacts");
     if !dir.join("meta.json").exists() {
-        eprintln!("run `make artifacts` first");
-        std::process::exit(1);
+        eprintln!(
+            "artifacts/ not found — skipping PJRT benches \
+             (run `make artifacts` and rebuild with --features pjrt)"
+        );
+        return Ok(());
     }
     let meta = Meta::load(dir)?;
     let rt = Runtime::new(dir)?;
-    let mut b = Bench::new();
     println!("== gandse benchmarks (CPU PJRT, batch {}) ==",
              meta.infer_batch);
 
@@ -93,6 +187,7 @@ fn main() -> anyhow::Result<()> {
         let cfgs: Vec<Vec<f32>> = (0..1000)
             .map(|_| spec.raw_values(&spec.sample_config(&mut rng)))
             .collect();
+        let kind = spec.kind;
         b.run(
             &format!("design_model_eval_rust/{model_name} x1000"),
             50,
@@ -100,7 +195,7 @@ fn main() -> anyhow::Result<()> {
             || {
                 let mut acc = 0f32;
                 for (n, c) in nets.iter().zip(&cfgs) {
-                    let (l, p) = model::eval(model_name, n, c);
+                    let (l, p) = kind.eval(n, c);
                     acc += l + p;
                 }
                 std::hint::black_box(acc);

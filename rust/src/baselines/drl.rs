@@ -8,7 +8,6 @@
 //! [`super::net`].
 
 use crate::explorer::DseRequest;
-use crate::model;
 use crate::space::{SpaceSpec, N_NET};
 use crate::util::rng::Rng;
 
@@ -123,7 +122,7 @@ impl DrlAgent {
             {
                 *r = g.choices[ci];
             }
-            let (mut l, mut p) = model::eval(&spec.model, &req.net, &raw);
+            let (mut l, mut p) = spec.kind.eval(&req.net, &raw);
             let mut prev_viol = violation(l, p, req.lo, req.po);
             for _ in 0..self.cfg.steps_per_episode {
                 self.encode_state(spec, &req, &idx, &mut state);
@@ -146,7 +145,7 @@ impl DrlAgent {
                 {
                     *r = g.choices[ci];
                 }
-                let e = model::eval(&spec.model, &req.net, &raw);
+                let e = spec.kind.eval(&req.net, &raw);
                 l = e.0;
                 p = e.1;
                 let viol = violation(l, p, req.lo, req.po);
@@ -201,7 +200,7 @@ impl DrlAgent {
             for ((r, g), &ci) in raw.iter_mut().zip(&spec.groups).zip(idx) {
                 *r = g.choices[ci];
             }
-            model::eval(&spec.model, &req.net, raw)
+            spec.kind.eval(&req.net, raw)
         };
         let (mut best_l, mut best_p) = eval_idx(&idx, &mut raw);
         let mut best_idx = idx.clone();

@@ -6,7 +6,6 @@
 //! to 3e-8 of the initial temperature (the paper's stopping rule).
 
 use crate::explorer::DseRequest;
-use crate::model;
 use crate::space::SpaceSpec;
 use crate::util::rng::Rng;
 
@@ -54,7 +53,7 @@ pub fn sa_search(
 ) -> SaResult {
     let mut cur = spec.sample_config(rng);
     let raw = spec.raw_values(&cur);
-    let (mut cur_l, mut cur_p) = model::eval(&spec.model, &req.net, &raw);
+    let (mut cur_l, mut cur_p) = spec.kind.eval(&req.net, &raw);
     let mut cur_cost = cost(cur_l, cur_p, req.lo, req.po);
     let mut best = cur.clone();
     let (mut best_l, mut best_p) = (cur_l, cur_p);
@@ -79,7 +78,7 @@ pub fn sa_search(
             {
                 *r = grp.choices[ci];
             }
-            let (l, p) = model::eval(&spec.model, &req.net, &raw_buf);
+            let (l, p) = spec.kind.eval(&req.net, &raw_buf);
             evals += 1;
             let c = cost(l, p, req.lo, req.po);
             let accept = c <= cur_cost
@@ -155,7 +154,7 @@ mod tests {
         }
         // reported objectives match re-evaluation
         let raw = spec.raw_values(&r.cfg_idx);
-        let (l, p) = model::eval("im2col", &req(0.01, 2.0).net, &raw);
+        let (l, p) = spec.kind.eval(&req(0.01, 2.0).net, &raw);
         assert_eq!((l, p), (r.latency, r.power));
     }
 

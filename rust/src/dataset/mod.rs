@@ -10,7 +10,6 @@
 use std::io::{Read, Write};
 use std::path::Path;
 
-use crate::model;
 use crate::space::{SpaceSpec, N_NET, N_OBJ};
 use crate::util::rng::Rng;
 
@@ -63,7 +62,10 @@ pub enum DatasetError {
 }
 
 /// Generate a labeled dataset by even sampling (the Dataset Generator box
-/// of Figure 4).
+/// of Figure 4).  Sampling order matches the seed exactly (same RNG
+/// stream); labeling goes through the evaluation core's batched
+/// [`crate::model::ModelKind::eval_batch`], which is bit-identical to
+/// per-sample scalar evaluation.
 pub fn generate(
     spec: &SpaceSpec,
     n_train: usize,
@@ -71,21 +73,32 @@ pub fn generate(
     seed: u64,
 ) -> Dataset {
     let mut rng = Rng::new(seed);
+    let n_groups = spec.groups.len();
+    let mut objs: Vec<(f32, f32)> = Vec::new();
     let mut make = |n: usize| -> Vec<Sample> {
-        (0..n)
-            .map(|_| {
-                let net = spec.sample_net(&mut rng);
-                let idx = spec.sample_config(&mut rng);
-                let raw = spec.raw_values(&idx);
-                let (latency, power) = model::eval(&spec.model, &net, &raw);
-                Sample {
-                    net,
-                    cfg_idx: idx.iter().map(|&i| i as u16).collect(),
-                    latency,
-                    power,
-                }
-            })
-            .collect()
+        let mut nets = Vec::with_capacity(n * N_NET);
+        let mut cfgs = Vec::with_capacity(n * n_groups);
+        let mut samples: Vec<Sample> = Vec::with_capacity(n);
+        for _ in 0..n {
+            let net = spec.sample_net(&mut rng);
+            let idx = spec.sample_config(&mut rng);
+            nets.extend_from_slice(&net);
+            for (g, &i) in spec.groups.iter().zip(&idx) {
+                cfgs.push(g.choices[i]);
+            }
+            samples.push(Sample {
+                net,
+                cfg_idx: idx.iter().map(|&i| i as u16).collect(),
+                latency: 0.0,
+                power: 0.0,
+            });
+        }
+        spec.kind.eval_batch(&nets, &cfgs, &mut objs);
+        for (s, &(latency, power)) in samples.iter_mut().zip(&objs) {
+            s.latency = latency;
+            s.power = power;
+        }
+        samples
     };
     let train = make(n_train);
     let test = make(n_test);
@@ -310,7 +323,7 @@ mod tests {
             let idx: Vec<usize> =
                 s.cfg_idx.iter().map(|&x| x as usize).collect();
             let raw = spec.raw_values(&idx);
-            let (l, p) = crate::model::eval("im2col", &s.net, &raw);
+            let (l, p) = spec.kind.eval(&s.net, &raw);
             assert_eq!(l, s.latency);
             assert_eq!(p, s.power);
         }

@@ -6,21 +6,27 @@
 //! per-group choice probabilities through the AOT `g_infer` artifact, every
 //! choice whose probability exceeds the **probability threshold** (Section
 //! 6.1, default 0.2) is kept, and the candidate configuration sets are the
-//! cartesian product of kept choices.  The selector scans them with the
-//! analytical design model and applies the paper's 3-scenario update rule.
+//! cartesian product of kept choices.  Candidate evaluation + selection
+//! run on the shared [`crate::select::SelectEngine`] — sharded across
+//! threads with bit-exact Algorithm-2 semantics — against the typed
+//! [`crate::model::ModelKind`] evaluation core.
 
 use anyhow::{bail, Result};
 
-use crate::model;
 use crate::runtime::{lit_f32, to_f32_vec, Runtime};
+use crate::select::SelectEngine;
 use crate::space::{Meta, SpaceSpec, N_NET, N_OBJ};
 use crate::util::rng::Rng;
 
+// Selection machinery lives in `crate::select`; re-exported here because
+// the explorer is where most callers first meet it.
+pub use crate::select::DEFAULT_CAP as MAX_ENUMERATED;
+pub use crate::select::{
+    CandidateCursor, CandidateIter, Candidates, SelectOutcome, Selector,
+};
+
 /// Default probability threshold (Section 6.1's example value).
 pub const DEFAULT_THRESHOLD: f32 = 0.2;
-/// Safety cap on enumerated candidates per task (the true candidate count
-/// is still reported for Table 5).
-pub const MAX_ENUMERATED: usize = 100_000;
 
 /// One DSE task.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -50,193 +56,7 @@ pub struct DseResult {
     pub satisfied: bool,
 }
 
-/// The per-group choices whose probability exceeded the threshold.
-#[derive(Debug, Clone)]
-pub struct Candidates {
-    pub kept: Vec<Vec<usize>>,
-}
-
-impl Candidates {
-    /// Extract from one row of G probabilities.  Guarantees at least one
-    /// choice per group (argmax fallback when nothing passes threshold).
-    pub fn from_probs(
-        spec: &SpaceSpec,
-        probs: &[f32],
-        threshold: f32,
-    ) -> Candidates {
-        debug_assert_eq!(probs.len(), spec.onehot_dim);
-        let mut kept = Vec::with_capacity(spec.groups.len());
-        let mut off = 0;
-        for g in &spec.groups {
-            let slice = &probs[off..off + g.size()];
-            let mut ks: Vec<usize> = (0..g.size())
-                .filter(|&i| slice[i] > threshold)
-                .collect();
-            if ks.is_empty() {
-                let mut best = 0;
-                for (i, &p) in slice.iter().enumerate() {
-                    if p > slice[best] {
-                        best = i;
-                    }
-                }
-                ks.push(best);
-            }
-            kept.push(ks);
-            off += g.size();
-        }
-        Candidates { kept }
-    }
-
-    /// Total number of candidate configuration sets (cartesian product).
-    pub fn count(&self) -> f64 {
-        self.kept.iter().map(|k| k.len() as f64).product()
-    }
-
-    /// Enumerate candidate index-vectors in mixed-radix order, capped.
-    pub fn enumerate(&self, cap: usize) -> CandidateIter<'_> {
-        CandidateIter {
-            kept: &self.kept,
-            counter: vec![0; self.kept.len()],
-            done: self.kept.is_empty(),
-            emitted: 0,
-            cap,
-        }
-    }
-
-    /// Allocation-free enumeration for the selection hot loop: `f` is
-    /// called with a reused index buffer for up to `cap` candidates.
-    pub fn for_each_capped(&self, cap: usize, mut f: impl FnMut(&[usize])) {
-        if self.kept.is_empty() {
-            return;
-        }
-        let n = self.kept.len();
-        let mut counter = vec![0usize; n];
-        let mut idx: Vec<usize> =
-            self.kept.iter().map(|ks| ks[0]).collect();
-        let mut emitted = 0usize;
-        loop {
-            f(&idx);
-            emitted += 1;
-            if emitted >= cap {
-                return;
-            }
-            // increment mixed-radix counter, updating idx in place
-            let mut i = n;
-            loop {
-                if i == 0 {
-                    return; // wrapped: enumeration complete
-                }
-                i -= 1;
-                counter[i] += 1;
-                if counter[i] < self.kept[i].len() {
-                    idx[i] = self.kept[i][counter[i]];
-                    break;
-                }
-                counter[i] = 0;
-                idx[i] = self.kept[i][0];
-            }
-        }
-    }
-}
-
-/// Lazy mixed-radix enumeration of the cartesian product — the selector
-/// consumes candidates without materializing the full set.
-pub struct CandidateIter<'a> {
-    kept: &'a [Vec<usize>],
-    counter: Vec<usize>,
-    done: bool,
-    emitted: usize,
-    cap: usize,
-}
-
-impl<'a> Iterator for CandidateIter<'a> {
-    type Item = Vec<usize>;
-
-    fn next(&mut self) -> Option<Vec<usize>> {
-        if self.done || self.emitted >= self.cap {
-            return None;
-        }
-        let item: Vec<usize> = self
-            .counter
-            .iter()
-            .zip(self.kept)
-            .map(|(&c, ks)| ks[c])
-            .collect();
-        self.emitted += 1;
-        // increment mixed-radix counter
-        let mut i = self.kept.len();
-        loop {
-            if i == 0 {
-                self.done = true;
-                break;
-            }
-            i -= 1;
-            self.counter[i] += 1;
-            if self.counter[i] < self.kept[i].len() {
-                break;
-            }
-            self.counter[i] = 0;
-        }
-        Some(item)
-    }
-}
-
-/// Design Selector: Algorithm 2, verbatim.
-///
-/// Scans candidate configurations, tracking the best (L_opt, P_opt) under
-/// the paper's three update scenarios, and returns the chosen candidate's
-/// index in iteration order (plus its objectives).
-pub struct Selector {
-    pub lo: f32,
-    pub po: f32,
-    l_opt: f32,
-    p_opt: f32,
-    best: Option<usize>,
-}
-
-impl Selector {
-    pub fn new(lo: f32, po: f32) -> Selector {
-        // Lines 1-2: L_opt <- 0, P_opt <- 0 (sentinel for "never updated").
-        Selector { lo, po, l_opt: 0.0, p_opt: 0.0, best: None }
-    }
-
-    /// Lines 4-30 for one candidate; `i` is the candidate's ordinal.
-    pub fn offer(&mut self, i: usize, l_g: f32, p_g: f32) {
-        let (lo, po) = (self.lo, self.po);
-        let mut update = false; // Line 6
-        if self.l_opt == 0.0 && self.p_opt == 0.0 {
-            update = true; // Lines 7-8: first candidate initializes
-        } else if (self.l_opt > lo && self.p_opt > po)
-            || (self.l_opt < lo && self.p_opt < po)
-        {
-            // Scenario 1 (Line 10): both worse or both better than the
-            // user's objectives — take strict improvements on both.
-            if l_g < self.l_opt && p_g < self.p_opt {
-                update = true; // Lines 11-13
-            }
-        } else if self.l_opt > lo && self.p_opt < po {
-            // Scenario 2 (Lines 15-18): latency unsatisfied, power ok —
-            // chase latency while power stays within the objective.
-            if l_g < self.l_opt && p_g < po {
-                update = true;
-            }
-        } else if p_g < self.p_opt && self.l_opt < lo && l_g < lo {
-            // Scenario 3 (Lines 20-22), mirrored.
-            update = true;
-        }
-        if update {
-            self.l_opt = l_g;
-            self.p_opt = p_g;
-            self.best = Some(i);
-        }
-    }
-
-    pub fn result(&self) -> Option<(usize, f32, f32)> {
-        self.best.map(|i| (i, self.l_opt, self.p_opt))
-    }
-}
-
-/// The Design Explorer: batched G inference + selection.
+/// The Design Explorer: batched G inference + engine-backed selection.
 pub struct Explorer<'a> {
     rt: &'a Runtime,
     meta: &'a Meta,
@@ -245,6 +65,9 @@ pub struct Explorer<'a> {
     g_params: Vec<f32>,
     stats: Vec<f32>,
     pub threshold: f32,
+    /// Selection engine shared by every request this explorer serves.
+    /// Defaults to all-cores; results are identical at any thread count.
+    pub engine: SelectEngine,
     noise_rng: Rng,
 }
 
@@ -276,6 +99,7 @@ impl<'a> Explorer<'a> {
             g_params,
             stats,
             threshold: DEFAULT_THRESHOLD,
+            engine: SelectEngine::default(),
             noise_rng: Rng::new(0x5EED),
         })
     }
@@ -343,34 +167,21 @@ impl<'a> Explorer<'a> {
     ) -> DseResult {
         let spec = self.spec;
         let cands = Candidates::from_probs(spec, probs, self.threshold);
-        let mut sel = Selector::new(req.lo, req.po);
-        // Hot loop (§Perf): allocation-free enumeration; only the current
-        // best candidate's indices are kept (copied on the rare update).
-        let mut raw = vec![0f32; spec.groups.len()];
-        let mut kept_best: Vec<usize> = vec![0; spec.groups.len()];
-        let mut i = 0usize;
-        cands.for_each_capped(MAX_ENUMERATED, |idx| {
-            for ((r, g), &ci) in raw.iter_mut().zip(&spec.groups).zip(idx) {
-                *r = g.choices[ci];
-            }
-            let (l, p) = model::eval(&spec.model, &req.net, &raw);
-            let before = sel.result().map(|(b, _, _)| b);
-            sel.offer(i, l, p);
-            if sel.result().map(|(b, _, _)| b) != before {
-                kept_best.copy_from_slice(idx);
-            }
-            i += 1;
-        });
-        let (_, l_opt, p_opt) =
-            sel.result().expect("at least one candidate is guaranteed");
-        let cfg_raw = spec.raw_values(&kept_best);
+        let kind = spec.kind;
+        let out = self
+            .engine
+            .run(spec, &cands, req.lo, req.po, |raw| {
+                kind.eval(&req.net, raw)
+            })
+            .expect("at least one candidate is guaranteed");
+        let cfg_raw = spec.raw_values(&out.cfg_idx);
         DseResult {
-            cfg_idx: kept_best,
+            cfg_idx: out.cfg_idx,
             cfg_raw,
-            latency: l_opt,
-            power: p_opt,
+            latency: out.latency,
+            power: out.power,
             n_candidates: cands.count(),
-            satisfied: l_opt <= req.lo && p_opt <= req.po,
+            satisfied: out.latency <= req.lo && out.power <= req.po,
         }
     }
 
@@ -415,160 +226,29 @@ impl<'a> Explorer<'a> {
         }
         union.iter_mut().for_each(|u| u.sort_unstable());
         let cands = Candidates { kept: union };
-        // Select on network-level objectives.
-        let mut sel = Selector::new(lo, po);
-        let mut raw = vec![0f32; spec.groups.len()];
-        let mut kept_best: Vec<usize> = vec![0; spec.groups.len()];
-        let mut i = 0usize;
-        cands.for_each_capped(MAX_ENUMERATED, |idx| {
-            for ((r, g), &ci) in raw.iter_mut().zip(&spec.groups).zip(idx) {
-                *r = g.choices[ci];
-            }
-            let mut total_l = 0f32;
-            let mut max_p = 0f32;
-            for net in layers {
-                let (l, p) = model::eval(&spec.model, net, &raw);
-                total_l += l;
-                max_p = max_p.max(p);
-            }
-            let before = sel.result().map(|(b, _, _)| b);
-            sel.offer(i, total_l, max_p);
-            if sel.result().map(|(b, _, _)| b) != before {
-                kept_best.copy_from_slice(idx);
-            }
-            i += 1;
-        });
-        let (_, l_opt, p_opt) = sel.result().expect("non-empty candidates");
-        let cfg_raw = spec.raw_values(&kept_best);
+        // Select on network-level objectives: total latency, peak power.
+        let kind = spec.kind;
+        let out = self
+            .engine
+            .run(spec, &cands, lo, po, |raw| {
+                let mut total_l = 0f32;
+                let mut max_p = 0f32;
+                for net in layers {
+                    let (l, p) = kind.eval(net, raw);
+                    total_l += l;
+                    max_p = max_p.max(p);
+                }
+                (total_l, max_p)
+            })
+            .expect("non-empty candidates");
+        let cfg_raw = spec.raw_values(&out.cfg_idx);
         Ok(DseResult {
-            cfg_idx: kept_best,
+            cfg_idx: out.cfg_idx,
             cfg_raw,
-            latency: l_opt,
-            power: p_opt,
+            latency: out.latency,
+            power: out.power,
             n_candidates: cands.count(),
-            satisfied: l_opt <= lo && p_opt <= po,
+            satisfied: out.latency <= lo && out.power <= po,
         })
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::space::builtin_spec;
-
-    fn probs_for(spec: &SpaceSpec, hot: &[(usize, &[usize])]) -> Vec<f32> {
-        // distribute mass over the requested hot choices, rest tiny
-        let mut p = vec![0.001f32; spec.onehot_dim];
-        let offs = spec.group_offsets();
-        for &(g, choices) in hot {
-            let share = 1.0 / choices.len() as f32;
-            for &c in choices {
-                p[offs[g] + c] = share;
-            }
-        }
-        p
-    }
-
-    #[test]
-    fn candidates_threshold_and_fallback() {
-        let spec = builtin_spec("dnnweaver").unwrap();
-        // group 0: two hot choices; others: nothing above threshold
-        let mut p = probs_for(&spec, &[(0, &[1, 3])]);
-        let offs = spec.group_offsets();
-        p[offs[1] + 2] = 0.009; // argmax fallback target for group 1
-        let c = Candidates::from_probs(&spec, &p, 0.2);
-        assert_eq!(c.kept[0], vec![1, 3]);
-        assert_eq!(c.kept[1], vec![2]); // fallback argmax
-        assert_eq!(c.count(), 2.0);
-    }
-
-    #[test]
-    fn candidate_count_is_product() {
-        let spec = builtin_spec("dnnweaver").unwrap();
-        let p = probs_for(&spec, &[(0, &[0, 1, 2]), (1, &[0, 1]), (2, &[4]),
-                                    (3, &[0, 1])]);
-        let c = Candidates::from_probs(&spec, &p, 0.2);
-        assert_eq!(c.count(), 12.0);
-        let v: Vec<_> = c.enumerate(usize::MAX).collect();
-        assert_eq!(v.len(), 12);
-        // paper's worked example: candidates are all combinations
-        assert!(v.contains(&vec![0, 0, 4, 0]));
-        assert!(v.contains(&vec![2, 1, 4, 1]));
-    }
-
-    #[test]
-    fn enumeration_respects_cap() {
-        let spec = builtin_spec("im2col").unwrap();
-        let hot: Vec<(usize, Vec<usize>)> =
-            (0..spec.groups.len()).map(|g| (g, vec![0, 1, 2])).collect();
-        let hot_ref: Vec<(usize, &[usize])> =
-            hot.iter().map(|(g, v)| (*g, v.as_slice())).collect();
-        let p = probs_for(&spec, &hot_ref);
-        let c = Candidates::from_probs(&spec, &p, 0.2);
-        assert!(c.count() > 500_000.0);
-        assert_eq!(c.enumerate(1000).count(), 1000);
-    }
-
-    #[test]
-    fn for_each_capped_matches_enumerate() {
-        let spec = builtin_spec("dnnweaver").unwrap();
-        let p = probs_for(&spec, &[(0, &[0, 2, 5]), (1, &[1, 3]), (2, &[0]),
-                                    (3, &[2, 4])]);
-        let c = Candidates::from_probs(&spec, &p, 0.2);
-        let via_iter: Vec<Vec<usize>> = c.enumerate(7).collect();
-        let mut via_fe: Vec<Vec<usize>> = Vec::new();
-        c.for_each_capped(7, |idx| via_fe.push(idx.to_vec()));
-        assert_eq!(via_iter, via_fe);
-        // uncapped full product too
-        let all_iter: Vec<Vec<usize>> = c.enumerate(usize::MAX).collect();
-        let mut all_fe: Vec<Vec<usize>> = Vec::new();
-        c.for_each_capped(usize::MAX, |idx| all_fe.push(idx.to_vec()));
-        assert_eq!(all_iter, all_fe);
-        assert_eq!(all_fe.len() as f64, c.count());
-    }
-
-    #[test]
-    fn selector_takes_first_then_improves() {
-        let mut s = Selector::new(10.0, 10.0);
-        s.offer(0, 20.0, 20.0); // initializes (Lines 7-8)
-        assert_eq!(s.result().unwrap().0, 0);
-        // both worse than objectives (scenario 1): strict improvement
-        s.offer(1, 15.0, 25.0); // power worse -> no update
-        assert_eq!(s.result().unwrap().0, 0);
-        s.offer(2, 15.0, 15.0); // both better -> update
-        assert_eq!(s.result().unwrap().0, 2);
-    }
-
-    #[test]
-    fn selector_scenario2_prioritizes_satisfaction() {
-        // L_opt worse than LO, P_opt satisfied: accept higher power while
-        // chasing latency, as long as power stays within PO.
-        let mut s = Selector::new(10.0, 10.0);
-        s.offer(0, 20.0, 5.0);
-        // latency improves, power worsens but still <= PO -> update
-        s.offer(1, 12.0, 9.0);
-        assert_eq!(s.result().unwrap().0, 1);
-        // power above PO -> rejected
-        s.offer(2, 11.0, 11.0);
-        assert_eq!(s.result().unwrap().0, 1);
-    }
-
-    #[test]
-    fn selector_scenario3_mirrored() {
-        let mut s = Selector::new(10.0, 10.0);
-        s.offer(0, 5.0, 20.0); // latency ok, power not
-        s.offer(1, 9.0, 15.0); // power improves, latency stays <= LO
-        assert_eq!(s.result().unwrap().0, 1);
-        s.offer(2, 11.0, 12.0); // latency would break LO -> rejected
-        assert_eq!(s.result().unwrap().0, 1);
-    }
-
-    #[test]
-    fn selector_both_satisfied_keeps_optimizing() {
-        let mut s = Selector::new(10.0, 10.0);
-        s.offer(0, 8.0, 8.0);
-        s.offer(1, 6.0, 7.0); // both better -> update (scenario 1, branch 2)
-        let (i, l, p) = s.result().unwrap();
-        assert_eq!((i, l, p), (1, 6.0, 7.0));
     }
 }

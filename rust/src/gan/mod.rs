@@ -185,9 +185,9 @@ pub struct Trainer<'a> {
     /// output array feeds straight back as the next step's input.  Only
     /// the mini-batch goes up and only 4 metrics come down per step.
     /// `state` is refreshed lazily via [`Trainer::sync_state`].
-    device: Option<xla::PjRtBuffer>,
+    device: Option<crate::runtime::Buffer>,
     /// Cached stats buffer (constant across a training run).
-    stats_buf: Option<xla::PjRtBuffer>,
+    stats_buf: Option<crate::runtime::Buffer>,
     dirty: bool,
 }
 
@@ -301,7 +301,7 @@ impl<'a> Trainer<'a> {
             self.rt.to_device(&batch.noise, &[b, noise_dim])?,
             self.rt.to_device(&knobs, &[4])?,
         ];
-        let inputs: Vec<&xla::PjRtBuffer> = vec![
+        let inputs: Vec<&crate::runtime::Buffer> = vec![
             self.device.as_ref().unwrap(),
             &batch_bufs[0],
             &batch_bufs[1],

@@ -25,6 +25,7 @@ use crate::explorer::{DseRequest, Explorer};
 use crate::gan::{GanState, TrainConfig, Trainer};
 use crate::metrics;
 use crate::runtime::Runtime;
+use crate::select::SelectEngine;
 use crate::space::Meta;
 use crate::util::rng::Rng;
 
@@ -110,6 +111,8 @@ pub fn tasks_from_dataset(ds: &Dataset) -> Vec<DseRequest> {
 // ---------------------------------------------------------------------------
 
 /// Train + evaluate the GAN (or, with `mlp_mode`, the Large-MLP baseline).
+/// Selection runs on the shared engine (`engine` — identical results at
+/// any thread count; only the Table-5 DSE-time column moves).
 #[allow(clippy::too_many_arguments)]
 pub fn run_gan_method(
     rt: &Runtime,
@@ -120,6 +123,7 @@ pub fn run_gan_method(
     train_cfg: &TrainConfig,
     label: &str,
     init_seed: u64,
+    engine: SelectEngine,
 ) -> Result<MethodResult> {
     let mm = meta.model(model)?;
     let state = GanState::init(mm, model, init_seed);
@@ -133,6 +137,7 @@ pub fn run_gan_method(
 
     let mut ex =
         Explorer::new(rt, meta, model, state.g.clone(), ds.stats.to_vec())?;
+    ex.engine = engine;
     let t1 = Instant::now();
     let results = ex.explore(tasks)?;
     let dse_time_s = t1.elapsed().as_secs_f64() / tasks.len().max(1) as f64;
@@ -364,6 +369,7 @@ pub fn fig89_csv(results: &[MethodResult]) -> String {
 /// Ablation (DESIGN.md §4): probability-threshold sweep for the GAN —
 /// satisfied count and candidate-set size vs threshold.  Reuses one
 /// trained generator; only the explorer threshold changes.
+#[allow(clippy::too_many_arguments)]
 pub fn ablate_threshold(
     rt: &Runtime,
     meta: &Meta,
@@ -372,6 +378,7 @@ pub fn ablate_threshold(
     tasks: &[DseRequest],
     g_params: Vec<f32>,
     thresholds: &[f32],
+    engine: SelectEngine,
 ) -> Result<String> {
     let mut out =
         String::from("threshold,n_satisfied,n_tasks,avg_candidates,dse_s\n");
@@ -380,6 +387,7 @@ pub fn ablate_threshold(
             Explorer::new(rt, meta, model, g_params.clone(),
                           ds.stats.to_vec())?;
         ex.threshold = thr;
+        ex.engine = engine;
         let t0 = Instant::now();
         let results = ex.explore(tasks)?;
         let dse = t0.elapsed().as_secs_f64() / tasks.len().max(1) as f64;

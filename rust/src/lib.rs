@@ -6,6 +6,11 @@
 //! (L3) owns everything at runtime — dataset generation, training loop,
 //! exploration, selection, baselines, RTL emission, serving, benchmarks.
 //!
+//! Every search method and the serving path evaluate candidates through
+//! one **evaluation core**: the typed [`model::ModelKind`] /
+//! [`model::DesignModel`] dispatch plus the sharded, bit-exact
+//! [`select::SelectEngine`].
+//!
 //! See DESIGN.md for the architecture and EXPERIMENTS.md for results.
 
 pub mod baselines;
@@ -18,6 +23,7 @@ pub mod model;
 pub mod parser;
 pub mod rtl;
 pub mod runtime;
+pub mod select;
 pub mod server;
 pub mod space;
 pub mod util;

@@ -21,6 +21,7 @@ use gandse::harness;
 use gandse::parser;
 use gandse::rtl;
 use gandse::runtime::Runtime;
+use gandse::select::SelectEngine;
 use gandse::space::{builtin_spec, Meta};
 use gandse::util::args::Args;
 
@@ -36,17 +37,20 @@ COMMANDS
             [--lr LR] [--mlp] [--ckpt out.ckpt] [--loss-csv out.csv]
   explore   --model M --ckpt c.ckpt (--net-file f | --lo L --po P
             --ic .. --oc .. --ow .. --oh .. --kw .. --kh ..)
-            [--rtl out.v] [--threshold T]
-  eval      --model M --ckpt c.ckpt [--test N] [--threshold T]
+            [--rtl out.v] [--threshold T] [--threads N]
+  eval      --model M --ckpt c.ckpt [--test N] [--threshold T] [--threads N]
             (held-out satisfaction / improvement-ratio / difficulty report)
   serve     --model M --ckpt c.ckpt [--addr 127.0.0.1:7878]
-            [--max-wait-ms 5]
+            [--max-wait-ms 5] [--threads N]
   bench     --exp <table5|fig5|fig67|fig89|fig1011|all> --model M
             [--train N] [--test N] [--epochs E] [--out-dir results/]
+            [--threads N]
   rtl       --model M --cfg v1,v2,... [--out file.v]
 
 COMMON
   --artifacts DIR   artifact directory (default: ./artifacts)
+  (--threads: selection-engine workers, 0 = all cores; results are
+   identical at any thread count — only wall-clock changes)
 ";
 
 fn main() {
@@ -188,6 +192,7 @@ fn cmd_explore(args: &Args) -> Result<()> {
     let mut ex =
         Explorer::new(&rt, &meta, &model, state.g, ds.stats.to_vec())?;
     ex.threshold = args.get_f32("threshold", 0.2)?;
+    ex.engine = SelectEngine::with_threads(args.get_usize("threads", 0)?);
 
     let lo = args.get_f32("lo", 0.0)?;
     let po = args.get_f32("po", 0.0)?;
@@ -274,6 +279,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let mut ex =
         Explorer::new(&rt, &meta, &model, state.g, ds.stats.to_vec())?;
     ex.threshold = args.get_f32("threshold", 0.2)?;
+    ex.engine = SelectEngine::with_threads(args.get_usize("threads", 0)?);
     args.reject_unknown()?;
 
     let t0 = std::time::Instant::now();
@@ -350,6 +356,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let model: &'static str = Box::leak(model.into_boxed_str());
     let mut ex = Explorer::new(rt, meta, model, state.g, ds.stats.to_vec())?;
     ex.threshold = args.get_f32("threshold", 0.2)?;
+    ex.engine = SelectEngine::with_threads(args.get_usize("threads", 0)?);
     let addr = args.get_or("addr", "127.0.0.1:7878");
     let max_wait = Duration::from_millis(args.get_u64("max-wait-ms", 5)?);
     let max_batch = args.get_usize("max-batch", meta.infer_batch)?;
@@ -379,6 +386,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         .split(',')
         .map(|s| s.parse().unwrap_or(0.5))
         .collect();
+    let engine = SelectEngine::with_threads(args.get_usize("threads", 0)?);
     args.reject_unknown()?;
 
     if exp == "ablate" {
@@ -397,6 +405,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
             &tasks,
             tr.state.g.clone(),
             &[0.05, 0.1, 0.2, 0.3, 0.4, 0.5],
+            engine,
         )?;
         print!("{csv}");
         std::fs::write(out_dir.join(format!("ablate_threshold_{model}.csv")),
@@ -420,7 +429,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let mlp_cfg =
         TrainConfig { mlp_mode: true, epochs, ..TrainConfig::default() };
     results.push(harness::run_gan_method(
-        &rt, &meta, &model, &ds, &tasks, &mlp_cfg, "Large MLP", 21,
+        &rt, &meta, &model, &ds, &tasks, &mlp_cfg, "Large MLP", 21, engine,
     )?);
     for &w in &wcritics {
         eprintln!("[bench] GAN w_critic={w} ({epochs} epochs)...");
@@ -435,6 +444,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
             &cfg,
             &format!("GAN w={w}"),
             22,
+            engine,
         )?);
     }
 

@@ -1,8 +1,14 @@
-//! Analytical design models — Rust twins of `python/compile/design_models.py`.
+//! Analytical design models — Rust twins of `python/compile/design_models.py`
+//! — and the typed evaluation core every consumer dispatches through.
 //!
 //! These run on the request path: the Design Selector (Algorithm 2) and all
 //! baseline DSE algorithms evaluate thousands of candidate configurations
 //! per task, so the models are plain scalar f32 code, allocation-free.
+//! Dispatch is by [`ModelKind`] (a `Copy` enum resolved once per spec, see
+//! [`crate::space::SpaceSpec::kind`]) rather than per-call string matching;
+//! the string entry point [`eval`] returns a typed [`ModelError`] instead
+//! of panicking, so malformed input at the server boundary degrades to an
+//! error response (DESIGN.md "Evaluation core").
 //!
 //! Every arithmetic operation mirrors the jnp implementation **in the same
 //! order** so f32 results match bit-for-bit; `cargo test` checks this
@@ -14,20 +20,185 @@ pub mod im2col;
 pub use dnnweaver::dnnweaver_model;
 pub use im2col::im2col_model;
 
+use crate::space::N_NET;
+
 /// 1 GHz target clock for both templates (matches design_models.CLOCK_HZ).
 pub const CLOCK_HZ: f32 = 1.0e9;
 
-/// Evaluate a design model by name on raw values.
+/// Typed evaluation-core errors (replaces the seed's `panic!` dispatch).
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum ModelError {
+    #[error("unknown design model {0:?} (expected \"im2col\" or \"dnnweaver\")")]
+    Unknown(String),
+    #[error("design model {model:?} expects {want} config values, got {got}")]
+    CfgLen { model: &'static str, want: usize, got: usize },
+}
+
+/// The built-in design models, as a typed dispatch tag.
+///
+/// `ModelKind` is `Copy` and resolved once (at spec construction / request
+/// parse time); the per-candidate hot loops then dispatch through a plain
+/// `match` the compiler can inline, instead of comparing strings.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ModelKind {
+    Im2col,
+    Dnnweaver,
+}
+
+impl ModelKind {
+    /// Every built-in model (handy for tests and benches).
+    pub const ALL: [ModelKind; 2] = [ModelKind::Im2col, ModelKind::Dnnweaver];
+
+    /// Resolve a model name to its kind.
+    pub fn from_name(name: &str) -> Result<ModelKind, ModelError> {
+        match name {
+            "im2col" => Ok(ModelKind::Im2col),
+            "dnnweaver" => Ok(ModelKind::Dnnweaver),
+            other => Err(ModelError::Unknown(other.to_string())),
+        }
+    }
+
+    /// Canonical name (artifact files, meta.json, the wire protocol).
+    pub const fn name(self) -> &'static str {
+        match self {
+            ModelKind::Im2col => "im2col",
+            ModelKind::Dnnweaver => "dnnweaver",
+        }
+    }
+
+    /// Number of raw configuration values the model consumes.
+    pub const fn cfg_len(self) -> usize {
+        match self {
+            ModelKind::Im2col => 12,
+            ModelKind::Dnnweaver => 4,
+        }
+    }
+
+    /// Evaluate one candidate: `net` is the 6 network parameters
+    /// (IC, OC, OW, OH, KW, KH), `cfg` the raw configuration values.
+    /// Returns `(latency_seconds, power_watts)`.
+    #[inline]
+    pub fn eval(self, net: &[f32], cfg: &[f32]) -> (f32, f32) {
+        match self {
+            ModelKind::Im2col => im2col_model(net, cfg),
+            ModelKind::Dnnweaver => dnnweaver_model(net, cfg),
+        }
+    }
+
+    /// Batched evaluation: `nets` is row-major `[B, 6]`, `cfgs` row-major
+    /// `[B, cfg_len]`; `out` is cleared and filled with one
+    /// `(latency, power)` pair per row.  Row i is evaluated with exactly
+    /// the same f32 operations as a scalar [`ModelKind::eval`] call, so
+    /// batch and scalar paths agree bit-for-bit.
+    pub fn eval_batch(
+        self,
+        nets: &[f32],
+        cfgs: &[f32],
+        out: &mut Vec<(f32, f32)>,
+    ) {
+        let c = self.cfg_len();
+        debug_assert_eq!(nets.len() % N_NET, 0);
+        debug_assert_eq!(cfgs.len() % c, 0);
+        debug_assert_eq!(nets.len() / N_NET, cfgs.len() / c);
+        out.clear();
+        out.reserve(nets.len() / N_NET);
+        for (net, cfg) in nets.chunks_exact(N_NET).zip(cfgs.chunks_exact(c)) {
+            out.push(self.eval(net, cfg));
+        }
+    }
+}
+
+impl std::fmt::Display for ModelKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for ModelKind {
+    type Err = ModelError;
+
+    fn from_str(s: &str) -> Result<ModelKind, ModelError> {
+        ModelKind::from_name(s)
+    }
+}
+
+/// The pluggable evaluation interface: anything that can map a (network,
+/// configuration) pair to `(latency, power)` objectives.  [`ModelKind`]
+/// implements it for the built-in analytical models; future backends
+/// (simulator-in-the-loop, learned cost models, the PJRT `design_eval`
+/// artifact) plug in here without touching the selection engine.
+pub trait DesignModel: Sync {
+    /// Canonical model name.
+    fn name(&self) -> &'static str;
+
+    /// Number of raw configuration values per candidate.
+    fn cfg_len(&self) -> usize;
+
+    /// Evaluate one candidate; returns `(latency_seconds, power_watts)`.
+    fn eval(&self, net: &[f32], cfg: &[f32]) -> (f32, f32);
+
+    /// Batched evaluation over row-major `[B, 6]` nets and `[B, cfg_len]`
+    /// configs; the default loops over [`DesignModel::eval`] row by row.
+    fn eval_batch(
+        &self,
+        nets: &[f32],
+        cfgs: &[f32],
+        out: &mut Vec<(f32, f32)>,
+    ) {
+        let c = self.cfg_len();
+        out.clear();
+        out.reserve(nets.len() / N_NET);
+        for (net, cfg) in nets.chunks_exact(N_NET).zip(cfgs.chunks_exact(c)) {
+            out.push(self.eval(net, cfg));
+        }
+    }
+}
+
+impl DesignModel for ModelKind {
+    fn name(&self) -> &'static str {
+        ModelKind::name(*self)
+    }
+
+    fn cfg_len(&self) -> usize {
+        ModelKind::cfg_len(*self)
+    }
+
+    #[inline]
+    fn eval(&self, net: &[f32], cfg: &[f32]) -> (f32, f32) {
+        ModelKind::eval(*self, net, cfg)
+    }
+
+    fn eval_batch(
+        &self,
+        nets: &[f32],
+        cfgs: &[f32],
+        out: &mut Vec<(f32, f32)>,
+    ) {
+        ModelKind::eval_batch(*self, nets, cfgs, out)
+    }
+}
+
+/// Evaluate a design model by name on raw values (boundary entry point —
+/// golden-vector tests, ad-hoc tools).  Hot paths should resolve a
+/// [`ModelKind`] once and call [`ModelKind::eval`] instead.
 ///
 /// `net`: the 6 network parameters (IC, OC, OW, OH, KW, KH).
 /// `cfg`: raw configuration values (12 for im2col, 4 for dnnweaver).
 /// Returns `(latency_seconds, power_watts)`.
-pub fn eval(model: &str, net: &[f32], cfg: &[f32]) -> (f32, f32) {
-    match model {
-        "im2col" => im2col_model(net, cfg),
-        "dnnweaver" => dnnweaver_model(net, cfg),
-        other => panic!("unknown design model {other:?}"),
+pub fn eval(
+    model: &str,
+    net: &[f32],
+    cfg: &[f32],
+) -> Result<(f32, f32), ModelError> {
+    let kind = ModelKind::from_name(model)?;
+    if cfg.len() != kind.cfg_len() {
+        return Err(ModelError::CfgLen {
+            model: kind.name(),
+            want: kind.cfg_len(),
+            got: cfg.len(),
+        });
     }
+    Ok(kind.eval(net, cfg))
 }
 
 #[cfg(test)]
@@ -39,17 +210,73 @@ mod tests {
         let net = [32.0, 32.0, 32.0, 32.0, 3.0, 3.0];
         let cfg12 = [512.0, 128.0, 128.0, 4096.0, 4096.0, 4096.0, 16.0,
                      16.0, 16.0, 16.0, 3.0, 3.0];
-        assert_eq!(eval("im2col", &net, &cfg12), im2col_model(&net, &cfg12));
+        assert_eq!(
+            eval("im2col", &net, &cfg12).unwrap(),
+            im2col_model(&net, &cfg12)
+        );
+        assert_eq!(
+            ModelKind::Im2col.eval(&net, &cfg12),
+            im2col_model(&net, &cfg12)
+        );
         let cfg4 = [32.0, 512.0, 512.0, 512.0];
         assert_eq!(
-            eval("dnnweaver", &net, &cfg4),
+            eval("dnnweaver", &net, &cfg4).unwrap(),
+            dnnweaver_model(&net, &cfg4)
+        );
+        assert_eq!(
+            ModelKind::Dnnweaver.eval(&net, &cfg4),
             dnnweaver_model(&net, &cfg4)
         );
     }
 
     #[test]
-    #[should_panic(expected = "unknown design model")]
-    fn unknown_model_panics() {
-        eval("nope", &[0.0; 6], &[0.0; 4]);
+    fn unknown_model_is_typed_error() {
+        let err = eval("nope", &[0.0; 6], &[0.0; 4]).unwrap_err();
+        assert_eq!(err, ModelError::Unknown("nope".to_string()));
+        assert!(format!("{err}").contains("unknown design model"));
+        assert!(ModelKind::from_name("nope").is_err());
+    }
+
+    #[test]
+    fn bad_cfg_len_is_typed_error() {
+        let err = eval("dnnweaver", &[1.0; 6], &[0.0; 3]).unwrap_err();
+        assert_eq!(
+            err,
+            ModelError::CfgLen { model: "dnnweaver", want: 4, got: 3 }
+        );
+    }
+
+    #[test]
+    fn kind_roundtrips_names() {
+        for kind in ModelKind::ALL {
+            assert_eq!(ModelKind::from_name(kind.name()).unwrap(), kind);
+            assert_eq!(kind.to_string(), kind.name());
+            assert_eq!(kind.name().parse::<ModelKind>().unwrap(), kind);
+        }
+    }
+
+    #[test]
+    fn eval_batch_matches_scalar() {
+        let net_a = [32.0, 32.0, 32.0, 32.0, 3.0, 3.0];
+        let net_b = [16.0, 64.0, 16.0, 16.0, 1.0, 1.0];
+        let cfg_a = [32.0, 512.0, 512.0, 512.0];
+        let cfg_b = [128.0, 2048.0, 128.0, 1024.0];
+        let mut nets = Vec::new();
+        nets.extend_from_slice(&net_a);
+        nets.extend_from_slice(&net_b);
+        let mut cfgs = Vec::new();
+        cfgs.extend_from_slice(&cfg_a);
+        cfgs.extend_from_slice(&cfg_b);
+        let mut out = vec![(0.0, 0.0)]; // stale contents must be cleared
+        ModelKind::Dnnweaver.eval_batch(&nets, &cfgs, &mut out);
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0], ModelKind::Dnnweaver.eval(&net_a, &cfg_a));
+        assert_eq!(out[1], ModelKind::Dnnweaver.eval(&net_b, &cfg_b));
+        // trait-object path agrees with the inherent path
+        let dm: &dyn DesignModel = &ModelKind::Dnnweaver;
+        assert_eq!(dm.eval(&net_a, &cfg_a), out[0]);
+        let mut out2 = Vec::new();
+        dm.eval_batch(&nets, &cfgs, &mut out2);
+        assert_eq!(out2, out);
     }
 }

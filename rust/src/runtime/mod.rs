@@ -1,164 +1,297 @@
 //! PJRT runtime: load AOT HLO-text artifacts and execute them.
 //!
-//! Wraps the `xla` crate (PJRT C API, CPU plugin):
-//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
-//! `XlaComputation::from_proto` → `client.compile` → `execute`.
+//! Two builds of the same public API (see DESIGN.md "Runtime gating"):
+//!
+//! * `--features pjrt` — wraps the vendored `xla` crate (PJRT C API, CPU
+//!   plugin): `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//!   `XlaComputation::from_proto` → `client.compile` → `execute`.
+//! * default — an API-compatible stub.  Everything that does not execute
+//!   HLO (literal packing/shape checks, artifact-dir bookkeeping) behaves
+//!   identically; loading or running an executable returns a typed error.
+//!   This keeps the pure-Rust layers — the evaluation core, selection
+//!   engine, baselines, dataset generation, server plumbing — buildable
+//!   and testable on machines without the offline `xla` cache.
 //!
 //! HLO **text** is the interchange format (not serialized protos): jax
 //! ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1 rejects;
-//! the text parser reassigns ids (see python/compile/aot.py and
-//! /opt/xla-example/load_hlo).
+//! the text parser reassigns ids (see python/compile/aot.py).
 //!
 //! All artifacts are lowered with `return_tuple=True`, so every execution
 //! returns one tuple literal which `run` decomposes.
 
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::sync::Mutex;
+#[cfg(feature = "pjrt")]
+mod imp {
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+    use std::sync::Mutex;
 
-use anyhow::{bail, Context, Result};
+    use anyhow::{bail, Context, Result};
 
-/// Shared PJRT client + executable cache (compilation is expensive; each
-/// artifact is compiled once per process).
-pub struct Runtime {
-    client: xla::PjRtClient,
-    artifact_dir: PathBuf,
-    cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
-}
+    /// Device buffer handle (real PJRT build).
+    pub type Buffer = xla::PjRtBuffer;
+    /// Host literal handle (real PJRT build).
+    pub type Literal = xla::Literal;
 
-/// One compiled artifact.
-pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-    pub name: String,
-}
-
-// SAFETY: the PJRT C API is thread-safe (clients, executables and buffers
-// may be used concurrently from multiple threads; the CPU plugin serializes
-// internally where needed).  The `xla` crate only omits these impls because
-// it stores raw pointers.  We never hand out the raw pointers and all
-// mutation of the cache map is behind a Mutex.
-unsafe impl Send for Executable {}
-unsafe impl Sync for Executable {}
-unsafe impl Send for Runtime {}
-unsafe impl Sync for Runtime {}
-
-impl Runtime {
-    /// Create a CPU PJRT client rooted at an artifact directory.
-    pub fn new(artifact_dir: &Path) -> Result<Runtime> {
-        let client =
-            xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime {
-            client,
-            artifact_dir: artifact_dir.to_path_buf(),
-            cache: Mutex::new(HashMap::new()),
-        })
+    /// Shared PJRT client + executable cache (compilation is expensive;
+    /// each artifact is compiled once per process).
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        artifact_dir: PathBuf,
+        cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    /// One compiled artifact.
+    pub struct Executable {
+        exe: xla::PjRtLoadedExecutable,
+        pub name: String,
     }
 
-    pub fn artifact_dir(&self) -> &Path {
-        &self.artifact_dir
-    }
+    // SAFETY: the PJRT C API is thread-safe (clients, executables and
+    // buffers may be used concurrently from multiple threads; the CPU
+    // plugin serializes internally where needed).  The `xla` crate only
+    // omits these impls because it stores raw pointers.  We never hand out
+    // the raw pointers and all mutation of the cache map is behind a Mutex.
+    unsafe impl Send for Executable {}
+    unsafe impl Sync for Executable {}
+    unsafe impl Send for Runtime {}
+    unsafe impl Sync for Runtime {}
 
-    /// Load + compile an HLO-text artifact by file name (cached).
-    pub fn load(&self, name: &str) -> Result<std::sync::Arc<Executable>> {
-        if let Some(e) = self.cache.lock().unwrap().get(name) {
-            return Ok(e.clone());
+    impl Runtime {
+        /// Create a CPU PJRT client rooted at an artifact directory.
+        pub fn new(artifact_dir: &Path) -> Result<Runtime> {
+            let client =
+                xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            Ok(Runtime {
+                client,
+                artifact_dir: artifact_dir.to_path_buf(),
+                cache: Mutex::new(HashMap::new()),
+            })
         }
-        let path = self.artifact_dir.join(name);
-        if !path.exists() {
-            bail!("artifact {path:?} not found — run `make artifacts` first");
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
         }
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .with_context(|| format!("parsing HLO text {path:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {name}"))?;
-        let exe =
-            std::sync::Arc::new(Executable { exe, name: name.to_string() });
-        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
-        Ok(exe)
+
+        pub fn artifact_dir(&self) -> &Path {
+            &self.artifact_dir
+        }
+
+        /// Load + compile an HLO-text artifact by file name (cached).
+        pub fn load(&self, name: &str) -> Result<std::sync::Arc<Executable>> {
+            if let Some(e) = self.cache.lock().unwrap().get(name) {
+                return Ok(e.clone());
+            }
+            let path = self.artifact_dir.join(name);
+            if !path.exists() {
+                bail!(
+                    "artifact {path:?} not found — run `make artifacts` first"
+                );
+            }
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))?;
+            let exe = std::sync::Arc::new(Executable {
+                exe,
+                name: name.to_string(),
+            });
+            self.cache
+                .lock()
+                .unwrap()
+                .insert(name.to_string(), exe.clone());
+            Ok(exe)
+        }
+
+        /// Upload a host f32 slice to a device buffer with the given dims.
+        ///
+        /// Uses `buffer_from_host_buffer` (kImmutableOnlyDuringCall: the
+        /// data is copied before the call returns).  Do NOT switch this to
+        /// `buffer_from_host_literal`: that path is asynchronous and the
+        /// shim never awaits the transfer, so dropping the literal races
+        /// the DMA and corrupts the buffer (observed as nondeterministic
+        /// PRIMITIVE_TYPE_INVALID aborts).
+        pub fn to_device(
+            &self,
+            data: &[f32],
+            dims: &[usize],
+        ) -> Result<Buffer> {
+            self.client
+                .buffer_from_host_buffer(data, dims, None)
+                .context("uploading buffer")
+        }
     }
 
-    /// Upload a host f32 slice to a device buffer with the given dims.
-    ///
-    /// Uses `buffer_from_host_buffer` (kImmutableOnlyDuringCall: the data
-    /// is copied before the call returns).  Do NOT switch this to
-    /// `buffer_from_host_literal`: that path is asynchronous and the shim
-    /// never awaits the transfer, so dropping the literal races the DMA
-    /// and corrupts the buffer (observed as nondeterministic
-    /// PRIMITIVE_TYPE_INVALID aborts).
-    pub fn to_device(
-        &self,
-        data: &[f32],
-        dims: &[usize],
-    ) -> Result<xla::PjRtBuffer> {
-        self.client
-            .buffer_from_host_buffer(data, dims, None)
-            .context("uploading buffer")
+    impl Executable {
+        /// Execute with literal inputs; decompose the output tuple.
+        pub fn run(&self, inputs: &[Literal]) -> Result<Vec<Literal>> {
+            let bufs = self
+                .exe
+                .execute::<Literal>(inputs)
+                .with_context(|| format!("executing {}", self.name))?;
+            let out = bufs[0][0]
+                .to_literal_sync()
+                .context("fetching result literal")?;
+            Ok(out.to_tuple()?)
+        }
+
+        /// Execute with device-buffer inputs (hot path: state tensors stay
+        /// on device across steps, only the batch is re-uploaded).
+        pub fn run_b(&self, inputs: &[&Buffer]) -> Result<Vec<Buffer>> {
+            let mut bufs = self
+                .exe
+                .execute_b(inputs)
+                .with_context(|| format!("executing {}", self.name))?;
+            Ok(bufs.pop().unwrap_or_default())
+        }
+    }
+
+    /// Build an f32 literal with the given dimensions.
+    pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<Literal> {
+        let n: usize = dims.iter().product();
+        if n != data.len() {
+            bail!("literal shape {dims:?} != data len {}", data.len());
+        }
+        let l = xla::Literal::vec1(data);
+        let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+        Ok(l.reshape(&dims)?)
+    }
+
+    /// Scalar f32 literal.
+    pub fn lit_scalar(v: f32) -> Literal {
+        xla::Literal::scalar(v)
+    }
+
+    /// Extract an f32 vector from a literal (any shape, row-major).
+    pub fn to_f32_vec(l: &Literal) -> Result<Vec<f32>> {
+        Ok(l.to_vec::<f32>()?)
+    }
+
+    /// Extract an f32 vector from a device buffer.
+    pub fn buf_to_f32_vec(b: &Buffer) -> Result<Vec<f32>> {
+        to_f32_vec(&b.to_literal_sync()?)
     }
 }
 
-impl Executable {
-    /// Execute with literal inputs; decompose the output tuple.
-    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let bufs = self
-            .exe
-            .execute::<xla::Literal>(inputs)
-            .with_context(|| format!("executing {}", self.name))?;
-        let out = bufs[0][0]
-            .to_literal_sync()
-            .context("fetching result literal")?;
-        Ok(out.to_tuple()?)
+#[cfg(not(feature = "pjrt"))]
+mod imp {
+    use std::path::{Path, PathBuf};
+
+    use anyhow::{bail, Result};
+
+    /// Host literal stand-in: carries real data so literal packing and
+    /// shape checks behave exactly like the PJRT build.
+    #[derive(Debug, Clone, PartialEq)]
+    pub struct Literal {
+        data: Vec<f32>,
+        #[allow(dead_code)] // kept so the stub mirrors real literal shape
+        dims: Vec<usize>,
     }
 
-    /// Execute with device-buffer inputs (hot path: state tensors stay on
-    /// device across steps, only the batch is re-uploaded).
-    pub fn run_b(
-        &self,
-        inputs: &[&xla::PjRtBuffer],
-    ) -> Result<Vec<xla::PjRtBuffer>> {
-        let mut bufs = self
-            .exe
-            .execute_b(inputs)
-            .with_context(|| format!("executing {}", self.name))?;
-        Ok(bufs.pop().unwrap_or_default())
+    /// Device buffer stand-in (never constructible without `pjrt`).
+    #[derive(Debug)]
+    pub struct Buffer {
+        _private: (),
+    }
+
+    /// Artifact-directory bookkeeping without an execution backend.
+    pub struct Runtime {
+        artifact_dir: PathBuf,
+    }
+
+    /// A loaded artifact handle; never actually produced by the stub
+    /// (loading fails first), but the type keeps signatures identical.
+    pub struct Executable {
+        pub name: String,
+    }
+
+    fn no_pjrt(what: &str) -> anyhow::Error {
+        anyhow::anyhow!(
+            "{what} requires the PJRT runtime, but gandse was built without \
+             the `pjrt` feature — run `make artifacts` and rebuild with \
+             `--features pjrt` (see DESIGN.md \"Runtime gating\")"
+        )
+    }
+
+    impl Runtime {
+        pub fn new(artifact_dir: &Path) -> Result<Runtime> {
+            Ok(Runtime { artifact_dir: artifact_dir.to_path_buf() })
+        }
+
+        pub fn platform(&self) -> String {
+            "stub (pjrt feature disabled)".to_string()
+        }
+
+        pub fn artifact_dir(&self) -> &Path {
+            &self.artifact_dir
+        }
+
+        pub fn load(&self, name: &str) -> Result<std::sync::Arc<Executable>> {
+            let path = self.artifact_dir.join(name);
+            if !path.exists() {
+                bail!(
+                    "artifact {path:?} not found — run `make artifacts` first"
+                );
+            }
+            Err(no_pjrt("executing HLO artifacts"))
+        }
+
+        pub fn to_device(
+            &self,
+            _data: &[f32],
+            _dims: &[usize],
+        ) -> Result<Buffer> {
+            Err(no_pjrt("uploading device buffers"))
+        }
+    }
+
+    impl Executable {
+        pub fn run(&self, _inputs: &[Literal]) -> Result<Vec<Literal>> {
+            Err(no_pjrt("executing HLO artifacts"))
+        }
+
+        pub fn run_b(&self, _inputs: &[&Buffer]) -> Result<Vec<Buffer>> {
+            Err(no_pjrt("executing HLO artifacts"))
+        }
+    }
+
+    /// Build an f32 literal with the given dimensions (same shape check as
+    /// the PJRT build).
+    pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<Literal> {
+        let n: usize = dims.iter().product();
+        if n != data.len() {
+            bail!("literal shape {dims:?} != data len {}", data.len());
+        }
+        Ok(Literal { data: data.to_vec(), dims: dims.to_vec() })
+    }
+
+    /// Scalar f32 literal.
+    pub fn lit_scalar(v: f32) -> Literal {
+        Literal { data: vec![v], dims: Vec::new() }
+    }
+
+    /// Extract an f32 vector from a literal (any shape, row-major).
+    pub fn to_f32_vec(l: &Literal) -> Result<Vec<f32>> {
+        Ok(l.data.clone())
+    }
+
+    /// Extract an f32 vector from a device buffer.
+    pub fn buf_to_f32_vec(_b: &Buffer) -> Result<Vec<f32>> {
+        Err(no_pjrt("downloading device buffers"))
     }
 }
 
-/// Build an f32 literal with the given dimensions.
-pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
-    let n: usize = dims.iter().product();
-    if n != data.len() {
-        bail!("literal shape {dims:?} != data len {}", data.len());
-    }
-    let l = xla::Literal::vec1(data);
-    let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
-    Ok(l.reshape(&dims)?)
-}
-
-/// Scalar f32 literal.
-pub fn lit_scalar(v: f32) -> xla::Literal {
-    xla::Literal::scalar(v)
-}
-
-/// Extract an f32 vector from a literal (any shape, row-major).
-pub fn to_f32_vec(l: &xla::Literal) -> Result<Vec<f32>> {
-    Ok(l.to_vec::<f32>()?)
-}
-
-/// Extract an f32 vector from a device buffer.
-pub fn buf_to_f32_vec(b: &xla::PjRtBuffer) -> Result<Vec<f32>> {
-    to_f32_vec(&b.to_literal_sync()?)
-}
+pub use imp::{
+    buf_to_f32_vec, lit_f32, lit_scalar, to_f32_vec, Buffer, Executable,
+    Literal, Runtime,
+};
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::path::Path;
 
     #[test]
     fn lit_f32_checks_shape() {

@@ -1,0 +1,730 @@
+//! The shared selection engine: candidate enumeration + Algorithm-2
+//! selection, sequential or sharded across threads (DESIGN.md
+//! "Evaluation core").
+//!
+//! Every search method and the serving path funnel through this module:
+//! the explorer's per-request scan, whole-network exploration, the
+//! harness runners and the server's batch worker all build a
+//! [`Candidates`] set and hand it to a [`SelectEngine`].
+//!
+//! # Exactness
+//!
+//! Algorithm 2 (the paper's Design Selector) is **order-dependent**: the
+//! acceptance rule for a candidate depends on the selector state built by
+//! every earlier candidate, and the rule is not associative — merging
+//! per-shard *winners* through a second selector pass can return a
+//! different configuration than the sequential scan (a shard's fresh local
+//! selector can reject a candidate that the true global state would have
+//! accepted).  The engine therefore parallelizes the expensive part only:
+//! worker threads evaluate disjoint, contiguous shards of the mixed-radix
+//! candidate space into `(latency, power)` vectors, and a deterministic
+//! in-order merge replays the **complete** objective stream — shard 0
+//! first, shard 1 second, … — through one sequential [`Selector`].  Every
+//! candidate is evaluated with the same f32 operations and offered in the
+//! same order as the single-thread scan, so results agree bit-for-bit with
+//! the sequential path for any shard count (property-tested in
+//! `tests/select_parity.rs`).
+//!
+//! # Enumeration
+//!
+//! [`CandidateCursor`] is the single mixed-radix counter behind every
+//! consumer (the seed had two copies: an allocating iterator and an
+//! allocation-free callback loop).  It supports `skip_to(offset)` by
+//! radix decomposition, which is what lets shards start mid-space in
+//! O(groups) instead of O(offset).
+
+use crate::space::SpaceSpec;
+
+/// Default safety cap on enumerated candidates per task.  The true
+/// candidate count is still reported for Table 5; the cap only bounds the
+/// scan.  Raised 10x over the seed's single-threaded 100k: the sharded
+/// scan clears the larger space at equal wall-clock (see
+/// `BENCH_select.json`).
+pub const DEFAULT_CAP: usize = 1_000_000;
+
+/// Below this many candidates per worker the engine stays sequential —
+/// thread spawn + merge overhead would dominate.
+const MIN_SHARD: usize = 4_096;
+
+// ---------------------------------------------------------------------------
+// Candidate sets and enumeration
+// ---------------------------------------------------------------------------
+
+/// The per-group choices whose probability exceeded the threshold.
+#[derive(Debug, Clone)]
+pub struct Candidates {
+    pub kept: Vec<Vec<usize>>,
+}
+
+impl Candidates {
+    /// Extract from one row of G probabilities.  Guarantees at least one
+    /// choice per group (argmax fallback when nothing passes threshold).
+    pub fn from_probs(
+        spec: &SpaceSpec,
+        probs: &[f32],
+        threshold: f32,
+    ) -> Candidates {
+        debug_assert_eq!(probs.len(), spec.onehot_dim);
+        let mut kept = Vec::with_capacity(spec.groups.len());
+        let mut off = 0;
+        for g in &spec.groups {
+            let slice = &probs[off..off + g.size()];
+            let mut ks: Vec<usize> = (0..g.size())
+                .filter(|&i| slice[i] > threshold)
+                .collect();
+            if ks.is_empty() {
+                let mut best = 0;
+                for (i, &p) in slice.iter().enumerate() {
+                    if p > slice[best] {
+                        best = i;
+                    }
+                }
+                ks.push(best);
+            }
+            kept.push(ks);
+            off += g.size();
+        }
+        Candidates { kept }
+    }
+
+    /// Total number of candidate configuration sets (cartesian product).
+    pub fn count(&self) -> f64 {
+        self.kept.iter().map(|k| k.len() as f64).product()
+    }
+
+    /// Cursor over the candidate space, positioned at the first candidate.
+    pub fn cursor(&self) -> CandidateCursor<'_> {
+        CandidateCursor::new(&self.kept)
+    }
+
+    /// Enumerate candidate index-vectors in mixed-radix order, capped.
+    pub fn enumerate(&self, cap: usize) -> CandidateIter<'_> {
+        CandidateIter { cur: self.cursor(), emitted: 0, cap }
+    }
+
+    /// Allocation-free enumeration for selection hot loops: `f` is called
+    /// with a reused index buffer for up to `cap` candidates.
+    pub fn for_each_capped(&self, cap: usize, mut f: impl FnMut(&[usize])) {
+        let mut cur = self.cursor();
+        let mut emitted = 0usize;
+        while !cur.is_done() && emitted < cap {
+            f(cur.current());
+            emitted += 1;
+            cur.advance();
+        }
+    }
+}
+
+/// The unified mixed-radix counter over a candidate set.  The **last**
+/// group varies fastest (matching the seed's enumeration order and the
+/// paper's worked example).  Supports O(groups) random access via
+/// [`CandidateCursor::skip_to`] so parallel shards can start mid-space.
+#[derive(Debug, Clone)]
+pub struct CandidateCursor<'a> {
+    kept: &'a [Vec<usize>],
+    counter: Vec<usize>,
+    /// Resolved choice index per group for the current position.
+    idx: Vec<usize>,
+    done: bool,
+}
+
+impl<'a> CandidateCursor<'a> {
+    pub fn new(kept: &'a [Vec<usize>]) -> CandidateCursor<'a> {
+        let done =
+            kept.is_empty() || kept.iter().any(|ks| ks.is_empty());
+        let idx = if done {
+            vec![0; kept.len()]
+        } else {
+            kept.iter().map(|ks| ks[0]).collect()
+        };
+        CandidateCursor { kept, counter: vec![0; kept.len()], idx, done }
+    }
+
+    /// Jump to the candidate at `offset` in enumeration order (mixed-radix
+    /// decomposition, last group fastest).  Returns false — and marks the
+    /// cursor done — when `offset` is past the end of the space.
+    pub fn skip_to(&mut self, mut offset: u128) -> bool {
+        if self.done {
+            return false;
+        }
+        for i in (0..self.kept.len()).rev() {
+            let m = self.kept[i].len() as u128;
+            let c = (offset % m) as usize;
+            self.counter[i] = c;
+            self.idx[i] = self.kept[i][c];
+            offset /= m;
+        }
+        if offset > 0 {
+            self.done = true;
+            return false;
+        }
+        true
+    }
+
+    /// The current candidate as per-group choice indices.
+    pub fn current(&self) -> &[usize] {
+        &self.idx
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.done
+    }
+
+    /// Advance to the next candidate; false once the space is exhausted.
+    pub fn advance(&mut self) -> bool {
+        if self.done {
+            return false;
+        }
+        let mut i = self.kept.len();
+        loop {
+            if i == 0 {
+                self.done = true;
+                return false;
+            }
+            i -= 1;
+            self.counter[i] += 1;
+            if self.counter[i] < self.kept[i].len() {
+                self.idx[i] = self.kept[i][self.counter[i]];
+                return true;
+            }
+            self.counter[i] = 0;
+            self.idx[i] = self.kept[i][0];
+        }
+    }
+}
+
+/// Lazy enumeration of the cartesian product — consumers walk candidates
+/// without materializing the full set.  A thin allocating adapter over
+/// [`CandidateCursor`].
+pub struct CandidateIter<'a> {
+    cur: CandidateCursor<'a>,
+    emitted: usize,
+    cap: usize,
+}
+
+impl<'a> Iterator for CandidateIter<'a> {
+    type Item = Vec<usize>;
+
+    fn next(&mut self) -> Option<Vec<usize>> {
+        if self.cur.is_done() || self.emitted >= self.cap {
+            return None;
+        }
+        let item = self.cur.current().to_vec();
+        self.emitted += 1;
+        self.cur.advance();
+        Some(item)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Algorithm 2
+// ---------------------------------------------------------------------------
+
+/// Design Selector: Algorithm 2, verbatim.
+///
+/// Scans candidate configurations, tracking the best (L_opt, P_opt) under
+/// the paper's three update scenarios, and returns the chosen candidate's
+/// index in iteration order (plus its objectives).
+pub struct Selector {
+    pub lo: f32,
+    pub po: f32,
+    l_opt: f32,
+    p_opt: f32,
+    best: Option<usize>,
+}
+
+impl Selector {
+    pub fn new(lo: f32, po: f32) -> Selector {
+        // Lines 1-2: L_opt <- 0, P_opt <- 0 (sentinel for "never updated").
+        Selector { lo, po, l_opt: 0.0, p_opt: 0.0, best: None }
+    }
+
+    /// Lines 4-30 for one candidate; `i` is the candidate's ordinal.
+    pub fn offer(&mut self, i: usize, l_g: f32, p_g: f32) {
+        let (lo, po) = (self.lo, self.po);
+        let mut update = false; // Line 6
+        if self.l_opt == 0.0 && self.p_opt == 0.0 {
+            update = true; // Lines 7-8: first candidate initializes
+        } else if (self.l_opt > lo && self.p_opt > po)
+            || (self.l_opt < lo && self.p_opt < po)
+        {
+            // Scenario 1 (Line 10): both worse or both better than the
+            // user's objectives — take strict improvements on both.
+            if l_g < self.l_opt && p_g < self.p_opt {
+                update = true; // Lines 11-13
+            }
+        } else if self.l_opt > lo && self.p_opt < po {
+            // Scenario 2 (Lines 15-18): latency unsatisfied, power ok —
+            // chase latency while power stays within the objective.
+            if l_g < self.l_opt && p_g < po {
+                update = true;
+            }
+        } else if p_g < self.p_opt && self.l_opt < lo && l_g < lo {
+            // Scenario 3 (Lines 20-22), mirrored.
+            update = true;
+        }
+        if update {
+            self.l_opt = l_g;
+            self.p_opt = p_g;
+            self.best = Some(i);
+        }
+    }
+
+    pub fn result(&self) -> Option<(usize, f32, f32)> {
+        self.best.map(|i| (i, self.l_opt, self.p_opt))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The selection engine
+// ---------------------------------------------------------------------------
+
+/// Outcome of one engine run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SelectOutcome {
+    /// Winner's position in enumeration order.
+    pub ordinal: usize,
+    /// Winner as per-group choice indices.
+    pub cfg_idx: Vec<usize>,
+    pub latency: f32,
+    pub power: f32,
+    /// Candidates actually scanned (== min(count, cap)).
+    pub n_enumerated: usize,
+}
+
+/// Sharded candidate-selection engine.
+///
+/// `threads == 0` means "use every available core"; `threads == 1` is the
+/// plain sequential scan.  Whatever the setting, results are bit-for-bit
+/// identical (see the module docs) — threads only change wall-clock.
+#[derive(Debug, Clone, Copy)]
+pub struct SelectEngine {
+    /// Worker threads (0 = `std::thread::available_parallelism`).
+    pub threads: usize,
+    /// Safety cap on enumerated candidates per run.
+    pub cap: usize,
+    /// Minimum candidates per worker before sharding engages (tuning and
+    /// test knob; parity holds for any value ≥ 1).
+    pub min_shard: usize,
+}
+
+impl Default for SelectEngine {
+    fn default() -> SelectEngine {
+        SelectEngine { threads: 0, cap: DEFAULT_CAP, min_shard: MIN_SHARD }
+    }
+}
+
+impl SelectEngine {
+    /// Single-threaded engine (the seed's behavior, with a higher cap).
+    pub fn sequential() -> SelectEngine {
+        SelectEngine { threads: 1, ..SelectEngine::default() }
+    }
+
+    /// Engine with an explicit worker count (0 = all cores).
+    pub fn with_threads(threads: usize) -> SelectEngine {
+        SelectEngine { threads, ..SelectEngine::default() }
+    }
+
+    fn resolved_threads(&self) -> usize {
+        if self.threads > 0 {
+            self.threads
+        } else {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        }
+    }
+
+    /// Scan `cands` with Algorithm 2 against objectives `(lo, po)`.
+    ///
+    /// `eval` maps one candidate's raw configuration values to
+    /// `(latency, power)`; it must be pure (same input → same output) —
+    /// shards may evaluate candidates in any temporal order, though each
+    /// candidate's objectives are *offered* to the selector strictly in
+    /// enumeration order.  Returns None only for degenerate candidate
+    /// sets (a group with no kept choices, or a group-count mismatch).
+    pub fn run<F>(
+        &self,
+        spec: &SpaceSpec,
+        cands: &Candidates,
+        lo: f32,
+        po: f32,
+        eval: F,
+    ) -> Option<SelectOutcome>
+    where
+        F: Fn(&[f32]) -> (f32, f32) + Sync,
+    {
+        if cands.kept.len() != spec.groups.len()
+            || cands.kept.iter().any(|ks| ks.is_empty())
+        {
+            return None;
+        }
+        let total = cands.count();
+        let n = if total < self.cap as f64 {
+            total as usize
+        } else {
+            self.cap
+        };
+        if n == 0 {
+            return None;
+        }
+        // Floor division: never hand a worker fewer than min_shard
+        // candidates (the spawn+merge overhead the knob exists to avoid).
+        let min_shard = self.min_shard.max(1);
+        let workers =
+            self.resolved_threads().min((n / min_shard).max(1));
+        if workers == 1 {
+            return run_sequential(spec, cands, lo, po, &eval, n);
+        }
+
+        // Shard the first n candidates into `workers` contiguous ranges;
+        // each worker evaluates its range into an objective vector.
+        let shard = (n + workers - 1) / workers;
+        let mut objs: Vec<Vec<(f32, f32)>> = Vec::with_capacity(workers);
+        std::thread::scope(|s| {
+            let mut handles = Vec::with_capacity(workers);
+            for k in 0..workers {
+                let start = k * shard;
+                let end = ((k + 1) * shard).min(n);
+                let eval = &eval;
+                let kept = &cands.kept;
+                let groups = &spec.groups;
+                handles.push(s.spawn(move || {
+                    let mut out =
+                        Vec::with_capacity(end.saturating_sub(start));
+                    if start >= end {
+                        return out;
+                    }
+                    let mut cur = CandidateCursor::new(kept);
+                    if !cur.skip_to(start as u128) {
+                        return out;
+                    }
+                    let mut raw = vec![0f32; groups.len()];
+                    for j in start..end {
+                        for ((r, g), &ci) in
+                            raw.iter_mut().zip(groups).zip(cur.current())
+                        {
+                            *r = g.choices[ci];
+                        }
+                        out.push(eval(&raw));
+                        if j + 1 < end && !cur.advance() {
+                            break;
+                        }
+                    }
+                    out
+                }));
+            }
+            for h in handles {
+                objs.push(h.join().expect("selection worker panicked"));
+            }
+        });
+
+        // Deterministic in-order merge: replay the complete objective
+        // stream, shard by shard, through one sequential Selector — the
+        // exact offer sequence of the single-thread scan.
+        let mut sel = Selector::new(lo, po);
+        let mut i = 0usize;
+        for shard_objs in &objs {
+            for &(l, p) in shard_objs {
+                sel.offer(i, l, p);
+                i += 1;
+            }
+        }
+        let (ordinal, l_opt, p_opt) = sel.result()?;
+        let mut cur = cands.cursor();
+        cur.skip_to(ordinal as u128);
+        Some(SelectOutcome {
+            ordinal,
+            cfg_idx: cur.current().to_vec(),
+            latency: l_opt,
+            power: p_opt,
+            n_enumerated: i,
+        })
+    }
+}
+
+/// The single-threaded scan (also the reference semantics).
+fn run_sequential<F>(
+    spec: &SpaceSpec,
+    cands: &Candidates,
+    lo: f32,
+    po: f32,
+    eval: &F,
+    n: usize,
+) -> Option<SelectOutcome>
+where
+    F: Fn(&[f32]) -> (f32, f32),
+{
+    let mut sel = Selector::new(lo, po);
+    let mut cur = cands.cursor();
+    let mut raw = vec![0f32; spec.groups.len()];
+    let mut best_idx = vec![0usize; spec.groups.len()];
+    let mut i = 0usize;
+    while !cur.is_done() && i < n {
+        for ((r, g), &ci) in
+            raw.iter_mut().zip(&spec.groups).zip(cur.current())
+        {
+            *r = g.choices[ci];
+        }
+        let (l, p) = eval(&raw);
+        let before = sel.result().map(|(b, _, _)| b);
+        sel.offer(i, l, p);
+        if sel.result().map(|(b, _, _)| b) != before {
+            best_idx.copy_from_slice(cur.current());
+        }
+        i += 1;
+        cur.advance();
+    }
+    let (ordinal, l_opt, p_opt) = sel.result()?;
+    Some(SelectOutcome {
+        ordinal,
+        cfg_idx: best_idx,
+        latency: l_opt,
+        power: p_opt,
+        n_enumerated: i,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::builtin_spec;
+
+    fn probs_for(
+        spec: &SpaceSpec,
+        hot: &[(usize, &[usize])],
+    ) -> Vec<f32> {
+        // distribute mass over the requested hot choices, rest tiny
+        let mut p = vec![0.001f32; spec.onehot_dim];
+        let offs = spec.group_offsets();
+        for &(g, choices) in hot {
+            let share = 1.0 / choices.len() as f32;
+            for &c in choices {
+                p[offs[g] + c] = share;
+            }
+        }
+        p
+    }
+
+    #[test]
+    fn candidates_threshold_and_fallback() {
+        let spec = builtin_spec("dnnweaver").unwrap();
+        // group 0: two hot choices; others: nothing above threshold
+        let mut p = probs_for(&spec, &[(0, &[1, 3])]);
+        let offs = spec.group_offsets();
+        p[offs[1] + 2] = 0.009; // argmax fallback target for group 1
+        let c = Candidates::from_probs(&spec, &p, 0.2);
+        assert_eq!(c.kept[0], vec![1, 3]);
+        assert_eq!(c.kept[1], vec![2]); // fallback argmax
+        assert_eq!(c.count(), 2.0);
+    }
+
+    #[test]
+    fn candidate_count_is_product() {
+        let spec = builtin_spec("dnnweaver").unwrap();
+        let p = probs_for(
+            &spec,
+            &[(0, &[0, 1, 2]), (1, &[0, 1]), (2, &[4]), (3, &[0, 1])],
+        );
+        let c = Candidates::from_probs(&spec, &p, 0.2);
+        assert_eq!(c.count(), 12.0);
+        let v: Vec<_> = c.enumerate(usize::MAX).collect();
+        assert_eq!(v.len(), 12);
+        // paper's worked example: candidates are all combinations
+        assert!(v.contains(&vec![0, 0, 4, 0]));
+        assert!(v.contains(&vec![2, 1, 4, 1]));
+    }
+
+    #[test]
+    fn enumeration_respects_cap() {
+        let spec = builtin_spec("im2col").unwrap();
+        let hot: Vec<(usize, Vec<usize>)> =
+            (0..spec.groups.len()).map(|g| (g, vec![0, 1, 2])).collect();
+        let hot_ref: Vec<(usize, &[usize])> =
+            hot.iter().map(|(g, v)| (*g, v.as_slice())).collect();
+        let p = probs_for(&spec, &hot_ref);
+        let c = Candidates::from_probs(&spec, &p, 0.2);
+        assert!(c.count() > 500_000.0);
+        assert_eq!(c.enumerate(1000).count(), 1000);
+    }
+
+    #[test]
+    fn for_each_capped_matches_enumerate() {
+        let spec = builtin_spec("dnnweaver").unwrap();
+        let p = probs_for(
+            &spec,
+            &[(0, &[0, 2, 5]), (1, &[1, 3]), (2, &[0]), (3, &[2, 4])],
+        );
+        let c = Candidates::from_probs(&spec, &p, 0.2);
+        let via_iter: Vec<Vec<usize>> = c.enumerate(7).collect();
+        let mut via_fe: Vec<Vec<usize>> = Vec::new();
+        c.for_each_capped(7, |idx| via_fe.push(idx.to_vec()));
+        assert_eq!(via_iter, via_fe);
+        // uncapped full product too
+        let all_iter: Vec<Vec<usize>> = c.enumerate(usize::MAX).collect();
+        let mut all_fe: Vec<Vec<usize>> = Vec::new();
+        c.for_each_capped(usize::MAX, |idx| all_fe.push(idx.to_vec()));
+        assert_eq!(all_iter, all_fe);
+        assert_eq!(all_fe.len() as f64, c.count());
+    }
+
+    #[test]
+    fn cursor_skip_to_matches_linear_walk() {
+        let kept = vec![vec![1usize, 4], vec![0, 2, 3], vec![5, 7]];
+        let c = Candidates { kept };
+        let all: Vec<Vec<usize>> = c.enumerate(usize::MAX).collect();
+        assert_eq!(all.len(), 12);
+        for off in 0..12u128 {
+            let mut cur = c.cursor();
+            assert!(cur.skip_to(off));
+            assert_eq!(cur.current(), &all[off as usize][..], "off={off}");
+        }
+        // past-the-end offsets are done
+        let mut cur = c.cursor();
+        assert!(!cur.skip_to(12));
+        assert!(cur.is_done());
+        // skip_to then advance continues the walk
+        let mut cur = c.cursor();
+        cur.skip_to(5);
+        assert!(cur.advance());
+        assert_eq!(cur.current(), &all[6][..]);
+    }
+
+    #[test]
+    fn cursor_handles_degenerate_sets() {
+        let empty = Candidates { kept: vec![] };
+        assert!(empty.cursor().is_done());
+        assert_eq!(empty.enumerate(usize::MAX).count(), 0);
+        let hole = Candidates { kept: vec![vec![0], vec![]] };
+        assert!(hole.cursor().is_done());
+        assert_eq!(hole.enumerate(usize::MAX).count(), 0);
+    }
+
+    #[test]
+    fn selector_takes_first_then_improves() {
+        let mut s = Selector::new(10.0, 10.0);
+        s.offer(0, 20.0, 20.0); // initializes (Lines 7-8)
+        assert_eq!(s.result().unwrap().0, 0);
+        // both worse than objectives (scenario 1): strict improvement
+        s.offer(1, 15.0, 25.0); // power worse -> no update
+        assert_eq!(s.result().unwrap().0, 0);
+        s.offer(2, 15.0, 15.0); // both better -> update
+        assert_eq!(s.result().unwrap().0, 2);
+    }
+
+    #[test]
+    fn selector_scenario2_prioritizes_satisfaction() {
+        // L_opt worse than LO, P_opt satisfied: accept higher power while
+        // chasing latency, as long as power stays within PO.
+        let mut s = Selector::new(10.0, 10.0);
+        s.offer(0, 20.0, 5.0);
+        // latency improves, power worsens but still <= PO -> update
+        s.offer(1, 12.0, 9.0);
+        assert_eq!(s.result().unwrap().0, 1);
+        // power above PO -> rejected
+        s.offer(2, 11.0, 11.0);
+        assert_eq!(s.result().unwrap().0, 1);
+    }
+
+    #[test]
+    fn selector_scenario3_mirrored() {
+        let mut s = Selector::new(10.0, 10.0);
+        s.offer(0, 5.0, 20.0); // latency ok, power not
+        s.offer(1, 9.0, 15.0); // power improves, latency stays <= LO
+        assert_eq!(s.result().unwrap().0, 1);
+        s.offer(2, 11.0, 12.0); // latency would break LO -> rejected
+        assert_eq!(s.result().unwrap().0, 1);
+    }
+
+    #[test]
+    fn selector_both_satisfied_keeps_optimizing() {
+        let mut s = Selector::new(10.0, 10.0);
+        s.offer(0, 8.0, 8.0);
+        s.offer(1, 6.0, 7.0); // both better -> update (scenario 1, branch 2)
+        let (i, l, p) = s.result().unwrap();
+        assert_eq!((i, l, p), (1, 6.0, 7.0));
+    }
+
+    #[test]
+    fn engine_sequential_matches_reference_loop() {
+        let spec = builtin_spec("dnnweaver").unwrap();
+        let p = probs_for(
+            &spec,
+            &[(0, &[0, 1, 2, 3]), (1, &[0, 1, 2]), (2, &[1, 4]), (3, &[0, 2])],
+        );
+        let cands = Candidates::from_probs(&spec, &p, 0.2);
+        let net = [32.0f32, 32.0, 32.0, 32.0, 3.0, 3.0];
+        let (lo, po) = (1e-4f32, 1.0f32);
+        let kind = spec.kind;
+
+        // reference: the seed's for_each_capped + Selector loop
+        let mut sel = Selector::new(lo, po);
+        let mut raw = vec![0f32; spec.groups.len()];
+        let mut best = vec![0usize; spec.groups.len()];
+        let mut i = 0usize;
+        cands.for_each_capped(usize::MAX, |idx| {
+            for ((r, g), &ci) in raw.iter_mut().zip(&spec.groups).zip(idx) {
+                *r = g.choices[ci];
+            }
+            let (l, p) = kind.eval(&net, &raw);
+            let before = sel.result().map(|(b, _, _)| b);
+            sel.offer(i, l, p);
+            if sel.result().map(|(b, _, _)| b) != before {
+                best.copy_from_slice(idx);
+            }
+            i += 1;
+        });
+        let (ord, l_ref, p_ref) = sel.result().unwrap();
+
+        let out = SelectEngine::sequential()
+            .run(&spec, &cands, lo, po, |raw| kind.eval(&net, raw))
+            .unwrap();
+        assert_eq!(out.ordinal, ord);
+        assert_eq!(out.cfg_idx, best);
+        assert_eq!(out.latency.to_bits(), l_ref.to_bits());
+        assert_eq!(out.power.to_bits(), p_ref.to_bits());
+        assert_eq!(out.n_enumerated, i);
+    }
+
+    #[test]
+    fn engine_parallel_matches_sequential_smoke() {
+        // Large-enough candidate set to actually engage the shard path.
+        let spec = builtin_spec("im2col").unwrap();
+        let hot: Vec<(usize, Vec<usize>)> =
+            (0..spec.groups.len()).map(|g| (g, vec![0, 2, 4])).collect();
+        let hot_ref: Vec<(usize, &[usize])> =
+            hot.iter().map(|(g, v)| (*g, v.as_slice())).collect();
+        let p = probs_for(&spec, &hot_ref);
+        let cands = Candidates::from_probs(&spec, &p, 0.2);
+        let net = [64.0f32, 64.0, 32.0, 32.0, 3.0, 3.0];
+        let (lo, po) = (1e-4f32, 2.0f32);
+        let kind = spec.kind;
+        let cap = 60_000; // > min_shard * 4, < full product
+        let engine =
+            |threads| SelectEngine { threads, cap, ..SelectEngine::default() };
+        let seq = engine(1)
+            .run(&spec, &cands, lo, po, |raw| kind.eval(&net, raw))
+            .unwrap();
+        for threads in [2, 3, 4, 7] {
+            let par = engine(threads)
+                .run(&spec, &cands, lo, po, |raw| kind.eval(&net, raw))
+                .unwrap();
+            assert_eq!(par, seq, "threads={threads}");
+            assert_eq!(par.latency.to_bits(), seq.latency.to_bits());
+            assert_eq!(par.power.to_bits(), seq.power.to_bits());
+        }
+    }
+
+    #[test]
+    fn engine_rejects_degenerate_candidates() {
+        let spec = builtin_spec("dnnweaver").unwrap();
+        let hole = Candidates { kept: vec![vec![0], vec![], vec![0], vec![0]] };
+        let out = SelectEngine::default()
+            .run(&spec, &hole, 1.0, 1.0, |_| (1.0, 1.0));
+        assert!(out.is_none());
+        let mismatch = Candidates { kept: vec![vec![0]] };
+        let out = SelectEngine::default()
+            .run(&spec, &mismatch, 1.0, 1.0, |_| (1.0, 1.0));
+        assert!(out.is_none());
+    }
+}

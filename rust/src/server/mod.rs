@@ -220,10 +220,15 @@ pub fn encode_error(msg: &str) -> String {
 // TCP server
 // ---------------------------------------------------------------------------
 
+/// Per-request outcome crossing the batcher: exploration can fail for one
+/// batch (artifact error, runtime fault) without killing the worker
+/// thread — affected requests get an `{"ok": false}` reply instead.
+type DseReply = Result<DseResult, String>;
+
 /// Handle to a running server (for tests/examples).
 pub struct ServerHandle {
     pub addr: std::net::SocketAddr,
-    batcher: Arc<Batcher<DseRequest, DseResult>>,
+    batcher: Arc<Batcher<DseRequest, DseReply>>,
     worker: Option<std::thread::JoinHandle<()>>,
     acceptor: Option<std::thread::JoinHandle<()>>,
 }
@@ -262,7 +267,7 @@ pub fn serve(
 ) -> Result<ServerHandle> {
     let listener = TcpListener::bind(addr)?;
     let local = listener.local_addr()?;
-    let batcher: Arc<Batcher<DseRequest, DseResult>> =
+    let batcher: Arc<Batcher<DseRequest, DseReply>> =
         Arc::new(Batcher::new(max_batch, max_wait));
     let spec: SpaceSpec = explorer.spec.clone();
 
@@ -270,7 +275,15 @@ pub fn serve(
         let b = batcher.clone();
         std::thread::spawn(move || {
             b.run_worker(|reqs: &[DseRequest]| {
-                explorer.explore(reqs).expect("exploration failed")
+                // A failed batch must not kill the worker: every request
+                // in it gets an error reply and the loop keeps serving.
+                match explorer.explore(reqs) {
+                    Ok(results) => results.into_iter().map(Ok).collect(),
+                    Err(e) => {
+                        let msg = format!("exploration failed: {e:#}");
+                        reqs.iter().map(|_| Err(msg.clone())).collect()
+                    }
+                }
             });
         })
     };
@@ -303,7 +316,7 @@ pub fn serve(
 
 fn handle_conn(
     stream: TcpStream,
-    batcher: &Batcher<DseRequest, DseResult>,
+    batcher: &Batcher<DseRequest, DseReply>,
     spec: &SpaceSpec,
 ) {
     let peer = stream.peer_addr().ok();
@@ -323,7 +336,8 @@ fn handle_conn(
                 let rx = batcher.submit(req);
                 match rx.recv() {
                     Err(_) => encode_error("server shutting down"),
-                    Ok((res, info)) => {
+                    Ok((Err(e), _)) => encode_error(&e),
+                    Ok((Ok(res), info)) => {
                         let verilog = want_rtl.then(|| {
                             rtl::generate(spec, &res.cfg_raw, "gandse_acc")
                                 .unwrap_or_else(|e| format!("// error: {e}"))
@@ -405,6 +419,35 @@ mod tests {
         worker.join().unwrap();
         assert_eq!(b.items.load(Ordering::Relaxed), 5);
         assert!(b.batches.load(Ordering::Relaxed) >= 3);
+    }
+
+    #[test]
+    fn failed_batch_yields_error_replies_not_dead_worker() {
+        // Mirror of the serve() worker contract: a batch-level failure
+        // maps to per-item Err replies and the worker keeps running.
+        let b: Arc<Batcher<u32, Result<u32, String>>> =
+            Arc::new(Batcher::new(4, Duration::from_millis(3)));
+        let worker = {
+            let b = b.clone();
+            std::thread::spawn(move || {
+                b.run_worker(|xs| {
+                    if xs.contains(&13) {
+                        xs.iter().map(|_| Err("boom".to_string())).collect()
+                    } else {
+                        xs.iter().map(|&x| Ok(x)).collect()
+                    }
+                })
+            })
+        };
+        let rx = b.submit(13);
+        let (r, _) = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(r, Err("boom".to_string()));
+        // the worker survived the failed batch and keeps serving
+        let rx = b.submit(7);
+        let (r, _) = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(r, Ok(7));
+        b.close();
+        worker.join().unwrap();
     }
 
     #[test]

@@ -7,6 +7,7 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
+use crate::model::ModelKind;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
@@ -29,7 +30,11 @@ impl ConfigGroup {
 /// Full design-space specification for one design model.
 #[derive(Debug, Clone)]
 pub struct SpaceSpec {
+    /// Canonical model name (always equals `kind.name()`).
     pub model: String,
+    /// Typed evaluation-core dispatch tag, resolved once at construction;
+    /// hot loops call `spec.kind.eval(...)` instead of string dispatch.
+    pub kind: ModelKind,
     pub groups: Vec<ConfigGroup>,
     pub net_fields: Vec<String>,
     /// Values the dataset generator samples each net field from.
@@ -59,6 +64,8 @@ impl SpaceSpec {
             .and_then(Json::as_str)
             .ok_or(SpecError::Field("model"))?
             .to_string();
+        let kind = ModelKind::from_name(&model)
+            .map_err(|_| SpecError::UnknownModel(model.clone()))?;
         let groups = v
             .get("groups")
             .and_then(Json::as_arr)
@@ -101,6 +108,7 @@ impl SpaceSpec {
         let onehot_dim: usize = groups.iter().map(ConfigGroup::size).sum();
         let spec = SpaceSpec {
             model,
+            kind,
             noise_dim: v
                 .get("noise_dim")
                 .and_then(Json::as_usize)
@@ -304,12 +312,14 @@ impl Meta {
 /// Built-in specs matching dse_spec.py, used when artifacts are absent
 /// (pure-Rust paths: dataset generation, baselines, unit tests).
 pub fn builtin_spec(model: &str) -> Result<SpaceSpec, SpecError> {
+    let kind = ModelKind::from_name(model)
+        .map_err(|_| SpecError::UnknownModel(model.to_string()))?;
     let g = |name: &str, choices: &[f32]| ConfigGroup {
         name: name.to_string(),
         choices: choices.to_vec(),
     };
-    let groups = match model {
-        "im2col" => vec![
+    let groups = match kind {
+        ModelKind::Im2col => vec![
             g("PEN", &[64.0, 128.0, 256.0, 512.0, 1024.0, 2048.0]),
             g("SDB", &[32.0, 64.0, 128.0, 256.0, 512.0]),
             g("DSB", &[32.0, 64.0, 128.0, 256.0, 512.0]),
@@ -323,13 +333,12 @@ pub fn builtin_spec(model: &str) -> Result<SpaceSpec, SpecError> {
             g("TKW", &[1.0, 2.0, 3.0, 4.0, 5.0]),
             g("TKH", &[1.0, 2.0, 3.0, 4.0, 5.0]),
         ],
-        "dnnweaver" => vec![
+        ModelKind::Dnnweaver => vec![
             g("PEN", &[8.0, 16.0, 32.0, 64.0, 128.0, 256.0]),
             g("ISS", &[128.0, 256.0, 512.0, 1024.0, 2048.0]),
             g("WSS", &[128.0, 256.0, 512.0, 1024.0, 2048.0]),
             g("OSS", &[128.0, 256.0, 512.0, 1024.0, 2048.0]),
         ],
-        other => return Err(SpecError::UnknownModel(other.to_string())),
     };
     let onehot_dim: usize = groups.iter().map(ConfigGroup::size).sum();
     let net_fields: Vec<String> =
@@ -344,6 +353,7 @@ pub fn builtin_spec(model: &str) -> Result<SpaceSpec, SpecError> {
     ];
     Ok(SpaceSpec {
         model: model.to_string(),
+        kind,
         noise_dim: 8,
         g_in: N_NET + N_OBJ + 8,
         d_in: N_NET + onehot_dim + N_OBJ,
@@ -371,6 +381,8 @@ mod tests {
     #[test]
     fn builtin_dnnweaver_dims() {
         let s = builtin_spec("dnnweaver").unwrap();
+        assert_eq!(s.kind, ModelKind::Dnnweaver);
+        assert_eq!(s.kind.name(), s.model);
         assert_eq!(s.groups.len(), 4);
         assert_eq!(s.onehot_dim, 21);
         assert_eq!(s.space_size(), 6 * 125);
@@ -429,6 +441,7 @@ mod tests {
         }"#;
         let v = Json::parse(txt).unwrap();
         let s = SpaceSpec::from_json(&v).unwrap();
+        assert_eq!(s.kind, ModelKind::Dnnweaver);
         assert_eq!(s.onehot_dim, 5);
         assert_eq!(s.groups[1].choices, vec![128.0, 256.0, 512.0]);
         assert_eq!(s.group_offsets(), vec![0, 2]);

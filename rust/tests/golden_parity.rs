@@ -35,7 +35,8 @@ fn check_model(name: &str) {
     for i in 0..nets.len() {
         let net = nets[i].as_f32_vec().unwrap();
         let cfg = cfgs[i].as_f32_vec().unwrap();
-        let (l, p) = model::eval(name, &net, &cfg);
+        let (l, p) = model::eval(name, &net, &cfg)
+            .expect("golden vectors use known models");
         let rel = |a: f32, b: f32| (a - b).abs() / b.abs().max(1e-30);
         assert!(
             rel(l, lats[i]) < 1e-5,

@@ -9,7 +9,6 @@
 use gandse::dataset;
 use gandse::explorer::{Candidates, Selector};
 use gandse::metrics;
-use gandse::model;
 use gandse::space::builtin_spec;
 use gandse::util::rng::Rng;
 
@@ -110,7 +109,7 @@ fn prop_design_models_positive_finite_everywhere() {
             let mut rng = Rng::new(seed);
             let net = spec.sample_net(&mut rng);
             let raw = spec.raw_values(&spec.sample_config(&mut rng));
-            let (l, p) = model::eval(model, &net, &raw);
+            let (l, p) = spec.kind.eval(&net, &raw);
             assert!(
                 l.is_finite() && l > 0.0 && p.is_finite() && p > 0.0,
                 "model={model} seed={seed}: ({l},{p})"
@@ -132,7 +131,7 @@ fn prop_im2col_pen_monotone_latency() {
         for choice in 0..spec.groups[pen_group].size() {
             idx[pen_group] = choice;
             let raw = spec.raw_values(&idx);
-            let (l, _) = model::eval("im2col", &net, &raw);
+            let (l, _) = spec.kind.eval(&net, &raw);
             assert!(
                 l <= prev + prev * 1e-6,
                 "seed={seed} choice={choice}: latency rose {prev} -> {l}"

@@ -10,7 +10,6 @@ use std::sync::OnceLock;
 use gandse::dataset;
 use gandse::explorer::{DseRequest, Explorer};
 use gandse::gan::{GanState, TrainConfig, Trainer};
-use gandse::model;
 use gandse::runtime::{lit_f32, to_f32_vec, Runtime};
 use gandse::space::{Meta, N_NET};
 use gandse::util::rng::Rng;
@@ -66,8 +65,7 @@ fn design_eval_artifact_matches_rust_model() {
         let lat = to_f32_vec(&out[0]).unwrap();
         let pow = to_f32_vec(&out[1]).unwrap();
         for i in 0..b {
-            let (l, p) = model::eval(
-                name,
+            let (l, p) = spec.kind.eval(
                 &net[i * N_NET..(i + 1) * N_NET],
                 &cfg[i * spec.groups.len()..(i + 1) * spec.groups.len()],
             );
@@ -185,7 +183,7 @@ fn explore_network_shares_one_config_across_layers() {
     let mut total_l = 0f32;
     let mut max_p = 0f32;
     for net in &layers {
-        let (l, p) = model::eval(name, net, &raw);
+        let (l, p) = spec.kind.eval(net, &raw);
         total_l += l;
         max_p = max_p.max(p);
     }
@@ -224,7 +222,7 @@ fn full_explore_path_returns_valid_configs() {
         assert_eq!(r.cfg_idx.len(), spec.groups.len());
         // reported objectives must equal a fresh design-model evaluation
         let raw = spec.raw_values(&r.cfg_idx);
-        let (l, p) = model::eval(name, &req.net, &raw);
+        let (l, p) = spec.kind.eval(&req.net, &raw);
         assert_eq!((l, p), (r.latency, r.power));
         assert!(r.n_candidates >= 1.0);
     }

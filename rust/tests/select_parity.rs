@@ -1,0 +1,234 @@
+//! Parallel/sequential selection parity (seeded property sweep — the
+//! offline crate cache has no proptest, so each property loops many
+//! seeded cases and reports the failing seed).
+//!
+//! The contract under test (DESIGN.md "Evaluation core"): for any spec,
+//! probability row, threshold, objective pair, cap, and shard count, the
+//! sharded [`SelectEngine`] returns the **identical** `(ordinal, cfg_idx,
+//! latency, power)` as the sequential Algorithm-2 scan — bit-for-bit on
+//! the f32 objectives, not just approximately.  `min_shard: 1` forces the
+//! shard path even on small candidate sets so the parallel machinery is
+//! genuinely exercised.
+
+use gandse::dataset;
+use gandse::explorer::DseRequest;
+use gandse::select::{Candidates, SelectEngine, SelectOutcome, Selector};
+use gandse::space::{builtin_spec, SpaceSpec};
+use gandse::util::rng::Rng;
+
+const CASES: u64 = 40;
+
+/// Random probability row with at most `max_hot` hot choices per group
+/// (bounds the cartesian product so the sweep stays fast).
+fn random_probs(spec: &SpaceSpec, max_hot: usize, rng: &mut Rng) -> Vec<f32> {
+    let mut p = vec![0.01f32; spec.onehot_dim];
+    let offs = spec.group_offsets();
+    for (g, grp) in spec.groups.iter().enumerate() {
+        let hot = 1 + rng.below(max_hot.min(grp.size()));
+        for _ in 0..hot {
+            p[offs[g] + rng.below(grp.size())] = 0.3 + 0.6 * rng.f32();
+        }
+    }
+    p
+}
+
+/// Realistic objectives: perturb a random labeled sample's own objectives
+/// so every selector scenario (satisfied / unsatisfied per axis) occurs.
+fn random_request(spec: &SpaceSpec, rng: &mut Rng) -> DseRequest {
+    let ds = dataset::generate(spec, 16, 0, rng.next_u64());
+    let s = &ds.train[rng.below(ds.train.len())];
+    DseRequest {
+        net: s.net,
+        lo: s.latency * (0.25 + 2.0 * rng.f32()),
+        po: s.power * (0.25 + 2.0 * rng.f32()),
+    }
+}
+
+/// The seed's reference semantics: for_each_capped + Selector, verbatim.
+fn reference_select(
+    spec: &SpaceSpec,
+    cands: &Candidates,
+    req: &DseRequest,
+    cap: usize,
+) -> Option<SelectOutcome> {
+    let mut sel = Selector::new(req.lo, req.po);
+    let mut raw = vec![0f32; spec.groups.len()];
+    let mut best = vec![0usize; spec.groups.len()];
+    let mut i = 0usize;
+    cands.for_each_capped(cap, |idx| {
+        for ((r, g), &ci) in raw.iter_mut().zip(&spec.groups).zip(idx) {
+            *r = g.choices[ci];
+        }
+        let (l, p) = spec.kind.eval(&req.net, &raw);
+        let before = sel.result().map(|(b, _, _)| b);
+        sel.offer(i, l, p);
+        if sel.result().map(|(b, _, _)| b) != before {
+            best.copy_from_slice(idx);
+        }
+        i += 1;
+    });
+    let (ordinal, l_opt, p_opt) = sel.result()?;
+    Some(SelectOutcome {
+        ordinal,
+        cfg_idx: best,
+        latency: l_opt,
+        power: p_opt,
+        n_enumerated: i,
+    })
+}
+
+fn assert_outcomes_bit_identical(
+    a: &SelectOutcome,
+    b: &SelectOutcome,
+    ctx: &str,
+) {
+    assert_eq!(a.ordinal, b.ordinal, "{ctx}");
+    assert_eq!(a.cfg_idx, b.cfg_idx, "{ctx}");
+    assert_eq!(a.n_enumerated, b.n_enumerated, "{ctx}");
+    assert_eq!(
+        a.latency.to_bits(),
+        b.latency.to_bits(),
+        "{ctx}: latency {} vs {}",
+        a.latency,
+        b.latency
+    );
+    assert_eq!(
+        a.power.to_bits(),
+        b.power.to_bits(),
+        "{ctx}: power {} vs {}",
+        a.power,
+        b.power
+    );
+}
+
+#[test]
+fn prop_parallel_selection_matches_sequential() {
+    for (model, max_hot) in [("dnnweaver", 4), ("im2col", 2)] {
+        let spec = builtin_spec(model).unwrap();
+        for seed in 0..CASES {
+            let mut rng = Rng::new(seed);
+            let probs = random_probs(&spec, max_hot, &mut rng);
+            let threshold = 0.05 + 0.4 * rng.f32();
+            let cands = Candidates::from_probs(&spec, &probs, threshold);
+            let req = random_request(&spec, &mut rng);
+            // caps below, straddling, and above the candidate count
+            let count = cands.count();
+            let caps = [
+                1 + rng.below(16),
+                (count / 2.0).max(1.0) as usize,
+                usize::MAX,
+            ];
+            for cap in caps {
+                // min_shard 1 forces real sharding even on tiny sets
+                let engine = |threads| SelectEngine {
+                    threads,
+                    cap,
+                    min_shard: 1,
+                };
+                let kind = spec.kind;
+                let eval = |raw: &[f32]| kind.eval(&req.net, raw);
+                let seq = engine(1)
+                    .run(&spec, &cands, req.lo, req.po, eval)
+                    .unwrap();
+                let reference =
+                    reference_select(&spec, &cands, &req, cap).unwrap();
+                assert_outcomes_bit_identical(
+                    &seq,
+                    &reference,
+                    &format!("{model} seed={seed} cap={cap} vs reference"),
+                );
+                for threads in [2, 3, 5, 8] {
+                    let par = engine(threads)
+                        .run(&spec, &cands, req.lo, req.po, eval)
+                        .unwrap();
+                    assert_outcomes_bit_identical(
+                        &par,
+                        &seq,
+                        &format!(
+                            "{model} seed={seed} cap={cap} threads={threads}"
+                        ),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Synthetic objective surfaces: a pure hash of the raw config exercises
+/// selector-state trajectories the analytical models never produce
+/// (adversarial for any merge scheme that is not exactly order-preserving).
+#[test]
+fn prop_parallel_matches_sequential_on_synthetic_objectives() {
+    let spec = builtin_spec("im2col").unwrap();
+    for seed in 0..CASES {
+        let mut rng = Rng::new(0x5E1EC7 ^ seed);
+        let probs = random_probs(&spec, 2, &mut rng);
+        let cands = Candidates::from_probs(&spec, &probs, 0.15);
+        let (lo, po) = (0.5 + rng.f32(), 0.5 + rng.f32());
+        let salt = rng.next_u64();
+        let eval = move |raw: &[f32]| {
+            // SplitMix-style hash of the config bits -> (l, p) in (0, 2):
+            // pure, deterministic, thread-order independent.
+            let mut h = salt;
+            for &v in raw {
+                h = (h ^ v.to_bits() as u64)
+                    .wrapping_mul(0x9E3779B97F4A7C15);
+                h ^= h >> 29;
+            }
+            let l = ((h >> 40) as f32 / (1u64 << 24) as f32) * 2.0;
+            let h2 = h.wrapping_mul(0xBF58476D1CE4E5B9);
+            let p = ((h2 >> 40) as f32 / (1u64 << 24) as f32) * 2.0;
+            (l.max(1e-6), p.max(1e-6))
+        };
+        let seq = SelectEngine { threads: 1, cap: 50_000, min_shard: 1 }
+            .run(&spec, &cands, lo, po, eval)
+            .unwrap();
+        for threads in [2, 4, 6] {
+            let par = SelectEngine { threads, cap: 50_000, min_shard: 1 }
+                .run(&spec, &cands, lo, po, eval)
+                .unwrap();
+            assert_outcomes_bit_identical(
+                &par,
+                &seq,
+                &format!("seed={seed} threads={threads}"),
+            );
+        }
+    }
+}
+
+/// Degenerate sharding: more workers than candidates, and candidate sets
+/// far below the default min_shard — results must be invariant.
+#[test]
+fn tiny_candidate_sets_are_threadcount_invariant() {
+    let spec = builtin_spec("dnnweaver").unwrap();
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed);
+        let probs = random_probs(&spec, 2, &mut rng);
+        let cands = Candidates::from_probs(&spec, &probs, 0.25);
+        let req = random_request(&spec, &mut rng);
+        let kind = spec.kind;
+        let eval = |raw: &[f32]| kind.eval(&req.net, raw);
+        let seq = SelectEngine::sequential()
+            .run(&spec, &cands, req.lo, req.po, eval)
+            .unwrap();
+        for threads in [2, 16, 64] {
+            // default min_shard (collapses to sequential) and forced shards
+            for min_shard in [gandse::select::DEFAULT_CAP, 1] {
+                let par = SelectEngine {
+                    threads,
+                    cap: gandse::select::DEFAULT_CAP,
+                    min_shard,
+                }
+                .run(&spec, &cands, req.lo, req.po, eval)
+                .unwrap();
+                assert_outcomes_bit_identical(
+                    &par,
+                    &seq,
+                    &format!(
+                        "seed={seed} threads={threads} min_shard={min_shard}"
+                    ),
+                );
+            }
+        }
+    }
+}
