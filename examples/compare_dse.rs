@@ -2,8 +2,8 @@
 //! reduced sizes so it completes in a couple of minutes.  The full
 //! regeneration lives in `gandse bench --exp all` (see EXPERIMENTS.md).
 //!
-//! Run: `make artifacts && cargo run --release --example compare_dse
-//!       [model] [epochs] [n_tasks]`
+//! Run: `cargo run --release --example compare_dse
+//!       [model] [epochs] [n_tasks]` — no artifacts needed (cpu backend).
 
 use std::path::Path;
 
@@ -13,7 +13,7 @@ use gandse::baselines::DrlConfig;
 use gandse::dataset;
 use gandse::gan::TrainConfig;
 use gandse::harness::{self, tasks_from_dataset};
-use gandse::runtime::Runtime;
+use gandse::runtime::CpuBackend;
 use gandse::select::SelectEngine;
 use gandse::space::Meta;
 
@@ -25,8 +25,8 @@ fn main() -> Result<()> {
         argv.next().and_then(|s| s.parse().ok()).unwrap_or(100);
 
     let dir = Path::new("artifacts");
-    let meta = Meta::load(dir)?;
-    let rt = Runtime::new(dir)?;
+    let meta = Meta::load_or_builtin(dir, 64, 3, 3, 64, 64)?;
+    let backend = CpuBackend::new(0);
     let mm = meta.model(&model)?;
     let ds = dataset::generate(&mm.spec, 2048, n_tasks, 42);
     let tasks = tasks_from_dataset(&ds);
@@ -46,7 +46,7 @@ fn main() -> Result<()> {
     eprintln!("running Large MLP...");
     let mlp = TrainConfig { mlp_mode: true, epochs, ..Default::default() };
     results.push(harness::run_gan_method(
-        &rt,
+        &backend,
         &meta,
         &model,
         &ds,
@@ -60,7 +60,7 @@ fn main() -> Result<()> {
         eprintln!("running GAN w_critic={w}...");
         let cfg = TrainConfig { w_critic: w, epochs, ..Default::default() };
         results.push(harness::run_gan_method(
-            &rt,
+            &backend,
             &meta,
             &model,
             &ds,

@@ -1,12 +1,14 @@
 //! Quickstart: the full GANDSE pipeline on the DnnWeaver design model.
 //!
 //! 1. generate a labeled dataset (Dataset Generator),
-//! 2. train the GAN for a few epochs through the AOT train-step artifact,
+//! 2. train the GAN for a few epochs on the pure-Rust cpu backend,
 //! 3. explore: given a conv layer and latency/power objectives, generate
 //!    candidate configurations and select the best (Algorithm 2),
 //! 4. emit the synthesizable Verilog (Implementation Phase).
 //!
-//! Run: `make artifacts && cargo run --release --example quickstart`
+//! Run: `cargo run --release --example quickstart` — no artifacts
+//! needed.  (With `make artifacts`, `artifacts/meta.json` supplies the
+//! paper-scale network shapes instead of the demo-sized builtin ones.)
 
 use std::path::Path;
 
@@ -16,14 +18,14 @@ use gandse::dataset;
 use gandse::explorer::{DseRequest, Explorer};
 use gandse::gan::{GanState, TrainConfig, Trainer};
 use gandse::rtl;
-use gandse::runtime::Runtime;
+use gandse::runtime::CpuBackend;
 use gandse::space::Meta;
 
 fn main() -> Result<()> {
     let model = "dnnweaver";
     let dir = Path::new("artifacts");
-    let meta = Meta::load(dir)?;
-    let rt = Runtime::new(dir)?;
+    let meta = Meta::load_or_builtin(dir, 64, 3, 3, 64, 64)?;
+    let backend = CpuBackend::new(0);
     let mm = meta.model(model)?;
 
     // 1. Dataset Generator: even sampling + design-model labels.
@@ -36,10 +38,10 @@ fn main() -> Result<()> {
         mm.spec.space_size()
     );
 
-    // 2. Training Phase (Algorithm 1 via the AOT HLO train step).
+    // 2. Training Phase (Algorithm 1 on the cpu backend).
     println!("== training GAN (w_critic = 1.0) ==");
     let state = GanState::init(mm, model, 1);
-    let mut tr = Trainer::new(&rt, &meta, model, state)?;
+    let mut tr = Trainer::new(&backend, &meta, model, state)?;
     let cfg = TrainConfig {
         w_critic: 1.0,
         epochs: 6,
@@ -53,7 +55,7 @@ fn main() -> Result<()> {
     // 3. Exploration Phase: a 32x32x3x3 conv layer, explicit objectives.
     println!("== exploring ==");
     let mut ex =
-        Explorer::new(&rt, &meta, model, tr.state.g.clone(),
+        Explorer::new(&backend, &meta, model, tr.state.g.clone(),
                       ds.stats.to_vec())?;
     let req = DseRequest {
         net: [32.0, 32.0, 32.0, 32.0, 3.0, 3.0],

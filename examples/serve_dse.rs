@@ -3,8 +3,9 @@
 //! reports latency percentiles + throughput + achieved batch sizes — the
 //! router-style serving measurement for EXPERIMENTS.md.
 //!
-//! Run: `make artifacts && cargo run --release --example serve_dse
-//!       [n_clients] [reqs_per_client]`
+//! Run: `cargo run --release --example serve_dse
+//!       [n_clients] [reqs_per_client]` — no artifacts needed (the cpu
+//! backend trains and serves the generator natively).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -16,7 +17,7 @@ use anyhow::Result;
 use gandse::dataset;
 use gandse::explorer::Explorer;
 use gandse::gan::{GanState, TrainConfig, Trainer};
-use gandse::runtime::Runtime;
+use gandse::runtime::{Backend, CpuBackend};
 use gandse::server;
 use gandse::space::Meta;
 use gandse::util::json::Json;
@@ -31,16 +32,18 @@ fn main() -> Result<()> {
 
     let model = "dnnweaver";
     let dir = Path::new("artifacts");
-    let meta: &'static Meta = Box::leak(Box::new(Meta::load(dir)?));
-    let rt: &'static Runtime = Box::leak(Box::new(Runtime::new(dir)?));
+    let meta: &'static Meta =
+        Box::leak(Box::new(Meta::load_or_builtin(dir, 64, 3, 3, 64, 64)?));
+    let backend: &'static dyn Backend =
+        Box::leak(Box::new(CpuBackend::new(0)));
     let mm = meta.model(model)?;
 
     // quick training so the server answers with a real generator
     let ds = dataset::generate(&mm.spec, 1024, 32, 42);
     let mut tr =
-        Trainer::new(rt, meta, model, GanState::init(mm, model, 1))?;
+        Trainer::new(backend, meta, model, GanState::init(mm, model, 1))?;
     tr.train(&ds, &TrainConfig { epochs: 4, ..Default::default() })?;
-    let ex = Explorer::new(rt, meta, model, tr.state.g.clone(),
+    let ex = Explorer::new(backend, meta, model, tr.state.g.clone(),
                            ds.stats.to_vec())?;
 
     let handle =

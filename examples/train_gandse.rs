@@ -1,12 +1,12 @@
 //! End-to-end training driver (the EXPERIMENTS.md workload): trains the
 //! GANDSE GAN on the high-dimensional im2col design model for several
-//! hundred steps through the full three-layer stack — Rust batch assembly
-//! → PJRT → AOT HLO (JAX Algorithm-1 graph → Pallas fused-linear kernels)
-//! — logging the loss curve, then evaluates DSE satisfaction on held-out
-//! tasks and compares against the untrained generator.
+//! hundred steps — on the pure-Rust cpu backend by default (batch
+//! assembly, native forward/backward/Adam), or through the full
+//! three-layer PJRT stack when artifacts exist — logging the loss curve,
+//! then evaluates DSE satisfaction on held-out tasks and compares against
+//! the untrained generator.
 //!
-//! Run: `make artifacts && cargo run --release --example train_gandse
-//!       [steps] [w_critic]`
+//! Run: `cargo run --release --example train_gandse [steps] [w_critic]`
 
 use std::path::Path;
 use std::time::Instant;
@@ -18,7 +18,7 @@ use gandse::explorer::Explorer;
 use gandse::gan::{history_csv, GanState, TrainConfig, Trainer};
 use gandse::harness::tasks_from_dataset;
 use gandse::metrics;
-use gandse::runtime::Runtime;
+use gandse::runtime::{Backend, CpuBackend};
 use gandse::space::Meta;
 
 fn main() -> Result<()> {
@@ -30,8 +30,8 @@ fn main() -> Result<()> {
 
     let model = "im2col";
     let dir = Path::new("artifacts");
-    let meta = Meta::load(dir)?;
-    let rt = Runtime::new(dir)?;
+    let meta = Meta::load_or_builtin(dir, 64, 3, 3, 64, 64)?;
+    let backend = CpuBackend::new(0);
     let mm = meta.model(model)?;
     println!(
         "GANDSE e2e training: model={model} |space|={} G+D params={}",
@@ -48,10 +48,10 @@ fn main() -> Result<()> {
 
     // Baseline: untrained generator.
     let state0 = GanState::init(mm, model, 1);
-    let sat_before = eval_sat(&rt, &meta, model, &ds, state0.g.clone())?;
+    let sat_before = eval_sat(&backend, &meta, model, &ds, state0.g.clone())?;
 
     // Train.
-    let mut tr = Trainer::new(&rt, &meta, model, state0)?;
+    let mut tr = Trainer::new(&backend, &meta, model, state0)?;
     let cfg = TrainConfig {
         w_critic,
         epochs,
@@ -80,7 +80,7 @@ fn main() -> Result<()> {
     println!("wrote train_gandse_loss.csv");
 
     // Evaluate after training.
-    let sat_after = eval_sat(&rt, &meta, model, &ds, tr.state.g.clone())?;
+    let sat_after = eval_sat(&backend, &meta, model, &ds, tr.state.g.clone())?;
     println!(
         "\nDSE satisfaction on {} held-out tasks: {} before -> {} after",
         tasks.len(),
@@ -96,14 +96,14 @@ fn main() -> Result<()> {
 }
 
 fn eval_sat(
-    rt: &Runtime,
+    backend: &dyn Backend,
     meta: &Meta,
     model: &str,
     ds: &dataset::Dataset,
     g: Vec<f32>,
 ) -> Result<usize> {
     let tasks = tasks_from_dataset(ds);
-    let mut ex = Explorer::new(rt, meta, model, g, ds.stats.to_vec())?;
+    let mut ex = Explorer::new(backend, meta, model, g, ds.stats.to_vec())?;
     let results = ex.explore(&tasks)?;
     Ok(results
         .iter()

@@ -4,10 +4,13 @@
 //! offline crate cache): warmup + N timed iterations, reporting
 //! mean / min / p50.
 //!
-//! The selection-throughput section needs no artifacts and always runs;
-//! it writes machine-readable `BENCH_select.json` (candidates/sec at 1 vs
-//! N threads — the perf trajectory for the parallel selection engine).
-//! The PJRT sections require `make artifacts` and are skipped otherwise.
+//! The selection-throughput and cpu-training sections need no artifacts
+//! and always run; they write machine-readable `BENCH_select.json`
+//! (candidates/sec at 1 vs N threads) and `BENCH_train.json` (train
+//! steps/sec + samples/sec on the pure-Rust cpu backend) — the perf
+//! trajectories CI compares against the committed baselines in
+//! `bench/baseline/`.  The PJRT sections require `make artifacts` and are
+//! skipped otherwise.
 
 use std::path::Path;
 use std::time::Instant;
@@ -16,7 +19,7 @@ use gandse::baselines::{sa_search, SaConfig};
 use gandse::dataset;
 use gandse::explorer::{Candidates, DseRequest, Explorer, Selector};
 use gandse::gan::{GanState, TrainConfig, Trainer};
-use gandse::runtime::Runtime;
+use gandse::runtime::{CpuBackend, PjrtBackend};
 use gandse::select::SelectEngine;
 use gandse::space::{builtin_spec, Meta};
 use gandse::util::json::Json;
@@ -152,9 +155,86 @@ fn bench_selection_throughput(b: &mut Bench) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// CPU-backend training throughput: time the fused Algorithm-1 step at 1
+/// and all-cores worker threads on a mid-sized builtin network, and write
+/// `BENCH_train.json` (steps/sec, samples/sec — the perf trajectory for
+/// the pure-Rust training path).  Artifact-free.
+fn bench_cpu_train_throughput(b: &mut Bench) -> anyhow::Result<()> {
+    println!("== cpu backend training throughput (no artifacts needed) ==");
+    let (width, depth, batch) = (64usize, 3usize, 64usize);
+    let meta = Meta::builtin(width, depth, depth, batch, batch);
+    let model = "dnnweaver";
+    let mm = meta.model(model)?;
+    let ds = dataset::generate(&mm.spec, 4 * batch, 0, 42);
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let mut thread_counts = vec![1usize, cores];
+    thread_counts.sort_unstable();
+    thread_counts.dedup();
+    let tcfg = TrainConfig::default();
+    let mut rows: Vec<Json> = Vec::new();
+    let mut baseline_sps: Option<f64> = None;
+    let mut best_sps = 0f64;
+    for &threads in &thread_counts {
+        let backend = CpuBackend::new(threads);
+        let state = GanState::init(mm, model, 1);
+        let mut tr = Trainer::new(&backend, &meta, model, state)?;
+        let idx: Vec<usize> = (0..batch).collect();
+        let mut rng = Rng::new(2);
+        b.run(
+            &format!(
+                "cpu_train_step/{model} w{width} d{depth} batch{batch} \
+                 threads={threads}"
+            ),
+            20,
+            batch,
+            || {
+                tr.step(&ds, &idx, &tcfg, &mut rng).unwrap();
+            },
+        );
+        let secs = b.rows.last().expect("bench recorded a row").1; // mean
+        let steps_per_sec = 1.0 / secs;
+        let samples_per_sec = batch as f64 / secs;
+        best_sps = best_sps.max(steps_per_sec);
+        if baseline_sps.is_none() {
+            baseline_sps = Some(steps_per_sec);
+        }
+        rows.push(Json::obj(vec![
+            ("threads", Json::Num(threads as f64)),
+            ("secs_per_step", Json::Num(secs)),
+            ("steps_per_sec", Json::Num(steps_per_sec)),
+            ("samples_per_sec", Json::Num(samples_per_sec)),
+        ]));
+    }
+    let sps_1 = baseline_sps.expect("at least one thread count");
+    let g_d_params = meta.model(model)?.g_params
+        + meta.model(model)?.d_params;
+    let doc = Json::obj(vec![
+        ("bench", Json::str("train_throughput")),
+        ("backend", Json::str("cpu")),
+        ("model", Json::str(model)),
+        ("width", Json::Num(width as f64)),
+        ("depth", Json::Num(depth as f64)),
+        ("batch", Json::Num(batch as f64)),
+        ("g_d_params", Json::Num(g_d_params as f64)),
+        ("available_parallelism", Json::Num(cores as f64)),
+        ("rows", Json::Arr(rows)),
+        ("speedup_best_vs_1thread", Json::Num(best_sps / sps_1)),
+    ]);
+    std::fs::write("BENCH_train.json", format!("{doc}\n"))?;
+    println!(
+        "wrote BENCH_train.json (best speedup {:.2}x over 1 thread on \
+         {cores} cores)\n",
+        best_sps / sps_1
+    );
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     let mut b = Bench::new();
     bench_selection_throughput(&mut b)?;
+    bench_cpu_train_throughput(&mut b)?;
 
     let dir = Path::new("artifacts");
     if !dir.join("meta.json").exists() {
@@ -165,7 +245,8 @@ fn main() -> anyhow::Result<()> {
         return Ok(());
     }
     let meta = Meta::load(dir)?;
-    let rt = Runtime::new(dir)?;
+    let backend = PjrtBackend::new(dir)?;
+    let rt = backend.runtime();
     println!("== gandse benchmarks (CPU PJRT, batch {}) ==",
              meta.infer_batch);
 
@@ -233,7 +314,7 @@ fn main() -> anyhow::Result<()> {
 
         // Training step (Algorithm 1, both networks, full AOT graph).
         let state = GanState::init(mm, model_name, 1);
-        let mut tr = Trainer::new(&rt, &meta, model_name, state)?;
+        let mut tr = Trainer::new(&backend, &meta, model_name, state)?;
         let tcfg = TrainConfig::default();
         let idx: Vec<usize> = (0..meta.train_batch).collect();
         let mut rng2 = Rng::new(2);
@@ -247,7 +328,7 @@ fn main() -> anyhow::Result<()> {
         );
 
         // Exploration phase end-to-end (Table 5 "DSE Time").
-        let mut ex = Explorer::new(&rt, &meta, model_name,
+        let mut ex = Explorer::new(&backend, &meta, model_name,
                                    tr.state.g.clone(), ds.stats.to_vec())?;
         b.run(
             &format!("explore_e2e/{model_name} x{} tasks", tasks.len()),

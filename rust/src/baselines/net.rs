@@ -1,24 +1,23 @@
-//! Tiny pure-Rust MLP with manual backprop — the substrate for the DRL
-//! baseline's policy network (the paper's actor network).
+//! The DRL baseline's policy network: a thin single-sample wrapper over
+//! the crate-wide NN core ([`crate::nn`] — the same flat-layout
+//! forward/backward/Adam the CPU training backend batches over).
 //!
-//! Deliberately separate from the PJRT path: the baselines must not lean
-//! on GANDSE's own artifacts, mirroring the paper where DRL uses its own
-//! network.  f32, fully connected, ReLU hidden layers, linear output,
-//! Adam optimizer.
+//! Deliberately separate from the GANDSE networks: the baselines must not
+//! lean on GANDSE's own artifacts or checkpoints, mirroring the paper
+//! where DRL uses its own network.  f32, fully connected, ReLU hidden
+//! layers, linear output, Adam optimizer.  The weight-initialization RNG
+//! stream matches the seed's `Mlp::new` draw for draw, so fixed-seed DRL
+//! runs reproduce exactly.
 
+use crate::nn::{self, MlpLayout};
 use crate::util::rng::Rng;
 
-#[derive(Debug, Clone)]
-pub struct Layer {
-    pub w: Vec<f32>, // [in, out], row-major
-    pub b: Vec<f32>, // [out]
-    pub din: usize,
-    pub dout: usize,
-}
-
+/// Flat-parameter MLP with Adam state.
 #[derive(Debug, Clone)]
 pub struct Mlp {
-    pub layers: Vec<Layer>,
+    layout: MlpLayout,
+    /// Flat parameters (per layer: `W[in, out]` row-major, then `b`).
+    pub flat: Vec<f32>,
     // Adam state
     m: Vec<f32>,
     v: Vec<f32>,
@@ -33,117 +32,53 @@ pub struct Tape {
 
 impl Mlp {
     pub fn new(dims: &[usize], rng: &mut Rng) -> Mlp {
-        let mut layers = Vec::new();
-        let mut total = 0;
-        for w in dims.windows(2) {
-            let (i, o) = (w[0], w[1]);
-            let scale = (2.0 / i as f32).sqrt();
-            layers.push(Layer {
-                w: rng.normal_vec(i * o, scale),
-                b: vec![0.0; o],
-                din: i,
-                dout: o,
-            });
-            total += i * o + o;
-        }
-        Mlp { layers, m: vec![0.0; total], v: vec![0.0; total], t: 0 }
+        let layout = MlpLayout::new(dims);
+        let flat = nn::init_he_flat(dims, rng);
+        let total = layout.total();
+        Mlp { layout, flat, m: vec![0.0; total], v: vec![0.0; total], t: 0 }
     }
 
     pub fn n_params(&self) -> usize {
-        self.m.len()
+        self.flat.len()
+    }
+
+    pub fn layout(&self) -> &MlpLayout {
+        &self.layout
     }
 
     /// Forward pass; returns output logits and the activation tape.
     pub fn forward(&self, x: &[f32]) -> (Vec<f32>, Tape) {
-        let mut acts = vec![x.to_vec()];
-        let last = self.layers.len() - 1;
-        for (li, l) in self.layers.iter().enumerate() {
-            let inp = acts.last().unwrap();
-            let mut out = l.b.clone();
-            for i in 0..l.din {
-                let xi = inp[i];
-                if xi != 0.0 {
-                    let row = &l.w[i * l.dout..(i + 1) * l.dout];
-                    for (o, &w) in out.iter_mut().zip(row) {
-                        *o += xi * w;
-                    }
-                }
-            }
-            if li != last {
-                for o in out.iter_mut() {
-                    *o = o.max(0.0);
-                }
-            }
-            acts.push(out);
-        }
+        let acts = nn::forward(&self.layout, &self.flat, x, 1);
         (acts.last().unwrap().clone(), Tape { acts })
     }
 
     /// Backprop from output-gradient `dout`; accumulates parameter
-    /// gradients into `grads` (same flat layout as Adam state).
+    /// gradients into `grads` (same flat layout as the parameters).
     pub fn backward(&self, tape: &Tape, dout: &[f32], grads: &mut [f32]) {
-        assert_eq!(grads.len(), self.m.len());
-        let mut delta = dout.to_vec();
-        let mut offset_end = self.m.len();
-        for (li, l) in self.layers.iter().enumerate().rev() {
-            let inp = &tape.acts[li];
-            let outp = &tape.acts[li + 1];
-            // ReLU mask for hidden layers (post-activation stored).
-            if li != self.layers.len() - 1 {
-                for (d, &o) in delta.iter_mut().zip(outp) {
-                    if o <= 0.0 {
-                        *d = 0.0;
-                    }
-                }
-            }
-            let nb = l.dout;
-            let nw = l.din * l.dout;
-            let b_off = offset_end - nb;
-            let w_off = b_off - nw;
-            // db += delta; dW += inp^T delta; dx = delta W^T
-            for (g, &d) in grads[b_off..offset_end].iter_mut().zip(&delta) {
-                *g += d;
-            }
-            let mut dx = vec![0.0f32; l.din];
-            for i in 0..l.din {
-                let xi = inp[i];
-                let row = &l.w[i * l.dout..(i + 1) * l.dout];
-                let grow = &mut grads[w_off + i * l.dout..w_off + (i + 1) * l.dout];
-                let mut acc = 0.0f32;
-                for o in 0..l.dout {
-                    grow[o] += xi * delta[o];
-                    acc += delta[o] * row[o];
-                }
-                dx[i] = acc;
-            }
-            delta = dx;
-            offset_end = w_off;
-        }
-        debug_assert_eq!(offset_end, 0);
+        assert_eq!(grads.len(), self.flat.len());
+        nn::backward(
+            &self.layout,
+            &self.flat,
+            &tape.acts,
+            dout,
+            1,
+            Some(grads),
+            None,
+        );
     }
 
-    /// Adam update with the accumulated gradients (then caller zeroes them).
+    /// Adam update with the accumulated gradients (then caller zeroes
+    /// them).
     pub fn adam_step(&mut self, grads: &[f32], lr: f32) {
-        const B1: f32 = 0.9;
-        const B2: f32 = 0.999;
-        const EPS: f32 = 1e-8;
         self.t += 1;
-        let t = self.t as f32;
-        let bc1 = 1.0 - B1.powf(t);
-        let bc2 = 1.0 - B2.powf(t);
-        let mut k = 0;
-        for l in self.layers.iter_mut() {
-            for p in l.w.iter_mut().chain(l.b.iter_mut()) {
-                let g = grads[k];
-                self.m[k] = B1 * self.m[k] + (1.0 - B1) * g;
-                self.v[k] = B2 * self.v[k] + (1.0 - B2) * g * g;
-                let mh = self.m[k] / bc1;
-                let vh = self.v[k] / bc2;
-                *p -= lr * mh / (vh.sqrt() + EPS);
-                k += 1;
-            }
-        }
-        debug_assert_eq!(k, grads.len());
+        nn::adam_update(
+            &mut self.flat,
+            grads,
+            &mut self.m,
+            &mut self.v,
+            self.t as f32,
+            lr,
+        );
     }
 }
 
@@ -181,25 +116,21 @@ mod tests {
 
         let eps = 1e-3f32;
         // check a handful of weights in each layer against central diff
-        for (li, wi) in [(0usize, 0usize), (0, 7), (1, 3)] {
-            let orig = net.layers[li].w[wi];
-            net.layers[li].w[wi] = orig + eps;
+        for (li, i, o) in [(0usize, 0usize, 0usize), (0, 0, 7), (1, 3, 0)] {
+            let k = net.layout().w_index(li, i, o);
+            let orig = net.flat[k];
+            net.flat[k] = orig + eps;
             let (yp, _) = net.forward(&x);
-            net.layers[li].w[wi] = orig - eps;
+            net.flat[k] = orig - eps;
             let (ym, _) = net.forward(&x);
-            net.layers[li].w[wi] = orig;
+            net.flat[k] = orig;
             let lp: f32 = yp.iter().map(|v| v * v).sum::<f32>() / 2.0;
             let lm: f32 = ym.iter().map(|v| v * v).sum::<f32>() / 2.0;
             let fd = (lp - lm) / (2.0 * eps);
-            // locate flat index of layers[li].w[wi]
-            let mut off = 0;
-            for l in &net.layers[..li] {
-                off += l.din * l.dout + l.dout;
-            }
-            let an = grads[off + wi];
+            let an = grads[k];
             assert!(
                 (fd - an).abs() < 2e-2 * (1.0 + fd.abs()),
-                "layer {li} w{wi}: fd={fd} an={an}"
+                "layer {li} w[{i},{o}]: fd={fd} an={an}"
             );
         }
     }

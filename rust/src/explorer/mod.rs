@@ -3,7 +3,9 @@
 //!
 //! This is the request path.  One DSE task = one (network parameters,
 //! latency objective, power objective) triple; the trained G produces
-//! per-group choice probabilities through the AOT `g_infer` artifact, every
+//! per-group choice probabilities through the execution backend
+//! ([`crate::runtime::Backend`]: native cpu matmuls, or the AOT
+//! `g_infer` artifact under `--backend pjrt`), every
 //! choice whose probability exceeds the **probability threshold** (Section
 //! 6.1, default 0.2) is kept, and the candidate configuration sets are the
 //! cartesian product of kept choices.  Candidate evaluation + selection
@@ -13,7 +15,7 @@
 
 use anyhow::{bail, Result};
 
-use crate::runtime::{lit_f32, to_f32_vec, Runtime};
+use crate::runtime::backend::Backend;
 use crate::select::SelectEngine;
 use crate::space::{Meta, SpaceSpec, N_NET, N_OBJ};
 use crate::util::rng::Rng;
@@ -56,12 +58,13 @@ pub struct DseResult {
     pub satisfied: bool,
 }
 
-/// The Design Explorer: batched G inference + engine-backed selection.
+/// The Design Explorer: batched G inference (through the execution
+/// backend) + engine-backed selection.
 pub struct Explorer<'a> {
-    rt: &'a Runtime,
+    backend: &'a dyn Backend,
     meta: &'a Meta,
+    model: String,
     pub spec: &'a SpaceSpec,
-    g_exe: std::sync::Arc<crate::runtime::Executable>,
     g_params: Vec<f32>,
     stats: Vec<f32>,
     pub threshold: f32,
@@ -73,16 +76,16 @@ pub struct Explorer<'a> {
 
 impl<'a> Explorer<'a> {
     pub fn new(
-        rt: &'a Runtime,
+        backend: &'a dyn Backend,
         meta: &'a Meta,
-        model: &'a str,
+        model: &str,
         g_params: Vec<f32>,
         stats: Vec<f32>,
     ) -> Result<Explorer<'a>> {
         let mm = meta.model(model)?;
         if g_params.len() != mm.g_params {
             bail!(
-                "checkpoint has {} G params, artifact expects {}",
+                "checkpoint has {} G params, meta expects {}",
                 g_params.len(),
                 mm.g_params
             );
@@ -90,12 +93,11 @@ impl<'a> Explorer<'a> {
         if stats.len() != meta.stats_len {
             bail!("stats length {} != {}", stats.len(), meta.stats_len);
         }
-        let g_exe = rt.load(&format!("g_infer_{model}.hlo.txt"))?;
         Ok(Explorer {
-            rt,
+            backend,
             meta,
+            model: model.to_string(),
             spec: &mm.spec,
-            g_exe,
             g_params,
             stats,
             threshold: DEFAULT_THRESHOLD,
@@ -104,8 +106,10 @@ impl<'a> Explorer<'a> {
         })
     }
 
-    /// Run G on up to `infer_batch` requests (padded); returns one
-    /// probability row per request.
+    /// Run G on the requests in `infer_batch`-sized chunks; returns one
+    /// probability row per request.  (The pjrt backend pads the final
+    /// chunk to the artifact's fixed batch shape internally; the cpu
+    /// backend handles any row count natively.)
     pub fn infer_probs(
         &mut self,
         reqs: &[DseRequest],
@@ -114,31 +118,37 @@ impl<'a> Explorer<'a> {
         let spec = self.spec;
         let mut out = Vec::with_capacity(reqs.len());
         for chunk in reqs.chunks(b) {
-            let mut net = Vec::with_capacity(b * N_NET);
-            let mut obj = Vec::with_capacity(b * N_OBJ);
-            let mut noise = Vec::with_capacity(b * spec.noise_dim);
+            let rows = chunk.len();
+            let mut net = Vec::with_capacity(rows * N_NET);
+            let mut obj = Vec::with_capacity(rows * N_OBJ);
+            let mut noise = Vec::with_capacity(rows * spec.noise_dim);
             for r in chunk {
                 net.extend_from_slice(&r.net);
                 obj.push(r.lo);
                 obj.push(r.po);
             }
-            for _ in chunk.len()..b {
-                net.extend_from_slice(&[0.0; N_NET]);
-                obj.extend_from_slice(&[0.0; N_OBJ]);
-            }
-            for _ in 0..b * spec.noise_dim {
+            for _ in 0..rows * spec.noise_dim {
                 noise.push(self.noise_rng.normal() * 0.1);
             }
-            let inputs = [
-                lit_f32(&self.g_params, &[self.g_params.len()])?,
-                lit_f32(&net, &[b, N_NET])?,
-                lit_f32(&obj, &[b, N_OBJ])?,
-                lit_f32(&noise, &[b, spec.noise_dim])?,
-                lit_f32(&self.stats, &[self.meta.stats_len])?,
-            ];
-            let res = self.g_exe.run(&inputs)?;
-            let probs = to_f32_vec(&res[0])?;
-            for (i, _) in chunk.iter().enumerate() {
+            let probs = self.backend.infer_probs(
+                self.meta,
+                &self.model,
+                &self.g_params,
+                &net,
+                &obj,
+                &noise,
+                &self.stats,
+                rows,
+            )?;
+            if probs.len() != rows * spec.onehot_dim {
+                bail!(
+                    "backend returned {} probabilities for {rows} rows of \
+                     {}",
+                    probs.len(),
+                    spec.onehot_dim
+                );
+            }
+            for i in 0..rows {
                 out.push(
                     probs[i * spec.onehot_dim..(i + 1) * spec.onehot_dim]
                         .to_vec(),
@@ -183,10 +193,6 @@ impl<'a> Explorer<'a> {
             n_candidates: cands.count(),
             satisfied: out.latency <= req.lo && out.power <= req.po,
         }
-    }
-
-    pub fn runtime(&self) -> &Runtime {
-        self.rt
     }
 
     /// Whole-network exploration: one accelerator configuration shared by

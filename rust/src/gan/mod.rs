@@ -1,10 +1,12 @@
 //! GAN state + Algorithm-1 training driver (the Training Phase of Fig. 4).
 //!
 //! The Rust coordinator owns the parameter/optimizer state as flat f32
-//! vectors and loops the AOT-compiled `train_step_<model>.hlo.txt` through
-//! the PJRT runtime.  Python is never involved: the dataset comes from
-//! `dataset::generate`, batches are assembled in Rust, and the HLO artifact
-//! performs forward/backward/Adam for both networks in one execution.
+//! vectors and drives one fused Algorithm-1 step per mini-batch through a
+//! [`crate::runtime::Backend`] session — the pure-Rust cpu backend
+//! (native forward/backward/Adam, no artifacts) or the PJRT backend
+//! (AOT-compiled `train_step_fused_<model>.hlo.txt`).  Python is never
+//! involved: the dataset comes from `dataset::generate` and batches are
+//! assembled in Rust either way.
 
 use std::io::{Read, Write};
 use std::path::Path;
@@ -12,8 +14,8 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use crate::dataset::{build_batch, Dataset};
-use crate::runtime::Runtime;
-use crate::space::{Meta, ModelMeta, N_NET, N_OBJ};
+use crate::runtime::backend::{Backend, TrainStepper};
+use crate::space::{Meta, ModelMeta};
 use crate::util::rng::Rng;
 
 /// Flat parameter + Adam state for one GAN (G and D).
@@ -69,18 +71,10 @@ impl Default for TrainConfig {
 /// He-style initialization of one MLP's flat parameter vector: weights
 /// scaled by sqrt(2/fan_in), biases zero.  Layout matches
 /// `model.MlpLayout` on the Python side (W then b, layer by layer).
+/// Thin alias for [`crate::nn::init_he_flat`] (one shared RNG stream —
+/// fixed-seed checkpoints depend on it).
 pub fn init_mlp_flat(dims: &[usize], rng: &mut Rng) -> Vec<f32> {
-    let total: usize = dims.windows(2).map(|w| w[0] * w[1] + w[1]).sum();
-    let mut out = Vec::with_capacity(total);
-    for w in dims.windows(2) {
-        let (i, o) = (w[0], w[1]);
-        let scale = (2.0 / i as f32).sqrt();
-        for _ in 0..i * o {
-            out.push(rng.normal() * scale);
-        }
-        out.extend(std::iter::repeat(0.0).take(o));
-    }
-    out
+    crate::nn::init_he_flat(dims, rng)
 }
 
 impl GanState {
@@ -170,100 +164,42 @@ impl GanState {
     }
 }
 
-/// The Algorithm-1 training driver.
+/// The Algorithm-1 training driver, generic over the execution backend.
+///
+/// The backend session owns the authoritative parameter/optimizer state
+/// between steps (host vectors on cpu; a device-resident fused buffer on
+/// pjrt — §Perf: only the mini-batch goes up and 4 metrics come down per
+/// step).  `state` is the host mirror, refreshed lazily via
+/// [`Trainer::sync_state`].
 pub struct Trainer<'a> {
-    rt: &'a Runtime,
     meta: &'a Meta,
     mm: &'a ModelMeta,
-    step_exe: std::sync::Arc<crate::runtime::Executable>,
+    session: Box<dyn TrainStepper + 'a>,
     pub state: GanState,
     /// (epoch-averaged) loss history: the Figure 10/11 series.
     pub history: Vec<StepMetrics>,
-    /// Device-resident fused state (§Perf): `[metrics(4), g, d, m_g, v_g,
-    /// m_d, v_d]` stays on the PJRT device across steps — the fused
-    /// train-step artifact is lowered with return_tuple=False so its
-    /// output array feeds straight back as the next step's input.  Only
-    /// the mini-batch goes up and only 4 metrics come down per step.
-    /// `state` is refreshed lazily via [`Trainer::sync_state`].
-    device: Option<crate::runtime::Buffer>,
-    /// Cached stats buffer (constant across a training run).
-    stats_buf: Option<crate::runtime::Buffer>,
-    dirty: bool,
 }
 
 impl<'a> Trainer<'a> {
     pub fn new(
-        rt: &'a Runtime,
+        backend: &'a dyn Backend,
         meta: &'a Meta,
         model: &str,
         state: GanState,
     ) -> Result<Trainer<'a>> {
         let mm = meta.model(model)?;
-        let step_exe =
-            rt.load(&format!("train_step_fused_{model}.hlo.txt"))?;
-        Ok(Trainer {
-            rt,
-            meta,
-            mm,
-            step_exe,
-            state,
-            history: Vec::new(),
-            device: None,
-            stats_buf: None,
-            dirty: false,
-        })
+        let session = backend.train_session(meta, model, &state)?;
+        Ok(Trainer { meta, mm, session, state, history: Vec::new() })
     }
 
-    /// Upload host state to the device as one fused vector (first step or
-    /// after external mutation of `state`).
-    fn ensure_device(&mut self) -> Result<()> {
-        if self.device.is_none() {
-            let s = &self.state;
-            let nm = self.mm.fused_metrics;
-            let mut fused =
-                Vec::with_capacity(self.mm.fused_state_len);
-            fused.extend(std::iter::repeat(0.0f32).take(nm));
-            for v in [&s.g, &s.d, &s.m_g, &s.v_g, &s.m_d, &s.v_d] {
-                fused.extend_from_slice(v);
-            }
-            if fused.len() != self.mm.fused_state_len {
-                bail!(
-                    "state length {} != fused_state_len {}",
-                    fused.len(),
-                    self.mm.fused_state_len
-                );
-            }
-            self.device = Some(self.rt.to_device(&fused, &[fused.len()])?);
-        }
-        Ok(())
-    }
-
-    /// Pull device-resident state back into `self.state` (no-op when the
-    /// host copy is already current).
+    /// Pull backend-resident state back into `self.state` (cheap/no-op
+    /// when the host copy is already current).
     pub fn sync_state(&mut self) -> Result<()> {
-        if !self.dirty {
-            return Ok(());
-        }
-        let buf = self.device.as_ref().expect("dirty implies device state");
-        let fused = crate::runtime::buf_to_f32_vec(buf)?;
-        let mut o = self.mm.fused_metrics;
-        let mut take = |n: usize| {
-            let v = fused[o..o + n].to_vec();
-            o += n;
-            v
-        };
-        let (gl, dl) = (self.mm.g_params, self.mm.d_params);
-        self.state.g = take(gl);
-        self.state.d = take(dl);
-        self.state.m_g = take(gl);
-        self.state.v_g = take(gl);
-        self.state.m_d = take(dl);
-        self.state.v_d = take(dl);
-        self.dirty = false;
-        Ok(())
+        self.session.sync(&mut self.state)
     }
 
-    /// Run one mini-batch through the AOT train step; returns metrics.
+    /// Run one mini-batch through the backend's fused train step; returns
+    /// the step metrics.
     pub fn step(
         &mut self,
         ds: &Dataset,
@@ -274,7 +210,7 @@ impl<'a> Trainer<'a> {
         let spec = &self.mm.spec;
         let b = self.meta.train_batch;
         if indices.len() != b {
-            bail!("batch size {} != artifact batch {b}", indices.len());
+            bail!("batch size {} != train batch {b}", indices.len());
         }
         let batch = build_batch(spec, &ds.train, indices, rng);
         let stats = ds.stats.to_vec();
@@ -285,47 +221,7 @@ impl<'a> Trainer<'a> {
             if cfg.mlp_mode { 1.0 } else { 0.0 },
             t,
         ];
-        // §Perf: the fused state buffer stays device-resident across
-        // steps; only the batch goes up and only 4 metrics come down.
-        self.ensure_device()?;
-        if self.stats_buf.is_none() {
-            self.stats_buf =
-                Some(self.rt.to_device(&stats, &[self.meta.stats_len])?);
-        }
-        let spec_onehot = spec.onehot_dim;
-        let noise_dim = spec.noise_dim;
-        let batch_bufs = [
-            self.rt.to_device(&batch.net, &[b, N_NET])?,
-            self.rt.to_device(&batch.onehot, &[b, spec_onehot])?,
-            self.rt.to_device(&batch.obj, &[b, N_OBJ])?,
-            self.rt.to_device(&batch.noise, &[b, noise_dim])?,
-            self.rt.to_device(&knobs, &[4])?,
-        ];
-        let inputs: Vec<&crate::runtime::Buffer> = vec![
-            self.device.as_ref().unwrap(),
-            &batch_bufs[0],
-            &batch_bufs[1],
-            &batch_bufs[2],
-            &batch_bufs[3],
-            self.stats_buf.as_ref().unwrap(),
-            &batch_bufs[4],
-        ];
-        let mut out = self.step_exe.run_b(&inputs)?;
-        if out.len() != 1 {
-            bail!(
-                "fused train_step returned {} buffers, expected 1",
-                out.len()
-            );
-        }
-        let fused = out.pop().unwrap();
-        // CopyRawToHost is unimplemented on the CPU plugin, so the metrics
-        // read is a full literal download (~8 MB, ~1 ms) — still far
-        // cheaper than the literal-path round trip of all 6 state vectors.
-        let lit = fused.to_literal_sync()?;
-        let m = crate::runtime::to_f32_vec(&lit)?;
-        let m = &m[..self.mm.fused_metrics];
-        self.device = Some(fused);
-        self.dirty = true;
+        let m = self.session.step(&batch, b, &stats, knobs)?;
         self.state.step += 1;
         Ok(StepMetrics {
             loss_config: m[0],
@@ -395,10 +291,6 @@ impl<'a> Trainer<'a> {
         self.sync_state()?;
         Ok(())
     }
-
-    pub fn runtime(&self) -> &Runtime {
-        self.rt
-    }
 }
 
 /// Write the loss history as CSV (epoch, loss_config, loss_critic,
@@ -459,6 +351,31 @@ mod tests {
         std::fs::write(&tmp, b"GARBAGE!").unwrap();
         assert!(GanState::load(&tmp).is_err());
         std::fs::remove_file(&tmp).ok();
+    }
+
+    #[test]
+    fn trainer_runs_on_cpu_backend_and_syncs() {
+        use crate::runtime::CpuBackend;
+        use crate::space::Meta;
+        let meta = Meta::builtin(16, 2, 2, 8, 8);
+        let mm = meta.model("dnnweaver").unwrap();
+        let ds = crate::dataset::generate(&mm.spec, 32, 0, 11);
+        let backend = CpuBackend::new(1);
+        let state = GanState::init(mm, "dnnweaver", 5);
+        let g0 = state.g.clone();
+        let mut tr =
+            Trainer::new(&backend, &meta, "dnnweaver", state).unwrap();
+        let cfg = TrainConfig {
+            epochs: 1,
+            lr: 1e-3,
+            log_every: 0,
+            ..Default::default()
+        };
+        tr.train(&ds, &cfg).unwrap();
+        assert_eq!(tr.state.step, 4); // 32 samples / batch 8
+        assert_ne!(tr.state.g, g0, "training must move the parameters");
+        assert_eq!(tr.history.len(), 1);
+        assert!(tr.history[0].loss_config.is_finite());
     }
 
     #[test]

@@ -24,7 +24,7 @@ use crate::dataset::Dataset;
 use crate::explorer::{DseRequest, Explorer};
 use crate::gan::{GanState, TrainConfig, Trainer};
 use crate::metrics;
-use crate::runtime::Runtime;
+use crate::runtime::backend::Backend;
 use crate::select::SelectEngine;
 use crate::space::Meta;
 use crate::util::rng::Rng;
@@ -115,7 +115,7 @@ pub fn tasks_from_dataset(ds: &Dataset) -> Vec<DseRequest> {
 /// any thread count; only the Table-5 DSE-time column moves).
 #[allow(clippy::too_many_arguments)]
 pub fn run_gan_method(
-    rt: &Runtime,
+    backend: &dyn Backend,
     meta: &Meta,
     model: &str,
     ds: &Dataset,
@@ -127,7 +127,7 @@ pub fn run_gan_method(
 ) -> Result<MethodResult> {
     let mm = meta.model(model)?;
     let state = GanState::init(mm, model, init_seed);
-    let mut tr = Trainer::new(rt, meta, model, state)?;
+    let mut tr = Trainer::new(backend, meta, model, state)?;
     let t0 = Instant::now();
     tr.train(ds, train_cfg)?;
     let train_time_s = t0.elapsed().as_secs_f64();
@@ -135,8 +135,13 @@ pub fn run_gan_method(
     let history = tr.history.clone();
     let state = tr.state;
 
-    let mut ex =
-        Explorer::new(rt, meta, model, state.g.clone(), ds.stats.to_vec())?;
+    let mut ex = Explorer::new(
+        backend,
+        meta,
+        model,
+        state.g.clone(),
+        ds.stats.to_vec(),
+    )?;
     ex.engine = engine;
     let t1 = Instant::now();
     let results = ex.explore(tasks)?;
@@ -366,12 +371,12 @@ pub fn fig89_csv(results: &[MethodResult]) -> String {
     out
 }
 
-/// Ablation (DESIGN.md §4): probability-threshold sweep for the GAN —
+/// Ablation (DESIGN.md §5): probability-threshold sweep for the GAN —
 /// satisfied count and candidate-set size vs threshold.  Reuses one
 /// trained generator; only the explorer threshold changes.
 #[allow(clippy::too_many_arguments)]
 pub fn ablate_threshold(
-    rt: &Runtime,
+    backend: &dyn Backend,
     meta: &Meta,
     model: &str,
     ds: &Dataset,
@@ -384,7 +389,7 @@ pub fn ablate_threshold(
         String::from("threshold,n_satisfied,n_tasks,avg_candidates,dse_s\n");
     for &thr in thresholds {
         let mut ex =
-            Explorer::new(rt, meta, model, g_params.clone(),
+            Explorer::new(backend, meta, model, g_params.clone(),
                           ds.stats.to_vec())?;
         ex.threshold = thr;
         ex.engine = engine;

@@ -20,6 +20,7 @@ pub mod gan;
 pub mod harness;
 pub mod metrics;
 pub mod model;
+pub mod nn;
 pub mod parser;
 pub mod rtl;
 pub mod runtime;

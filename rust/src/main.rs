@@ -20,7 +20,7 @@ use gandse::gan::{history_csv, GanState, TrainConfig, Trainer};
 use gandse::harness;
 use gandse::parser;
 use gandse::rtl;
-use gandse::runtime::Runtime;
+use gandse::runtime::backend::{self, Backend, BackendKind};
 use gandse::select::SelectEngine;
 use gandse::space::{builtin_spec, Meta};
 use gandse::util::args::Args;
@@ -48,9 +48,18 @@ COMMANDS
   rtl       --model M --cfg v1,v2,... [--out file.v]
 
 COMMON
+  --backend <cpu|pjrt>  execution backend for train/explore/eval/serve/
+            bench (default: cpu — pure Rust, no artifacts needed; pjrt
+            runs the AOT HLO artifacts and needs `make artifacts` plus a
+            --features pjrt build)
   --artifacts DIR   artifact directory (default: ./artifacts)
-  (--threads: selection-engine workers, 0 = all cores; results are
-   identical at any thread count — only wall-clock changes)
+  --width W --g-depth GD --d-depth DD --train-batch TB --infer-batch IB
+            network hyperparameters when no artifacts/meta.json exists
+            (cpu backend; defaults 256/6/6/64/64 — must match between
+            train and explore/eval/serve for a given checkpoint)
+  (--threads: worker threads for the selection engine and the cpu
+   backend, 0 = all cores; selection results are identical at any thread
+   count — only wall-clock changes)
 ";
 
 fn main() {
@@ -83,6 +92,39 @@ fn main() {
 
 fn artifacts_dir(args: &Args) -> PathBuf {
     PathBuf::from(args.get_or("artifacts", "artifacts"))
+}
+
+/// Construct the `--backend` selected execution backend (default: cpu).
+/// The cpu backend shares the `--threads` knob with the selection engine.
+fn make_backend(
+    args: &Args,
+    dir: &Path,
+) -> Result<(BackendKind, Box<dyn Backend>)> {
+    let kind = BackendKind::from_name(&args.get_or("backend", "cpu"))?;
+    let threads = args.get_usize("threads", 0)?;
+    Ok((kind, backend::create(kind, dir, threads)?))
+}
+
+/// `artifacts/meta.json` when present (the artifact contract wins);
+/// otherwise the builtin contract with CLI-tunable hyperparameters — the
+/// cpu backend needs no artifacts at all.  The pjrt backend always
+/// requires real artifacts.
+fn load_meta(args: &Args, dir: &Path, kind: BackendKind) -> Result<Meta> {
+    if kind == BackendKind::Pjrt && !dir.join("meta.json").exists() {
+        bail!(
+            "{:?} has no meta.json — the pjrt backend needs AOT artifacts \
+             (run `make artifacts`), or use --backend cpu",
+            dir
+        );
+    }
+    Ok(Meta::load_or_builtin(
+        dir,
+        args.get_usize("width", 256)?,
+        args.get_usize("g-depth", 6)?,
+        args.get_usize("d-depth", 6)?,
+        args.get_usize("train-batch", 64)?,
+        args.get_usize("infer-batch", 64)?,
+    )?)
 }
 
 fn load_or_generate_dataset(
@@ -143,8 +185,8 @@ fn cmd_dataset(args: &Args) -> Result<()> {
 fn cmd_train(args: &Args) -> Result<()> {
     let model = args.get_or("model", "dnnweaver");
     let dir = artifacts_dir(args);
-    let meta = Meta::load(&dir)?;
-    let rt = Runtime::new(&dir)?;
+    let (kind, backend) = make_backend(args, &dir)?;
+    let meta = load_meta(args, &dir, kind)?;
     let ds = load_or_generate_dataset(args, &model, 8192, 256)?;
     let cfg = TrainConfig {
         lr: args.get_f32("lr", 1e-4)?,
@@ -159,13 +201,14 @@ fn cmd_train(args: &Args) -> Result<()> {
         Some(p) => GanState::load(Path::new(p))?,
         None => GanState::init(mm, &model, args.get_u64("init-seed", 1)?),
     };
-    let mut tr = Trainer::new(&rt, &meta, &model, state)?;
+    let mut tr = Trainer::new(backend.as_ref(), &meta, &model, state)?;
     let t0 = std::time::Instant::now();
     tr.train(&ds, &cfg)?;
     println!(
-        "trained {} steps in {:.1}s (G+D = {} params)",
+        "trained {} steps in {:.1}s on {} (G+D = {} params)",
         tr.state.step,
         t0.elapsed().as_secs_f64(),
+        backend.platform(),
         mm.g_params + mm.d_params
     );
     if let Some(csv) = args.get("loss-csv") {
@@ -182,15 +225,20 @@ fn cmd_train(args: &Args) -> Result<()> {
 fn cmd_explore(args: &Args) -> Result<()> {
     let model = args.get_or("model", "dnnweaver");
     let dir = artifacts_dir(args);
-    let meta = Meta::load(&dir)?;
-    let rt = Runtime::new(&dir)?;
+    let (kind, backend) = make_backend(args, &dir)?;
+    let meta = load_meta(args, &dir, kind)?;
     let ckpt = args
         .get("ckpt")
         .context("--ckpt <file> is required (run `gandse train` first)")?;
     let state = GanState::load(Path::new(ckpt))?;
     let ds = load_or_generate_dataset(args, &model, 2048, 16)?;
-    let mut ex =
-        Explorer::new(&rt, &meta, &model, state.g, ds.stats.to_vec())?;
+    let mut ex = Explorer::new(
+        backend.as_ref(),
+        &meta,
+        &model,
+        state.g,
+        ds.stats.to_vec(),
+    )?;
     ex.threshold = args.get_f32("threshold", 0.2)?;
     ex.engine = SelectEngine::with_threads(args.get_usize("threads", 0)?);
 
@@ -270,14 +318,19 @@ fn cmd_explore(args: &Args) -> Result<()> {
 fn cmd_eval(args: &Args) -> Result<()> {
     let model = args.get_or("model", "dnnweaver");
     let dir = artifacts_dir(args);
-    let meta = Meta::load(&dir)?;
-    let rt = Runtime::new(&dir)?;
+    let (kind, backend) = make_backend(args, &dir)?;
+    let meta = load_meta(args, &dir, kind)?;
     let ckpt = args.get("ckpt").context("--ckpt <file> is required")?;
     let state = GanState::load(Path::new(ckpt))?;
     let ds = load_or_generate_dataset(args, &model, 4096, 500)?;
     let tasks = harness::tasks_from_dataset(&ds);
-    let mut ex =
-        Explorer::new(&rt, &meta, &model, state.g, ds.stats.to_vec())?;
+    let mut ex = Explorer::new(
+        backend.as_ref(),
+        &meta,
+        &model,
+        state.g,
+        ds.stats.to_vec(),
+    )?;
     ex.threshold = args.get_f32("threshold", 0.2)?;
     ex.engine = SelectEngine::with_threads(args.get_usize("threads", 0)?);
     args.reject_unknown()?;
@@ -347,14 +400,16 @@ fn cmd_eval(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let model = args.get_or("model", "dnnweaver");
     let dir = artifacts_dir(args);
-    // serving needs 'static: leak runtime + meta (process-lifetime server)
-    let meta: &'static Meta = Box::leak(Box::new(Meta::load(&dir)?));
-    let rt: &'static Runtime = Box::leak(Box::new(Runtime::new(&dir)?));
+    // serving needs 'static: leak backend + meta (process-lifetime server)
+    let (kind, backend) = make_backend(args, &dir)?;
+    let backend: &'static dyn Backend = Box::leak(backend);
+    let meta: &'static Meta =
+        Box::leak(Box::new(load_meta(args, &dir, kind)?));
     let ckpt = args.get("ckpt").context("--ckpt <file> is required")?;
     let state = GanState::load(Path::new(ckpt))?;
     let ds = load_or_generate_dataset(args, &model, 2048, 16)?;
-    let model: &'static str = Box::leak(model.into_boxed_str());
-    let mut ex = Explorer::new(rt, meta, model, state.g, ds.stats.to_vec())?;
+    let mut ex =
+        Explorer::new(backend, meta, &model, state.g, ds.stats.to_vec())?;
     ex.threshold = args.get_f32("threshold", 0.2)?;
     ex.engine = SelectEngine::with_threads(args.get_usize("threads", 0)?);
     let addr = args.get_or("addr", "127.0.0.1:7878");
@@ -374,8 +429,8 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let exp = args.get_or("exp", "all");
     let model = args.get_or("model", "dnnweaver");
     let dir = artifacts_dir(args);
-    let meta = Meta::load(&dir)?;
-    let rt = Runtime::new(&dir)?;
+    let (kind, backend) = make_backend(args, &dir)?;
+    let meta = load_meta(args, &dir, kind)?;
     let ds = load_or_generate_dataset(args, &model, 4096, 200)?;
     let tasks = harness::tasks_from_dataset(&ds);
     let epochs = args.get_usize("epochs", 8)?;
@@ -395,10 +450,10 @@ fn cmd_bench(args: &Args) -> Result<()> {
         eprintln!("[bench] training GAN for threshold ablation...");
         let mm = meta.model(&model)?;
         let state = GanState::init(mm, &model, 22);
-        let mut tr = Trainer::new(&rt, &meta, &model, state)?;
+        let mut tr = Trainer::new(backend.as_ref(), &meta, &model, state)?;
         tr.train(&ds, &TrainConfig { epochs, ..Default::default() })?;
         let csv = harness::ablate_threshold(
-            &rt,
+            backend.as_ref(),
             &meta,
             &model,
             &ds,
@@ -429,14 +484,22 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let mlp_cfg =
         TrainConfig { mlp_mode: true, epochs, ..TrainConfig::default() };
     results.push(harness::run_gan_method(
-        &rt, &meta, &model, &ds, &tasks, &mlp_cfg, "Large MLP", 21, engine,
+        backend.as_ref(),
+        &meta,
+        &model,
+        &ds,
+        &tasks,
+        &mlp_cfg,
+        "Large MLP",
+        21,
+        engine,
     )?);
     for &w in &wcritics {
         eprintln!("[bench] GAN w_critic={w} ({epochs} epochs)...");
         let cfg =
             TrainConfig { w_critic: w, epochs, ..TrainConfig::default() };
         results.push(harness::run_gan_method(
-            &rt,
+            backend.as_ref(),
             &meta,
             &model,
             &ds,

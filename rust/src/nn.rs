@@ -1,0 +1,387 @@
+//! Pure-Rust neural-network primitives shared by the CPU training backend
+//! ([`crate::runtime::cpu`]) and the DRL baseline's policy network
+//! ([`crate::baselines::net`]).
+//!
+//! One flat-parameter MLP convention for the whole crate, matching the
+//! Python `model.MlpLayout` (and therefore the PJRT artifacts and
+//! `gan::GanState`) exactly: per layer, the weight matrix `W[in, out]`
+//! (row-major) followed by the bias `b[out]`.  Hidden layers are ReLU,
+//! the output layer is linear.  All math is f32 with the same operation
+//! order as the jnp reference so the two backends are structurally
+//! comparable (not bit-identical — XLA fuses differently — but
+//! gradient-checked against finite differences in
+//! `tests/cpu_backend.rs`).
+
+use crate::util::rng::Rng;
+
+pub const ADAM_B1: f32 = 0.9;
+pub const ADAM_B2: f32 = 0.999;
+pub const ADAM_EPS: f32 = 1e-8;
+
+/// Shapes + flat offsets of one MLP's parameters.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MlpLayout {
+    /// (in, h, ..., out)
+    pub dims: Vec<usize>,
+}
+
+impl MlpLayout {
+    pub fn new(dims: &[usize]) -> MlpLayout {
+        assert!(dims.len() >= 2, "an MLP needs at least one layer");
+        MlpLayout { dims: dims.to_vec() }
+    }
+
+    /// Total flat-parameter count (sum of `in*out + out` per layer).
+    pub fn total(&self) -> usize {
+        self.dims.windows(2).map(|w| w[0] * w[1] + w[1]).sum()
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.dims.len() - 1
+    }
+
+    pub fn in_dim(&self) -> usize {
+        self.dims[0]
+    }
+
+    pub fn out_dim(&self) -> usize {
+        *self.dims.last().unwrap()
+    }
+
+    /// Flat index of weight `W[i, o]` of layer `layer` (for tests that
+    /// poke individual parameters).
+    pub fn w_index(&self, layer: usize, i: usize, o: usize) -> usize {
+        let mut off = 0;
+        for w in self.dims.windows(2).take(layer) {
+            off += w[0] * w[1] + w[1];
+        }
+        off + i * self.dims[layer + 1] + o
+    }
+}
+
+/// He-style initialization of a flat MLP parameter vector: weights scaled
+/// by sqrt(2/fan_in), biases zero.  One `rng.normal()` draw per weight, in
+/// flat-layout order (the seed's `gan::init_mlp_flat` stream, verbatim —
+/// checkpoints and fixed-seed tests depend on it).
+pub fn init_he_flat(dims: &[usize], rng: &mut Rng) -> Vec<f32> {
+    let total: usize = dims.windows(2).map(|w| w[0] * w[1] + w[1]).sum();
+    let mut out = Vec::with_capacity(total);
+    for w in dims.windows(2) {
+        let (i, o) = (w[0], w[1]);
+        let scale = (2.0 / i as f32).sqrt();
+        for _ in 0..i * o {
+            out.push(rng.normal() * scale);
+        }
+        out.extend(std::iter::repeat(0.0).take(o));
+    }
+    out
+}
+
+/// Batched forward pass.  `x` is row-major `[b, dims[0]]`.  Returns the
+/// activation tape: `acts[0]` is the input, `acts[l+1]` the post-activation
+/// output of layer `l` (`[b, dims[l+1]]`); the last entry holds the logits.
+pub fn forward(
+    layout: &MlpLayout,
+    flat: &[f32],
+    x: &[f32],
+    b: usize,
+) -> Vec<Vec<f32>> {
+    let dims = &layout.dims;
+    debug_assert_eq!(flat.len(), layout.total());
+    debug_assert_eq!(x.len(), b * dims[0]);
+    let mut acts: Vec<Vec<f32>> = Vec::with_capacity(dims.len());
+    acts.push(x.to_vec());
+    let last = layout.n_layers() - 1;
+    let mut off = 0usize;
+    for (li, w) in dims.windows(2).enumerate() {
+        let (din, dout) = (w[0], w[1]);
+        let wts = &flat[off..off + din * dout];
+        let bias = &flat[off + din * dout..off + din * dout + dout];
+        off += din * dout + dout;
+        let inp = &acts[li];
+        let mut out = vec![0f32; b * dout];
+        for r in 0..b {
+            let xrow = &inp[r * din..(r + 1) * din];
+            let orow = &mut out[r * dout..(r + 1) * dout];
+            orow.copy_from_slice(bias);
+            for (i, &xi) in xrow.iter().enumerate() {
+                if xi != 0.0 {
+                    let wrow = &wts[i * dout..(i + 1) * dout];
+                    for (o, &wv) in orow.iter_mut().zip(wrow) {
+                        *o += xi * wv;
+                    }
+                }
+            }
+            if li != last {
+                for o in orow.iter_mut() {
+                    *o = o.max(0.0);
+                }
+            }
+        }
+        acts.push(out);
+    }
+    acts
+}
+
+/// Batched backward pass from the output gradient `dout` (`[b, out]`).
+///
+/// * `grads: Some(_)` — accumulates parameter gradients (flat layout,
+///   summed over the batch) into the slice; pass `None` to skip (e.g. when
+///   only the input gradient is needed, as for the critic loss where the
+///   discriminator's weights are frozen).
+/// * `dx_out: Some(_)` — receives the gradient w.r.t. the input
+///   (`[b, dims[0]]`); pass `None` to skip.
+///
+/// The ReLU mask uses the stored post-activation (`> 0`), matching the
+/// jnp `relu` VJP (zero gradient at exactly zero).
+pub fn backward(
+    layout: &MlpLayout,
+    flat: &[f32],
+    acts: &[Vec<f32>],
+    dout: &[f32],
+    b: usize,
+    mut grads: Option<&mut [f32]>,
+    mut dx_out: Option<&mut [f32]>,
+) {
+    let dims = &layout.dims;
+    let n_layers = layout.n_layers();
+    debug_assert_eq!(acts.len(), dims.len());
+    debug_assert_eq!(dout.len(), b * dims[n_layers]);
+    if let Some(g) = grads.as_deref() {
+        assert_eq!(g.len(), layout.total());
+    }
+    let mut delta = dout.to_vec();
+    let mut offset_end = layout.total();
+    for li in (0..n_layers).rev() {
+        let (din, dlo) = (dims[li], dims[li + 1]);
+        let inp = &acts[li];
+        let outp = &acts[li + 1];
+        // ReLU mask for hidden layers (post-activation stored).
+        if li != n_layers - 1 {
+            for (d, &o) in delta.iter_mut().zip(outp.iter()) {
+                if o <= 0.0 {
+                    *d = 0.0;
+                }
+            }
+        }
+        let nb = dlo;
+        let nw = din * dlo;
+        let b_off = offset_end - nb;
+        let w_off = b_off - nw;
+        let wts = &flat[w_off..b_off];
+        if let Some(g) = grads.as_deref_mut() {
+            let gbias = &mut g[b_off..offset_end];
+            for r in 0..b {
+                let drow = &delta[r * dlo..(r + 1) * dlo];
+                for (gb, &d) in gbias.iter_mut().zip(drow) {
+                    *gb += d;
+                }
+            }
+        }
+        let need_dx = li > 0 || dx_out.is_some();
+        let mut dx = if need_dx { vec![0f32; b * din] } else { Vec::new() };
+        for r in 0..b {
+            let xrow = &inp[r * din..(r + 1) * din];
+            let drow = &delta[r * dlo..(r + 1) * dlo];
+            for i in 0..din {
+                let xi = xrow[i];
+                let wrow = &wts[i * dlo..(i + 1) * dlo];
+                let mut acc = 0f32;
+                if let Some(g) = grads.as_deref_mut() {
+                    let grow =
+                        &mut g[w_off + i * dlo..w_off + (i + 1) * dlo];
+                    for o in 0..dlo {
+                        grow[o] += xi * drow[o];
+                        acc += drow[o] * wrow[o];
+                    }
+                } else {
+                    for (&d, &wv) in drow.iter().zip(wrow) {
+                        acc += d * wv;
+                    }
+                }
+                if need_dx {
+                    dx[r * din + i] = acc;
+                }
+            }
+        }
+        if li == 0 {
+            if let Some(out) = dx_out.as_deref_mut() {
+                out.copy_from_slice(&dx);
+            }
+        }
+        delta = dx;
+        offset_end = w_off;
+    }
+    debug_assert_eq!(offset_end, 0);
+}
+
+/// One Adam update on a flat parameter vector (`t` is the 1-based step
+/// count, matching the Python `adam_update` bias correction exactly).
+pub fn adam_update(
+    p: &mut [f32],
+    g: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    t: f32,
+    lr: f32,
+) {
+    debug_assert_eq!(p.len(), g.len());
+    debug_assert_eq!(p.len(), m.len());
+    debug_assert_eq!(p.len(), v.len());
+    let bc1 = 1.0 - ADAM_B1.powf(t);
+    let bc2 = 1.0 - ADAM_B2.powf(t);
+    for k in 0..p.len() {
+        let gk = g[k];
+        m[k] = ADAM_B1 * m[k] + (1.0 - ADAM_B1) * gk;
+        v[k] = ADAM_B2 * v[k] + (1.0 - ADAM_B2) * gk * gk;
+        let mh = m[k] / bc1;
+        let vh = v[k] / bc2;
+        p[k] -= lr * mh / (vh.sqrt() + ADAM_EPS);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_totals_and_indices() {
+        let l = MlpLayout::new(&[4, 8, 3]);
+        assert_eq!(l.total(), 4 * 8 + 8 + 8 * 3 + 3);
+        assert_eq!(l.n_layers(), 2);
+        assert_eq!(l.in_dim(), 4);
+        assert_eq!(l.out_dim(), 3);
+        assert_eq!(l.w_index(0, 0, 0), 0);
+        assert_eq!(l.w_index(0, 1, 2), 8 + 2);
+        assert_eq!(l.w_index(1, 0, 0), 4 * 8 + 8);
+    }
+
+    #[test]
+    fn init_he_flat_layout() {
+        let mut rng = Rng::new(1);
+        let v = init_he_flat(&[4, 8, 3], &mut rng);
+        assert_eq!(v.len(), 4 * 8 + 8 + 8 * 3 + 3);
+        // biases of layer 0 are zero, weights are not all zero
+        assert!(v[32..40].iter().all(|&x| x == 0.0));
+        assert!(v[..32].iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn batched_forward_matches_per_row() {
+        let mut rng = Rng::new(2);
+        let layout = MlpLayout::new(&[3, 5, 2]);
+        let flat = init_he_flat(&layout.dims, &mut rng);
+        let x: Vec<f32> = (0..12).map(|i| (i as f32 - 6.0) * 0.3).collect();
+        let batched = forward(&layout, &flat, &x, 4);
+        for r in 0..4 {
+            let single = forward(&layout, &flat, &x[r * 3..(r + 1) * 3], 1);
+            assert_eq!(
+                &batched.last().unwrap()[r * 2..(r + 1) * 2],
+                &single.last().unwrap()[..]
+            );
+        }
+    }
+
+    #[test]
+    fn backward_matches_finite_differences() {
+        let mut rng = Rng::new(3);
+        let layout = MlpLayout::new(&[3, 6, 2]);
+        let flat = init_he_flat(&layout.dims, &mut rng);
+        let x = [0.5f32, -0.3, 0.8, -0.1, 0.9, 0.2];
+        let b = 2;
+        // loss = sum over batch of sum(y^2)/2; dL/dy = y
+        let loss = |p: &[f32]| -> f32 {
+            let acts = forward(&layout, p, &x, b);
+            acts.last().unwrap().iter().map(|v| v * v).sum::<f32>() / 2.0
+        };
+        let acts = forward(&layout, &flat, &x, b);
+        let dout = acts.last().unwrap().clone();
+        let mut grads = vec![0f32; layout.total()];
+        let mut dx = vec![0f32; b * 3];
+        backward(
+            &layout,
+            &flat,
+            &acts,
+            &dout,
+            b,
+            Some(&mut grads),
+            Some(&mut dx),
+        );
+        let eps = 1e-3f32;
+        for k in [0usize, 7, 20, layout.total() - 1] {
+            let mut p = flat.clone();
+            p[k] += eps;
+            let lp = loss(&p);
+            p[k] = flat[k] - eps;
+            let lm = loss(&p);
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (fd - grads[k]).abs() < 2e-2 * (1.0 + fd.abs()),
+                "param {k}: fd={fd} an={}",
+                grads[k]
+            );
+        }
+        // input gradient via FD on x
+        let mut xv = x.to_vec();
+        for k in [0usize, 4] {
+            let orig = xv[k];
+            xv[k] = orig + eps;
+            let acts_p = forward(&layout, &flat, &xv, b);
+            let lp: f32 =
+                acts_p.last().unwrap().iter().map(|v| v * v).sum::<f32>()
+                    / 2.0;
+            xv[k] = orig - eps;
+            let acts_m = forward(&layout, &flat, &xv, b);
+            let lm: f32 =
+                acts_m.last().unwrap().iter().map(|v| v * v).sum::<f32>()
+                    / 2.0;
+            xv[k] = orig;
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (fd - dx[k]).abs() < 2e-2 * (1.0 + fd.abs()),
+                "input {k}: fd={fd} an={}",
+                dx[k]
+            );
+        }
+    }
+
+    #[test]
+    fn backward_without_param_grads_gives_same_dx() {
+        let mut rng = Rng::new(4);
+        let layout = MlpLayout::new(&[4, 6, 3]);
+        let flat = init_he_flat(&layout.dims, &mut rng);
+        let x: Vec<f32> = (0..8).map(|i| 0.1 * i as f32 - 0.3).collect();
+        let acts = forward(&layout, &flat, &x, 2);
+        let dout: Vec<f32> =
+            (0..6).map(|i| 0.2 * (i as f32) - 0.5).collect();
+        let mut grads = vec![0f32; layout.total()];
+        let mut dx_a = vec![0f32; 8];
+        backward(
+            &layout,
+            &flat,
+            &acts,
+            &dout,
+            2,
+            Some(&mut grads),
+            Some(&mut dx_a),
+        );
+        let mut dx_b = vec![0f32; 8];
+        backward(&layout, &flat, &acts, &dout, 2, None, Some(&mut dx_b));
+        assert_eq!(dx_a, dx_b);
+    }
+
+    #[test]
+    fn adam_reduces_quadratic() {
+        // minimize sum(p^2)/2 — Adam should shrink the parameters.
+        let mut p = vec![1.0f32, -2.0, 3.0];
+        let mut m = vec![0f32; 3];
+        let mut v = vec![0f32; 3];
+        let norm0: f32 = p.iter().map(|x| x * x).sum();
+        for t in 1..=200 {
+            let g: Vec<f32> = p.clone();
+            adam_update(&mut p, &g, &mut m, &mut v, t as f32, 0.05);
+        }
+        let norm1: f32 = p.iter().map(|x| x * x).sum();
+        assert!(norm1 < 0.1 * norm0, "{norm0} -> {norm1}");
+    }
+}

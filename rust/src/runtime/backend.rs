@@ -1,0 +1,152 @@
+//! The execution-backend abstraction (DESIGN.md "Backends").
+//!
+//! Everything that runs a neural network in this crate — the Algorithm-1
+//! training loop and the exploration-phase generator inference — goes
+//! through the [`Backend`] trait.  Two implementations:
+//!
+//! * [`crate::runtime::cpu::CpuBackend`] — pure Rust, always available.
+//!   Native batched forward/backward/Adam for the G/D MLPs described by
+//!   [`crate::space::ModelMeta`]; no artifacts, no `meta.json`, runs on
+//!   any machine (and therefore in CI).
+//! * [`crate::runtime::pjrt::PjrtBackend`] — the AOT HLO path through the
+//!   PJRT runtime ([`crate::runtime::Runtime`]).  Requires `make
+//!   artifacts` and a `--features pjrt` build; under the default build its
+//!   sessions fail with the stub runtime's typed error.
+//!
+//! The contract both implement: one fused Algorithm-1 step per
+//! [`TrainStepper::step`] call (forward G, decode + design-model label
+//! with stop-gradient, the three losses, backprop, Adam for both
+//! networks), with knobs `[lr, w_critic, mlp_mode, t]` and metrics
+//! `[loss_config, loss_critic, loss_dis, sat_frac]` — exactly the
+//! `train_step` signature of `python/compile/model.py`.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::dataset::BatchBuffers;
+use crate::gan::GanState;
+use crate::space::Meta;
+
+/// Which execution backend to use (the `--backend` CLI knob).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Pure-Rust CPU training/inference (default; no artifacts needed).
+    Cpu,
+    /// AOT HLO artifacts through the PJRT runtime (`--features pjrt`).
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn from_name(name: &str) -> Result<BackendKind> {
+        match name {
+            "cpu" => Ok(BackendKind::Cpu),
+            "pjrt" => Ok(BackendKind::Pjrt),
+            other => bail!(
+                "unknown backend {other:?} (expected \"cpu\" or \"pjrt\")"
+            ),
+        }
+    }
+
+    pub const fn name(self) -> &'static str {
+        match self {
+            BackendKind::Cpu => "cpu",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+}
+
+impl std::fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One live training session: owns the authoritative parameter/optimizer
+/// state between steps (host vectors on cpu, a device-resident fused
+/// buffer on pjrt).  Created by [`Backend::train_session`]; driven by
+/// [`crate::gan::Trainer`].
+pub trait TrainStepper {
+    /// One fused Algorithm-1 mini-batch step.
+    ///
+    /// `rows` is the batch size of `batch`; `knobs` is
+    /// `[lr, w_critic, mlp_mode, t]` with `t` the 1-based Adam timestep.
+    /// Returns `[loss_config, loss_critic, loss_dis, sat_frac]`.
+    fn step(
+        &mut self,
+        batch: &BatchBuffers,
+        rows: usize,
+        stats: &[f32],
+        knobs: [f32; 4],
+    ) -> Result<[f32; 4]>;
+
+    /// Flush backend-resident parameters + optimizer state into `state`
+    /// (leaves `state.model` / `state.step` untouched).
+    fn sync(&mut self, state: &mut GanState) -> Result<()>;
+}
+
+/// An execution backend for GAN training and generator inference.
+pub trait Backend: Sync {
+    fn kind(&self) -> BackendKind;
+
+    /// Human-readable platform string for logs.
+    fn platform(&self) -> String;
+
+    /// Begin a training session for `model`, seeded from `state`.
+    fn train_session<'a>(
+        &'a self,
+        meta: &'a Meta,
+        model: &str,
+        state: &GanState,
+    ) -> Result<Box<dyn TrainStepper + 'a>>;
+
+    /// Batched generator inference: `net` is row-major `[rows, 6]`, `obj`
+    /// `[rows, 2]`, `noise` `[rows, noise_dim]`; returns per-group choice
+    /// probabilities, row-major `[rows, onehot_dim]`.
+    #[allow(clippy::too_many_arguments)]
+    fn infer_probs(
+        &self,
+        meta: &Meta,
+        model: &str,
+        g_params: &[f32],
+        net: &[f32],
+        obj: &[f32],
+        noise: &[f32],
+        stats: &[f32],
+        rows: usize,
+    ) -> Result<Vec<f32>>;
+}
+
+/// Construct the backend selected by `kind`.
+///
+/// `artifact_dir` roots the PJRT runtime (ignored by cpu); `threads` is
+/// the cpu backend's worker count (0 = all cores — the same knob as the
+/// selection engine).
+pub fn create(
+    kind: BackendKind,
+    artifact_dir: &Path,
+    threads: usize,
+) -> Result<Box<dyn Backend>> {
+    match kind {
+        BackendKind::Cpu => {
+            Ok(Box::new(crate::runtime::cpu::CpuBackend::new(threads)))
+        }
+        BackendKind::Pjrt => Ok(Box::new(
+            crate::runtime::pjrt::PjrtBackend::new(artifact_dir)?,
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_names_roundtrip() {
+        for k in [BackendKind::Cpu, BackendKind::Pjrt] {
+            assert_eq!(BackendKind::from_name(k.name()).unwrap(), k);
+            assert_eq!(k.to_string(), k.name());
+        }
+        assert!(BackendKind::from_name("tpu").is_err());
+    }
+}

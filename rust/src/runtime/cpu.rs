@@ -1,0 +1,753 @@
+//! Pure-Rust CPU training/inference backend.
+//!
+//! Implements the full Algorithm-1 train step natively — batched MLP
+//! forward for G and D, the three losses (config / critic / dis), manual
+//! backprop (including the critic path through the frozen discriminator
+//! and the per-group softmax Jacobian back into G), and Adam — for the
+//! shapes described by [`crate::space::ModelMeta`].  No HLO artifacts, no
+//! `meta.json` requirement (see [`crate::space::Meta::builtin`]), so the
+//! whole `train → explore → serve` pipeline runs on any machine.
+//!
+//! Semantics mirror `python/compile/model.py::train_step` operation for
+//! operation:
+//!
+//! * inputs are standardized with dataset statistics
+//!   (`[net_mean, net_std, obj_mean, obj_std]`),
+//! * the design model labels the **decoded** generated configuration
+//!   under stop-gradient (Lines 7-8 of Algorithm 1),
+//! * config loss is masked to unsatisfied samples (Line 11/14) unless
+//!   `mlp_mode` (the Figure 3(a) Large-MLP baseline) forces it on and the
+//!   critic weight to zero,
+//! * the critic loss backprops through D with **frozen** weights into G's
+//!   probabilities; the dis loss trains D against the actual satisfaction
+//!   labels.
+//!
+//! Work is sharded across batch rows with [`crate::select::run_sharded`]
+//! — the same fork-join machinery as the selection engine.  Every row is
+//! mathematically independent; only the final gradient reduction sums
+//! across shards, so results are deterministic for a fixed thread count
+//! (and bitwise-reproducible at `threads = 1`, which the fixed-seed
+//! golden tests pin).  Correctness is anchored by finite-difference
+//! gradient checks in `tests/cpu_backend.rs`.
+
+use anyhow::{bail, Result};
+
+use crate::dataset::BatchBuffers;
+use crate::gan::GanState;
+use crate::nn::{self, MlpLayout};
+use crate::runtime::backend::{Backend, BackendKind, TrainStepper};
+use crate::select::run_sharded;
+use crate::space::{Meta, ModelMeta, SpaceSpec, N_NET, N_OBJ};
+
+/// Minimum batch rows per worker before sharding engages (a train-step
+/// row costs a few hundred kFLOP even at tiny widths; below this, spawn
+/// overhead dominates).
+const MIN_ROWS_PER_SHARD: usize = 4;
+
+/// The pure-Rust CPU backend.  `threads == 0` means all cores.
+#[derive(Debug, Clone, Copy)]
+pub struct CpuBackend {
+    pub threads: usize,
+}
+
+impl CpuBackend {
+    pub fn new(threads: usize) -> CpuBackend {
+        CpuBackend { threads }
+    }
+}
+
+impl Backend for CpuBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Cpu
+    }
+
+    fn platform(&self) -> String {
+        format!(
+            "cpu (pure Rust, {} threads)",
+            if self.threads == 0 {
+                std::thread::available_parallelism()
+                    .map(|c| c.get())
+                    .unwrap_or(1)
+            } else {
+                self.threads
+            }
+        )
+    }
+
+    fn train_session<'a>(
+        &'a self,
+        meta: &'a Meta,
+        model: &str,
+        state: &GanState,
+    ) -> Result<Box<dyn TrainStepper + 'a>> {
+        let mm = meta.model(model)?;
+        let (gl, dl) = layouts(mm)?;
+        if state.g.len() != gl.total() || state.d.len() != dl.total() {
+            bail!(
+                "checkpoint shape mismatch: G {} / D {} params, meta \
+                 expects {} / {} (did --width/--g-depth/--d-depth change \
+                 between train and load?)",
+                state.g.len(),
+                state.d.len(),
+                gl.total(),
+                dl.total()
+            );
+        }
+        Ok(Box::new(CpuSession {
+            threads: self.threads,
+            spec: mm.spec.clone(),
+            gl,
+            dl,
+            g: state.g.clone(),
+            d: state.d.clone(),
+            m_g: state.m_g.clone(),
+            v_g: state.v_g.clone(),
+            m_d: state.m_d.clone(),
+            v_d: state.v_d.clone(),
+        }))
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn infer_probs(
+        &self,
+        meta: &Meta,
+        model: &str,
+        g_params: &[f32],
+        net: &[f32],
+        obj: &[f32],
+        noise: &[f32],
+        stats: &[f32],
+        rows: usize,
+    ) -> Result<Vec<f32>> {
+        let mm = meta.model(model)?;
+        let spec = &mm.spec;
+        let (gl, _) = layouts(mm)?;
+        if g_params.len() != gl.total() {
+            bail!(
+                "generator has {} params, meta expects {}",
+                g_params.len(),
+                gl.total()
+            );
+        }
+        check_batch_lens(spec, net, obj, noise, stats, rows)?;
+        let st = SplitStats::new(stats);
+        let onehot = spec.onehot_dim;
+        let blocks = run_sharded(
+            rows,
+            self.threads,
+            MIN_ROWS_PER_SHARD,
+            |start, end| {
+                let rb = end - start;
+                let g_x = build_g_input(
+                    spec, &st, net, obj, noise, start, end,
+                );
+                let acts = nn::forward(&gl, g_params, &g_x, rb);
+                let logits = acts.last().unwrap();
+                let mut probs = vec![0f32; rb * onehot];
+                // empty scratch = skip the log-softmax (inference only
+                // needs probabilities)
+                let mut scratch: Vec<f32> = Vec::new();
+                for r in 0..rb {
+                    group_softmax_row(
+                        spec,
+                        &logits[r * onehot..(r + 1) * onehot],
+                        &mut probs[r * onehot..(r + 1) * onehot],
+                        &mut scratch,
+                    );
+                }
+                probs
+            },
+        );
+        let mut out = Vec::with_capacity(rows * onehot);
+        for b in blocks {
+            out.extend_from_slice(&b);
+        }
+        Ok(out)
+    }
+}
+
+/// Resolve MLP layouts from meta, validating parameter counts.
+fn layouts(mm: &ModelMeta) -> Result<(MlpLayout, MlpLayout)> {
+    if mm.g_dims.len() < 2 || mm.d_dims.len() < 2 {
+        bail!("meta g_dims/d_dims must describe at least one layer");
+    }
+    let gl = MlpLayout::new(&mm.g_dims);
+    let dl = MlpLayout::new(&mm.d_dims);
+    if gl.total() != mm.g_params || dl.total() != mm.d_params {
+        bail!(
+            "meta parameter counts disagree with dims: G {} vs {}, D {} \
+             vs {}",
+            gl.total(),
+            mm.g_params,
+            dl.total(),
+            mm.d_params
+        );
+    }
+    if gl.in_dim() != mm.spec.g_in
+        || gl.out_dim() != mm.spec.onehot_dim
+        || dl.in_dim() != mm.spec.d_in
+        || dl.out_dim() != 2
+    {
+        bail!("meta dims disagree with the space spec shapes");
+    }
+    Ok((gl, dl))
+}
+
+fn check_batch_lens(
+    spec: &SpaceSpec,
+    net: &[f32],
+    obj: &[f32],
+    noise: &[f32],
+    stats: &[f32],
+    rows: usize,
+) -> Result<()> {
+    if net.len() != rows * N_NET
+        || obj.len() != rows * N_OBJ
+        || noise.len() != rows * spec.noise_dim
+    {
+        bail!(
+            "batch buffer shapes disagree with {rows} rows (net {}, obj \
+             {}, noise {})",
+            net.len(),
+            obj.len(),
+            noise.len()
+        );
+    }
+    if stats.len() != 2 * N_NET + 2 * N_OBJ {
+        bail!("stats length {} != {}", stats.len(), 2 * N_NET + 2 * N_OBJ);
+    }
+    Ok(())
+}
+
+/// stats = [net_mean(6), net_std(6), obj_mean(2), obj_std(2)].
+struct SplitStats {
+    net_mean: [f32; N_NET],
+    net_std: [f32; N_NET],
+    obj_mean: [f32; N_OBJ],
+    obj_std: [f32; N_OBJ],
+}
+
+impl SplitStats {
+    fn new(stats: &[f32]) -> SplitStats {
+        let mut s = SplitStats {
+            net_mean: [0.0; N_NET],
+            net_std: [1.0; N_NET],
+            obj_mean: [0.0; N_OBJ],
+            obj_std: [1.0; N_OBJ],
+        };
+        s.net_mean.copy_from_slice(&stats[0..N_NET]);
+        s.net_std.copy_from_slice(&stats[N_NET..2 * N_NET]);
+        s.obj_mean.copy_from_slice(&stats[2 * N_NET..2 * N_NET + N_OBJ]);
+        s.obj_std
+            .copy_from_slice(&stats[2 * N_NET + N_OBJ..2 * N_NET + 2 * N_OBJ]);
+        s
+    }
+}
+
+/// Build G's input block `[net_n, obj_n, noise]` for rows `start..end`.
+fn build_g_input(
+    spec: &SpaceSpec,
+    st: &SplitStats,
+    net: &[f32],
+    obj: &[f32],
+    noise: &[f32],
+    start: usize,
+    end: usize,
+) -> Vec<f32> {
+    let g_in = spec.g_in;
+    let nd = spec.noise_dim;
+    let mut g_x = Vec::with_capacity((end - start) * g_in);
+    for row in start..end {
+        for k in 0..N_NET {
+            g_x.push(
+                (net[row * N_NET + k] - st.net_mean[k]) / st.net_std[k],
+            );
+        }
+        for k in 0..N_OBJ {
+            g_x.push(
+                (obj[row * N_OBJ + k] - st.obj_mean[k]) / st.obj_std[k],
+            );
+        }
+        g_x.extend_from_slice(&noise[row * nd..(row + 1) * nd]);
+    }
+    g_x
+}
+
+/// Per-group numerically-stable softmax of one logits row.  Writes
+/// probabilities into `probs`; `log_probs` (same shape scratch) receives
+/// the log-softmax when non-empty.
+fn group_softmax_row(
+    spec: &SpaceSpec,
+    logits: &[f32],
+    probs: &mut [f32],
+    log_probs: &mut [f32],
+) {
+    debug_assert_eq!(logits.len(), spec.onehot_dim);
+    let want_log = !log_probs.is_empty();
+    let mut off = 0;
+    for g in &spec.groups {
+        let n = g.size();
+        let x = &logits[off..off + n];
+        let mx = x.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut z = 0f32;
+        for (p, &xi) in probs[off..off + n].iter_mut().zip(x) {
+            *p = (xi - mx).exp();
+            z += *p;
+        }
+        let ln_z = z.ln();
+        for i in 0..n {
+            if want_log {
+                log_probs[off + i] = (x[i] - mx) - ln_z;
+            }
+            probs[off + i] /= z;
+        }
+        off += n;
+    }
+}
+
+/// Stable 2-way log-softmax (D's "True"/"False" head).
+fn log_softmax2(logits: [f32; 2]) -> [f32; 2] {
+    let m = logits[0].max(logits[1]);
+    let z = ((logits[0] - m).exp() + (logits[1] - m).exp()).ln();
+    [logits[0] - m - z, logits[1] - m - z]
+}
+
+/// Losses + gradients of one fused train step, **without** the parameter
+/// update.  Public so the gradient-check tests and the training bench can
+/// evaluate the objective at perturbed parameters.
+#[derive(Debug, Clone)]
+pub struct StepEval {
+    pub loss_config: f32,
+    pub loss_critic: f32,
+    pub loss_dis: f32,
+    pub sat_frac: f32,
+    /// G's training objective: `loss_config + wc * loss_critic` with
+    /// `wc = 0` under `mlp_mode`.
+    pub g_loss: f32,
+    pub g_grads: Vec<f32>,
+    pub d_grads: Vec<f32>,
+}
+
+/// Per-shard partial results (summed, not yet averaged).
+struct RowsOut {
+    g_grads: Vec<f32>,
+    d_grads: Vec<f32>,
+    loss_config: f64,
+    loss_critic: f64,
+    loss_dis: f64,
+    sat: f64,
+}
+
+/// Evaluate losses and gradients for one mini-batch (Algorithm-1 step
+/// minus the Adam update), sharded across rows.
+#[allow(clippy::too_many_arguments)]
+pub fn eval_step(
+    spec: &SpaceSpec,
+    gl: &MlpLayout,
+    dl: &MlpLayout,
+    g: &[f32],
+    d: &[f32],
+    batch: &BatchBuffers,
+    rows: usize,
+    stats: &[f32],
+    w_critic: f32,
+    mlp_mode: bool,
+    threads: usize,
+) -> Result<StepEval> {
+    check_batch_lens(spec, &batch.net, &batch.obj, &batch.noise, stats, rows)?;
+    if batch.onehot.len() != rows * spec.onehot_dim {
+        bail!(
+            "onehot buffer {} != rows {} x onehot_dim {}",
+            batch.onehot.len(),
+            rows,
+            spec.onehot_dim
+        );
+    }
+    let st = SplitStats::new(stats);
+    let wc = if mlp_mode { 0.0 } else { w_critic };
+    let outs = run_sharded(rows, threads, MIN_ROWS_PER_SHARD, |start, end| {
+        step_rows(
+            spec, gl, dl, g, d, batch, &st, wc, mlp_mode, rows, start, end,
+        )
+    });
+    let mut g_grads = vec![0f32; gl.total()];
+    let mut d_grads = vec![0f32; dl.total()];
+    let (mut lc, mut lcr, mut ld, mut sat) = (0f64, 0f64, 0f64, 0f64);
+    for o in &outs {
+        for (a, &b) in g_grads.iter_mut().zip(&o.g_grads) {
+            *a += b;
+        }
+        for (a, &b) in d_grads.iter_mut().zip(&o.d_grads) {
+            *a += b;
+        }
+        lc += o.loss_config;
+        lcr += o.loss_critic;
+        ld += o.loss_dis;
+        sat += o.sat;
+    }
+    let n = rows.max(1) as f64;
+    let loss_config = (lc / n) as f32;
+    let loss_critic = (lcr / n) as f32;
+    Ok(StepEval {
+        loss_config,
+        loss_critic,
+        loss_dis: (ld / n) as f32,
+        sat_frac: (sat / n) as f32,
+        g_loss: loss_config + wc * loss_critic,
+        g_grads,
+        d_grads,
+    })
+}
+
+/// The per-row-range worker: forward + backward for rows `start..end`.
+/// All 1/b factors use the **global** batch size so shard outputs sum to
+/// the full-batch gradients.
+#[allow(clippy::too_many_arguments)]
+fn step_rows(
+    spec: &SpaceSpec,
+    gl: &MlpLayout,
+    dl: &MlpLayout,
+    g: &[f32],
+    d: &[f32],
+    batch: &BatchBuffers,
+    st: &SplitStats,
+    wc: f32,
+    mlp_mode: bool,
+    b_total: usize,
+    start: usize,
+    end: usize,
+) -> RowsOut {
+    let rb = end - start;
+    let onehot = spec.onehot_dim;
+    let d_in = spec.d_in;
+    let inv_b = 1.0 / b_total as f32;
+
+    // --- G forward ------------------------------------------------------
+    let g_x = build_g_input(
+        spec, st, &batch.net, &batch.obj, &batch.noise, start, end,
+    );
+    let g_acts = nn::forward(gl, g, &g_x, rb);
+    let logits = g_acts.last().unwrap();
+    let mut probs = vec![0f32; rb * onehot];
+    let mut log_probs = vec![0f32; rb * onehot];
+    for r in 0..rb {
+        group_softmax_row(
+            spec,
+            &logits[r * onehot..(r + 1) * onehot],
+            &mut probs[r * onehot..(r + 1) * onehot],
+            &mut log_probs[r * onehot..(r + 1) * onehot],
+        );
+    }
+
+    // --- decode + design-model label (stop-gradient) --------------------
+    let mut sat_f = vec![0f32; rb];
+    let mut mask = vec![0f32; rb];
+    let mut loss_config_sum = 0f64;
+    let mut raw = vec![0f32; spec.groups.len()];
+    for r in 0..rb {
+        let row = start + r;
+        let prow = &probs[r * onehot..(r + 1) * onehot];
+        let idx = spec.decode_argmax(prow);
+        for ((rv, grp), &ci) in raw.iter_mut().zip(&spec.groups).zip(&idx) {
+            *rv = grp.choices[ci];
+        }
+        let net_row = &batch.net[row * N_NET..(row + 1) * N_NET];
+        let (l_g, p_g) = spec.kind.eval(net_row, &raw);
+        let (lo_s, po_s) =
+            (batch.obj[row * N_OBJ], batch.obj[row * N_OBJ + 1]);
+        let sat = l_g <= lo_s && p_g <= po_s;
+        sat_f[r] = if sat { 1.0 } else { 0.0 };
+        mask[r] = if mlp_mode { 1.0 } else { 1.0 - sat_f[r] };
+        // ce_cfg = -sum(onehot * log_probs)
+        let orow = &batch.onehot[row * onehot..(row + 1) * onehot];
+        let lrow = &log_probs[r * onehot..(r + 1) * onehot];
+        let mut ce = 0f32;
+        for (o, lp) in orow.iter().zip(lrow) {
+            ce -= o * lp;
+        }
+        loss_config_sum += (mask[r] * ce) as f64;
+    }
+
+    // --- D forward (shared by the critic and dis losses) ----------------
+    let mut d_x = Vec::with_capacity(rb * d_in);
+    for r in 0..rb {
+        // [net_n, probs, obj_n] — the same normalization as G's input.
+        let row = start + r;
+        for k in 0..N_NET {
+            d_x.push(
+                (batch.net[row * N_NET + k] - st.net_mean[k])
+                    / st.net_std[k],
+            );
+        }
+        d_x.extend_from_slice(&probs[r * onehot..(r + 1) * onehot]);
+        for k in 0..N_OBJ {
+            d_x.push(
+                (batch.obj[row * N_OBJ + k] - st.obj_mean[k])
+                    / st.obj_std[k],
+            );
+        }
+    }
+    let d_acts = nn::forward(dl, d, &d_x, rb);
+    let d_logits = d_acts.last().unwrap();
+    let mut loss_critic_sum = 0f64;
+    let mut loss_dis_sum = 0f64;
+    let mut d_critic_dout = vec![0f32; rb * 2];
+    let mut d_dis_dout = vec![0f32; rb * 2];
+    for r in 0..rb {
+        let lg = [d_logits[r * 2], d_logits[r * 2 + 1]];
+        let lsm = log_softmax2(lg);
+        let p_true = lsm[0].exp();
+        let p_false = lsm[1].exp();
+        // critic: D should call the generated config "True"
+        loss_critic_sum += (-lsm[0]) as f64;
+        // dis: D's label is the actual satisfaction
+        loss_dis_sum +=
+            (-(sat_f[r] * lsm[0] + (1.0 - sat_f[r]) * lsm[1])) as f64;
+        // d(-log p_true)/dlogits = p - [1, 0]
+        d_critic_dout[r * 2] = (p_true - 1.0) * wc * inv_b;
+        d_critic_dout[r * 2 + 1] = p_false * wc * inv_b;
+        // d(binary CE vs sat)/dlogits = p - [sat, 1-sat]
+        d_dis_dout[r * 2] = (p_true - sat_f[r]) * inv_b;
+        d_dis_dout[r * 2 + 1] = (p_false - (1.0 - sat_f[r])) * inv_b;
+    }
+
+    // --- G gradient -----------------------------------------------------
+    // config part: d(mean(mask * ce))/dlogits = mask/b * (probs - onehot).
+    let mut dlogits = vec![0f32; rb * onehot];
+    for r in 0..rb {
+        let row = start + r;
+        let scale = mask[r] * inv_b;
+        if scale != 0.0 {
+            let prow = &probs[r * onehot..(r + 1) * onehot];
+            let orow = &batch.onehot[row * onehot..(row + 1) * onehot];
+            for k in 0..onehot {
+                dlogits[r * onehot + k] = scale * (prow[k] - orow[k]);
+            }
+        }
+    }
+    let mut g_grads = vec![0f32; gl.total()];
+    let mut d_grads = vec![0f32; dl.total()];
+    if wc != 0.0 {
+        // critic part: through D with frozen weights (input gradient
+        // only), then the per-group softmax Jacobian into G's logits.
+        let mut d_dx = vec![0f32; rb * d_in];
+        nn::backward(
+            dl,
+            d,
+            &d_acts,
+            &d_critic_dout,
+            rb,
+            None,
+            Some(&mut d_dx),
+        );
+        for r in 0..rb {
+            let dprobs = &d_dx[r * d_in + N_NET..r * d_in + N_NET + onehot];
+            let prow = &probs[r * onehot..(r + 1) * onehot];
+            let drow = &mut dlogits[r * onehot..(r + 1) * onehot];
+            let mut off = 0;
+            for grp in &spec.groups {
+                let n = grp.size();
+                let p = &prow[off..off + n];
+                let dp = &dprobs[off..off + n];
+                let dot: f32 =
+                    p.iter().zip(dp).map(|(&pi, &di)| pi * di).sum();
+                for k in 0..n {
+                    drow[off + k] += p[k] * (dp[k] - dot);
+                }
+                off += n;
+            }
+        }
+    }
+    nn::backward(gl, g, &g_acts, &dlogits, rb, Some(&mut g_grads), None);
+
+    // --- D gradient (dis loss; probs are stop-gradient inputs here) -----
+    nn::backward(dl, d, &d_acts, &d_dis_dout, rb, Some(&mut d_grads), None);
+
+    RowsOut {
+        g_grads,
+        d_grads,
+        loss_config: loss_config_sum,
+        loss_critic: loss_critic_sum,
+        loss_dis: loss_dis_sum,
+        sat: sat_f.iter().map(|&s| s as f64).sum(),
+    }
+}
+
+/// A live CPU training session: owns the authoritative state.
+struct CpuSession {
+    threads: usize,
+    spec: SpaceSpec,
+    gl: MlpLayout,
+    dl: MlpLayout,
+    g: Vec<f32>,
+    d: Vec<f32>,
+    m_g: Vec<f32>,
+    v_g: Vec<f32>,
+    m_d: Vec<f32>,
+    v_d: Vec<f32>,
+}
+
+impl TrainStepper for CpuSession {
+    fn step(
+        &mut self,
+        batch: &BatchBuffers,
+        rows: usize,
+        stats: &[f32],
+        knobs: [f32; 4],
+    ) -> Result<[f32; 4]> {
+        let [lr, w_critic, mlp_mode, t] = knobs;
+        let ev = eval_step(
+            &self.spec,
+            &self.gl,
+            &self.dl,
+            &self.g,
+            &self.d,
+            batch,
+            rows,
+            stats,
+            w_critic,
+            mlp_mode > 0.5,
+            self.threads,
+        )?;
+        nn::adam_update(
+            &mut self.g,
+            &ev.g_grads,
+            &mut self.m_g,
+            &mut self.v_g,
+            t,
+            lr,
+        );
+        nn::adam_update(
+            &mut self.d,
+            &ev.d_grads,
+            &mut self.m_d,
+            &mut self.v_d,
+            t,
+            lr,
+        );
+        Ok([ev.loss_config, ev.loss_critic, ev.loss_dis, ev.sat_frac])
+    }
+
+    fn sync(&mut self, state: &mut GanState) -> Result<()> {
+        state.g = self.g.clone();
+        state.d = self.d.clone();
+        state.m_g = self.m_g.clone();
+        state.v_g = self.v_g.clone();
+        state.m_d = self.m_d.clone();
+        state.v_d = self.v_d.clone();
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::builtin_spec;
+
+    #[test]
+    fn group_softmax_normalizes_per_group() {
+        let spec = builtin_spec("dnnweaver").unwrap();
+        let logits: Vec<f32> =
+            (0..spec.onehot_dim).map(|i| (i as f32) * 0.3 - 2.0).collect();
+        let mut probs = vec![0f32; spec.onehot_dim];
+        let mut logp = vec![0f32; spec.onehot_dim];
+        group_softmax_row(&spec, &logits, &mut probs, &mut logp);
+        let mut off = 0;
+        for g in &spec.groups {
+            let s: f32 = probs[off..off + g.size()].iter().sum();
+            assert!((s - 1.0).abs() < 1e-5, "group sum {s}");
+            for k in off..off + g.size() {
+                assert!((logp[k].exp() - probs[k]).abs() < 1e-5);
+            }
+            off += g.size();
+        }
+        // large logits stay finite; empty scratch skips the log pass
+        let big = vec![1000.0f32; spec.onehot_dim];
+        let mut p2 = vec![0f32; spec.onehot_dim];
+        let mut empty: Vec<f32> = Vec::new();
+        group_softmax_row(&spec, &big, &mut p2, &mut empty);
+        assert!(p2.iter().all(|p| p.is_finite()));
+    }
+
+    #[test]
+    fn log_softmax2_is_stable() {
+        let l = log_softmax2([1000.0, 1000.0]);
+        assert!((l[0].exp() - 0.5).abs() < 1e-6);
+        let l = log_softmax2([-1000.0, 0.0]);
+        assert!(l[1] > -1e-3 && l[0] < -900.0);
+    }
+
+    #[test]
+    fn builtin_meta_layouts_validate() {
+        let meta = Meta::builtin(16, 2, 2, 8, 8);
+        for name in ["im2col", "dnnweaver"] {
+            let mm = meta.model(name).unwrap();
+            let (gl, dl) = layouts(mm).unwrap();
+            assert_eq!(gl.total(), mm.g_params);
+            assert_eq!(dl.total(), mm.d_params);
+            assert_eq!(gl.in_dim(), mm.spec.g_in);
+            assert_eq!(dl.out_dim(), 2);
+        }
+    }
+
+    #[test]
+    fn infer_probs_rows_are_distributions() {
+        let meta = Meta::builtin(16, 2, 2, 8, 8);
+        let mm = meta.model("dnnweaver").unwrap();
+        let spec = &mm.spec;
+        let state = GanState::init(mm, "dnnweaver", 1);
+        let be = CpuBackend::new(1);
+        let rows = 5;
+        let net = vec![32.0f32; rows * N_NET];
+        let obj = vec![1.0f32; rows * N_OBJ];
+        let noise = vec![0.05f32; rows * spec.noise_dim];
+        let stats = crate::dataset::generate(spec, 64, 0, 3).stats.to_vec();
+        let probs = be
+            .infer_probs(
+                &meta, "dnnweaver", &state.g, &net, &obj, &noise, &stats,
+                rows,
+            )
+            .unwrap();
+        assert_eq!(probs.len(), rows * spec.onehot_dim);
+        for r in 0..rows {
+            let row = &probs[r * spec.onehot_dim..(r + 1) * spec.onehot_dim];
+            let mut off = 0;
+            for g in &spec.groups {
+                let s: f32 = row[off..off + g.size()].iter().sum();
+                assert!((s - 1.0).abs() < 1e-4);
+                off += g.size();
+            }
+        }
+    }
+
+    #[test]
+    fn infer_probs_independent_of_thread_count() {
+        let meta = Meta::builtin(16, 2, 2, 8, 8);
+        let mm = meta.model("dnnweaver").unwrap();
+        let spec = &mm.spec;
+        let state = GanState::init(mm, "dnnweaver", 2);
+        let rows = 9;
+        let mut rng = crate::util::rng::Rng::new(5);
+        let net: Vec<f32> =
+            (0..rows * N_NET).map(|_| 16.0 + 32.0 * rng.f32()).collect();
+        let obj: Vec<f32> =
+            (0..rows * N_OBJ).map(|_| 0.5 + rng.f32()).collect();
+        let noise: Vec<f32> =
+            (0..rows * spec.noise_dim).map(|_| rng.normal() * 0.1).collect();
+        let stats = crate::dataset::generate(spec, 64, 0, 3).stats.to_vec();
+        let p1 = CpuBackend::new(1)
+            .infer_probs(
+                &meta, "dnnweaver", &state.g, &net, &obj, &noise, &stats,
+                rows,
+            )
+            .unwrap();
+        let p3 = CpuBackend::new(3)
+            .infer_probs(
+                &meta, "dnnweaver", &state.g, &net, &obj, &noise, &stats,
+                rows,
+            )
+            .unwrap();
+        // forward is read-only per row: bit-identical at any thread count
+        assert_eq!(p1, p3);
+    }
+}

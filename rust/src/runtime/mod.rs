@@ -1,4 +1,11 @@
-//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//! Execution runtimes: the [`backend::Backend`] abstraction with its two
+//! implementations — the pure-Rust [`cpu::CpuBackend`] (native training
+//! and inference, always available) and the [`pjrt::PjrtBackend`] (AOT
+//! HLO artifacts) — plus the underlying PJRT runtime shim below.
+//!
+//! # The PJRT shim
+//!
+//! Loads AOT HLO-text artifacts and executes them.
 //!
 //! Two builds of the same public API (see DESIGN.md "Runtime gating"):
 //!
@@ -257,6 +264,14 @@ mod imp {
         }
     }
 
+    impl Buffer {
+        /// Mirror of `xla::PjRtBuffer::to_literal_sync` so device-buffer
+        /// call sites compile identically in both builds.
+        pub fn to_literal_sync(&self) -> Result<Literal> {
+            Err(no_pjrt("downloading device buffers"))
+        }
+    }
+
     /// Build an f32 literal with the given dimensions (same shape check as
     /// the PJRT build).
     pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<Literal> {
@@ -283,10 +298,17 @@ mod imp {
     }
 }
 
+pub mod backend;
+pub mod cpu;
+pub mod pjrt;
+
+pub use backend::{Backend, BackendKind, TrainStepper};
+pub use cpu::CpuBackend;
 pub use imp::{
     buf_to_f32_vec, lit_f32, lit_scalar, to_f32_vec, Buffer, Executable,
     Literal, Runtime,
 };
+pub use pjrt::PjrtBackend;
 
 #[cfg(test)]
 mod tests {

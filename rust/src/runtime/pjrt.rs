@@ -1,0 +1,243 @@
+//! The PJRT execution backend: AOT HLO artifacts through
+//! [`crate::runtime::Runtime`].
+//!
+//! This is the seed's original training/inference path, repackaged behind
+//! the [`Backend`] trait: the fused train-step artifact keeps the whole
+//! `[metrics(4), g, d, m_g, v_g, m_d, v_d]` state vector device-resident
+//! across steps (§Perf — only the mini-batch goes up and 4 metrics come
+//! down), and `g_infer` pads requests to the artifact's fixed batch
+//! shape.  Under the default (non-`pjrt`) build the stub runtime makes
+//! every session fail with a typed "rebuild with --features pjrt" error,
+//! so this file compiles identically in both builds.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::dataset::BatchBuffers;
+use crate::gan::GanState;
+use crate::runtime::backend::{Backend, BackendKind, TrainStepper};
+use crate::runtime::{lit_f32, to_f32_vec, Buffer, Executable, Runtime};
+use crate::space::{Meta, N_NET, N_OBJ};
+
+/// Backend wrapper around the PJRT [`Runtime`].
+pub struct PjrtBackend {
+    rt: Runtime,
+}
+
+impl PjrtBackend {
+    pub fn new(artifact_dir: &Path) -> Result<PjrtBackend> {
+        Ok(PjrtBackend { rt: Runtime::new(artifact_dir)? })
+    }
+
+    /// The underlying runtime (integration tests drive raw artifacts).
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Pjrt
+    }
+
+    fn platform(&self) -> String {
+        self.rt.platform()
+    }
+
+    fn train_session<'a>(
+        &'a self,
+        meta: &'a Meta,
+        model: &str,
+        state: &GanState,
+    ) -> Result<Box<dyn TrainStepper + 'a>> {
+        let mm = meta.model(model)?;
+        let exe =
+            self.rt.load(&format!("train_step_fused_{model}.hlo.txt"))?;
+        // Upload the fused state once; it stays device-resident across
+        // steps (the artifact is lowered with return_tuple=False so its
+        // output array feeds straight back as the next step's input).
+        let nm = mm.fused_metrics;
+        let mut fused = Vec::with_capacity(mm.fused_state_len);
+        fused.extend(std::iter::repeat(0.0f32).take(nm));
+        for v in
+            [&state.g, &state.d, &state.m_g, &state.v_g, &state.m_d,
+             &state.v_d]
+        {
+            fused.extend_from_slice(v);
+        }
+        if fused.len() != mm.fused_state_len {
+            bail!(
+                "state length {} != fused_state_len {}",
+                fused.len(),
+                mm.fused_state_len
+            );
+        }
+        let device = self.rt.to_device(&fused, &[fused.len()])?;
+        Ok(Box::new(PjrtSession {
+            rt: &self.rt,
+            exe,
+            train_batch: meta.train_batch,
+            stats_len: meta.stats_len,
+            onehot_dim: mm.spec.onehot_dim,
+            noise_dim: mm.spec.noise_dim,
+            g_params: mm.g_params,
+            d_params: mm.d_params,
+            fused_metrics: mm.fused_metrics,
+            device: Some(device),
+            stats_buf: None,
+            dirty: false,
+        }))
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn infer_probs(
+        &self,
+        meta: &Meta,
+        model: &str,
+        g_params: &[f32],
+        net: &[f32],
+        obj: &[f32],
+        noise: &[f32],
+        stats: &[f32],
+        rows: usize,
+    ) -> Result<Vec<f32>> {
+        let mm = meta.model(model)?;
+        let spec = &mm.spec;
+        let b = meta.infer_batch;
+        if rows > b {
+            bail!("g_infer batch {rows} exceeds artifact batch {b}");
+        }
+        if net.len() != rows * N_NET
+            || obj.len() != rows * N_OBJ
+            || noise.len() != rows * spec.noise_dim
+        {
+            bail!("batch buffer shapes disagree with {rows} rows");
+        }
+        let exe = self.rt.load(&format!("g_infer_{model}.hlo.txt"))?;
+        // The artifact's batch shape is fixed: zero-pad the tail rows
+        // (their outputs are discarded below).
+        let pad = |v: &[f32], width: usize| {
+            let mut p = v.to_vec();
+            p.resize(b * width, 0.0);
+            p
+        };
+        let inputs = [
+            lit_f32(g_params, &[g_params.len()])?,
+            lit_f32(&pad(net, N_NET), &[b, N_NET])?,
+            lit_f32(&pad(obj, N_OBJ), &[b, N_OBJ])?,
+            lit_f32(&pad(noise, spec.noise_dim), &[b, spec.noise_dim])?,
+            lit_f32(stats, &[meta.stats_len])?,
+        ];
+        let res = exe.run(&inputs)?;
+        let probs = to_f32_vec(&res[0])?;
+        if probs.len() < rows * spec.onehot_dim {
+            bail!(
+                "g_infer returned {} values, expected at least {}",
+                probs.len(),
+                rows * spec.onehot_dim
+            );
+        }
+        Ok(probs[..rows * spec.onehot_dim].to_vec())
+    }
+}
+
+/// Device-resident training session (see module docs).
+struct PjrtSession<'a> {
+    rt: &'a Runtime,
+    exe: Arc<Executable>,
+    train_batch: usize,
+    stats_len: usize,
+    onehot_dim: usize,
+    noise_dim: usize,
+    g_params: usize,
+    d_params: usize,
+    fused_metrics: usize,
+    /// The fused state buffer, fed back step over step.
+    device: Option<Buffer>,
+    /// Cached stats buffer (constant across a training run).
+    stats_buf: Option<Buffer>,
+    /// Host copy (via [`TrainStepper::sync`]) is stale.
+    dirty: bool,
+}
+
+impl TrainStepper for PjrtSession<'_> {
+    fn step(
+        &mut self,
+        batch: &BatchBuffers,
+        rows: usize,
+        stats: &[f32],
+        knobs: [f32; 4],
+    ) -> Result<[f32; 4]> {
+        if rows != self.train_batch {
+            bail!("batch size {rows} != artifact batch {}", self.train_batch);
+        }
+        if self.stats_buf.is_none() {
+            if stats.len() != self.stats_len {
+                bail!("stats length {} != {}", stats.len(), self.stats_len);
+            }
+            self.stats_buf =
+                Some(self.rt.to_device(stats, &[self.stats_len])?);
+        }
+        let b = rows;
+        let batch_bufs = [
+            self.rt.to_device(&batch.net, &[b, N_NET])?,
+            self.rt.to_device(&batch.onehot, &[b, self.onehot_dim])?,
+            self.rt.to_device(&batch.obj, &[b, N_OBJ])?,
+            self.rt.to_device(&batch.noise, &[b, self.noise_dim])?,
+            self.rt.to_device(&knobs, &[4])?,
+        ];
+        let inputs: Vec<&Buffer> = vec![
+            self.device.as_ref().expect("device state uploaded at init"),
+            &batch_bufs[0],
+            &batch_bufs[1],
+            &batch_bufs[2],
+            &batch_bufs[3],
+            self.stats_buf.as_ref().unwrap(),
+            &batch_bufs[4],
+        ];
+        let mut out = self.exe.run_b(&inputs)?;
+        if out.len() != 1 {
+            bail!(
+                "fused train_step returned {} buffers, expected 1",
+                out.len()
+            );
+        }
+        let fused = out.pop().unwrap();
+        // CopyRawToHost is unimplemented on the CPU plugin, so the metrics
+        // read is a full literal download — still far cheaper than the
+        // literal-path round trip of all 6 state vectors.
+        let lit = fused.to_literal_sync()?;
+        let m = to_f32_vec(&lit)?;
+        if m.len() < self.fused_metrics.max(4) {
+            bail!("fused output too short ({} values)", m.len());
+        }
+        self.device = Some(fused);
+        self.dirty = true;
+        Ok([m[0], m[1], m[2], m[3]])
+    }
+
+    fn sync(&mut self, state: &mut GanState) -> Result<()> {
+        if !self.dirty {
+            return Ok(());
+        }
+        let buf = self.device.as_ref().expect("dirty implies device state");
+        let fused = crate::runtime::buf_to_f32_vec(buf)?;
+        let mut o = self.fused_metrics;
+        let mut take = |n: usize| {
+            let v = fused[o..o + n].to_vec();
+            o += n;
+            v
+        };
+        let (gl, dl) = (self.g_params, self.d_params);
+        state.g = take(gl);
+        state.d = take(dl);
+        state.m_g = take(gl);
+        state.v_g = take(gl);
+        state.m_d = take(dl);
+        state.v_d = take(dl);
+        self.dirty = false;
+        Ok(())
+    }
+}

@@ -47,6 +47,62 @@ pub const DEFAULT_CAP: usize = 1_000_000;
 const MIN_SHARD: usize = 4_096;
 
 // ---------------------------------------------------------------------------
+// Shared fork-join machinery
+// ---------------------------------------------------------------------------
+
+/// Shard `n` items into up to `threads` contiguous ranges of at least
+/// `min_shard` items each and run `f(start, end)` on scoped worker
+/// threads; returns the per-shard results **in shard order**.  This is the
+/// fork-join machinery behind both [`SelectEngine::run`] and the CPU
+/// training backend's batched matmuls
+/// ([`crate::runtime::cpu::CpuBackend`]).
+///
+/// `threads == 0` means "use every available core".  With one effective
+/// worker (or `n < 2 * min_shard`), `f` runs inline on the caller's
+/// thread — no spawn overhead.  Empty ranges are never dispatched.
+pub fn run_sharded<R, F>(
+    n: usize,
+    threads: usize,
+    min_shard: usize,
+    f: F,
+) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize, usize) -> R + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let cores = if threads > 0 {
+        threads
+    } else {
+        std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1)
+    };
+    let workers = cores.min((n / min_shard.max(1)).max(1));
+    if workers <= 1 {
+        return vec![f(0, n)];
+    }
+    let shard = (n + workers - 1) / workers;
+    let mut out = Vec::with_capacity(workers);
+    std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(workers);
+        for k in 0..workers {
+            let start = k * shard;
+            let end = ((k + 1) * shard).min(n);
+            if start >= end {
+                continue;
+            }
+            let f = &f;
+            handles.push(s.spawn(move || f(start, end)));
+        }
+        for h in handles {
+            out.push(h.join().expect("sharded worker panicked"));
+        }
+    });
+    out
+}
+
+// ---------------------------------------------------------------------------
 // Candidate sets and enumeration
 // ---------------------------------------------------------------------------
 
@@ -378,46 +434,32 @@ impl SelectEngine {
         }
 
         // Shard the first n candidates into `workers` contiguous ranges;
-        // each worker evaluates its range into an objective vector.
-        let shard = (n + workers - 1) / workers;
-        let mut objs: Vec<Vec<(f32, f32)>> = Vec::with_capacity(workers);
-        std::thread::scope(|s| {
-            let mut handles = Vec::with_capacity(workers);
-            for k in 0..workers {
-                let start = k * shard;
-                let end = ((k + 1) * shard).min(n);
-                let eval = &eval;
-                let kept = &cands.kept;
-                let groups = &spec.groups;
-                handles.push(s.spawn(move || {
-                    let mut out =
-                        Vec::with_capacity(end.saturating_sub(start));
-                    if start >= end {
-                        return out;
+        // each worker evaluates its range into an objective vector
+        // (the shared fork-join helper — same machinery as the CPU
+        // training backend).
+        let kept = &cands.kept;
+        let groups = &spec.groups;
+        let objs: Vec<Vec<(f32, f32)>> =
+            run_sharded(n, workers, min_shard, |start, end| {
+                let mut out = Vec::with_capacity(end - start);
+                let mut cur = CandidateCursor::new(kept);
+                if !cur.skip_to(start as u128) {
+                    return out;
+                }
+                let mut raw = vec![0f32; groups.len()];
+                for j in start..end {
+                    for ((r, g), &ci) in
+                        raw.iter_mut().zip(groups).zip(cur.current())
+                    {
+                        *r = g.choices[ci];
                     }
-                    let mut cur = CandidateCursor::new(kept);
-                    if !cur.skip_to(start as u128) {
-                        return out;
+                    out.push(eval(&raw));
+                    if j + 1 < end && !cur.advance() {
+                        break;
                     }
-                    let mut raw = vec![0f32; groups.len()];
-                    for j in start..end {
-                        for ((r, g), &ci) in
-                            raw.iter_mut().zip(groups).zip(cur.current())
-                        {
-                            *r = g.choices[ci];
-                        }
-                        out.push(eval(&raw));
-                        if j + 1 < end && !cur.advance() {
-                            break;
-                        }
-                    }
-                    out
-                }));
-            }
-            for h in handles {
-                objs.push(h.join().expect("selection worker panicked"));
-            }
-        });
+                }
+                out
+            });
 
         // Deterministic in-order merge: replay the complete objective
         // stream, shard by shard, through one sequential Selector — the
@@ -504,6 +546,25 @@ mod tests {
             }
         }
         p
+    }
+
+    #[test]
+    fn run_sharded_covers_all_ranges_in_order() {
+        // one worker runs inline
+        assert_eq!(run_sharded(10, 1, 1, |s, e| (s, e)), vec![(0, 10)]);
+        // parallel: ranges are contiguous, ordered, and cover 0..n
+        let shards = run_sharded(10, 3, 1, |s, e| (s, e));
+        let mut expect_start = 0;
+        for &(s, e) in &shards {
+            assert_eq!(s, expect_start);
+            assert!(e > s);
+            expect_start = e;
+        }
+        assert_eq!(expect_start, 10);
+        // empty input dispatches nothing
+        assert!(run_sharded(0, 4, 1, |s, e| (s, e)).is_empty());
+        // below 2 x min_shard stays inline (one shard)
+        assert_eq!(run_sharded(7, 8, 4, |s, e| (s, e)), vec![(0, 7)]);
     }
 
     #[test]

@@ -91,18 +91,20 @@ impl<T, R> Batcher<T, R> {
 
     /// Worker loop: repeatedly collect a batch and answer it with `f`.
     /// `f` must return exactly one result per input (checked).
+    ///
+    /// The wait is anchored to the **oldest pending arrival**: after any
+    /// wakeup — a new submission, a spurious condvar wakeup, or a timeout
+    /// — the remaining deadline is recomputed as `max_wait - oldest
+    /// .elapsed()` rather than restarting a full `max_wait` window, so a
+    /// trickle of submissions (each of which notifies the condvar) cannot
+    /// push the first request's flush later than its deadline.  With an
+    /// empty queue there is no deadline and the worker blocks untimed —
+    /// no periodic idle wakeups.
     pub fn run_worker(&self, mut f: impl FnMut(&[T]) -> Vec<R>) {
         loop {
             let mut st = self.inner.lock().unwrap();
             loop {
                 if st.queue.len() >= self.max_batch {
-                    break;
-                }
-                let deadline_hit = st
-                    .oldest
-                    .map(|t| t.elapsed() >= self.max_wait)
-                    .unwrap_or(false);
-                if deadline_hit && !st.queue.is_empty() {
                     break;
                 }
                 if self.closed.load(Ordering::SeqCst) {
@@ -111,15 +113,19 @@ impl<T, R> Batcher<T, R> {
                     }
                     break;
                 }
-                let wait = st
-                    .oldest
-                    .map(|t| self.max_wait.saturating_sub(t.elapsed()))
-                    .unwrap_or(self.max_wait);
-                let (g, _) = self
-                    .cv
-                    .wait_timeout(st, wait.max(Duration::from_micros(50)))
-                    .unwrap();
-                st = g;
+                // Remaining budget for the oldest pending request (None
+                // = empty queue, no deadline to track).
+                let remaining = match (st.oldest, st.queue.is_empty()) {
+                    (Some(t0), false) => {
+                        Some(self.max_wait.saturating_sub(t0.elapsed()))
+                    }
+                    _ => None,
+                };
+                st = match remaining {
+                    Some(d) if d.is_zero() => break, // deadline elapsed
+                    Some(d) => self.cv.wait_timeout(st, d).unwrap().0,
+                    None => self.cv.wait(st).unwrap(),
+                };
             }
             let oldest = st.oldest.take();
             let n = st.queue.len().min(self.max_batch);
@@ -396,6 +402,40 @@ mod tests {
         assert_eq!(r, 7);
         assert_eq!(info.batch_size, 1);
         assert!(info.queue_us >= 9_000, "waited {}us", info.queue_us);
+        b.close();
+        worker.join().unwrap();
+    }
+
+    #[test]
+    fn batcher_deadline_is_not_extended_by_later_submissions() {
+        // A second submission below max_batch wakes the worker's condvar;
+        // the remaining wait must be recomputed from the OLDEST arrival,
+        // not restarted at a full max_wait (the tail-latency bug).
+        let b: Arc<Batcher<u32, u32>> =
+            Arc::new(Batcher::new(64, Duration::from_millis(500)));
+        let worker = {
+            let b = b.clone();
+            std::thread::spawn(move || b.run_worker(|xs| xs.to_vec()))
+        };
+        let rx_first = b.submit(1);
+        std::thread::sleep(Duration::from_millis(250));
+        let _rx_second = b.submit(2);
+        let (_, info) =
+            rx_first.recv_timeout(Duration::from_secs(10)).unwrap();
+        // queue_us is measured from the first arrival: the flush must land
+        // near the 500 ms deadline, well before the 750 ms a restarted
+        // window would produce (generous bounds for loaded CI runners).
+        assert!(
+            info.queue_us >= 490_000,
+            "flushed before the deadline: {}us",
+            info.queue_us
+        );
+        assert!(
+            info.queue_us < 720_000,
+            "deadline was extended by the second submission: {}us",
+            info.queue_us
+        );
+        assert_eq!(info.batch_size, 2);
         b.close();
         worker.join().unwrap();
     }

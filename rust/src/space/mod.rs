@@ -307,6 +307,84 @@ impl Meta {
             .get(name)
             .ok_or_else(|| SpecError::UnknownModel(name.to_string()))
     }
+
+    /// Synthesize the contract from the builtin specs — the pure-Rust cpu
+    /// backend needs no `meta.json` or artifacts.  Layer dims follow the
+    /// Python `mlp_layout`: `(in, width × depth, out)`; the fused-state
+    /// layout matches `model.fused_state_len` so checkpoints are
+    /// interchangeable between backends at equal hyperparameters.
+    pub fn builtin(
+        width: usize,
+        g_depth: usize,
+        d_depth: usize,
+        train_batch: usize,
+        infer_batch: usize,
+    ) -> Meta {
+        let mut models = BTreeMap::new();
+        for kind in ModelKind::ALL {
+            let spec = builtin_spec(kind.name()).expect("builtin spec");
+            let dims = |input: usize, depth: usize, out: usize| {
+                let mut d = Vec::with_capacity(depth + 2);
+                d.push(input);
+                d.extend(std::iter::repeat(width).take(depth));
+                d.push(out);
+                d
+            };
+            let g_dims = dims(spec.g_in, g_depth, spec.onehot_dim);
+            let d_dims = dims(spec.d_in, d_depth, 2);
+            let count = |ds: &[usize]| -> usize {
+                ds.windows(2).map(|w| w[0] * w[1] + w[1]).sum()
+            };
+            let g_params = count(&g_dims);
+            let d_params = count(&d_dims);
+            models.insert(
+                kind.name().to_string(),
+                ModelMeta {
+                    spec,
+                    fused_state_len: 4 + 3 * (g_params + d_params),
+                    fused_metrics: 4,
+                    g_params,
+                    d_params,
+                    g_dims,
+                    d_dims,
+                    artifacts: Vec::new(),
+                },
+            );
+        }
+        Meta {
+            stats_len: 2 * (N_NET + N_OBJ),
+            train_batch,
+            infer_batch,
+            width,
+            g_depth,
+            d_depth,
+            noise_dim: 8,
+            models,
+        }
+    }
+
+    /// `meta.json` when present (the artifact contract always wins),
+    /// otherwise the builtin contract with the given hyperparameters.
+    pub fn load_or_builtin(
+        dir: &Path,
+        width: usize,
+        g_depth: usize,
+        d_depth: usize,
+        train_batch: usize,
+        infer_batch: usize,
+    ) -> Result<Meta, SpecError> {
+        if dir.join("meta.json").exists() {
+            Meta::load(dir)
+        } else {
+            Ok(Meta::builtin(
+                width,
+                g_depth,
+                d_depth,
+                train_batch,
+                infer_batch,
+            ))
+        }
+    }
 }
 
 /// Built-in specs matching dse_spec.py, used when artifacts are absent
@@ -391,6 +469,41 @@ mod tests {
     #[test]
     fn unknown_model_rejected() {
         assert!(builtin_spec("bogus").is_err());
+    }
+
+    #[test]
+    fn builtin_meta_is_self_consistent() {
+        let m = Meta::builtin(32, 2, 3, 16, 8);
+        assert_eq!(m.stats_len, 16);
+        assert_eq!(m.train_batch, 16);
+        assert_eq!(m.infer_batch, 8);
+        for name in ["im2col", "dnnweaver"] {
+            let mm = m.model(name).unwrap();
+            assert_eq!(mm.g_dims.len(), 2 + 2);
+            assert_eq!(mm.d_dims.len(), 3 + 2);
+            assert_eq!(mm.g_dims[0], mm.spec.g_in);
+            assert_eq!(*mm.g_dims.last().unwrap(), mm.spec.onehot_dim);
+            assert_eq!(mm.d_dims[0], mm.spec.d_in);
+            assert_eq!(*mm.d_dims.last().unwrap(), 2);
+            let count = |ds: &[usize]| -> usize {
+                ds.windows(2).map(|w| w[0] * w[1] + w[1]).sum()
+            };
+            assert_eq!(mm.g_params, count(&mm.g_dims));
+            assert_eq!(mm.d_params, count(&mm.d_dims));
+            assert_eq!(
+                mm.fused_state_len,
+                4 + 3 * (mm.g_params + mm.d_params)
+            );
+        }
+    }
+
+    #[test]
+    fn load_or_builtin_falls_back_without_meta_json() {
+        let dir = std::env::temp_dir().join("gandse_no_meta_here");
+        std::fs::create_dir_all(&dir).unwrap();
+        let m = Meta::load_or_builtin(&dir, 16, 1, 1, 4, 4).unwrap();
+        assert_eq!(m.width, 16);
+        assert!(m.model("dnnweaver").is_ok());
     }
 
     #[test]

@@ -10,7 +10,7 @@ use std::sync::OnceLock;
 use gandse::dataset;
 use gandse::explorer::{DseRequest, Explorer};
 use gandse::gan::{GanState, TrainConfig, Trainer};
-use gandse::runtime::{lit_f32, to_f32_vec, Runtime};
+use gandse::runtime::{lit_f32, to_f32_vec, PjrtBackend, Runtime};
 use gandse::space::{Meta, N_NET};
 use gandse::util::rng::Rng;
 
@@ -24,9 +24,13 @@ fn ready() -> bool {
 
 // Share one PJRT client across tests (client creation is not free and the
 // CPU plugin is a singleton-ish global).
+fn pjrt() -> &'static PjrtBackend {
+    static B: OnceLock<PjrtBackend> = OnceLock::new();
+    B.get_or_init(|| PjrtBackend::new(&artifact_dir()).unwrap())
+}
+
 fn runtime() -> &'static Runtime {
-    static RT: OnceLock<Runtime> = OnceLock::new();
-    RT.get_or_init(|| Runtime::new(&artifact_dir()).unwrap())
+    pjrt().runtime()
 }
 
 fn meta() -> &'static Meta {
@@ -90,15 +94,15 @@ fn g_infer_produces_group_probabilities() {
         eprintln!("skipping: run `make artifacts`");
         return;
     }
-    let rt = runtime();
     let m = meta();
     let name = "dnnweaver";
     let mm = m.model(name).unwrap();
     let spec = mm.spec.clone();
     let st = GanState::init(mm, name, 42);
     let ds = dataset::generate(&spec, 64, 0, 5);
-    let mut ex =
-        Explorer::new(rt, m, name, st.g.clone(), ds.stats.to_vec()).unwrap();
+    let mut ex = Explorer::new(pjrt(), m, name, st.g.clone(),
+                               ds.stats.to_vec())
+        .unwrap();
     let reqs: Vec<DseRequest> = ds.train[..8]
         .iter()
         .map(|s| DseRequest { net: s.net, lo: s.latency, po: s.power })
@@ -125,7 +129,6 @@ fn train_step_updates_state_and_reduces_config_loss() {
         eprintln!("skipping: run `make artifacts`");
         return;
     }
-    let rt = runtime();
     let m = meta();
     let name = "dnnweaver";
     let mm = m.model(name).unwrap();
@@ -134,7 +137,7 @@ fn train_step_updates_state_and_reduces_config_loss() {
     let ds = dataset::generate(&spec, 2 * b, 16, 7);
     let st = GanState::init(mm, name, 1);
     let g0 = st.g.clone();
-    let mut tr = Trainer::new(rt, m, name, st).unwrap();
+    let mut tr = Trainer::new(pjrt(), m, name, st).unwrap();
     let cfg = TrainConfig { lr: 1e-3, epochs: 1, ..Default::default() };
     let mut rng = Rng::new(2);
     let idx: Vec<usize> = (0..b).collect();
@@ -163,14 +166,14 @@ fn explore_network_shares_one_config_across_layers() {
         eprintln!("skipping: run `make artifacts`");
         return;
     }
-    let rt = runtime();
     let m = meta();
     let name = "dnnweaver";
     let mm = m.model(name).unwrap();
     let spec = mm.spec.clone();
     let ds = dataset::generate(&spec, 64, 0, 21);
     let st = GanState::init(mm, name, 4);
-    let mut ex = Explorer::new(rt, m, name, st.g, ds.stats.to_vec()).unwrap();
+    let mut ex =
+        Explorer::new(pjrt(), m, name, st.g, ds.stats.to_vec()).unwrap();
     let layers = [
         [16.0, 32.0, 32.0, 32.0, 3.0, 3.0],
         [32.0, 64.0, 16.0, 16.0, 3.0, 3.0],
@@ -200,14 +203,14 @@ fn full_explore_path_returns_valid_configs() {
         eprintln!("skipping: run `make artifacts`");
         return;
     }
-    let rt = runtime();
     let m = meta();
     let name = "dnnweaver";
     let mm = m.model(name).unwrap();
     let spec = mm.spec.clone();
     let ds = dataset::generate(&spec, 64, 8, 3);
     let st = GanState::init(mm, name, 9);
-    let mut ex = Explorer::new(rt, m, name, st.g, ds.stats.to_vec()).unwrap();
+    let mut ex =
+        Explorer::new(pjrt(), m, name, st.g, ds.stats.to_vec()).unwrap();
     let reqs: Vec<DseRequest> = ds.test
         .iter()
         .map(|s| DseRequest {

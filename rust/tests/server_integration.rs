@@ -1,6 +1,9 @@
-//! End-to-end DSE server test: real TCP sockets, concurrent clients,
-//! dynamic batching over the PJRT inference path.
-//! Requires `make artifacts` (skips gracefully otherwise).
+//! End-to-end DSE server tests: real TCP sockets, concurrent clients,
+//! dynamic batching.
+//!
+//! The cpu-backend test always runs (no artifacts needed) — it is the
+//! in-tree twin of CI's pipeline-smoke job.  The PJRT test requires
+//! `make artifacts` and skips gracefully otherwise.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -9,8 +12,8 @@ use std::time::Duration;
 
 use gandse::dataset;
 use gandse::explorer::Explorer;
-use gandse::gan::GanState;
-use gandse::runtime::Runtime;
+use gandse::gan::{GanState, TrainConfig, Trainer};
+use gandse::runtime::{Backend, CpuBackend, PjrtBackend};
 use gandse::server;
 use gandse::space::Meta;
 use gandse::util::json::Json;
@@ -19,38 +22,17 @@ fn artifact_dir() -> PathBuf {
     Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
 
-#[test]
-fn server_answers_concurrent_clients_and_batches() {
-    if !artifact_dir().join("meta.json").exists() {
-        eprintln!("skipping: run `make artifacts`");
-        return;
-    }
-    let meta: &'static Meta =
-        Box::leak(Box::new(Meta::load(&artifact_dir()).unwrap()));
-    let rt: &'static Runtime =
-        Box::leak(Box::new(Runtime::new(&artifact_dir()).unwrap()));
-    let model = "dnnweaver";
-    let mm = meta.model(model).unwrap();
-    let ds = dataset::generate(&mm.spec, 128, 0, 42);
-    let st = GanState::init(mm, model, 3);
-    let ex = Explorer::new(rt, meta, model, st.g, ds.stats.to_vec()).unwrap();
-    let handle = server::serve(
-        "127.0.0.1:0",
-        ex,
-        meta.infer_batch,
-        Duration::from_millis(3),
-    )
-    .unwrap();
-    let addr = handle.addr;
-
+/// Drive `n_clients x n_reqs` concurrent requests against a server and
+/// assert every reply is `{"ok": true}` with a plausible payload.
+fn hammer(addr: std::net::SocketAddr, n_clients: usize, n_reqs: usize) {
     let mut clients = Vec::new();
-    for c in 0..4 {
+    for c in 0..n_clients {
         clients.push(std::thread::spawn(move || {
             let stream = TcpStream::connect(addr).unwrap();
             let mut w = stream.try_clone().unwrap();
             let mut r = BufReader::new(stream);
             let mut line = String::new();
-            for i in 0..5 {
+            for i in 0..n_reqs {
                 let req = format!(
                     r#"{{"net":[32,32,32,32,3,3],"lo":{},"po":2.0{}}}"#,
                     0.001 * (i + 1) as f64 * (c + 1) as f64,
@@ -84,6 +66,68 @@ fn server_answers_concurrent_clients_and_batches() {
     for c in clients {
         c.join().unwrap();
     }
+}
+
+/// The full pipeline on the pure-Rust cpu backend: train a tiny GAN,
+/// serve it over TCP, answer concurrent clients — no artifacts anywhere.
+#[test]
+fn cpu_backend_train_then_serve_roundtrip() {
+    let model = "dnnweaver";
+    let meta: &'static Meta =
+        Box::leak(Box::new(Meta::builtin(16, 2, 2, 16, 8)));
+    let backend: &'static dyn Backend = Box::leak(Box::new(CpuBackend::new(0)));
+    let mm = meta.model(model).unwrap();
+    let ds = dataset::generate(&mm.spec, 64, 0, 42);
+
+    // quick training so the server answers with a real generator
+    let mut tr =
+        Trainer::new(backend, meta, model, GanState::init(mm, model, 3))
+            .unwrap();
+    tr.train(&ds, &TrainConfig { epochs: 2, lr: 1e-3, ..Default::default() })
+        .unwrap();
+    assert_eq!(tr.state.step, 8); // 64 samples / batch 16, 2 epochs
+
+    let ex = Explorer::new(backend, meta, model, tr.state.g.clone(),
+                           ds.stats.to_vec())
+        .unwrap();
+    let handle = server::serve(
+        "127.0.0.1:0",
+        ex,
+        meta.infer_batch,
+        Duration::from_millis(3),
+    )
+    .unwrap();
+    hammer(handle.addr, 4, 5);
+    let (batches, items) = handle.stats();
+    assert_eq!(items, 20);
+    assert!(batches <= 20, "some coalescing expected, got {batches}");
+    handle.shutdown();
+}
+
+#[test]
+fn server_answers_concurrent_clients_and_batches() {
+    if !artifact_dir().join("meta.json").exists() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let meta: &'static Meta =
+        Box::leak(Box::new(Meta::load(&artifact_dir()).unwrap()));
+    let backend: &'static PjrtBackend =
+        Box::leak(Box::new(PjrtBackend::new(&artifact_dir()).unwrap()));
+    let model = "dnnweaver";
+    let mm = meta.model(model).unwrap();
+    let ds = dataset::generate(&mm.spec, 128, 0, 42);
+    let st = GanState::init(mm, model, 3);
+    let ex = Explorer::new(backend, meta, model, st.g, ds.stats.to_vec())
+        .unwrap();
+    let handle = server::serve(
+        "127.0.0.1:0",
+        ex,
+        meta.infer_batch,
+        Duration::from_millis(3),
+    )
+    .unwrap();
+    hammer(handle.addr, 4, 5);
     let (batches, items) = handle.stats();
     assert_eq!(items, 20);
     assert!(batches <= 20, "some coalescing expected, got {batches}");

@@ -1,0 +1,79 @@
+#!/usr/bin/env python3
+"""Compare a fresh BENCH_*.json against the committed baseline run.
+
+    python3 scripts/compare_bench.py BENCH_select.json \
+        bench/baseline/BENCH_select.json
+
+Warn-only by design: a >20% throughput drop on any (threads, metric) row
+prints a GitHub Actions `::warning::` annotation and a REGRESSION line
+but still exits 0 — shared CI runners are too noisy for a hard perf
+gate, and the point is a machine-readable trajectory, not flaky builds.
+Exits non-zero only when the *fresh* file is missing or malformed (i.e.
+the bench itself broke).
+
+To (re)seed the baseline, copy a trusted run's output over the file in
+bench/baseline/ and commit it (see bench/baseline/README.md).
+"""
+
+import json
+import sys
+
+THRESHOLD = 0.20
+METRICS = ("cands_per_sec", "steps_per_sec", "samples_per_sec")
+
+
+def rows_by_threads(doc):
+    return {int(r["threads"]): r for r in doc.get("rows", [])}
+
+
+def main() -> int:
+    if len(sys.argv) != 3:
+        print(__doc__)
+        return 2
+    new_path, base_path = sys.argv[1], sys.argv[2]
+    with open(new_path) as f:  # malformed/missing fresh file -> exit 1
+        new = json.load(f)
+    if not new.get("rows"):
+        print(f"error: {new_path} has no rows", file=sys.stderr)
+        return 1
+    try:
+        with open(base_path) as f:
+            base = json.load(f)
+    except (FileNotFoundError, json.JSONDecodeError):
+        print(
+            f"no committed baseline at {base_path} — copy this run's "
+            f"{new_path} there (and commit) to start tracking regressions"
+        )
+        return 0
+
+    regressions = []
+    new_rows, base_rows = rows_by_threads(new), rows_by_threads(base)
+    for threads, brow in sorted(base_rows.items()):
+        nrow = new_rows.get(threads)
+        if nrow is None:
+            continue
+        for metric in METRICS:
+            if metric not in brow or metric not in nrow:
+                continue
+            if brow[metric] <= 0:
+                continue
+            ratio = nrow[metric] / brow[metric]
+            line = (
+                f"{new_path} threads={threads} {metric}: "
+                f"{nrow[metric]:.1f} vs baseline {brow[metric]:.1f} "
+                f"({ratio:.2f}x)"
+            )
+            if ratio < 1.0 - THRESHOLD:
+                regressions.append(line)
+            else:
+                print("ok:", line)
+    for r in regressions:
+        print(f"::warning file={base_path}::throughput regression >20%: {r}")
+        print("REGRESSION:", r)
+    if not regressions:
+        print(f"{new_path}: no >20% regressions vs {base_path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,65 @@
+#!/usr/bin/env bash
+# End-to-end pipeline smoke on the pure-Rust cpu backend: train a tiny
+# GAN, explore with the checkpoint (emitting RTL), run the held-out eval
+# report, then serve the checkpoint over TCP and do a JSON round trip.
+# No artifacts/meta.json anywhere — this is the path CI gates every PR
+# on.  Fails on any non-zero exit or "ok": false server reply.
+#
+# Usage: scripts/pipeline_smoke.sh [path/to/gandse-binary]
+set -euo pipefail
+
+BIN=${1:-./target/release/gandse}
+HERE=$(cd "$(dirname "$0")" && pwd)
+# Tiny network so the whole script stays in seconds; the same flags must
+# be passed to every command that touches the checkpoint.
+SIZES=(--width 32 --g-depth 2 --d-depth 2 --train-batch 32 --infer-batch 16)
+WORK=$(mktemp -d)
+SERVER_PID=""
+cleanup() {
+    [ -n "$SERVER_PID" ] && kill "$SERVER_PID" 2>/dev/null || true
+    rm -rf "$WORK"
+}
+trap cleanup EXIT
+
+echo "== train (cpu backend, no artifacts) =="
+"$BIN" train --model dnnweaver --backend cpu "${SIZES[@]}" \
+    --train 256 --test 16 --epochs 2 --lr 1e-3 --log-every 0 \
+    --ckpt "$WORK/smoke.ckpt"
+test -s "$WORK/smoke.ckpt"
+
+echo "== explore =="
+"$BIN" explore --model dnnweaver --backend cpu "${SIZES[@]}" \
+    --train 256 --test 16 \
+    --ckpt "$WORK/smoke.ckpt" --lo 0.01 --po 2.0 --rtl "$WORK/smoke.v"
+test -s "$WORK/smoke.v"
+grep -q "module gandse_acc" "$WORK/smoke.v"
+
+echo "== eval =="
+"$BIN" eval --model dnnweaver --backend cpu "${SIZES[@]}" \
+    --train 256 --test 32 --ckpt "$WORK/smoke.ckpt"
+
+echo "== serve round-trip =="
+"$BIN" serve --model dnnweaver --backend cpu "${SIZES[@]}" \
+    --train 256 --test 16 --ckpt "$WORK/smoke.ckpt" \
+    --addr 127.0.0.1:0 >"$WORK/serve.log" 2>&1 &
+SERVER_PID=$!
+PORT=""
+for _ in $(seq 1 100); do
+    PORT=$(sed -n 's/.*listening on 127\.0\.0\.1:\([0-9]*\).*/\1/p' \
+        "$WORK/serve.log" | head -1)
+    [ -n "$PORT" ] && break
+    if ! kill -0 "$SERVER_PID" 2>/dev/null; then
+        echo "server exited early:" >&2
+        cat "$WORK/serve.log" >&2
+        exit 1
+    fi
+    sleep 0.3
+done
+if [ -z "$PORT" ]; then
+    echo "server never reported its port:" >&2
+    cat "$WORK/serve.log" >&2
+    exit 1
+fi
+python3 "$HERE/serve_probe.py" 127.0.0.1 "$PORT"
+
+echo "pipeline smoke OK"

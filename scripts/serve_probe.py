@@ -1,0 +1,61 @@
+#!/usr/bin/env python3
+"""One JSON-lines round trip against a running gandse DSE server.
+
+Used by scripts/pipeline_smoke.sh (and handy interactively):
+
+    python3 scripts/serve_probe.py 127.0.0.1 7878
+
+Connects (retrying until the server is up), sends a DSE request with
+inline RTL generation, asserts the reply is {"ok": true} with Verilog in
+it, then checks that a malformed line yields {"ok": false} WITHOUT
+killing the connection.  Exits non-zero on any failed expectation, which
+is what makes the CI smoke job fail on "ok": false responses.
+"""
+
+import json
+import socket
+import sys
+import time
+
+
+def main() -> int:
+    host, port = sys.argv[1], int(sys.argv[2])
+    deadline = time.time() + 30
+    while True:
+        try:
+            sock = socket.create_connection((host, port), timeout=10)
+            break
+        except OSError:
+            if time.time() > deadline:
+                raise
+            time.sleep(0.3)
+    f = sock.makefile("rw")
+
+    req = {"net": [32, 32, 32, 32, 3, 3], "lo": 0.01, "po": 2.0,
+           "rtl": True}
+    f.write(json.dumps(req) + "\n")
+    f.flush()
+    resp = json.loads(f.readline())
+    assert resp.get("ok") is True, f"server replied not-ok: {resp}"
+    assert resp.get("latency", 0) > 0, f"non-positive latency: {resp}"
+    assert "module gandse_acc" in resp.get("rtl", ""), "missing RTL"
+
+    # malformed line -> ok:false, connection stays usable
+    f.write("garbage\n")
+    f.flush()
+    err = json.loads(f.readline())
+    assert err.get("ok") is False, f"garbage was accepted: {err}"
+
+    req["rtl"] = False
+    f.write(json.dumps(req) + "\n")
+    f.flush()
+    resp2 = json.loads(f.readline())
+    assert resp2.get("ok") is True, f"connection died after error: {resp2}"
+
+    keys = ("latency", "power", "satisfied", "batch_size", "queue_us")
+    print("serve round-trip ok:", {k: resp[k] for k in keys if k in resp})
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
