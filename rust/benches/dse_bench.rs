@@ -4,13 +4,16 @@
 //! offline crate cache): warmup + N timed iterations, reporting
 //! mean / min / p50.
 //!
-//! The selection-throughput and cpu-training sections need no artifacts
-//! and always run; they write machine-readable `BENCH_select.json`
+//! The gemm, selection-throughput, and cpu-training sections need no
+//! artifacts and always run; they write machine-readable
+//! `BENCH_gemm.json` (GFLOP/s of the blocked GEMM engine on the exact
+//! forward/backward shapes of the G/D networks), `BENCH_select.json`
 //! (candidates/sec at 1 vs N threads) and `BENCH_train.json` (train
 //! steps/sec + samples/sec on the pure-Rust cpu backend) — the perf
 //! trajectories CI compares against the committed baselines in
-//! `bench/baseline/`.  The PJRT sections require `make artifacts` and are
-//! skipped otherwise.
+//! `bench/baseline/` (the gemm microbench is the hard-gated one; see
+//! `scripts/compare_bench.py --fail-on-regression`).  The PJRT sections
+//! require `make artifacts` and are skipped otherwise.
 
 use std::path::Path;
 use std::time::Instant;
@@ -19,6 +22,7 @@ use gandse::baselines::{sa_search, SaConfig};
 use gandse::dataset;
 use gandse::explorer::{Candidates, DseRequest, Explorer, Selector};
 use gandse::gan::{GanState, TrainConfig, Trainer};
+use gandse::nn::gemm::{gemm, Epilogue};
 use gandse::runtime::{CpuBackend, PjrtBackend};
 use gandse::select::SelectEngine;
 use gandse::space::{builtin_spec, Meta};
@@ -68,6 +72,156 @@ impl Bench {
         );
         self.rows.push((name.to_string(), mean, min, p50, items));
     }
+}
+
+/// GEMM-engine throughput on the exact matmul shapes behind one fused
+/// Algorithm-1 train step at the bench network size (w=64, depth 3,
+/// batch 64): per unique layer, the forward (`X·W`), weight-gradient
+/// (`Xᵀ·dY`, transposed-A packing) and input-gradient (`dY·Wᵀ`,
+/// transposed-B packing) GEMMs, each at 1 and all-cores threads.  Writes
+/// `BENCH_gemm.json` with one `gflops` row per (shape, threads) — the
+/// hard-gated perf trajectory (fixed-shape kernel timing is stable
+/// enough for `compare_bench.py --fail-on-regression`, unlike the noisy
+/// e2e numbers).  Asserts the bitwise thread-parity contract along the
+/// way.  Artifact-free.
+fn bench_gemm_microbench(b: &mut Bench) -> anyhow::Result<()> {
+    println!("== gemm microkernel (no artifacts needed) ==");
+    let (width, depth, batch) = (64usize, 3usize, 64usize);
+    let meta = Meta::builtin(width, depth, depth, batch, batch);
+    let mm = meta.model("dnnweaver")?;
+    // unique (din, dout) layer shapes across the G and D networks
+    let mut layers: Vec<(usize, usize)> = Vec::new();
+    for dims in [&mm.g_dims, &mm.d_dims] {
+        for w in dims.windows(2) {
+            if !layers.contains(&(w[0], w[1])) {
+                layers.push((w[0], w[1]));
+            }
+        }
+    }
+    // (label, m, n, k, a_trans, b_trans): per unique layer, the forward
+    // and both backward GEMMs at the train batch, plus the same trio at
+    // a big serving/whole-network batch on the widest layer — the
+    // problem size where the row-block threading actually engages (small
+    // GEMMs run inline under the engine's per-worker work floor).
+    let mut shapes: Vec<(String, usize, usize, usize, bool, bool)> =
+        Vec::new();
+    let push3 =
+        |shapes: &mut Vec<(String, usize, usize, usize, bool, bool)>,
+         bsz: usize,
+         din: usize,
+         dout: usize| {
+            shapes.push((
+                format!("fwd {bsz}x{din}x{dout}"),
+                bsz,
+                dout,
+                din,
+                false,
+                false,
+            ));
+            shapes.push((
+                format!("dW {din}x{bsz}x{dout}"),
+                din,
+                dout,
+                bsz,
+                true,
+                false,
+            ));
+            shapes.push((
+                format!("dX {bsz}x{dout}x{din}"),
+                bsz,
+                din,
+                dout,
+                false,
+                true,
+            ));
+        };
+    for &(din, dout) in &layers {
+        push3(&mut shapes, batch, din, dout);
+    }
+    let &(wd_in, wd_out) =
+        layers.iter().max_by_key(|(i, o)| i * o).expect("layers nonempty");
+    push3(&mut shapes, 512, wd_in, wd_out);
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let mut thread_counts = vec![1usize, cores];
+    thread_counts.sort_unstable();
+    thread_counts.dedup();
+    let mut rng = Rng::new(11);
+    let mut rows: Vec<Json> = Vec::new();
+    let mut best_gflops = 0f64;
+    for (shape, m, n, k, a_trans, b_trans) in shapes {
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal() * 0.1).collect();
+        let bmat: Vec<f32> =
+            (0..k * n).map(|_| rng.normal() * 0.1).collect();
+        let mut c = vec![0f32; m * n];
+        // enough inner reps that one timed call does ~50 MFLOP
+        let reps = (25_000_000 / (m * n * k).max(1)).clamp(1, 4000);
+        let mut parity: Option<Vec<f32>> = None;
+        for &threads in &thread_counts {
+            b.run(
+                &format!("gemm/{shape} threads={threads}"),
+                5,
+                reps,
+                || {
+                    for _ in 0..reps {
+                        gemm(
+                            m,
+                            n,
+                            k,
+                            &a,
+                            a_trans,
+                            &bmat,
+                            b_trans,
+                            &mut c,
+                            false,
+                            Epilogue::None,
+                            threads,
+                        );
+                        std::hint::black_box(&mut c);
+                    }
+                },
+            );
+            let secs = b.rows.last().expect("bench recorded a row").1;
+            let gflops = 2.0 * (m * n * k * reps) as f64 / secs / 1e9;
+            best_gflops = best_gflops.max(gflops);
+            if let Some(p) = &parity {
+                // the engine's contract: bitwise identical at any
+                // thread count
+                assert_eq!(
+                    p, &c,
+                    "gemm {shape} diverged at {threads} threads"
+                );
+            } else {
+                parity = Some(c.clone());
+            }
+            rows.push(Json::obj(vec![
+                ("shape", Json::str(&shape)),
+                ("m", Json::Num(m as f64)),
+                ("k", Json::Num(k as f64)),
+                ("n", Json::Num(n as f64)),
+                ("threads", Json::Num(threads as f64)),
+                ("secs", Json::Num(secs)),
+                ("gflops", Json::Num(gflops)),
+            ]));
+        }
+    }
+    let doc = Json::obj(vec![
+        ("bench", Json::str("gemm_microbench")),
+        ("model", Json::str("dnnweaver")),
+        ("width", Json::Num(width as f64)),
+        ("depth", Json::Num(depth as f64)),
+        ("batch", Json::Num(batch as f64)),
+        ("available_parallelism", Json::Num(cores as f64)),
+        ("rows", Json::Arr(rows)),
+        ("best_gflops", Json::Num(best_gflops)),
+    ]);
+    std::fs::write("BENCH_gemm.json", format!("{doc}\n"))?;
+    println!(
+        "wrote BENCH_gemm.json (best {best_gflops:.2} GFLOP/s on {cores} \
+         cores)\n"
+    );
+    Ok(())
 }
 
 /// Selection-engine throughput: scan the same capped candidate space at
@@ -233,6 +387,7 @@ fn bench_cpu_train_throughput(b: &mut Bench) -> anyhow::Result<()> {
 
 fn main() -> anyhow::Result<()> {
     let mut b = Bench::new();
+    bench_gemm_microbench(&mut b)?;
     bench_selection_throughput(&mut b)?;
     bench_cpu_train_throughput(&mut b)?;
 

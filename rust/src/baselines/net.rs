@@ -47,8 +47,11 @@ impl Mlp {
     }
 
     /// Forward pass; returns output logits and the activation tape.
+    /// Single-sample work rides the GEMM engine's gemv-shaped fast path
+    /// ([`crate::nn::gemm`]); one worker thread — there is nothing to
+    /// shard at batch 1.
     pub fn forward(&self, x: &[f32]) -> (Vec<f32>, Tape) {
-        let acts = nn::forward(&self.layout, &self.flat, x, 1);
+        let acts = nn::forward(&self.layout, &self.flat, x, 1, 1);
         (acts.last().unwrap().clone(), Tape { acts })
     }
 
@@ -64,6 +67,7 @@ impl Mlp {
             1,
             Some(grads),
             None,
+            1,
         );
     }
 

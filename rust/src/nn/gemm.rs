@@ -1,0 +1,811 @@
+//! The crate's GEMM engine: cache-blocked, register-tiled, packed, and
+//! row-block multithreaded f32 matrix multiplication with fused epilogues.
+//!
+//! Every dense-math hot path in the crate — [`super::forward`] /
+//! [`super::backward`] and therefore the CPU training backend
+//! ([`crate::runtime::cpu`]), the DRL baseline's policy network, and the
+//! explorer's batched generator inference — bottoms out here instead of
+//! in per-row dot-product loops.
+//!
+//! # Structure (BLIS-style)
+//!
+//! `C[m,n] (+)= op(A)[m,k] · op(B)[k,n]`, with the classic five-loop
+//! blocking around a register-tiled microkernel:
+//!
+//! * `NC`/`KC`/`MC` partition `n`/`k`/`m` so the packed B panel strip
+//!   (`NR x KC`, ~8 KB) and A panel (`MR x KC`, ~4 KB) live in L1 while
+//!   the full `MC x KC` A block stays L2-resident.
+//! * A and B are packed into panel buffers — `MR`-row strips of A laid
+//!   out k-major (`ap[p*MR + i]`) and `NR`-column strips of B
+//!   (`bp[p*NR + j]`) — so the microkernel streams both operands
+//!   contiguously regardless of the source layout.  Transposition is
+//!   absorbed by packing: `a_trans`/`b_trans` select the gather pattern,
+//!   so the backward passes (`dX = dY·Wᵀ`, `dW = Xᵀ·dY`) reuse the same
+//!   kernel without ever materializing a transposed matrix.
+//! * The `MR x NR = 4x8` microkernel keeps 32 f32 accumulators in
+//!   registers (one 8-wide vector row per A element on AVX2-class
+//!   hardware) and performs `2·MR·NR` FLOPs per `MR + NR` loads.
+//! * Fused epilogues ([`Epilogue::Bias`] / [`Epilogue::BiasRelu`]) apply
+//!   the layer bias and ReLU during the final writeback pass instead of a
+//!   separate sweep over `C`.
+//!
+//! Threading shards the `m` dimension into contiguous row blocks via
+//! [`crate::select::run_sharded_rows`] — the mutable-output sibling of
+//! the selection engine's fork-join helper.
+//!
+//! # Determinism contract
+//!
+//! Stronger than "bitwise at `threads = 1`": the result is **bitwise
+//! identical at any thread count**.  Each output element is computed by
+//! exactly one worker, and its floating-point reduction order is fixed —
+//! ascending `p` within a `KC` block, blocks accumulated into `C` in
+//! ascending order — independent of where the row-block or tile
+//! boundaries fall (zero-padded panel lanes never feed a live output
+//! element).  Small problems dispatch to [`gemm_small`] by a rule that
+//! depends only on `(m, n, k)`, never on the thread count.  Property
+//! tests in this module and `tests/cpu_backend.rs` pin both halves of
+//! the contract.
+
+use crate::select::run_sharded_rows;
+
+/// Microkernel rows (A panel height).
+pub const MR: usize = 4;
+/// Microkernel columns (B panel width).
+pub const NR: usize = 8;
+/// L2 block of `m` (must be a multiple of `MR`).
+pub const MC: usize = 64;
+/// L1/L2 block of `k`: `MR*KC` f32 ≈ 4 KB (A strip), `NR*KC` ≈ 8 KB (B
+/// strip) — both comfortably L1-resident.
+pub const KC: usize = 256;
+/// L3 block of `n` (must be a multiple of `NR`).
+pub const NC: usize = 512;
+
+/// Below `m*n*k` of this, panel packing costs more than it saves and the
+/// straight loops win; `m < MR` (gemv-shaped work, e.g. the DRL
+/// baseline's single-sample forward) likewise skips packing.
+const SMALL_WORK: usize = 8 * 1024;
+
+/// Minimum C rows per worker before the row-block sharding engages.
+const MIN_ROWS_PER_WORKER: usize = 8;
+
+/// Minimum `m*n*k` per worker (~0.5 MFLOP) before an extra worker pays:
+/// fork-join spawns cost ~10 µs each, so a GEMM below this per-worker
+/// budget runs faster inline than forked.  The cap changes wall-clock
+/// only — worker count never changes a single output bit (module docs).
+const PAR_WORK: usize = 1 << 18;
+
+/// `x` rounded up to a multiple of `m`.
+fn round_up(x: usize, m: usize) -> usize {
+    x.div_ceil(m) * m
+}
+
+/// Fused operation applied to each output element during the final
+/// writeback (after the full k reduction).
+#[derive(Debug, Clone, Copy)]
+pub enum Epilogue<'a> {
+    /// Plain GEMM.
+    None,
+    /// `c += bias[j]` (per output column).
+    Bias(&'a [f32]),
+    /// `c = max(c + bias[j], 0)` — a fused linear-layer forward.
+    BiasRelu(&'a [f32]),
+}
+
+/// `C[m,n] (+)= op(A) · op(B)`, then the epilogue.
+///
+/// * `a_trans: false` — A is `op(A)` stored row-major `[m, k]`;
+///   `true` — A is stored row-major `[k, m]` and `op(A) = Aᵀ`.
+/// * `b_trans: false` — B is `op(B)` stored row-major `[k, n]`;
+///   `true` — B is stored row-major `[n, k]` and `op(B) = Bᵀ`.
+/// * `accumulate: false` overwrites C; `true` adds into it (gradient
+///   accumulation).
+/// * `threads` — worker threads for the row-block sharding (0 = all
+///   cores).  The result is bitwise identical at any value (module
+///   docs).
+///
+/// Dispatches to the straight-loop path for gemv-shaped or tiny
+/// problems, to the blocked path otherwise; the rule depends only on
+/// `(m, n, k)`.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm(
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    a_trans: bool,
+    b: &[f32],
+    b_trans: bool,
+    c: &mut [f32],
+    accumulate: bool,
+    epi: Epilogue<'_>,
+    threads: usize,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    if let Epilogue::Bias(bias) | Epilogue::BiasRelu(bias) = epi {
+        debug_assert_eq!(bias.len(), n);
+    }
+    if m == 0 || n == 0 {
+        return;
+    }
+    if m < MR || m * n * k < SMALL_WORK {
+        gemm_small(m, n, k, a, a_trans, b, b_trans, c, accumulate, epi);
+    } else {
+        gemm_blocked(
+            m, n, k, a, a_trans, b, b_trans, c, accumulate, epi, threads,
+        );
+    }
+}
+
+/// The blocked/packed/threaded path, unconditionally.  [`gemm`]
+/// auto-dispatches between this and [`gemm_small`]; the property tests
+/// and the microbench call the paths directly.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_blocked(
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    a_trans: bool,
+    b: &[f32],
+    b_trans: bool,
+    c: &mut [f32],
+    accumulate: bool,
+    epi: Epilogue<'_>,
+    threads: usize,
+) {
+    debug_assert!(k > 0, "blocked path needs k >= 1 (gemm dispatches k=0)");
+    // Work-based worker cap: never fork more workers than ~0.5 MFLOP
+    // shares of the problem (fork-join spawn overhead would dominate).
+    // The cap affects wall-clock only, never the output bits.
+    let cores = if threads > 0 {
+        threads
+    } else {
+        std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1)
+    };
+    let workers = cores.min((m * n * k / PAR_WORK).max(1));
+    run_sharded_rows(c, n, workers, MIN_ROWS_PER_WORKER, |r0, r1, cblk| {
+        gemm_rows(r0, r1, m, n, k, a, a_trans, b, b_trans, cblk, accumulate);
+        apply_epilogue(cblk, r1 - r0, n, epi);
+    });
+}
+
+/// One worker's share: compute C rows `r0..r1` into `cblk` (a disjoint
+/// `(r1-r0) x n` row block of C).
+#[allow(clippy::too_many_arguments)]
+fn gemm_rows(
+    r0: usize,
+    r1: usize,
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    a_trans: bool,
+    b: &[f32],
+    b_trans: bool,
+    cblk: &mut [f32],
+    accumulate: bool,
+) {
+    let mrows = r1 - r0;
+    // Pack buffers sized to the actual problem (padded to full tiles),
+    // capped at one MC x KC / KC x NC block — small GEMMs stay cheap.
+    let kc_max = k.min(KC);
+    let mut ap = vec![0f32; round_up(mrows.min(MC), MR) * kc_max];
+    let mut bp = vec![0f32; kc_max * round_up(n.min(NC), NR)];
+    for jc in (0..n).step_by(NC) {
+        let nc = NC.min(n - jc);
+        for pc in (0..k).step_by(KC) {
+            let kc = KC.min(k - pc);
+            pack_b(b, b_trans, k, n, pc, kc, jc, nc, &mut bp);
+            // first k-block stores (unless accumulating); later ones add
+            let store = pc == 0 && !accumulate;
+            for ic in (0..mrows).step_by(MC) {
+                let mc = MC.min(mrows - ic);
+                pack_a(a, a_trans, m, k, r0 + ic, mc, pc, kc, &mut ap);
+                for jr in (0..nc).step_by(NR) {
+                    let nr = NR.min(nc - jr);
+                    for ir in (0..mc).step_by(MR) {
+                        let mr = MR.min(mc - ir);
+                        let mut acc = [[0f32; NR]; MR];
+                        microkernel(
+                            kc,
+                            &ap[ir * kc..(ir + MR) * kc],
+                            &bp[jr * kc..(jr + NR) * kc],
+                            &mut acc,
+                        );
+                        for (i, accrow) in acc.iter().enumerate().take(mr)
+                        {
+                            let off = (ic + ir + i) * n + jc + jr;
+                            let crow = &mut cblk[off..off + nr];
+                            if store {
+                                for (cv, &av) in crow.iter_mut().zip(accrow)
+                                {
+                                    *cv = av;
+                                }
+                            } else {
+                                for (cv, &av) in crow.iter_mut().zip(accrow)
+                                {
+                                    *cv += av;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The register tile: `acc[i][j] += Σ_p ap[p*MR+i] * bp[p*NR+j]` over one
+/// packed `KC` strip.  Fixed trip counts on the inner two loops let the
+/// compiler keep the 4x8 accumulator block in registers and vectorize the
+/// `NR`-wide rows.
+#[inline(always)]
+fn microkernel(
+    kc: usize,
+    ap: &[f32],
+    bp: &[f32],
+    acc: &mut [[f32; NR]; MR],
+) {
+    for p in 0..kc {
+        let arow = &ap[p * MR..p * MR + MR];
+        let brow = &bp[p * NR..p * NR + NR];
+        for (accrow, &ai) in acc.iter_mut().zip(arow) {
+            for (av, &bv) in accrow.iter_mut().zip(brow) {
+                *av += ai * bv;
+            }
+        }
+    }
+}
+
+/// Pack `mc` rows of op(A) (global rows `row0..row0+mc`, k range
+/// `pc..pc+kc`) into `MR`-row panels, k-major within each panel, zero
+/// padding the last panel's missing rows.
+#[allow(clippy::too_many_arguments)]
+fn pack_a(
+    a: &[f32],
+    a_trans: bool,
+    m: usize,
+    k: usize,
+    row0: usize,
+    mc: usize,
+    pc: usize,
+    kc: usize,
+    ap: &mut [f32],
+) {
+    for ir in (0..mc).step_by(MR) {
+        let mr = MR.min(mc - ir);
+        let panel = &mut ap[ir * kc..(ir + MR) * kc];
+        if a_trans {
+            // op(A)[i, p] = a[p*m + i]: each packed p-strip is contiguous
+            // in the source row p.
+            for (p, strip) in panel.chunks_exact_mut(MR).enumerate() {
+                let src = &a[(pc + p) * m + row0 + ir..];
+                strip[..mr].copy_from_slice(&src[..mr]);
+                strip[mr..].fill(0.0);
+            }
+        } else {
+            // op(A)[i, p] = a[i*k + p]: gather row i with stride MR.
+            if mr < MR {
+                panel.fill(0.0);
+            }
+            for i in 0..mr {
+                let src = &a[(row0 + ir + i) * k + pc..(row0 + ir + i) * k
+                    + pc
+                    + kc];
+                for (strip, &v) in panel.chunks_exact_mut(MR).zip(src) {
+                    strip[i] = v;
+                }
+            }
+        }
+    }
+}
+
+/// Pack op(B) (k range `pc..pc+kc`, columns `jc..jc+nc`) into `NR`-column
+/// panels, k-major within each panel, zero padding the last panel's
+/// missing columns.
+#[allow(clippy::too_many_arguments)]
+fn pack_b(
+    b: &[f32],
+    b_trans: bool,
+    k: usize,
+    n: usize,
+    pc: usize,
+    kc: usize,
+    jc: usize,
+    nc: usize,
+    bp: &mut [f32],
+) {
+    for jr in (0..nc).step_by(NR) {
+        let nr = NR.min(nc - jr);
+        let panel = &mut bp[jr * kc..(jr + NR) * kc];
+        if b_trans {
+            // op(B)[p, j] = b[j*k + p]: gather column j with stride NR.
+            if nr < NR {
+                panel.fill(0.0);
+            }
+            for j in 0..nr {
+                let src =
+                    &b[(jc + jr + j) * k + pc..(jc + jr + j) * k + pc + kc];
+                for (strip, &v) in panel.chunks_exact_mut(NR).zip(src) {
+                    strip[j] = v;
+                }
+            }
+        } else {
+            // op(B)[p, j] = b[p*n + j]: each packed p-strip is contiguous
+            // in the source row p.
+            for (p, strip) in panel.chunks_exact_mut(NR).enumerate() {
+                let src = &b[(pc + p) * n + jc + jr..];
+                strip[..nr].copy_from_slice(&src[..nr]);
+                strip[nr..].fill(0.0);
+            }
+        }
+    }
+}
+
+/// Final fused pass over a worker's row block.
+fn apply_epilogue(cblk: &mut [f32], mrows: usize, n: usize, epi: Epilogue) {
+    match epi {
+        Epilogue::None => {}
+        Epilogue::Bias(bias) => {
+            for r in 0..mrows {
+                let crow = &mut cblk[r * n..(r + 1) * n];
+                for (cv, &bv) in crow.iter_mut().zip(bias) {
+                    *cv += bv;
+                }
+            }
+        }
+        Epilogue::BiasRelu(bias) => {
+            for r in 0..mrows {
+                let crow = &mut cblk[r * n..(r + 1) * n];
+                for (cv, &bv) in crow.iter_mut().zip(bias) {
+                    *cv = (*cv + bv).max(0.0);
+                }
+            }
+        }
+    }
+}
+
+/// Straight-loop path for gemv-shaped or tiny problems where packing
+/// overhead dominates.  Per output element the k reduction runs in the
+/// same ascending order as the blocked path.
+#[allow(clippy::too_many_arguments)]
+fn gemm_small(
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    a_trans: bool,
+    b: &[f32],
+    b_trans: bool,
+    c: &mut [f32],
+    accumulate: bool,
+    epi: Epilogue<'_>,
+) {
+    for i in 0..m {
+        let crow = &mut c[i * n..(i + 1) * n];
+        if !accumulate {
+            crow.fill(0.0);
+        }
+        if b_trans {
+            // dot products over B's contiguous rows
+            for (j, cv) in crow.iter_mut().enumerate() {
+                let bcol = &b[j * k..(j + 1) * k];
+                let mut acc = 0f32;
+                if a_trans {
+                    for (p, &bv) in bcol.iter().enumerate() {
+                        acc += a[p * m + i] * bv;
+                    }
+                } else {
+                    let arow = &a[i * k..(i + 1) * k];
+                    for (&av, &bv) in arow.iter().zip(bcol) {
+                        acc += av * bv;
+                    }
+                }
+                *cv += acc;
+            }
+        } else {
+            // axpy over B's contiguous rows; skipping zero multipliers
+            // preserves the ReLU-sparsity win of the seed's forward loop
+            for p in 0..k {
+                let av = if a_trans { a[p * m + i] } else { a[i * k + p] };
+                if av != 0.0 {
+                    let brow = &b[p * n..(p + 1) * n];
+                    for (cv, &bv) in crow.iter_mut().zip(brow) {
+                        *cv += av * bv;
+                    }
+                }
+            }
+        }
+        match epi {
+            Epilogue::None => {}
+            Epilogue::Bias(bias) => {
+                for (cv, &bv) in crow.iter_mut().zip(bias) {
+                    *cv += bv;
+                }
+            }
+            Epilogue::BiasRelu(bias) => {
+                for (cv, &bv) in crow.iter_mut().zip(bias) {
+                    *cv = (*cv + bv).max(0.0);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// f64 reference: op(A)·op(B) with optional accumulate + epilogue.
+    #[allow(clippy::too_many_arguments)]
+    fn reference(
+        m: usize,
+        n: usize,
+        k: usize,
+        a: &[f32],
+        a_trans: bool,
+        b: &[f32],
+        b_trans: bool,
+        c0: &[f32],
+        accumulate: bool,
+        epi: &Epilogue<'_>,
+    ) -> Vec<f32> {
+        let mut out = vec![0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = if accumulate { c0[i * n + j] as f64 } else {
+                    0.0
+                };
+                for p in 0..k {
+                    let av =
+                        if a_trans { a[p * m + i] } else { a[i * k + p] };
+                    let bv =
+                        if b_trans { b[j * k + p] } else { b[p * n + j] };
+                    acc += av as f64 * bv as f64;
+                }
+                let v = match epi {
+                    Epilogue::None => acc,
+                    Epilogue::Bias(bias) => acc + bias[j] as f64,
+                    Epilogue::BiasRelu(bias) => {
+                        (acc + bias[j] as f64).max(0.0)
+                    }
+                };
+                out[i * n + j] = v as f32;
+            }
+        }
+        out
+    }
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.f32() * 2.0 - 1.0).collect()
+    }
+
+    fn assert_close(got: &[f32], want: &[f32], k: usize, label: &str) {
+        let tol = 1e-5 * (k as f32).sqrt().max(1.0) + 1e-6;
+        for (i, (g, w)) in got.iter().zip(want).enumerate() {
+            assert!(
+                (g - w).abs() <= tol * (1.0 + w.abs()),
+                "{label}: elem {i} got {g} want {w}"
+            );
+        }
+    }
+
+    /// Ragged shapes straddling every tile boundary: non-multiples of
+    /// MR/NR/MC/NC, K=1, single row/column, K crossing KC.
+    const SHAPES: &[(usize, usize, usize)] = &[
+        (1, 1, 1),
+        (1, 9, 4),
+        (3, 5, 2),
+        (4, 8, 16),
+        (5, 1, 9),
+        (5, 13, 1),
+        (7, 17, 33),
+        (16, 24, 40),
+        (33, 31, 65),
+        (66, 70, 300),
+    ];
+
+    #[test]
+    fn blocked_and_small_match_f64_reference_over_ragged_shapes() {
+        let mut rng = Rng::new(42);
+        for &(m, n, k) in SHAPES {
+            for (a_trans, b_trans) in
+                [(false, false), (true, false), (false, true), (true, true)]
+            {
+                for accumulate in [false, true] {
+                    let a = rand_vec(&mut rng, m * k);
+                    let b = rand_vec(&mut rng, k * n);
+                    let c0 = rand_vec(&mut rng, m * n);
+                    let want = reference(
+                        m, n, k, &a, a_trans, &b, b_trans, &c0, accumulate,
+                        &Epilogue::None,
+                    );
+                    let label = format!(
+                        "m{m} n{n} k{k} at{a_trans} bt{b_trans} \
+                         acc{accumulate}"
+                    );
+                    let mut got = c0.clone();
+                    gemm_blocked(
+                        m,
+                        n,
+                        k,
+                        &a,
+                        a_trans,
+                        &b,
+                        b_trans,
+                        &mut got,
+                        accumulate,
+                        Epilogue::None,
+                        1,
+                    );
+                    assert_close(&got, &want, k, &format!("blocked {label}"));
+                    let mut got = c0.clone();
+                    gemm_small(
+                        m, n, k, &a, a_trans, &b, b_trans, &mut got,
+                        accumulate, Epilogue::None,
+                    );
+                    assert_close(&got, &want, k, &format!("small {label}"));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_epilogues_match_unfused() {
+        let mut rng = Rng::new(7);
+        for &(m, n, k) in SHAPES {
+            let a = rand_vec(&mut rng, m * k);
+            let b = rand_vec(&mut rng, k * n);
+            let bias = rand_vec(&mut rng, n);
+            // unfused: plain blocked GEMM, then bias, then relu
+            let mut plain = vec![0f32; m * n];
+            gemm_blocked(
+                m,
+                n,
+                k,
+                &a,
+                false,
+                &b,
+                false,
+                &mut plain,
+                false,
+                Epilogue::None,
+                1,
+            );
+            let with_bias: Vec<f32> = plain
+                .chunks(n)
+                .flat_map(|row| {
+                    row.iter().zip(&bias).map(|(&c, &bv)| c + bv)
+                })
+                .collect();
+            let relued: Vec<f32> =
+                with_bias.iter().map(|&v| v.max(0.0)).collect();
+            // fused epilogues must be bitwise identical — same op order
+            let mut fused = vec![0f32; m * n];
+            gemm_blocked(
+                m,
+                n,
+                k,
+                &a,
+                false,
+                &b,
+                false,
+                &mut fused,
+                false,
+                Epilogue::Bias(&bias),
+                1,
+            );
+            assert_eq!(fused, with_bias, "Bias m{m} n{n} k{k}");
+            let mut fused = vec![0f32; m * n];
+            gemm_blocked(
+                m,
+                n,
+                k,
+                &a,
+                false,
+                &b,
+                false,
+                &mut fused,
+                false,
+                Epilogue::BiasRelu(&bias),
+                1,
+            );
+            assert_eq!(fused, relued, "BiasRelu m{m} n{n} k{k}");
+            // and the small path agrees with itself the same way
+            let mut fused = vec![0f32; m * n];
+            gemm_small(
+                m,
+                n,
+                k,
+                &a,
+                false,
+                &b,
+                false,
+                &mut fused,
+                false,
+                Epilogue::BiasRelu(&bias),
+            );
+            assert_close(
+                &fused,
+                &relued,
+                k,
+                &format!("small BiasRelu m{m} n{n} k{k}"),
+            );
+        }
+    }
+
+    #[test]
+    fn blocked_is_bitwise_identical_across_thread_counts() {
+        let mut rng = Rng::new(3);
+        // big enough that several workers and several MC/NC blocks engage
+        let (m, n, k) = (130, 96, 70);
+        for (a_trans, b_trans) in
+            [(false, false), (true, false), (false, true)]
+        {
+            let a = rand_vec(&mut rng, m * k);
+            let b = rand_vec(&mut rng, k * n);
+            let bias = rand_vec(&mut rng, n);
+            let run = |threads: usize| {
+                let mut c = vec![0f32; m * n];
+                gemm_blocked(
+                    m,
+                    n,
+                    k,
+                    &a,
+                    a_trans,
+                    &b,
+                    b_trans,
+                    &mut c,
+                    false,
+                    Epilogue::BiasRelu(&bias),
+                    threads,
+                );
+                c
+            };
+            let c1 = run(1);
+            for threads in [2, 3, 5, 0] {
+                assert_eq!(
+                    c1,
+                    run(threads),
+                    "at{a_trans} bt{b_trans} threads={threads}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn public_gemm_dispatch_covers_both_paths() {
+        let mut rng = Rng::new(9);
+        // gemv-shaped (m < MR) routes to the small path
+        let (m, n, k) = (1, 40, 30);
+        let a = rand_vec(&mut rng, m * k);
+        let b = rand_vec(&mut rng, k * n);
+        let mut got = vec![0f32; m * n];
+        gemm(
+            m,
+            n,
+            k,
+            &a,
+            false,
+            &b,
+            false,
+            &mut got,
+            false,
+            Epilogue::None,
+            4,
+        );
+        let want = reference(
+            m,
+            n,
+            k,
+            &a,
+            false,
+            &b,
+            false,
+            &got,
+            false,
+            &Epilogue::None,
+        );
+        assert_close(&got, &want, k, "gemv dispatch");
+        // large problem routes to the blocked path and matches it
+        let (m, n, k) = (48, 56, 64);
+        let a = rand_vec(&mut rng, m * k);
+        let b = rand_vec(&mut rng, k * n);
+        let mut via_gemm = vec![0f32; m * n];
+        gemm(
+            m,
+            n,
+            k,
+            &a,
+            false,
+            &b,
+            false,
+            &mut via_gemm,
+            false,
+            Epilogue::None,
+            2,
+        );
+        let mut via_blocked = vec![0f32; m * n];
+        gemm_blocked(
+            m,
+            n,
+            k,
+            &a,
+            false,
+            &b,
+            false,
+            &mut via_blocked,
+            false,
+            Epilogue::None,
+            2,
+        );
+        assert_eq!(via_gemm, via_blocked);
+    }
+
+    #[test]
+    fn k_zero_and_empty_edges() {
+        // k = 0: product is all zeros; epilogue still applies
+        let bias = vec![1.5f32, -2.0];
+        let mut c = vec![9.0f32; 6];
+        gemm(
+            3,
+            2,
+            0,
+            &[],
+            false,
+            &[],
+            false,
+            &mut c,
+            false,
+            Epilogue::Bias(&bias),
+            2,
+        );
+        assert_eq!(c, vec![1.5, -2.0, 1.5, -2.0, 1.5, -2.0]);
+        // k = 0 with accumulate: C unchanged modulo the epilogue
+        let mut c = vec![1.0f32; 2];
+        gemm(
+            1,
+            2,
+            0,
+            &[],
+            false,
+            &[],
+            false,
+            &mut c,
+            true,
+            Epilogue::None,
+            1,
+        );
+        assert_eq!(c, vec![1.0, 1.0]);
+        // m = 0 / n = 0: no-ops
+        gemm(
+            0,
+            2,
+            3,
+            &[],
+            false,
+            &[0.0; 6],
+            false,
+            &mut [],
+            false,
+            Epilogue::None,
+            1,
+        );
+        gemm(
+            2,
+            0,
+            3,
+            &[0.0; 6],
+            false,
+            &[],
+            false,
+            &mut [],
+            false,
+            Epilogue::None,
+            1,
+        );
+    }
+}

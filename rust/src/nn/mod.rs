@@ -11,6 +11,18 @@
 //! comparable (not bit-identical — XLA fuses differently — but
 //! gradient-checked against finite differences in
 //! `tests/cpu_backend.rs`).
+//!
+//! Every matmul — forward, `dX = dY·Wᵀ`, `dW = Xᵀ·dY` — runs on the
+//! blocked, register-tiled, multithreaded engine in [`gemm`], with the
+//! bias-add (+ ReLU for hidden layers) fused into the GEMM epilogue and
+//! the transposed backward operands absorbed by panel packing.  Results
+//! are bitwise identical at any `threads` value (see the [`gemm`] module
+//! docs for the contract); cross-batch reductions outside the GEMMs (the
+//! bias gradients) run in fixed row order for the same reason.
+
+pub mod gemm;
+
+pub use gemm::{gemm, Epilogue};
 
 use crate::util::rng::Rng;
 
@@ -80,11 +92,16 @@ pub fn init_he_flat(dims: &[usize], rng: &mut Rng) -> Vec<f32> {
 /// Batched forward pass.  `x` is row-major `[b, dims[0]]`.  Returns the
 /// activation tape: `acts[0]` is the input, `acts[l+1]` the post-activation
 /// output of layer `l` (`[b, dims[l+1]]`); the last entry holds the logits.
+///
+/// One fused GEMM per layer (`Y = X·W` with a bias / bias+ReLU epilogue),
+/// row-block sharded across `threads` workers (0 = all cores); the output
+/// is bitwise identical at any thread count.
 pub fn forward(
     layout: &MlpLayout,
     flat: &[f32],
     x: &[f32],
     b: usize,
+    threads: usize,
 ) -> Vec<Vec<f32>> {
     let dims = &layout.dims;
     debug_assert_eq!(flat.len(), layout.total());
@@ -98,26 +115,16 @@ pub fn forward(
         let wts = &flat[off..off + din * dout];
         let bias = &flat[off + din * dout..off + din * dout + dout];
         off += din * dout + dout;
-        let inp = &acts[li];
+        let epi = if li != last {
+            Epilogue::BiasRelu(bias)
+        } else {
+            Epilogue::Bias(bias)
+        };
         let mut out = vec![0f32; b * dout];
-        for r in 0..b {
-            let xrow = &inp[r * din..(r + 1) * din];
-            let orow = &mut out[r * dout..(r + 1) * dout];
-            orow.copy_from_slice(bias);
-            for (i, &xi) in xrow.iter().enumerate() {
-                if xi != 0.0 {
-                    let wrow = &wts[i * dout..(i + 1) * dout];
-                    for (o, &wv) in orow.iter_mut().zip(wrow) {
-                        *o += xi * wv;
-                    }
-                }
-            }
-            if li != last {
-                for o in orow.iter_mut() {
-                    *o = o.max(0.0);
-                }
-            }
-        }
+        gemm(
+            b, dout, din, &acts[li], false, wts, false, &mut out, false,
+            epi, threads,
+        );
         acts.push(out);
     }
     acts
@@ -134,6 +141,11 @@ pub fn forward(
 ///
 /// The ReLU mask uses the stored post-activation (`> 0`), matching the
 /// jnp `relu` VJP (zero gradient at exactly zero).
+///
+/// Per layer this is two GEMMs on the shared engine — `dW += Xᵀ·dY`
+/// (transposed-A packing, accumulating) and `dX = dY·Wᵀ` (transposed-B
+/// packing) — plus a fixed-order column sum for the bias gradient, so the
+/// whole pass is bitwise identical at any `threads` value.
 pub fn backward(
     layout: &MlpLayout,
     flat: &[f32],
@@ -142,6 +154,7 @@ pub fn backward(
     b: usize,
     mut grads: Option<&mut [f32]>,
     mut dx_out: Option<&mut [f32]>,
+    threads: usize,
 ) {
     let dims = &layout.dims;
     let n_layers = layout.n_layers();
@@ -164,52 +177,57 @@ pub fn backward(
                 }
             }
         }
-        let nb = dlo;
         let nw = din * dlo;
-        let b_off = offset_end - nb;
+        let b_off = offset_end - dlo;
         let w_off = b_off - nw;
         let wts = &flat[w_off..b_off];
         if let Some(g) = grads.as_deref_mut() {
-            let gbias = &mut g[b_off..offset_end];
-            for r in 0..b {
-                let drow = &delta[r * dlo..(r + 1) * dlo];
-                for (gb, &d) in gbias.iter_mut().zip(drow) {
-                    *gb += d;
+            let (gw, gb) = g[w_off..offset_end].split_at_mut(nw);
+            // bias gradient: column sums of delta, in fixed row order
+            for drow in delta.chunks_exact(dlo) {
+                for (gbv, &d) in gb.iter_mut().zip(drow) {
+                    *gbv += d;
                 }
             }
+            // dW += Xᵀ · delta  (A = X stored [b, din], transposed read)
+            gemm(
+                din,
+                dlo,
+                b,
+                inp,
+                true,
+                &delta,
+                false,
+                gw,
+                true,
+                Epilogue::None,
+                threads,
+            );
         }
         let need_dx = li > 0 || dx_out.is_some();
-        let mut dx = if need_dx { vec![0f32; b * din] } else { Vec::new() };
-        for r in 0..b {
-            let xrow = &inp[r * din..(r + 1) * din];
-            let drow = &delta[r * dlo..(r + 1) * dlo];
-            for i in 0..din {
-                let xi = xrow[i];
-                let wrow = &wts[i * dlo..(i + 1) * dlo];
-                let mut acc = 0f32;
-                if let Some(g) = grads.as_deref_mut() {
-                    let grow =
-                        &mut g[w_off + i * dlo..w_off + (i + 1) * dlo];
-                    for o in 0..dlo {
-                        grow[o] += xi * drow[o];
-                        acc += drow[o] * wrow[o];
-                    }
-                } else {
-                    for (&d, &wv) in drow.iter().zip(wrow) {
-                        acc += d * wv;
-                    }
-                }
-                if need_dx {
-                    dx[r * din + i] = acc;
+        if need_dx {
+            // dX = delta · Wᵀ  (B = W stored [din, dlo], transposed read)
+            let mut dx = vec![0f32; b * din];
+            gemm(
+                b,
+                din,
+                dlo,
+                &delta,
+                false,
+                wts,
+                true,
+                &mut dx,
+                false,
+                Epilogue::None,
+                threads,
+            );
+            if li == 0 {
+                if let Some(out) = dx_out.as_deref_mut() {
+                    out.copy_from_slice(&dx);
                 }
             }
+            delta = dx;
         }
-        if li == 0 {
-            if let Some(out) = dx_out.as_deref_mut() {
-                out.copy_from_slice(&dx);
-            }
-        }
-        delta = dx;
         offset_end = w_off;
     }
     debug_assert_eq!(offset_end, 0);
@@ -272,13 +290,50 @@ mod tests {
         let layout = MlpLayout::new(&[3, 5, 2]);
         let flat = init_he_flat(&layout.dims, &mut rng);
         let x: Vec<f32> = (0..12).map(|i| (i as f32 - 6.0) * 0.3).collect();
-        let batched = forward(&layout, &flat, &x, 4);
+        let batched = forward(&layout, &flat, &x, 4, 1);
         for r in 0..4 {
-            let single = forward(&layout, &flat, &x[r * 3..(r + 1) * 3], 1);
+            let single =
+                forward(&layout, &flat, &x[r * 3..(r + 1) * 3], 1, 1);
             assert_eq!(
                 &batched.last().unwrap()[r * 2..(r + 1) * 2],
                 &single.last().unwrap()[..]
             );
+        }
+    }
+
+    #[test]
+    fn forward_and_backward_bitwise_identical_across_threads() {
+        // large enough that the layer GEMMs take the blocked path AND
+        // clear the per-worker work floor, so several workers genuinely
+        // engage at threads > 1
+        let mut rng = Rng::new(11);
+        let layout = MlpLayout::new(&[48, 96, 64, 10]);
+        let flat = init_he_flat(&layout.dims, &mut rng);
+        let b = 192;
+        let x: Vec<f32> = (0..b * 48).map(|_| rng.normal() * 0.5).collect();
+        let run = |threads: usize| {
+            let acts = forward(&layout, &flat, &x, b, threads);
+            let dout = acts.last().unwrap().clone();
+            let mut grads = vec![0f32; layout.total()];
+            let mut dx = vec![0f32; b * 48];
+            backward(
+                &layout,
+                &flat,
+                &acts,
+                &dout,
+                b,
+                Some(&mut grads),
+                Some(&mut dx),
+                threads,
+            );
+            (acts, grads, dx)
+        };
+        let base = run(1);
+        for threads in [2, 4, 0] {
+            let other = run(threads);
+            assert_eq!(base.0, other.0, "acts diverged at {threads}");
+            assert_eq!(base.1, other.1, "grads diverged at {threads}");
+            assert_eq!(base.2, other.2, "dx diverged at {threads}");
         }
     }
 
@@ -291,10 +346,10 @@ mod tests {
         let b = 2;
         // loss = sum over batch of sum(y^2)/2; dL/dy = y
         let loss = |p: &[f32]| -> f32 {
-            let acts = forward(&layout, p, &x, b);
+            let acts = forward(&layout, p, &x, b, 1);
             acts.last().unwrap().iter().map(|v| v * v).sum::<f32>() / 2.0
         };
-        let acts = forward(&layout, &flat, &x, b);
+        let acts = forward(&layout, &flat, &x, b, 1);
         let dout = acts.last().unwrap().clone();
         let mut grads = vec![0f32; layout.total()];
         let mut dx = vec![0f32; b * 3];
@@ -306,6 +361,7 @@ mod tests {
             b,
             Some(&mut grads),
             Some(&mut dx),
+            1,
         );
         let eps = 1e-3f32;
         for k in [0usize, 7, 20, layout.total() - 1] {
@@ -326,12 +382,12 @@ mod tests {
         for k in [0usize, 4] {
             let orig = xv[k];
             xv[k] = orig + eps;
-            let acts_p = forward(&layout, &flat, &xv, b);
+            let acts_p = forward(&layout, &flat, &xv, b, 1);
             let lp: f32 =
                 acts_p.last().unwrap().iter().map(|v| v * v).sum::<f32>()
                     / 2.0;
             xv[k] = orig - eps;
-            let acts_m = forward(&layout, &flat, &xv, b);
+            let acts_m = forward(&layout, &flat, &xv, b, 1);
             let lm: f32 =
                 acts_m.last().unwrap().iter().map(|v| v * v).sum::<f32>()
                     / 2.0;
@@ -351,7 +407,7 @@ mod tests {
         let layout = MlpLayout::new(&[4, 6, 3]);
         let flat = init_he_flat(&layout.dims, &mut rng);
         let x: Vec<f32> = (0..8).map(|i| 0.1 * i as f32 - 0.3).collect();
-        let acts = forward(&layout, &flat, &x, 2);
+        let acts = forward(&layout, &flat, &x, 2, 1);
         let dout: Vec<f32> =
             (0..6).map(|i| 0.2 * (i as f32) - 0.5).collect();
         let mut grads = vec![0f32; layout.total()];
@@ -364,9 +420,10 @@ mod tests {
             2,
             Some(&mut grads),
             Some(&mut dx_a),
+            1,
         );
         let mut dx_b = vec![0f32; 8];
-        backward(&layout, &flat, &acts, &dout, 2, None, Some(&mut dx_b));
+        backward(&layout, &flat, &acts, &dout, 2, None, Some(&mut dx_b), 1);
         assert_eq!(dx_a, dx_b);
     }
 

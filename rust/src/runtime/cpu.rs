@@ -22,13 +22,17 @@
 //!   probabilities; the dis loss trains D against the actual satisfaction
 //!   labels.
 //!
-//! Work is sharded across batch rows with [`crate::select::run_sharded`]
-//! — the same fork-join machinery as the selection engine.  Every row is
-//! mathematically independent; only the final gradient reduction sums
-//! across shards, so results are deterministic for a fixed thread count
-//! (and bitwise-reproducible at `threads = 1`, which the fixed-seed
-//! golden tests pin).  Correctness is anchored by finite-difference
-//! gradient checks in `tests/cpu_backend.rs`.
+//! All dense math runs full-batch through the blocked GEMM engine
+//! ([`crate::nn::gemm`]), which shards output rows across `threads`
+//! workers internally (via [`crate::select::run_sharded_rows`], the same
+//! fork-join family as the selection engine).  Every GEMM output element
+//! is computed by exactly one worker with a fixed reduction order, and
+//! every cross-row reduction outside the GEMMs (losses, bias gradients)
+//! runs sequentially in row order — so one train step is **bitwise
+//! deterministic at any thread count**, not merely reproducible at a
+//! fixed one.  CI's determinism matrix re-runs the test suite at
+//! `GANDSE_THREADS=1` and `=4` to hold that line; correctness is anchored
+//! by finite-difference gradient checks in `tests/cpu_backend.rs`.
 
 use anyhow::{bail, Result};
 
@@ -36,13 +40,7 @@ use crate::dataset::BatchBuffers;
 use crate::gan::GanState;
 use crate::nn::{self, MlpLayout};
 use crate::runtime::backend::{Backend, BackendKind, TrainStepper};
-use crate::select::run_sharded;
 use crate::space::{Meta, ModelMeta, SpaceSpec, N_NET, N_OBJ};
-
-/// Minimum batch rows per worker before sharding engages (a train-step
-/// row costs a few hundred kFLOP even at tiny widths; below this, spawn
-/// overhead dominates).
-const MIN_ROWS_PER_SHARD: usize = 4;
 
 /// The pure-Rust CPU backend.  `threads == 0` means all cores.
 #[derive(Debug, Clone, Copy)]
@@ -132,37 +130,23 @@ impl Backend for CpuBackend {
         check_batch_lens(spec, net, obj, noise, stats, rows)?;
         let st = SplitStats::new(stats);
         let onehot = spec.onehot_dim;
-        let blocks = run_sharded(
-            rows,
-            self.threads,
-            MIN_ROWS_PER_SHARD,
-            |start, end| {
-                let rb = end - start;
-                let g_x = build_g_input(
-                    spec, &st, net, obj, noise, start, end,
-                );
-                let acts = nn::forward(&gl, g_params, &g_x, rb);
-                let logits = acts.last().unwrap();
-                let mut probs = vec![0f32; rb * onehot];
-                // empty scratch = skip the log-softmax (inference only
-                // needs probabilities)
-                let mut scratch: Vec<f32> = Vec::new();
-                for r in 0..rb {
-                    group_softmax_row(
-                        spec,
-                        &logits[r * onehot..(r + 1) * onehot],
-                        &mut probs[r * onehot..(r + 1) * onehot],
-                        &mut scratch,
-                    );
-                }
-                probs
-            },
-        );
-        let mut out = Vec::with_capacity(rows * onehot);
-        for b in blocks {
-            out.extend_from_slice(&b);
+        // one batched forward on the GEMM engine (row-sharded inside)
+        let g_x = build_g_input(spec, &st, net, obj, noise, 0, rows);
+        let acts = nn::forward(&gl, g_params, &g_x, rows, self.threads);
+        let logits = acts.last().unwrap();
+        let mut probs = vec![0f32; rows * onehot];
+        // empty scratch = skip the log-softmax (inference only needs
+        // probabilities)
+        let mut scratch: Vec<f32> = Vec::new();
+        for r in 0..rows {
+            group_softmax_row(
+                spec,
+                &logits[r * onehot..(r + 1) * onehot],
+                &mut probs[r * onehot..(r + 1) * onehot],
+                &mut scratch,
+            );
         }
-        Ok(out)
+        Ok(probs)
     }
 }
 
@@ -328,18 +312,10 @@ pub struct StepEval {
     pub d_grads: Vec<f32>,
 }
 
-/// Per-shard partial results (summed, not yet averaged).
-struct RowsOut {
-    g_grads: Vec<f32>,
-    d_grads: Vec<f32>,
-    loss_config: f64,
-    loss_critic: f64,
-    loss_dis: f64,
-    sat: f64,
-}
-
 /// Evaluate losses and gradients for one mini-batch (Algorithm-1 step
-/// minus the Adam update), sharded across rows.
+/// minus the Adam update).  The batched GEMMs shard across `threads`
+/// workers internally; everything else runs in fixed row order, so the
+/// result is bitwise identical at any thread count.
 #[allow(clippy::too_many_arguments)]
 pub fn eval_step(
     spec: &SpaceSpec,
@@ -365,72 +341,19 @@ pub fn eval_step(
     }
     let st = SplitStats::new(stats);
     let wc = if mlp_mode { 0.0 } else { w_critic };
-    let outs = run_sharded(rows, threads, MIN_ROWS_PER_SHARD, |start, end| {
-        step_rows(
-            spec, gl, dl, g, d, batch, &st, wc, mlp_mode, rows, start, end,
-        )
-    });
-    let mut g_grads = vec![0f32; gl.total()];
-    let mut d_grads = vec![0f32; dl.total()];
-    let (mut lc, mut lcr, mut ld, mut sat) = (0f64, 0f64, 0f64, 0f64);
-    for o in &outs {
-        for (a, &b) in g_grads.iter_mut().zip(&o.g_grads) {
-            *a += b;
-        }
-        for (a, &b) in d_grads.iter_mut().zip(&o.d_grads) {
-            *a += b;
-        }
-        lc += o.loss_config;
-        lcr += o.loss_critic;
-        ld += o.loss_dis;
-        sat += o.sat;
-    }
-    let n = rows.max(1) as f64;
-    let loss_config = (lc / n) as f32;
-    let loss_critic = (lcr / n) as f32;
-    Ok(StepEval {
-        loss_config,
-        loss_critic,
-        loss_dis: (ld / n) as f32,
-        sat_frac: (sat / n) as f32,
-        g_loss: loss_config + wc * loss_critic,
-        g_grads,
-        d_grads,
-    })
-}
-
-/// The per-row-range worker: forward + backward for rows `start..end`.
-/// All 1/b factors use the **global** batch size so shard outputs sum to
-/// the full-batch gradients.
-#[allow(clippy::too_many_arguments)]
-fn step_rows(
-    spec: &SpaceSpec,
-    gl: &MlpLayout,
-    dl: &MlpLayout,
-    g: &[f32],
-    d: &[f32],
-    batch: &BatchBuffers,
-    st: &SplitStats,
-    wc: f32,
-    mlp_mode: bool,
-    b_total: usize,
-    start: usize,
-    end: usize,
-) -> RowsOut {
-    let rb = end - start;
     let onehot = spec.onehot_dim;
     let d_in = spec.d_in;
-    let inv_b = 1.0 / b_total as f32;
+    let inv_b = 1.0 / rows as f32;
 
     // --- G forward ------------------------------------------------------
     let g_x = build_g_input(
-        spec, st, &batch.net, &batch.obj, &batch.noise, start, end,
+        spec, &st, &batch.net, &batch.obj, &batch.noise, 0, rows,
     );
-    let g_acts = nn::forward(gl, g, &g_x, rb);
+    let g_acts = nn::forward(gl, g, &g_x, rows, threads);
     let logits = g_acts.last().unwrap();
-    let mut probs = vec![0f32; rb * onehot];
-    let mut log_probs = vec![0f32; rb * onehot];
-    for r in 0..rb {
+    let mut probs = vec![0f32; rows * onehot];
+    let mut log_probs = vec![0f32; rows * onehot];
+    for r in 0..rows {
         group_softmax_row(
             spec,
             &logits[r * onehot..(r + 1) * onehot],
@@ -440,26 +363,24 @@ fn step_rows(
     }
 
     // --- decode + design-model label (stop-gradient) --------------------
-    let mut sat_f = vec![0f32; rb];
-    let mut mask = vec![0f32; rb];
+    let mut sat_f = vec![0f32; rows];
+    let mut mask = vec![0f32; rows];
     let mut loss_config_sum = 0f64;
     let mut raw = vec![0f32; spec.groups.len()];
-    for r in 0..rb {
-        let row = start + r;
+    for r in 0..rows {
         let prow = &probs[r * onehot..(r + 1) * onehot];
         let idx = spec.decode_argmax(prow);
         for ((rv, grp), &ci) in raw.iter_mut().zip(&spec.groups).zip(&idx) {
             *rv = grp.choices[ci];
         }
-        let net_row = &batch.net[row * N_NET..(row + 1) * N_NET];
+        let net_row = &batch.net[r * N_NET..(r + 1) * N_NET];
         let (l_g, p_g) = spec.kind.eval(net_row, &raw);
-        let (lo_s, po_s) =
-            (batch.obj[row * N_OBJ], batch.obj[row * N_OBJ + 1]);
+        let (lo_s, po_s) = (batch.obj[r * N_OBJ], batch.obj[r * N_OBJ + 1]);
         let sat = l_g <= lo_s && p_g <= po_s;
         sat_f[r] = if sat { 1.0 } else { 0.0 };
         mask[r] = if mlp_mode { 1.0 } else { 1.0 - sat_f[r] };
         // ce_cfg = -sum(onehot * log_probs)
-        let orow = &batch.onehot[row * onehot..(row + 1) * onehot];
+        let orow = &batch.onehot[r * onehot..(r + 1) * onehot];
         let lrow = &log_probs[r * onehot..(r + 1) * onehot];
         let mut ce = 0f32;
         for (o, lp) in orow.iter().zip(lrow) {
@@ -469,31 +390,28 @@ fn step_rows(
     }
 
     // --- D forward (shared by the critic and dis losses) ----------------
-    let mut d_x = Vec::with_capacity(rb * d_in);
-    for r in 0..rb {
+    let mut d_x = Vec::with_capacity(rows * d_in);
+    for r in 0..rows {
         // [net_n, probs, obj_n] — the same normalization as G's input.
-        let row = start + r;
         for k in 0..N_NET {
             d_x.push(
-                (batch.net[row * N_NET + k] - st.net_mean[k])
-                    / st.net_std[k],
+                (batch.net[r * N_NET + k] - st.net_mean[k]) / st.net_std[k],
             );
         }
         d_x.extend_from_slice(&probs[r * onehot..(r + 1) * onehot]);
         for k in 0..N_OBJ {
             d_x.push(
-                (batch.obj[row * N_OBJ + k] - st.obj_mean[k])
-                    / st.obj_std[k],
+                (batch.obj[r * N_OBJ + k] - st.obj_mean[k]) / st.obj_std[k],
             );
         }
     }
-    let d_acts = nn::forward(dl, d, &d_x, rb);
+    let d_acts = nn::forward(dl, d, &d_x, rows, threads);
     let d_logits = d_acts.last().unwrap();
     let mut loss_critic_sum = 0f64;
     let mut loss_dis_sum = 0f64;
-    let mut d_critic_dout = vec![0f32; rb * 2];
-    let mut d_dis_dout = vec![0f32; rb * 2];
-    for r in 0..rb {
+    let mut d_critic_dout = vec![0f32; rows * 2];
+    let mut d_dis_dout = vec![0f32; rows * 2];
+    for r in 0..rows {
         let lg = [d_logits[r * 2], d_logits[r * 2 + 1]];
         let lsm = log_softmax2(lg);
         let p_true = lsm[0].exp();
@@ -513,13 +431,12 @@ fn step_rows(
 
     // --- G gradient -----------------------------------------------------
     // config part: d(mean(mask * ce))/dlogits = mask/b * (probs - onehot).
-    let mut dlogits = vec![0f32; rb * onehot];
-    for r in 0..rb {
-        let row = start + r;
+    let mut dlogits = vec![0f32; rows * onehot];
+    for r in 0..rows {
         let scale = mask[r] * inv_b;
         if scale != 0.0 {
             let prow = &probs[r * onehot..(r + 1) * onehot];
-            let orow = &batch.onehot[row * onehot..(row + 1) * onehot];
+            let orow = &batch.onehot[r * onehot..(r + 1) * onehot];
             for k in 0..onehot {
                 dlogits[r * onehot + k] = scale * (prow[k] - orow[k]);
             }
@@ -530,17 +447,18 @@ fn step_rows(
     if wc != 0.0 {
         // critic part: through D with frozen weights (input gradient
         // only), then the per-group softmax Jacobian into G's logits.
-        let mut d_dx = vec![0f32; rb * d_in];
+        let mut d_dx = vec![0f32; rows * d_in];
         nn::backward(
             dl,
             d,
             &d_acts,
             &d_critic_dout,
-            rb,
+            rows,
             None,
             Some(&mut d_dx),
+            threads,
         );
-        for r in 0..rb {
+        for r in 0..rows {
             let dprobs = &d_dx[r * d_in + N_NET..r * d_in + N_NET + onehot];
             let prow = &probs[r * onehot..(r + 1) * onehot];
             let drow = &mut dlogits[r * onehot..(r + 1) * onehot];
@@ -558,19 +476,41 @@ fn step_rows(
             }
         }
     }
-    nn::backward(gl, g, &g_acts, &dlogits, rb, Some(&mut g_grads), None);
+    nn::backward(
+        gl,
+        g,
+        &g_acts,
+        &dlogits,
+        rows,
+        Some(&mut g_grads),
+        None,
+        threads,
+    );
 
     // --- D gradient (dis loss; probs are stop-gradient inputs here) -----
-    nn::backward(dl, d, &d_acts, &d_dis_dout, rb, Some(&mut d_grads), None);
+    nn::backward(
+        dl,
+        d,
+        &d_acts,
+        &d_dis_dout,
+        rows,
+        Some(&mut d_grads),
+        None,
+        threads,
+    );
 
-    RowsOut {
+    let n = rows.max(1) as f64;
+    let loss_config = (loss_config_sum / n) as f32;
+    let loss_critic = (loss_critic_sum / n) as f32;
+    Ok(StepEval {
+        loss_config,
+        loss_critic,
+        loss_dis: (loss_dis_sum / n) as f32,
+        sat_frac: (sat_f.iter().map(|&s| s as f64).sum::<f64>() / n) as f32,
+        g_loss: loss_config + wc * loss_critic,
         g_grads,
         d_grads,
-        loss_config: loss_config_sum,
-        loss_critic: loss_critic_sum,
-        loss_dis: loss_dis_sum,
-        sat: sat_f.iter().map(|&s| s as f64).sum(),
-    }
+    })
 }
 
 /// A live CPU training session: owns the authoritative state.
@@ -722,11 +662,14 @@ mod tests {
 
     #[test]
     fn infer_probs_independent_of_thread_count() {
-        let meta = Meta::builtin(16, 2, 2, 8, 8);
+        // batch big enough that the forward GEMMs take the blocked path
+        // and clear the per-worker work floor, so several workers
+        // genuinely engage — parity must still be bitwise (module docs)
+        let meta = Meta::builtin(64, 2, 2, 8, 8);
         let mm = meta.model("dnnweaver").unwrap();
         let spec = &mm.spec;
         let state = GanState::init(mm, "dnnweaver", 2);
-        let rows = 9;
+        let rows = 192;
         let mut rng = crate::util::rng::Rng::new(5);
         let net: Vec<f32> =
             (0..rows * N_NET).map(|_| 16.0 + 32.0 * rng.f32()).collect();
@@ -741,13 +684,15 @@ mod tests {
                 rows,
             )
             .unwrap();
-        let p3 = CpuBackend::new(3)
-            .infer_probs(
-                &meta, "dnnweaver", &state.g, &net, &obj, &noise, &stats,
-                rows,
-            )
-            .unwrap();
-        // forward is read-only per row: bit-identical at any thread count
-        assert_eq!(p1, p3);
+        for threads in [3, 0] {
+            let pn = CpuBackend::new(threads)
+                .infer_probs(
+                    &meta, "dnnweaver", &state.g, &net, &obj, &noise,
+                    &stats, rows,
+                )
+                .unwrap();
+            // GEMM row-sharding is bitwise thread-count independent
+            assert_eq!(p1, pn, "threads={threads}");
+        }
     }
 }

@@ -52,10 +52,10 @@ const MIN_SHARD: usize = 4_096;
 
 /// Shard `n` items into up to `threads` contiguous ranges of at least
 /// `min_shard` items each and run `f(start, end)` on scoped worker
-/// threads; returns the per-shard results **in shard order**.  This is the
-/// fork-join machinery behind both [`SelectEngine::run`] and the CPU
-/// training backend's batched matmuls
-/// ([`crate::runtime::cpu::CpuBackend`]).
+/// threads; returns the per-shard results **in shard order**.  This is
+/// the fork-join machinery behind [`SelectEngine::run`];
+/// [`run_sharded_rows`] is its mutable-output sibling behind the GEMM
+/// engine ([`crate::nn::gemm`]) and therefore the CPU training backend.
 ///
 /// `threads == 0` means "use every available core".  With one effective
 /// worker (or `n < 2 * min_shard`), `f` runs inline on the caller's
@@ -100,6 +100,67 @@ where
         }
     });
     out
+}
+
+/// The mutable-output sibling of [`run_sharded`]: split `data` (a
+/// row-major `[n, row_width]` buffer) into up to `threads` contiguous
+/// row-range blocks of at least `min_rows` rows and run
+/// `f(start, end, block)` on scoped worker threads, where `block` is the
+/// **disjoint** `&mut` sub-slice holding rows `start..end`.  Same
+/// sharding policy as [`run_sharded`] (`threads == 0` = all cores; one
+/// effective worker runs inline on the caller's thread), but the workers
+/// write their results in place instead of returning them — this is the
+/// fork-join machinery behind the GEMM engine's row-block threading
+/// ([`crate::nn::gemm`]).
+///
+/// Because every row is written by exactly one worker and the row-range
+/// boundaries never change what is computed for a given row, callers
+/// whose per-row work is a pure function of the shared inputs get
+/// bitwise-identical `data` at any thread count.
+pub fn run_sharded_rows<T, F>(
+    data: &mut [T],
+    row_width: usize,
+    threads: usize,
+    min_rows: usize,
+    f: F,
+) where
+    T: Send,
+    F: Fn(usize, usize, &mut [T]) + Sync,
+{
+    debug_assert!(row_width > 0, "row_width must be positive");
+    debug_assert_eq!(
+        data.len() % row_width.max(1),
+        0,
+        "data must be a whole number of rows"
+    );
+    let n = data.len() / row_width.max(1);
+    if n == 0 {
+        return;
+    }
+    let cores = if threads > 0 {
+        threads
+    } else {
+        std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1)
+    };
+    let workers = cores.min((n / min_rows.max(1)).max(1));
+    if workers <= 1 {
+        f(0, n, data);
+        return;
+    }
+    let shard = (n + workers - 1) / workers;
+    std::thread::scope(|s| {
+        let mut rest = data;
+        let mut start = 0usize;
+        while start < n {
+            let end = (start + shard).min(n);
+            let (block, tail) =
+                std::mem::take(&mut rest).split_at_mut((end - start) * row_width);
+            rest = tail;
+            let f = &f;
+            s.spawn(move || f(start, end, block));
+            start = end;
+        }
+    });
 }
 
 // ---------------------------------------------------------------------------
@@ -565,6 +626,35 @@ mod tests {
         assert!(run_sharded(0, 4, 1, |s, e| (s, e)).is_empty());
         // below 2 x min_shard stays inline (one shard)
         assert_eq!(run_sharded(7, 8, 4, |s, e| (s, e)), vec![(0, 7)]);
+    }
+
+    #[test]
+    fn run_sharded_rows_covers_disjoint_blocks_in_order() {
+        // every row written exactly once, with its own index
+        let mut data = vec![0usize; 10 * 3];
+        run_sharded_rows(&mut data, 3, 4, 1, |start, end, block| {
+            assert_eq!(block.len(), (end - start) * 3);
+            for (r, row) in block.chunks_exact_mut(3).enumerate() {
+                row.fill(start + r);
+            }
+        });
+        for (r, row) in data.chunks_exact(3).enumerate() {
+            assert!(row.iter().all(|&v| v == r), "row {r}: {row:?}");
+        }
+        // single worker runs inline; empty input dispatches nothing
+        let mut one = vec![0u8; 4];
+        run_sharded_rows(&mut one, 2, 1, 1, |s, e, b| {
+            assert_eq!((s, e, b.len()), (0, 2, 4));
+        });
+        let mut empty: Vec<u8> = Vec::new();
+        run_sharded_rows(&mut empty, 5, 4, 1, |_, _, _| {
+            panic!("no rows, no dispatch")
+        });
+        // below 2 x min_rows stays inline (one block)
+        let mut seven = vec![0u8; 7];
+        run_sharded_rows(&mut seven, 1, 8, 4, |s, e, b| {
+            assert_eq!((s, e, b.len()), (0, 7, 7));
+        });
     }
 
     #[test]

@@ -1,55 +1,118 @@
 #!/usr/bin/env python3
 """Compare a fresh BENCH_*.json against the committed baseline run.
 
-    python3 scripts/compare_bench.py BENCH_select.json \
-        bench/baseline/BENCH_select.json
+    python3 scripts/compare_bench.py NEW BASELINE \
+        [--fail-on-regression] [--threshold 0.20]
 
-Warn-only by design: a >20% throughput drop on any (threads, metric) row
-prints a GitHub Actions `::warning::` annotation and a REGRESSION line
-but still exits 0 — shared CI runners are too noisy for a hard perf
-gate, and the point is a machine-readable trajectory, not flaky builds.
-Exits non-zero only when the *fresh* file is missing or malformed (i.e.
-the bench itself broke).
+Rows are keyed by ``(shape, threads)`` — ``shape`` is optional (the
+select/train benches emit one row per thread count; BENCH_gemm.json emits
+one per GEMM shape per thread count).  A throughput metric more than
+``--threshold`` below the committed baseline is a regression:
 
-To (re)seed the baseline, copy a trusted run's output over the file in
-bench/baseline/ and commit it (see bench/baseline/README.md).
+* default (warn-only): prints a GitHub Actions ``::warning::`` annotation
+  and REGRESSION lines but exits 0 — the e2e select/train numbers on
+  shared CI runners are too noisy for a hard perf gate; the point is a
+  machine-readable trajectory, not flaky builds.
+* ``--fail-on-regression``: prints ``::error::`` annotations and exits 1.
+  CI turns this on for the BENCH_gemm.json microbench (with a generous
+  35% threshold): fixed-shape kernel timings are stable enough to gate,
+  so the GEMM perf trajectory is enforced, not just observed.
+
+In both modes a markdown comparison table is appended to
+``$GITHUB_STEP_SUMMARY`` when that variable is set.
+
+Exits non-zero when the *fresh* file is missing or malformed (i.e. the
+bench itself broke).  A missing baseline is not an error: the script
+prints a seeding reminder and exits 0 (see bench/baseline/README.md for
+the seeding / refresh procedure).
 """
 
+import argparse
 import json
+import os
 import sys
 
-THRESHOLD = 0.20
-METRICS = ("cands_per_sec", "steps_per_sec", "samples_per_sec")
+DEFAULT_THRESHOLD = 0.20
+METRICS = ("cands_per_sec", "steps_per_sec", "samples_per_sec", "gflops")
 
 
-def rows_by_threads(doc):
-    return {int(r["threads"]): r for r in doc.get("rows", [])}
+def rows_by_key(doc):
+    """Key each row by (shape, threads); shape defaults to ''."""
+    return {
+        (str(r.get("shape", "")), int(r["threads"])): r
+        for r in doc.get("rows", [])
+        if "threads" in r
+    }
+
+
+def fmt_key(key):
+    shape, threads = key
+    prefix = f"{shape} " if shape else ""
+    return f"{prefix}threads={threads}"
+
+
+def append_step_summary(lines):
+    path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if not path:
+        return
+    with open(path, "a") as f:
+        f.write("\n".join(lines) + "\n")
 
 
 def main() -> int:
-    if len(sys.argv) != 3:
-        print(__doc__)
-        return 2
-    new_path, base_path = sys.argv[1], sys.argv[2]
-    with open(new_path) as f:  # malformed/missing fresh file -> exit 1
-        new = json.load(f)
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+    )
+    ap.add_argument("new", help="fresh BENCH_*.json from this run")
+    ap.add_argument("baseline", help="committed bench/baseline/ file")
+    ap.add_argument(
+        "--fail-on-regression",
+        action="store_true",
+        help="exit 1 (and annotate ::error::) on any regression",
+    )
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=DEFAULT_THRESHOLD,
+        help="relative drop that counts as a regression "
+        f"(default {DEFAULT_THRESHOLD})",
+    )
+    args = ap.parse_args()
+
+    try:  # malformed/missing fresh file -> the bench itself broke
+        with open(args.new) as f:
+            new = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"error: cannot read {args.new}: {e}", file=sys.stderr)
+        return 1
     if not new.get("rows"):
-        print(f"error: {new_path} has no rows", file=sys.stderr)
+        print(f"error: {args.new} has no rows", file=sys.stderr)
         return 1
     try:
-        with open(base_path) as f:
+        with open(args.baseline) as f:
             base = json.load(f)
-    except (FileNotFoundError, json.JSONDecodeError):
-        print(
-            f"no committed baseline at {base_path} — copy this run's "
-            f"{new_path} there (and commit) to start tracking regressions"
+    except (OSError, json.JSONDecodeError):
+        msg = (
+            f"no committed baseline at {args.baseline} — copy this run's "
+            f"{args.new} there (and commit) to start tracking regressions"
         )
+        print(msg)
+        append_step_summary([f"### `{args.new}`", "", msg, ""])
         return 0
 
+    mode = "hard gate" if args.fail_on_regression else "warn-only"
+    table = [
+        f"### `{args.new}` vs `{args.baseline}` "
+        f"({mode}, threshold {args.threshold:.0%})",
+        "",
+        "| row | metric | baseline | new | ratio | status |",
+        "|---|---|---:|---:|---:|---|",
+    ]
     regressions = []
-    new_rows, base_rows = rows_by_threads(new), rows_by_threads(base)
-    for threads, brow in sorted(base_rows.items()):
-        nrow = new_rows.get(threads)
+    new_rows, base_rows = rows_by_key(new), rows_by_key(base)
+    for key in sorted(base_rows):
+        brow, nrow = base_rows[key], new_rows.get(key)
         if nrow is None:
             continue
         for metric in METRICS:
@@ -58,21 +121,37 @@ def main() -> int:
             if brow[metric] <= 0:
                 continue
             ratio = nrow[metric] / brow[metric]
+            regressed = ratio < 1.0 - args.threshold
             line = (
-                f"{new_path} threads={threads} {metric}: "
-                f"{nrow[metric]:.1f} vs baseline {brow[metric]:.1f} "
+                f"{args.new} {fmt_key(key)} {metric}: "
+                f"{nrow[metric]:.2f} vs baseline {brow[metric]:.2f} "
                 f"({ratio:.2f}x)"
             )
-            if ratio < 1.0 - THRESHOLD:
+            table.append(
+                f"| {fmt_key(key)} | {metric} | {brow[metric]:.2f} "
+                f"| {nrow[metric]:.2f} | {ratio:.2f}x "
+                f"| {'**REGRESSION**' if regressed else 'ok'} |"
+            )
+            if regressed:
                 regressions.append(line)
             else:
                 print("ok:", line)
+    table.append("")
+    append_step_summary(table)
+
+    level = "error" if args.fail_on_regression else "warning"
     for r in regressions:
-        print(f"::warning file={base_path}::throughput regression >20%: {r}")
+        print(
+            f"::{level} file={args.baseline}::throughput regression "
+            f">{args.threshold:.0%}: {r}"
+        )
         print("REGRESSION:", r)
     if not regressions:
-        print(f"{new_path}: no >20% regressions vs {base_path}")
-    return 0
+        print(
+            f"{args.new}: no >{args.threshold:.0%} regressions vs "
+            f"{args.baseline}"
+        )
+    return 1 if regressions and args.fail_on_regression else 0
 
 
 if __name__ == "__main__":
