@@ -1,7 +1,9 @@
-//! DSE-as-a-service demo: starts the batching DSE server on an ephemeral
-//! port, fires concurrent client requests at it (JSON-lines over TCP), and
-//! reports latency percentiles + throughput + achieved batch sizes — the
-//! router-style serving measurement for EXPERIMENTS.md.
+//! DSE-as-a-service demo: starts the pipelined multi-worker DSE server
+//! on an ephemeral port, fires concurrent client requests at it
+//! (JSON-lines over TCP), and reports latency percentiles + throughput +
+//! achieved batch sizes — the router-style serving measurement for
+//! EXPERIMENTS.md.  (`gandse loadtest` is the production-shape version
+//! of this demo: closed-loop pipelined clients, BENCH_serve.json.)
 //!
 //! Run: `cargo run --release --example serve_dse
 //!       [n_clients] [reqs_per_client]` — no artifacts needed (the cpu
@@ -43,12 +45,23 @@ fn main() -> Result<()> {
     let mut tr =
         Trainer::new(backend, meta, model, GanState::init(mm, model, 1))?;
     tr.train(&ds, &TrainConfig { epochs: 4, ..Default::default() })?;
-    let ex = Explorer::new(backend, meta, model, tr.state.g.clone(),
-                           ds.stats.to_vec())?;
+    // two batch workers drain the shared bounded queue
+    let mut explorers = Vec::new();
+    for _ in 0..2 {
+        explorers.push(Explorer::new(backend, meta, model,
+                                     tr.state.g.clone(),
+                                     ds.stats.to_vec())?);
+    }
 
-    let handle =
-        server::serve("127.0.0.1:0", ex, meta.infer_batch,
-                      Duration::from_millis(4))?;
+    let handle = server::serve(
+        "127.0.0.1:0",
+        explorers,
+        server::ServeConfig {
+            max_batch: meta.infer_batch,
+            max_wait: Duration::from_millis(4),
+            ..Default::default()
+        },
+    )?;
     let addr = handle.addr;
     println!("server on {addr}; {n_clients} clients x {per_client} requests");
 

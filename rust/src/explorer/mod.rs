@@ -16,7 +16,7 @@
 use anyhow::{bail, Result};
 
 use crate::runtime::backend::Backend;
-use crate::select::SelectEngine;
+use crate::select::{run_sharded, SelectEngine};
 use crate::space::{Meta, SpaceSpec, N_NET, N_OBJ};
 use crate::util::rng::Rng;
 
@@ -162,11 +162,45 @@ impl<'a> Explorer<'a> {
     /// expansion, design-model evaluation, Algorithm-2 selection.
     pub fn explore(&mut self, reqs: &[DseRequest]) -> Result<Vec<DseResult>> {
         let probs = self.infer_probs(reqs)?;
-        Ok(reqs
-            .iter()
-            .zip(&probs)
-            .map(|(r, p)| self.select_from_probs(r, p))
-            .collect())
+        Ok(self.select_batch(reqs, &probs))
+    }
+
+    /// Candidate expansion + selection for a whole batch: when the
+    /// batch has at least one task per worker thread, the tasks fan out
+    /// across the engine's workers with the shared [`run_sharded`]
+    /// fork-join (the serving path's per-batch parallelism), each task
+    /// running the plain sequential Algorithm-2 scan inside its worker
+    /// — no nested thread spawn per task and no idle cores from
+    /// sharding one scan N ways while N-1 tasks wait.  Smaller batches
+    /// keep the serial per-task loop with the engine's **intra-task**
+    /// sharding, so e.g. 3 tasks on 16 cores still use all 16 per scan.
+    /// Because per-task selection is bitwise thread-count independent
+    /// (see `crate::select`), both routes return identical bits in the
+    /// same order.
+    pub fn select_batch(
+        &self,
+        reqs: &[DseRequest],
+        probs: &[Vec<f32>],
+    ) -> Vec<DseResult> {
+        debug_assert_eq!(reqs.len(), probs.len());
+        let threads = self.engine.resolved_threads();
+        if reqs.len() < threads.max(2) {
+            // fewer tasks than workers: intra-task sharding wins
+            return reqs
+                .iter()
+                .zip(probs)
+                .map(|(r, p)| self.select_from_probs(r, p))
+                .collect();
+        }
+        // One task per worker is already worthwhile: a task scans up to
+        // `engine.cap` candidates, dwarfing the spawn cost.
+        let per_task = SelectEngine { threads: 1, ..self.engine };
+        let shards = run_sharded(reqs.len(), threads, 1, |s, e| {
+            (s..e)
+                .map(|i| self.select_with(&per_task, &reqs[i], &probs[i]))
+                .collect::<Vec<_>>()
+        });
+        shards.into_iter().flatten().collect()
     }
 
     /// Candidate expansion + selection for one request given G's output.
@@ -175,11 +209,19 @@ impl<'a> Explorer<'a> {
         req: &DseRequest,
         probs: &[f32],
     ) -> DseResult {
+        self.select_with(&self.engine, req, probs)
+    }
+
+    fn select_with(
+        &self,
+        engine: &SelectEngine,
+        req: &DseRequest,
+        probs: &[f32],
+    ) -> DseResult {
         let spec = self.spec;
         let cands = Candidates::from_probs(spec, probs, self.threshold);
         let kind = spec.kind;
-        let out = self
-            .engine
+        let out = engine
             .run(spec, &cands, req.lo, req.po, |raw| {
                 kind.eval(&req.net, raw)
             })

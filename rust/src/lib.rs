@@ -18,6 +18,7 @@ pub mod dataset;
 pub mod explorer;
 pub mod gan;
 pub mod harness;
+pub mod loadtest;
 pub mod metrics;
 pub mod model;
 pub mod nn;

@@ -1,0 +1,278 @@
+//! Native closed-loop load generator for the DSE server (`gandse
+//! loadtest`).
+//!
+//! One **round** = (clients, pipeline-depth, requests-per-client).  Each
+//! round spawns `clients` threads; every thread keeps up to `pipeline`
+//! requests in flight on a single connection (closed loop: the next
+//! request is written the moment a reply is read), tags each request
+//! with a monotonically increasing `"id"`, and verifies the serving
+//! layer's pipelining contract — exactly one `{"ok":true}` reply per
+//! request, delivered in submission order.  Any dropped, malformed,
+//! out-of-order, or `{"ok":false}` reply counts as an error; `gandse
+//! loadtest` exits non-zero when a round observes any, which is what
+//! makes CI's `serve-load` job a correctness hard gate.
+//!
+//! Rounds report client-observed latency percentiles (exact, from the
+//! full sample set — not bucketed) and throughput; [`json_row`] emits
+//! them in the row schema `scripts/compare_bench.py` keys: rows by
+//! `(shape, threads)`, throughput metric `req_per_sec`.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// One (clients, pipeline-depth) load round.
+#[derive(Debug, Clone, Copy)]
+pub struct RoundSpec {
+    pub clients: usize,
+    /// Max in-flight requests per connection (1 = classic ping-pong).
+    pub pipeline: usize,
+    /// Requests per client; the round issues `clients * reqs` total.
+    pub reqs: usize,
+}
+
+/// Client-observed outcome of one round.
+#[derive(Debug, Clone)]
+pub struct RoundStats {
+    pub spec: RoundSpec,
+    /// Requests issued (`clients * reqs`).
+    pub total: usize,
+    /// Dropped, malformed, out-of-order, or `{"ok":false}` replies.
+    pub errors: u64,
+    pub wall_secs: f64,
+    pub req_per_sec: f64,
+    pub p50_us: u64,
+    pub p95_us: u64,
+    pub p99_us: u64,
+    pub max_us: u64,
+}
+
+/// Drive one round against a running server.  `Ok` does **not** imply
+/// zero errors — check [`RoundStats::errors`]; only infrastructure
+/// failures (e.g. the listener is gone entirely) map to `Err`.
+pub fn run_round(addr: SocketAddr, spec: RoundSpec) -> Result<RoundStats> {
+    let t0 = Instant::now();
+    let mut handles = Vec::with_capacity(spec.clients);
+    for c in 0..spec.clients {
+        handles.push(std::thread::spawn(move || client_loop(addr, c, spec)));
+    }
+    let mut lats: Vec<u64> = Vec::with_capacity(spec.clients * spec.reqs);
+    let mut errors = 0u64;
+    for h in handles {
+        match h.join() {
+            Ok(Ok((l, e))) => {
+                lats.extend(l);
+                errors += e;
+            }
+            // a client that could not even connect drops its whole share
+            Ok(Err(_)) | Err(_) => errors += spec.reqs as u64,
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    lats.sort_unstable();
+    let total = spec.clients * spec.reqs;
+    let pct = |p: f64| -> u64 {
+        if lats.is_empty() {
+            return 0;
+        }
+        let i = (p * (lats.len() - 1) as f64).round() as usize;
+        lats[i.min(lats.len() - 1)]
+    };
+    Ok(RoundStats {
+        spec,
+        total,
+        errors,
+        wall_secs: wall,
+        req_per_sec: lats.len() as f64 / wall.max(1e-9),
+        p50_us: pct(0.50),
+        p95_us: pct(0.95),
+        p99_us: pct(0.99),
+        max_us: lats.last().copied().unwrap_or(0),
+    })
+}
+
+/// One pipelined closed-loop client: returns (per-reply latencies µs,
+/// error count).
+fn client_loop(
+    addr: SocketAddr,
+    client: usize,
+    spec: RoundSpec,
+) -> Result<(Vec<u64>, u64)> {
+    let stream = TcpStream::connect(addr).context("connect")?;
+    stream.set_nodelay(true)?;
+    // a dropped reply on a live connection must count as an error (the
+    // zero-error gate), not hang the round until the CI job timeout
+    stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+    let mut w = stream.try_clone()?;
+    let mut r = BufReader::new(stream);
+    let n = spec.reqs;
+    let mut t_send: Vec<Option<Instant>> = vec![None; n];
+    let mut lats = Vec::with_capacity(n);
+    let mut errors = 0u64;
+    let mut sent = 0usize;
+    let window = spec.pipeline.max(1).min(n);
+    for _ in 0..window {
+        t_send[sent] = Some(Instant::now());
+        write_req(&mut w, client, sent)?;
+        sent += 1;
+    }
+    let mut line = String::new();
+    for i in 0..n {
+        line.clear();
+        if r.read_line(&mut line).unwrap_or(0) == 0 {
+            // connection died: every outstanding reply is dropped
+            errors += (n - i) as u64;
+            break;
+        }
+        let ok = Json::parse(line.trim())
+            .ok()
+            .map(|v| {
+                v.get("ok").and_then(Json::as_bool) == Some(true)
+                    && v.get("id").and_then(Json::as_f64) == Some(i as f64)
+            })
+            .unwrap_or(false);
+        if ok {
+            let t = t_send[i].expect("reply precedes its own request");
+            lats.push(t.elapsed().as_micros() as u64);
+        } else {
+            errors += 1;
+        }
+        if sent < n {
+            t_send[sent] = Some(Instant::now());
+            // a failed write is NOT counted here: its reply can never
+            // arrive, so the read loop's end-of-stream accounting above
+            // covers it exactly once (counting both would let errors
+            // exceed `total` and push err_rate past 1.0)
+            let _ = write_req(&mut w, client, sent);
+            sent += 1;
+        }
+    }
+    Ok((lats, errors))
+}
+
+/// Ask a running server how many batch workers it has (its
+/// `{"stats":true}` endpoint) — the `threads` row key of
+/// `BENCH_serve.json` must reflect the *server's* configuration, which
+/// for an external `--addr` target is not ours to assume.
+pub fn probe_workers(addr: SocketAddr) -> Result<usize> {
+    let stream = TcpStream::connect(addr).context("connect for stats")?;
+    stream.set_read_timeout(Some(Duration::from_secs(10)))?;
+    let mut w = stream.try_clone()?;
+    let mut r = BufReader::new(stream);
+    w.write_all(b"{\"stats\":true}\n")?;
+    let mut line = String::new();
+    r.read_line(&mut line)?;
+    let v = Json::parse(line.trim())
+        .map_err(|e| anyhow::anyhow!("bad stats reply: {e}"))?;
+    v.get("stats")
+        .and_then(|s| s.get("workers"))
+        .and_then(Json::as_usize)
+        .context("stats reply has no workers field")
+}
+
+fn write_req(w: &mut TcpStream, client: usize, i: usize) -> Result<()> {
+    // vary the objective so successive requests are not identical work;
+    // one write_all per request — with TCP_NODELAY a separate newline
+    // write would cost an extra syscall (and possibly packet) inside
+    // the very round trip this tool measures
+    let lo = 1e-3 * (((i + client) % 40) + 1) as f64;
+    let req = format!(
+        r#"{{"net":[32,32,32,32,3,3],"lo":{lo},"po":2.0,"id":{i}}}"#
+    ) + "\n";
+    w.write_all(req.as_bytes())?;
+    Ok(())
+}
+
+/// `BENCH_serve.json` row in the `compare_bench.py` schema: keyed by
+/// (`shape`, `threads`), throughput metric `req_per_sec`.  `threads` is
+/// the server's batch-worker count (the knob the trajectory tracks).
+pub fn json_row(s: &RoundStats, server_workers: usize) -> Json {
+    Json::obj(vec![
+        (
+            "shape",
+            Json::str(&format!("c{}_p{}", s.spec.clients, s.spec.pipeline)),
+        ),
+        ("clients", Json::Num(s.spec.clients as f64)),
+        ("pipeline", Json::Num(s.spec.pipeline as f64)),
+        ("threads", Json::Num(server_workers as f64)),
+        ("reqs", Json::Num(s.total as f64)),
+        ("req_per_sec", Json::Num(s.req_per_sec)),
+        ("err_rate", Json::Num(s.errors as f64 / s.total.max(1) as f64)),
+        ("wall_secs", Json::Num(s.wall_secs)),
+        ("p50_us", Json::Num(s.p50_us as f64)),
+        ("p95_us", Json::Num(s.p95_us as f64)),
+        ("p99_us", Json::Num(s.p99_us as f64)),
+        ("max_us", Json::Num(s.max_us as f64)),
+    ])
+}
+
+pub fn markdown_header() -> String {
+    "| clients | pipeline | reqs | req/s | p50 us | p95 us | p99 us \
+     | errors |\n|---:|---:|---:|---:|---:|---:|---:|---:|"
+        .to_string()
+}
+
+pub fn markdown_row(s: &RoundStats) -> String {
+    format!(
+        "| {} | {} | {} | {:.0} | {} | {} | {} | {} |",
+        s.spec.clients,
+        s.spec.pipeline,
+        s.total,
+        s.req_per_sec,
+        s.p50_us,
+        s.p95_us,
+        s.p99_us,
+        s.errors
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats() -> RoundStats {
+        RoundStats {
+            spec: RoundSpec { clients: 64, pipeline: 8, reqs: 32 },
+            total: 2048,
+            errors: 0,
+            wall_secs: 2.0,
+            req_per_sec: 1024.0,
+            p50_us: 900,
+            p95_us: 2000,
+            p99_us: 4000,
+            max_us: 9000,
+        }
+    }
+
+    #[test]
+    fn json_row_matches_compare_bench_schema() {
+        // compare_bench.py keys rows by (shape, threads) and reads the
+        // req_per_sec metric — all three must be present and typed.
+        let v = json_row(&stats(), 2);
+        assert_eq!(v.get("shape").unwrap().as_str(), Some("c64_p8"));
+        assert_eq!(v.get("threads").unwrap().as_f64(), Some(2.0));
+        assert_eq!(v.get("req_per_sec").unwrap().as_f64(), Some(1024.0));
+        assert_eq!(v.get("err_rate").unwrap().as_f64(), Some(0.0));
+        // and round-trips through the serializer
+        let parsed = Json::parse(&v.to_string()).unwrap();
+        assert_eq!(parsed.get("p99_us").unwrap().as_f64(), Some(4000.0));
+    }
+
+    #[test]
+    fn markdown_table_is_well_formed() {
+        let header = markdown_header();
+        let row = markdown_row(&stats());
+        let cols = |s: &str| s.matches('|').count();
+        // header line, separator line, and data row agree on the column
+        // count (GitHub refuses ragged tables in step summaries)
+        let mut lines = header.lines();
+        let head = lines.next().unwrap();
+        let sep = lines.next().unwrap();
+        assert_eq!(cols(head), cols(sep));
+        assert_eq!(cols(head), cols(&row));
+    }
+}

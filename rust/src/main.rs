@@ -4,10 +4,14 @@
 //!   dataset  — generate + save a labeled dataset (Dataset Generator)
 //!   train    — Training Phase: Algorithm 1 over the AOT train step
 //!   explore  — Parsing + Exploration + Implementation phases for a task
-//!   serve    — run the batching DSE server (JSON-lines over TCP)
+//!   serve    — run the pipelined multi-worker DSE server (JSON-lines
+//!              over TCP)
+//!   loadtest — closed-loop pipelined load generator against a spawned
+//!              or external server; writes BENCH_serve.json
 //!   bench    — regenerate the paper's tables/figures (Table 5, Figs 5-11)
 //!   rtl      — Implementation Phase only: emit Verilog for a config
 
+use std::net::ToSocketAddrs;
 use std::path::{Path, PathBuf};
 use std::time::Duration;
 
@@ -18,12 +22,15 @@ use gandse::dataset::{self, Dataset};
 use gandse::explorer::{DseRequest, Explorer};
 use gandse::gan::{history_csv, GanState, TrainConfig, Trainer};
 use gandse::harness;
+use gandse::loadtest::{self, RoundSpec};
 use gandse::parser;
 use gandse::rtl;
 use gandse::runtime::backend::{self, Backend, BackendKind};
 use gandse::select::SelectEngine;
+use gandse::server::ServeConfig;
 use gandse::space::{builtin_spec, Meta};
 use gandse::util::args::Args;
+use gandse::util::json::Json;
 
 const USAGE: &str = "\
 GANDSE: GAN-based design space exploration for NN accelerators
@@ -41,7 +48,13 @@ COMMANDS
   eval      --model M --ckpt c.ckpt [--test N] [--threshold T] [--threads N]
             (held-out satisfaction / improvement-ratio / difficulty report)
   serve     --model M --ckpt c.ckpt [--addr 127.0.0.1:7878]
-            [--max-wait-ms 5] [--threads N]
+            [--workers 2] [--max-wait-ms 5] [--max-batch B]
+            [--max-queue 1024] [--threads N]
+  loadtest  --model M [--ckpt c.ckpt] [--addr host:port]
+            [--clients 4,16,64] [--pipeline 1,8] [--reqs 64]
+            [--workers 2] [--max-queue 1024] [--out BENCH_serve.json]
+            (without --addr, spawns an in-process cpu-backend server;
+             exits non-zero on ANY dropped/out-of-order/error reply)
   bench     --exp <table5|fig5|fig67|fig89|fig1011|all> --model M
             [--train N] [--test N] [--epochs E] [--out-dir results/]
             [--threads N]
@@ -77,6 +90,7 @@ fn main() {
         "explore" => cmd_explore(&args),
         "eval" => cmd_eval(&args),
         "serve" => cmd_serve(&args),
+        "loadtest" => cmd_loadtest(&args),
         "bench" => cmd_bench(&args),
         "rtl" => cmd_rtl(&args),
         _ => {
@@ -397,32 +411,196 @@ fn cmd_eval(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_serve(args: &Args) -> Result<()> {
-    let model = args.get_or("model", "dnnweaver");
+/// Build `workers` explorers over one leaked backend/meta — the
+/// per-batch-worker state of the serving layer (each worker owns an
+/// explorer; selection is thread-count independent, so which worker
+/// answers is unobservable).  `state_g: None` synthesizes a random G
+/// from the one loaded meta (loadtest without `--ckpt`; serving
+/// throughput does not depend on checkpoint quality).
+fn make_worker_explorers(
+    args: &Args,
+    model: &str,
+    state_g: Option<Vec<f32>>,
+    workers: usize,
+) -> Result<(Vec<Explorer<'static>>, &'static Meta)> {
     let dir = artifacts_dir(args);
-    // serving needs 'static: leak backend + meta (process-lifetime server)
     let (kind, backend) = make_backend(args, &dir)?;
     let backend: &'static dyn Backend = Box::leak(backend);
     let meta: &'static Meta =
         Box::leak(Box::new(load_meta(args, &dir, kind)?));
+    let g = match state_g {
+        Some(g) => g,
+        None => {
+            let seed = args.get_u64("seed", 7)?;
+            GanState::init(meta.model(model)?, model, seed).g
+        }
+    };
+    let ds = load_or_generate_dataset(args, model, 2048, 16)?;
+    let threshold = args.get_f32("threshold", 0.2)?;
+    let threads = args.get_usize("threads", 0)?;
+    let mut explorers = Vec::with_capacity(workers);
+    for _ in 0..workers {
+        let mut ex = Explorer::new(
+            backend,
+            meta,
+            model,
+            g.clone(),
+            ds.stats.to_vec(),
+        )?;
+        ex.threshold = threshold;
+        ex.engine = SelectEngine::with_threads(threads);
+        explorers.push(ex);
+    }
+    Ok((explorers, meta))
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "dnnweaver");
     let ckpt = args.get("ckpt").context("--ckpt <file> is required")?;
     let state = GanState::load(Path::new(ckpt))?;
-    let ds = load_or_generate_dataset(args, &model, 2048, 16)?;
-    let mut ex =
-        Explorer::new(backend, meta, &model, state.g, ds.stats.to_vec())?;
-    ex.threshold = args.get_f32("threshold", 0.2)?;
-    ex.engine = SelectEngine::with_threads(args.get_usize("threads", 0)?);
+    let workers = args.get_usize("workers", 2)?.max(1);
+    let (explorers, meta) =
+        make_worker_explorers(args, &model, Some(state.g), workers)?;
     let addr = args.get_or("addr", "127.0.0.1:7878");
-    let max_wait = Duration::from_millis(args.get_u64("max-wait-ms", 5)?);
-    let max_batch = args.get_usize("max-batch", meta.infer_batch)?;
+    let cfg = ServeConfig {
+        max_batch: args.get_usize("max-batch", meta.infer_batch)?,
+        max_wait: Duration::from_millis(args.get_u64("max-wait-ms", 5)?),
+        max_queue: args.get_usize("max-queue", 1024)?,
+    };
     args.reject_unknown()?;
-    let handle = gandse::server::serve(&addr, ex, max_batch, max_wait)?;
-    println!("gandse dse server listening on {}", handle.addr);
+    let handle = gandse::server::serve(&addr, explorers, cfg)?;
+    println!(
+        "gandse dse server listening on {} ({workers} workers, \
+         max_batch {}, max_queue {})",
+        handle.addr, cfg.max_batch, cfg.max_queue
+    );
     loop {
         std::thread::sleep(Duration::from_secs(60));
         let (batches, items) = handle.stats();
-        println!("served {items} requests in {batches} batches");
+        println!(
+            "served {items} requests in {batches} batches \
+             (queue depth {}, rejected {})",
+            handle.queue_depth(),
+            handle.rejected()
+        );
     }
+}
+
+fn parse_usize_list(s: &str) -> Result<Vec<usize>> {
+    let out: Vec<usize> = s
+        .split(',')
+        .filter(|t| !t.trim().is_empty())
+        .map(|t| t.trim().parse::<usize>())
+        .collect::<Result<_, _>>()
+        .with_context(|| format!("parsing list {s:?}"))?;
+    if out.is_empty() || out.contains(&0) {
+        bail!("list {s:?} must contain positive integers");
+    }
+    Ok(out)
+}
+
+/// Closed-loop pipelined load generator (CI's `serve-load` gate).
+/// Without `--addr`, spawns an in-process server first — a random G
+/// unless `--ckpt` is given; serving throughput does not depend on
+/// checkpoint quality.  Exits non-zero on any dropped, out-of-order, or
+/// `{"ok":false}` reply.
+fn cmd_loadtest(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "dnnweaver");
+    let clients = parse_usize_list(&args.get_or("clients", "4,16,64"))?;
+    let pipelines = parse_usize_list(&args.get_or("pipeline", "1,8"))?;
+    let reqs = args.get_usize("reqs", 64)?.max(1);
+    let out = args.get_or("out", "BENCH_serve.json");
+    let workers = args.get_usize("workers", 2)?.max(1);
+
+    let (addr, handle, server_workers) = if let Some(a) = args.get("addr") {
+        let addr = a
+            .to_socket_addrs()
+            .with_context(|| format!("resolving {a:?}"))?
+            .next()
+            .with_context(|| format!("{a:?} resolved to no address"))?;
+        // server-spawn flags never reach an external server; consume
+        // them (so reject_unknown gives no confusing error) but say so
+        // ("workers" too: the row key comes from the stats probe below)
+        let ignored: Vec<&str> = [
+            "ckpt", "backend", "artifacts", "width", "g-depth", "d-depth",
+            "train-batch", "infer-batch", "max-batch", "max-queue",
+            "max-wait-ms", "threshold", "threads", "seed", "train",
+            "test", "dataset", "workers",
+        ]
+        .into_iter()
+        .filter(|k| args.get(k).is_some())
+        .collect();
+        if !ignored.is_empty() {
+            eprintln!(
+                "note: --addr targets a running server; ignoring \
+                 server-spawn flags {ignored:?}"
+            );
+        }
+        // the BENCH_serve.json row key must carry the *server's* worker
+        // count, not our local --workers flag (which never reached it)
+        let server_workers = loadtest::probe_workers(addr)
+            .context("probing the external server's stats endpoint")?;
+        (addr, None, server_workers)
+    } else {
+        let g = args
+            .get("ckpt")
+            .map(|p| GanState::load(Path::new(p)).map(|s| s.g))
+            .transpose()?;
+        let (explorers, meta) =
+            make_worker_explorers(args, &model, g, workers)?;
+        let cfg = ServeConfig {
+            max_batch: args.get_usize("max-batch", meta.infer_batch)?,
+            max_wait: Duration::from_millis(args.get_u64("max-wait-ms", 2)?),
+            max_queue: args.get_usize("max-queue", 1024)?,
+        };
+        let handle = gandse::server::serve("127.0.0.1:0", explorers, cfg)?;
+        (handle.addr, Some(handle), workers)
+    };
+    args.reject_unknown()?;
+
+    println!(
+        "loadtest against {addr}: {} rounds, {reqs} reqs/client",
+        clients.len() * pipelines.len()
+    );
+    println!("{}", loadtest::markdown_header());
+    let mut rows = Vec::new();
+    let mut total_errors = 0u64;
+    for &c in &clients {
+        for &p in &pipelines {
+            let spec = RoundSpec { clients: c, pipeline: p, reqs };
+            let stats = loadtest::run_round(addr, spec)?;
+            println!("{}", loadtest::markdown_row(&stats));
+            total_errors += stats.errors;
+            rows.push(loadtest::json_row(&stats, server_workers));
+        }
+    }
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let doc = Json::obj(vec![
+        ("bench", Json::str("serve_load")),
+        ("model", Json::str(&model)),
+        ("workers", Json::Num(server_workers as f64)),
+        ("reqs_per_client", Json::Num(reqs as f64)),
+        ("available_parallelism", Json::Num(cores as f64)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    std::fs::write(&out, format!("{doc}\n"))?;
+    println!("wrote {out}");
+    if let Some(h) = handle {
+        let (batches, items) = h.stats();
+        println!(
+            "server: {items} requests in {batches} batches \
+             (rejected {}, queue depth {})",
+            h.rejected(),
+            h.queue_depth()
+        );
+        h.shutdown();
+    }
+    if total_errors > 0 {
+        bail!("loadtest observed {total_errors} dropped/mismatched replies");
+    }
+    Ok(())
 }
 
 fn cmd_bench(args: &Args) -> Result<()> {

@@ -1,7 +1,11 @@
 //! Evaluation metrics from Section 7: satisfaction (with 1% noise),
 //! improvement ratio, latency/power error statistics (Fig. 5), Pareto
 //! distance based objective difficulty (Section 7.4), and the log2
-//! improvement coordinates of Figs. 8/9.
+//! improvement coordinates of Figs. 8/9 — plus the lock-free live
+//! counters ([`LogHistogram`], [`BucketCounters`]) behind the DSE
+//! server's `stats` endpoint.
+
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::dataset::Sample;
 
@@ -120,6 +124,113 @@ pub fn rank_by_difficulty(
     scored.into_iter().map(|(i, _)| i).collect()
 }
 
+// ---------------------------------------------------------------------------
+// Live serving metrics (lock-free, recorded on hot paths)
+// ---------------------------------------------------------------------------
+
+/// Power-of-two buckets in a [`LogHistogram`]: bucket `i` holds values
+/// in `[2^i, 2^(i+1))` (zero lands in bucket 0).  48 buckets cover any
+/// microsecond-scale latency this crate can observe.
+const LOG_BUCKETS: usize = 48;
+
+/// Lock-free log2-bucketed histogram for latency-style `u64` samples
+/// (microseconds by convention).  `record` is a single relaxed
+/// fetch-add on the value's bucket, so it is safe to call from every
+/// batch worker concurrently; percentiles are read as the upper bound
+/// of the bucket holding the requested rank, clamped to the exact
+/// maximum seen — within 2x of the true quantile, which is what a
+/// serving `stats` endpoint needs.
+pub struct LogHistogram {
+    buckets: Vec<AtomicU64>,
+    max: AtomicU64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> LogHistogram {
+        LogHistogram::new()
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> LogHistogram {
+        LogHistogram {
+            buckets: (0..LOG_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// floor(log2(v)) for v >= 1; 0 shares bucket 0 with 1.
+    fn bucket(v: u64) -> usize {
+        (63 - (v | 1).leading_zeros() as usize).min(LOG_BUCKETS - 1)
+    }
+
+    pub fn record(&self, v: u64) {
+        self.buckets[Self::bucket(v)].fetch_add(1, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Largest value ever recorded (exact, not bucketed).
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    /// Upper bound on the `p`-quantile (`0.0 < p <= 1.0`): the top edge
+    /// of the bucket containing the rank-`ceil(p * count)` sample,
+    /// clamped to the exact maximum.  Returns 0 for an empty histogram.
+    pub fn percentile(&self, p: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let rank = ((p * total as f64).ceil() as u64).clamp(1, total);
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= rank {
+                // guard keyed to the real overflow bound (i can only
+                // reach LOG_BUCKETS - 1; the branch matters only if
+                // that constant ever approaches the u64 width)
+                let upper = if i + 1 >= u64::BITS as usize {
+                    u64::MAX
+                } else {
+                    (1u64 << (i + 1)) - 1
+                };
+                return upper.min(self.max());
+            }
+        }
+        self.max()
+    }
+}
+
+/// Fixed-size array of lock-free counters — the DSE server's
+/// batch-occupancy histogram (index = batch size - 1).  Out-of-range
+/// indices clamp to the last bucket instead of panicking on a hot path.
+pub struct BucketCounters {
+    counts: Vec<AtomicU64>,
+}
+
+impl BucketCounters {
+    pub fn new(n: usize) -> BucketCounters {
+        assert!(n > 0, "need at least one bucket");
+        BucketCounters {
+            counts: (0..n).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    pub fn record(&self, i: usize) {
+        let i = i.min(self.counts.len() - 1);
+        self.counts[i].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn counts(&self) -> Vec<u64> {
+        self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -181,5 +292,48 @@ mod tests {
         assert!(near < far);
         let order = rank_by_difficulty(&[(5.0, 5.0), (1.1, 1.1)], &frontier);
         assert_eq!(order, vec![1, 0]); // index of the nearer pair first
+    }
+
+    #[test]
+    fn log_histogram_percentiles_bound_the_samples() {
+        let h = LogHistogram::new();
+        assert_eq!(h.percentile(0.5), 0); // empty
+        for v in [10u64, 20, 30, 40, 1000] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.max(), 1000);
+        // rank 3 of 5 lands in the [16,31] bucket: upper bound 31, which
+        // bounds the true median 30 from above
+        assert_eq!(h.percentile(0.5), 31);
+        // the tail percentile is clamped to the exact max, not 1023
+        assert_eq!(h.percentile(0.99), 1000);
+        assert_eq!(h.percentile(1.0), 1000);
+        let (p50, p95, p99) =
+            (h.percentile(0.5), h.percentile(0.95), h.percentile(0.99));
+        assert!(p50 <= p95 && p95 <= p99, "{p50} {p95} {p99}");
+    }
+
+    #[test]
+    fn log_histogram_handles_zero_and_huge_values() {
+        let h = LogHistogram::new();
+        h.record(0);
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.percentile(0.5), 0); // clamped to max (= 0)
+        h.record(u64::MAX); // clamps into the last bucket
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.max(), u64::MAX);
+        // the sample clamps to bucket 47, whose upper bound caps the
+        // reported percentile (the max counter stays exact)
+        assert_eq!(h.percentile(1.0), (1u64 << 48) - 1);
+    }
+
+    #[test]
+    fn bucket_counters_clamp_out_of_range() {
+        let b = BucketCounters::new(4);
+        b.record(0);
+        b.record(3);
+        b.record(9); // clamps to the last bucket
+        assert_eq!(b.counts(), vec![1, 0, 0, 2]);
     }
 }

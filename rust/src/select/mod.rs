@@ -442,7 +442,11 @@ impl SelectEngine {
         SelectEngine { threads, ..SelectEngine::default() }
     }
 
-    fn resolved_threads(&self) -> usize {
+    /// The effective worker count (`threads == 0` resolves to
+    /// `available_parallelism`).  Crate-visible so batch-level callers
+    /// (the explorer's task fan-out) route on the same number the
+    /// engine would actually use.
+    pub(crate) fn resolved_threads(&self) -> usize {
         if self.threads > 0 {
             self.threads
         } else {

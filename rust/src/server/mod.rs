@@ -1,22 +1,30 @@
-//! DSE service: TCP JSON-lines protocol with dynamic request batching.
+//! DSE service: a pipelined, multi-worker TCP JSON-lines serving layer.
 //!
-//! The exploration artifacts are AOT-compiled for a **fixed** batch shape
-//! (`meta.infer_batch`), so the serving problem is the classic router one:
-//! coalesce concurrently arriving requests into full inference batches
-//! without letting a lone request wait forever.  [`Batcher`] implements
-//! the policy (size-or-deadline, like vLLM's scheduler at 1/1000 scale);
-//! [`serve`] wires it to a `std::net` TCP listener with one light thread
-//! per connection (the offline crate cache has no tokio — see DESIGN.md).
+//! The serving problem is the classic router one — coalesce concurrently
+//! arriving requests into inference batches without letting a lone
+//! request wait forever — at production shape: one **bounded** submission
+//! queue ([`Batcher`]) feeds N batch workers (each owning its own
+//! [`Explorer`] over the shared backend), admission control rejects work
+//! with a structured error instead of growing memory without bound,
+//! connections are **pipelined** (any number of in-flight requests per
+//! socket, replies delivered strictly in submission order, client `id`
+//! tags echoed verbatim), shutdown drains every accepted request, and a
+//! `stats` request exposes live counters.  The offline crate cache has
+//! no tokio, so the building blocks are `std::net` + threads (see
+//! DESIGN.md §4 for the architecture and §7 for the constraint).
 //!
 //! Protocol (one JSON object per line, newline-terminated):
 //!   request:  {"net": [ic,oc,ow,oh,kw,kh], "lo": <f>, "po": <f>,
-//!              "rtl": <bool, optional>}
+//!              "rtl": <bool, optional>, "id": <any, optional — echoed>}
+//!   stats:    {"stats": true, "id": <optional>}
 //!   response: {"ok": true, "cfg": {...}, "latency": <f>, "power": <f>,
 //!              "satisfied": <bool>, "n_candidates": <f>,
-//!              "batch_size": <n>, "queue_us": <n>, "rtl": "..."}
-//!   errors:   {"ok": false, "error": "..."}
+//!              "batch_size": <n>, "queue_us": <n>, "rtl": "...",
+//!              "id": <echo>}
+//!   errors:   {"ok": false, "error": "...", "id": <echo>} — notably
+//!             "overloaded" (queue full) and "server shutting down".
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc;
@@ -26,6 +34,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::explorer::{DseRequest, DseResult, Explorer};
+use crate::metrics::{BucketCounters, LogHistogram};
 use crate::rtl;
 use crate::space::{SpaceSpec, N_NET};
 use crate::util::json::Json;
@@ -34,72 +43,128 @@ use crate::util::json::Json;
 #[derive(Debug, Clone, Copy)]
 pub struct BatchInfo {
     pub batch_size: usize,
+    /// Queue wait of the batch's **oldest** member, µs.
     pub queue_us: u64,
 }
 
-struct BatchState<T, R> {
-    queue: Vec<(T, mpsc::Sender<(R, BatchInfo)>)>,
-    oldest: Option<Instant>,
+/// Why a submission was refused (see [`Batcher::submit`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, thiserror::Error)]
+pub enum SubmitError {
+    /// The bounded queue is full — back off and retry.
+    #[error("overloaded")]
+    Overloaded,
+    /// The batcher is draining; no new work is admitted.
+    #[error("server shutting down")]
+    Closed,
 }
 
-/// Dynamic batching queue: collect items until `max_batch` are pending or
-/// `max_wait` has elapsed since the oldest arrival, then hand the whole
-/// batch to the worker.
+struct BatchState<T, R> {
+    /// FIFO of pending items with their arrival times (`queue[0]` is
+    /// always the oldest, so the flush deadline needs no separate
+    /// tracking and a partial drain never resets the survivors' clock).
+    queue: Vec<(T, Instant, mpsc::Sender<(R, BatchInfo)>)>,
+}
+
+/// Bounded dynamic batching queue: collect items until `max_batch` are
+/// pending or `max_wait` has elapsed since the oldest arrival, then hand
+/// the whole batch to whichever worker wakes first.  Submissions beyond
+/// `max_queue` waiting items are rejected ([`SubmitError::Overloaded`]);
+/// submissions after [`Batcher::close`] are rejected
+/// ([`SubmitError::Closed`]) instead of leaving the reply channel
+/// hanging forever.
 pub struct Batcher<T, R> {
     inner: Mutex<BatchState<T, R>>,
     cv: Condvar,
     pub max_batch: usize,
     pub max_wait: Duration,
+    /// Admission bound on *waiting* items (in-flight batches excluded).
+    pub max_queue: usize,
     closed: AtomicBool,
     /// Served-batch statistics for throughput metrics.
     pub batches: AtomicU64,
     pub items: AtomicU64,
+    /// Submissions refused because the queue was full.
+    pub rejected: AtomicU64,
+    /// Per-item queue-wait histogram (µs).
+    pub queue_hist: LogHistogram,
+    /// Dispatched-batch occupancy (index = batch size - 1).
+    pub occupancy: BucketCounters,
 }
 
 impl<T, R> Batcher<T, R> {
-    pub fn new(max_batch: usize, max_wait: Duration) -> Self {
-        assert!(max_batch > 0);
+    pub fn new(
+        max_batch: usize,
+        max_wait: Duration,
+        max_queue: usize,
+    ) -> Self {
+        assert!(max_batch > 0 && max_queue > 0);
         Batcher {
-            inner: Mutex::new(BatchState { queue: Vec::new(), oldest: None }),
+            inner: Mutex::new(BatchState { queue: Vec::new() }),
             cv: Condvar::new(),
             max_batch,
             max_wait,
+            max_queue,
             closed: AtomicBool::new(false),
             batches: AtomicU64::new(0),
             items: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            queue_hist: LogHistogram::new(),
+            occupancy: BucketCounters::new(max_batch),
         }
     }
 
     /// Enqueue one item; the result arrives on the returned channel.
-    pub fn submit(&self, item: T) -> mpsc::Receiver<(R, BatchInfo)> {
+    ///
+    /// The closed flag is checked **under the queue lock** and
+    /// [`Batcher::close`] flips it under the same lock, so a submission
+    /// can never slip in between the workers' final drain decision and
+    /// the flag — every `Ok` here is a guaranteed eventual reply.
+    pub fn submit(
+        &self,
+        item: T,
+    ) -> Result<mpsc::Receiver<(R, BatchInfo)>, SubmitError> {
         let (tx, rx) = mpsc::channel();
         let mut st = self.inner.lock().unwrap();
-        st.queue.push((item, tx));
-        if st.oldest.is_none() {
-            st.oldest = Some(Instant::now());
+        if self.closed.load(Ordering::SeqCst) {
+            return Err(SubmitError::Closed);
         }
+        if st.queue.len() >= self.max_queue {
+            drop(st);
+            self.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(SubmitError::Overloaded);
+        }
+        st.queue.push((item, Instant::now(), tx));
         drop(st);
         self.cv.notify_all();
-        rx
+        Ok(rx)
     }
 
-    /// Signal workers to exit once the queue drains.
+    /// Stop admitting work; workers exit once the queue drains.
     pub fn close(&self) {
+        let st = self.inner.lock().unwrap();
         self.closed.store(true, Ordering::SeqCst);
+        drop(st);
         self.cv.notify_all();
+    }
+
+    /// Waiting (not yet dispatched) items.
+    pub fn depth(&self) -> usize {
+        self.inner.lock().unwrap().queue.len()
     }
 
     /// Worker loop: repeatedly collect a batch and answer it with `f`.
-    /// `f` must return exactly one result per input (checked).
+    /// `f` must return exactly one result per input (checked).  Any
+    /// number of workers may run this concurrently — one can evaluate a
+    /// batch while another collects the next.
     ///
-    /// The wait is anchored to the **oldest pending arrival**: after any
-    /// wakeup — a new submission, a spurious condvar wakeup, or a timeout
-    /// — the remaining deadline is recomputed as `max_wait - oldest
-    /// .elapsed()` rather than restarting a full `max_wait` window, so a
-    /// trickle of submissions (each of which notifies the condvar) cannot
-    /// push the first request's flush later than its deadline.  With an
-    /// empty queue there is no deadline and the worker blocks untimed —
-    /// no periodic idle wakeups.
+    /// The wait is anchored to the **oldest pending arrival** (tracked
+    /// per item): after any wakeup — a new submission, a spurious
+    /// condvar wakeup, a timeout, or another worker draining — the
+    /// remaining deadline is recomputed as `max_wait - queue[0]
+    /// .elapsed()` rather than restarting a full `max_wait` window, so
+    /// neither a trickle of submissions nor a partial drain can push a
+    /// pending request's flush past its deadline.  With an empty queue
+    /// there is no deadline and the worker blocks untimed.
     pub fn run_worker(&self, mut f: impl FnMut(&[T]) -> Vec<R>) {
         loop {
             let mut st = self.inner.lock().unwrap();
@@ -111,34 +176,33 @@ impl<T, R> Batcher<T, R> {
                     if st.queue.is_empty() {
                         return;
                     }
-                    break;
+                    break; // drain: flush whatever is left
                 }
-                // Remaining budget for the oldest pending request (None
-                // = empty queue, no deadline to track).
-                let remaining = match (st.oldest, st.queue.is_empty()) {
-                    (Some(t0), false) => {
-                        Some(self.max_wait.saturating_sub(t0.elapsed()))
-                    }
-                    _ => None,
-                };
+                let remaining = st
+                    .queue
+                    .first()
+                    .map(|(_, t0, _)| self.max_wait.saturating_sub(t0.elapsed()));
                 st = match remaining {
                     Some(d) if d.is_zero() => break, // deadline elapsed
                     Some(d) => self.cv.wait_timeout(st, d).unwrap().0,
                     None => self.cv.wait(st).unwrap(),
                 };
             }
-            let oldest = st.oldest.take();
             let n = st.queue.len().min(self.max_batch);
             let batch: Vec<_> = st.queue.drain(..n).collect();
-            if !st.queue.is_empty() {
-                st.oldest = Some(Instant::now());
-            }
             drop(st);
 
-            let queue_us =
-                oldest.map(|t| t.elapsed().as_micros() as u64).unwrap_or(0);
-            let (items, senders): (Vec<T>, Vec<mpsc::Sender<(R, BatchInfo)>>) =
-                batch.into_iter().unzip();
+            let now = Instant::now();
+            let mut items = Vec::with_capacity(batch.len());
+            let mut senders = Vec::with_capacity(batch.len());
+            let mut queue_us = 0u64;
+            for (item, t0, tx) in batch {
+                let waited = now.duration_since(t0).as_micros() as u64;
+                self.queue_hist.record(waited);
+                queue_us = queue_us.max(waited);
+                items.push(item);
+                senders.push(tx);
+            }
             let results = f(&items);
             assert_eq!(
                 results.len(),
@@ -147,6 +211,7 @@ impl<T, R> Batcher<T, R> {
             );
             self.batches.fetch_add(1, Ordering::Relaxed);
             self.items.fetch_add(items.len() as u64, Ordering::Relaxed);
+            self.occupancy.record(items.len() - 1);
             let info =
                 BatchInfo { batch_size: items.len(), queue_us };
             for (r, tx) in results.into_iter().zip(senders) {
@@ -160,9 +225,31 @@ impl<T, R> Batcher<T, R> {
 // Protocol encode/decode
 // ---------------------------------------------------------------------------
 
-/// Parse one request line.  `rtl=true` asks for generated Verilog inline.
-pub fn parse_request(line: &str) -> Result<(DseRequest, bool), String> {
-    let v = Json::parse(line).map_err(|e| e.to_string())?;
+/// One parsed request line.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    Dse { req: DseRequest, want_rtl: bool },
+    /// Live-counter probe; answered immediately, bypassing the queue.
+    Stats,
+}
+
+/// Parse one request line.  Returns the client-supplied `id` tag (echoed
+/// verbatim in the reply — the pipelining bookkeeping hook) alongside
+/// the parse result, so even error replies carry the tag when the line
+/// was valid JSON.
+pub fn parse_request(line: &str) -> (Option<Json>, Result<Request, String>) {
+    let v = match Json::parse(line) {
+        Ok(v) => v,
+        Err(e) => return (None, Err(e.to_string())),
+    };
+    let id = v.get("id").cloned();
+    (id, parse_body(&v))
+}
+
+fn parse_body(v: &Json) -> Result<Request, String> {
+    if v.get("stats").and_then(Json::as_bool) == Some(true) {
+        return Ok(Request::Stats);
+    }
     let net = v
         .get("net")
         .and_then(Json::as_f32_vec)
@@ -184,15 +271,16 @@ pub fn parse_request(line: &str) -> Result<(DseRequest, bool), String> {
     let want_rtl = v.get("rtl").and_then(Json::as_bool).unwrap_or(false);
     let mut n = [0f32; N_NET];
     n.copy_from_slice(&net);
-    Ok((DseRequest { net: n, lo, po }, want_rtl))
+    Ok(Request::Dse { req: DseRequest { net: n, lo, po }, want_rtl })
 }
 
-/// Encode one response line.
+/// Encode one success line (echoing the client `id` tag when present).
 pub fn encode_response(
     spec: &SpaceSpec,
     res: &DseResult,
     info: BatchInfo,
     verilog: Option<String>,
+    id: Option<&Json>,
 ) -> String {
     let cfg = Json::Obj(
         spec.groups
@@ -214,12 +302,19 @@ pub fn encode_response(
     if let Some(v) = verilog {
         fields.push(("rtl", Json::Str(v)));
     }
+    if let Some(id) = id {
+        fields.push(("id", id.clone()));
+    }
     Json::obj(fields).to_string()
 }
 
-pub fn encode_error(msg: &str) -> String {
-    Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::str(msg))])
-        .to_string()
+pub fn encode_error(msg: &str, id: Option<&Json>) -> String {
+    let mut fields =
+        vec![("ok", Json::Bool(false)), ("error", Json::str(msg))];
+    if let Some(id) = id {
+        fields.push(("id", id.clone()));
+    }
+    Json::obj(fields).to_string()
 }
 
 // ---------------------------------------------------------------------------
@@ -231,18 +326,52 @@ pub fn encode_error(msg: &str) -> String {
 /// thread — affected requests get an `{"ok": false}` reply instead.
 type DseReply = Result<DseResult, String>;
 
+/// Everything the connection and worker threads share.
+struct Shared {
+    batcher: Batcher<DseRequest, DseReply>,
+    spec: SpaceSpec,
+    workers: usize,
+}
+
+/// Serving-layer tunables (see DESIGN.md §4).
+#[derive(Debug, Clone, Copy)]
+pub struct ServeConfig {
+    /// Largest batch handed to one worker at once.
+    pub max_batch: usize,
+    /// Latency budget of the oldest queued request before a partial
+    /// batch is flushed.
+    pub max_wait: Duration,
+    /// Admission bound on waiting requests; beyond it, submissions get
+    /// `{"ok":false,"error":"overloaded"}`.
+    pub max_queue: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            max_batch: 64,
+            max_wait: Duration::from_millis(5),
+            max_queue: 1024,
+        }
+    }
+}
+
 /// Handle to a running server (for tests/examples).
 pub struct ServerHandle {
     pub addr: std::net::SocketAddr,
-    batcher: Arc<Batcher<DseRequest, DseReply>>,
-    worker: Option<std::thread::JoinHandle<()>>,
+    shared: Arc<Shared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
     acceptor: Option<std::thread::JoinHandle<()>>,
 }
 
 impl ServerHandle {
+    /// Graceful drain: stop admitting (new submissions get structured
+    /// "server shutting down" errors), let the workers flush every
+    /// already-accepted request, then stop the acceptor.  Surviving
+    /// connections keep their sockets; only new work is refused.
     pub fn shutdown(mut self) {
-        self.batcher.close();
-        if let Some(w) = self.worker.take() {
+        self.shared.batcher.close();
+        for w in self.workers.drain(..) {
             let _ = w.join();
         }
         // acceptor blocks in accept(); connect once to unblock it
@@ -254,36 +383,51 @@ impl ServerHandle {
 
     pub fn stats(&self) -> (u64, u64) {
         (
-            self.batcher.batches.load(Ordering::Relaxed),
-            self.batcher.items.load(Ordering::Relaxed),
+            self.shared.batcher.batches.load(Ordering::Relaxed),
+            self.shared.batcher.items.load(Ordering::Relaxed),
         )
+    }
+
+    pub fn rejected(&self) -> u64 {
+        self.shared.batcher.rejected.load(Ordering::Relaxed)
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.shared.batcher.depth()
     }
 }
 
-/// Start serving DSE requests on `addr` (e.g. "127.0.0.1:0").
-///
-/// `explorer` is consumed by the single inference worker thread; requests
-/// are coalesced up to the artifact batch size with `max_wait` latency
-/// budget.
+/// Start serving DSE requests on `addr` (e.g. "127.0.0.1:0") with one
+/// batch worker per element of `explorers` — each worker owns its
+/// explorer and drains the shared bounded queue independently, so one
+/// batch can be evaluated while another is being collected.  All
+/// explorers must wrap the same spec/checkpoint (selection is
+/// thread-count independent, so which worker answers is unobservable).
 pub fn serve(
     addr: &str,
-    mut explorer: Explorer<'static>,
-    max_batch: usize,
-    max_wait: Duration,
+    explorers: Vec<Explorer<'static>>,
+    cfg: ServeConfig,
 ) -> Result<ServerHandle> {
+    anyhow::ensure!(
+        !explorers.is_empty(),
+        "serve needs at least one worker explorer"
+    );
     let listener = TcpListener::bind(addr)?;
     let local = listener.local_addr()?;
-    let batcher: Arc<Batcher<DseRequest, DseReply>> =
-        Arc::new(Batcher::new(max_batch, max_wait));
-    let spec: SpaceSpec = explorer.spec.clone();
+    let shared = Arc::new(Shared {
+        batcher: Batcher::new(cfg.max_batch, cfg.max_wait, cfg.max_queue),
+        spec: explorers[0].spec.clone(),
+        workers: explorers.len(),
+    });
 
-    let worker = {
-        let b = batcher.clone();
-        std::thread::spawn(move || {
-            b.run_worker(|reqs: &[DseRequest]| {
+    let mut workers = Vec::with_capacity(shared.workers);
+    for mut ex in explorers {
+        let sh = shared.clone();
+        workers.push(std::thread::spawn(move || {
+            sh.batcher.run_worker(|reqs: &[DseRequest]| {
                 // A failed batch must not kill the worker: every request
                 // in it gets an error reply and the loop keeps serving.
-                match explorer.explore(reqs) {
+                match ex.explore(reqs) {
                     Ok(results) => results.into_iter().map(Ok).collect(),
                     Err(e) => {
                         let msg = format!("exploration failed: {e:#}");
@@ -291,77 +435,261 @@ pub fn serve(
                     }
                 }
             });
-        })
-    };
+        }));
+    }
 
     let acceptor = {
-        let b = batcher.clone();
+        let sh = shared.clone();
         std::thread::spawn(move || {
             for stream in listener.incoming() {
                 let Ok(stream) = stream else { continue };
                 // §Perf: small JSON lines + request/response ping-pong —
                 // Nagle + delayed ACK adds ~40-90 ms per round trip.
                 let _ = stream.set_nodelay(true);
-                if b.closed.load(Ordering::SeqCst) {
+                if sh.batcher.closed.load(Ordering::SeqCst) {
+                    // drain contract: even a connection that races the
+                    // shutdown gets a structured goodbye, not a bare
+                    // EOF (the unblocking dummy connect ignores it)
+                    let mut s = stream;
+                    let bye = encode_error("server shutting down", None);
+                    let _ = s
+                        .write_all(bye.as_bytes())
+                        .and_then(|_| s.write_all(b"\n"));
                     break;
                 }
-                let b = b.clone();
-                let spec = spec.clone();
-                std::thread::spawn(move || handle_conn(stream, &b, &spec));
+                let sh = sh.clone();
+                std::thread::spawn(move || handle_conn(stream, &sh));
             }
         })
     };
 
     Ok(ServerHandle {
         addr: local,
-        batcher,
-        worker: Some(worker),
+        shared,
+        workers,
         acceptor: Some(acceptor),
     })
 }
 
-fn handle_conn(
-    stream: TcpStream,
-    batcher: &Batcher<DseRequest, DseReply>,
-    spec: &SpaceSpec,
-) {
-    let peer = stream.peer_addr().ok();
-    let mut writer = match stream.try_clone() {
+fn encode_stats(sh: &Shared, id: Option<&Json>) -> String {
+    let b = &sh.batcher;
+    let occupancy = Json::Arr(
+        b.occupancy
+            .counts()
+            .into_iter()
+            .map(|c| Json::Num(c as f64))
+            .collect(),
+    );
+    let queue_us = Json::obj(vec![
+        ("p50", Json::Num(b.queue_hist.percentile(0.50) as f64)),
+        ("p95", Json::Num(b.queue_hist.percentile(0.95) as f64)),
+        ("p99", Json::Num(b.queue_hist.percentile(0.99) as f64)),
+        ("max", Json::Num(b.queue_hist.max() as f64)),
+    ]);
+    let stats = Json::obj(vec![
+        ("queue_depth", Json::Num(b.depth() as f64)),
+        ("max_queue", Json::Num(b.max_queue as f64)),
+        ("max_batch", Json::Num(b.max_batch as f64)),
+        ("workers", Json::Num(sh.workers as f64)),
+        ("batches", Json::Num(b.batches.load(Ordering::Relaxed) as f64)),
+        ("items", Json::Num(b.items.load(Ordering::Relaxed) as f64)),
+        ("rejected", Json::Num(b.rejected.load(Ordering::Relaxed) as f64)),
+        ("batch_occupancy", occupancy),
+        ("queue_us", queue_us),
+    ]);
+    let mut fields = vec![("ok", Json::Bool(true)), ("stats", stats)];
+    if let Some(id) = id {
+        fields.push(("id", id.clone()));
+    }
+    Json::obj(fields).to_string()
+}
+
+/// Hard cap on one request line.  Real requests are a few hundred
+/// bytes; the cap exists so a newline-free byte stream cannot grow a
+/// connection's read buffer without bound (the queue/reply bounds would
+/// never engage).
+const MAX_LINE_BYTES: usize = 64 * 1024;
+
+enum LineRead {
+    Line,
+    Eof,
+    TooLong,
+}
+
+/// Read one `\n`-terminated line into `buf` (cleared first), holding at
+/// most `max` payload bytes in memory.  `TooLong` leaves the stream
+/// mid-line — the caller must drop the connection (resyncing on an
+/// attacker-chosen line length would itself be unbounded work).
+fn read_bounded_line(
+    r: &mut impl BufRead,
+    buf: &mut Vec<u8>,
+    max: usize,
+) -> std::io::Result<LineRead> {
+    buf.clear();
+    loop {
+        let chunk = r.fill_buf()?;
+        if chunk.is_empty() {
+            // EOF; an unterminated trailing fragment is not a request
+            return Ok(LineRead::Eof);
+        }
+        match chunk.iter().position(|&b| b == b'\n') {
+            Some(pos) => {
+                if buf.len() + pos > max {
+                    return Ok(LineRead::TooLong);
+                }
+                buf.extend_from_slice(&chunk[..pos]);
+                r.consume(pos + 1);
+                return Ok(LineRead::Line);
+            }
+            None => {
+                let take = chunk.len();
+                if buf.len() + take > max {
+                    return Ok(LineRead::TooLong);
+                }
+                buf.extend_from_slice(chunk);
+                r.consume(take);
+            }
+        }
+    }
+}
+
+/// A reply owed to the connection, in submission order.
+enum Pending {
+    /// Already encoded (parse error, admission rejection, stats).
+    Ready(String),
+    /// Waiting on a batch worker.
+    Wait {
+        rx: mpsc::Receiver<(DseReply, BatchInfo)>,
+        want_rtl: bool,
+        id: Option<Json>,
+    },
+}
+
+/// Per-connection pipelining: the reader half parses and submits without
+/// waiting for replies; the writer half resolves pending replies
+/// strictly in submission order.  A connection may therefore keep many
+/// requests in flight and still read its replies in the order it sent
+/// them.
+///
+/// The pending-reply channel is **bounded** (sized to the batcher's
+/// admission bound): a client that pipelines lines without ever reading
+/// replies first wedges its writer on the full TCP send buffer, then
+/// fills this channel, and then — because the reader blocks on the
+/// channel instead of buffering — stops being read from at all, pushing
+/// the back-pressure onto the client's socket rather than into server
+/// memory (overload/error replies would otherwise bypass the queue
+/// bound entirely).
+fn handle_conn(stream: TcpStream, sh: &Arc<Shared>) {
+    let writer_stream = match stream.try_clone() {
         Ok(w) => w,
         Err(_) => return,
     };
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let Ok(line) = line else { break };
+    let (tx, rx) = mpsc::sync_channel::<Pending>(sh.batcher.max_queue.max(64));
+    let writer = {
+        let sh = sh.clone();
+        std::thread::spawn(move || write_replies(writer_stream, rx, &sh))
+    };
+    let mut reader = BufReader::new(stream);
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        let line = match read_bounded_line(
+            &mut reader,
+            &mut buf,
+            MAX_LINE_BYTES,
+        ) {
+            Err(_) | Ok(LineRead::Eof) => break,
+            Ok(LineRead::TooLong) => {
+                let _ = tx.send(Pending::Ready(encode_error(
+                    "request line too long",
+                    None,
+                )));
+                break; // stream is mid-line: the connection is done
+            }
+            Ok(LineRead::Line) => String::from_utf8_lossy(&buf),
+        };
         if line.trim().is_empty() {
             continue;
         }
-        let reply = match parse_request(&line) {
-            Err(e) => encode_error(&e),
-            Ok((req, want_rtl)) => {
-                let rx = batcher.submit(req);
-                match rx.recv() {
-                    Err(_) => encode_error("server shutting down"),
-                    Ok((Err(e), _)) => encode_error(&e),
-                    Ok((Ok(res), info)) => {
-                        let verilog = want_rtl.then(|| {
-                            rtl::generate(spec, &res.cfg_raw, "gandse_acc")
-                                .unwrap_or_else(|e| format!("// error: {e}"))
-                        });
-                        encode_response(spec, &res, info, verilog)
-                    }
+        let (id, parsed) = parse_request(&line);
+        let pending = match parsed {
+            Err(e) => Pending::Ready(encode_error(&e, id.as_ref())),
+            Ok(Request::Stats) => {
+                Pending::Ready(encode_stats(sh, id.as_ref()))
+            }
+            Ok(Request::Dse { req, want_rtl }) => {
+                match sh.batcher.submit(req) {
+                    Ok(rx) => Pending::Wait { rx, want_rtl, id },
+                    Err(e) => Pending::Ready(
+                        encode_error(&e.to_string(), id.as_ref()),
+                    ),
                 }
             }
         };
-        if writer
-            .write_all(reply.as_bytes())
-            .and_then(|_| writer.write_all(b"\n"))
-            .is_err()
-        {
-            break;
+        if tx.send(pending).is_err() {
+            break; // writer half died on a socket error
         }
     }
-    let _ = peer;
+    drop(tx); // writer drains what is owed, then exits
+    let _ = writer.join();
+}
+
+fn write_replies(
+    stream: TcpStream,
+    rx: mpsc::Receiver<Pending>,
+    sh: &Shared,
+) {
+    let mut w = BufWriter::new(stream);
+    loop {
+        // Coalesce bursts into one flush, but never block with a reply
+        // sitting in the buffer: flush before waiting.
+        let p = match rx.try_recv() {
+            Ok(p) => p,
+            Err(mpsc::TryRecvError::Empty) => {
+                if w.flush().is_err() {
+                    return;
+                }
+                match rx.recv() {
+                    Ok(p) => p,
+                    Err(_) => return, // reader closed, nothing owed
+                }
+            }
+            Err(mpsc::TryRecvError::Disconnected) => {
+                let _ = w.flush();
+                return;
+            }
+        };
+        // resolving a Wait can block on its batch: deliver whatever is
+        // already buffered first, or earlier replies would be held
+        // hostage to the slowest in-flight batch (inflating client
+        // latency percentiles)
+        if matches!(p, Pending::Wait { .. }) && w.flush().is_err() {
+            return;
+        }
+        let line = resolve(p, sh);
+        if w.write_all(line.as_bytes())
+            .and_then(|_| w.write_all(b"\n"))
+            .is_err()
+        {
+            return;
+        }
+    }
+}
+
+fn resolve(p: Pending, sh: &Shared) -> String {
+    match p {
+        Pending::Ready(s) => s,
+        Pending::Wait { rx, want_rtl, id } => match rx.recv() {
+            Err(_) => encode_error("server shutting down", id.as_ref()),
+            Ok((Err(e), _)) => encode_error(&e, id.as_ref()),
+            Ok((Ok(res), info)) => {
+                let verilog = want_rtl.then(|| {
+                    rtl::generate(&sh.spec, &res.cfg_raw, "gandse_acc")
+                        .unwrap_or_else(|e| format!("// error: {e}"))
+                });
+                encode_response(&sh.spec, &res, info, verilog, id.as_ref())
+            }
+        },
+    }
 }
 
 #[cfg(test)]
@@ -372,14 +700,14 @@ mod tests {
     #[test]
     fn batcher_full_batch_dispatches_immediately() {
         let b: Arc<Batcher<u32, u32>> =
-            Arc::new(Batcher::new(4, Duration::from_secs(10)));
+            Arc::new(Batcher::new(4, Duration::from_secs(10), 64));
         let worker = {
             let b = b.clone();
             std::thread::spawn(move || {
                 b.run_worker(|xs| xs.iter().map(|x| x * 2).collect())
             })
         };
-        let rxs: Vec<_> = (0..4).map(|i| b.submit(i)).collect();
+        let rxs: Vec<_> = (0..4).map(|i| b.submit(i).unwrap()).collect();
         for (i, rx) in rxs.into_iter().enumerate() {
             let (r, info) = rx.recv_timeout(Duration::from_secs(5)).unwrap();
             assert_eq!(r, 2 * i as u32);
@@ -392,12 +720,12 @@ mod tests {
     #[test]
     fn batcher_deadline_flushes_partial_batch() {
         let b: Arc<Batcher<u32, u32>> =
-            Arc::new(Batcher::new(64, Duration::from_millis(10)));
+            Arc::new(Batcher::new(64, Duration::from_millis(10), 256));
         let worker = {
             let b = b.clone();
             std::thread::spawn(move || b.run_worker(|xs| xs.to_vec()))
         };
-        let rx = b.submit(7);
+        let rx = b.submit(7).unwrap();
         let (r, info) = rx.recv_timeout(Duration::from_secs(5)).unwrap();
         assert_eq!(r, 7);
         assert_eq!(info.batch_size, 1);
@@ -412,14 +740,14 @@ mod tests {
         // the remaining wait must be recomputed from the OLDEST arrival,
         // not restarted at a full max_wait (the tail-latency bug).
         let b: Arc<Batcher<u32, u32>> =
-            Arc::new(Batcher::new(64, Duration::from_millis(500)));
+            Arc::new(Batcher::new(64, Duration::from_millis(500), 256));
         let worker = {
             let b = b.clone();
             std::thread::spawn(move || b.run_worker(|xs| xs.to_vec()))
         };
-        let rx_first = b.submit(1);
+        let rx_first = b.submit(1).unwrap();
         std::thread::sleep(Duration::from_millis(250));
-        let _rx_second = b.submit(2);
+        let _rx_second = b.submit(2).unwrap();
         let (_, info) =
             rx_first.recv_timeout(Duration::from_secs(10)).unwrap();
         // queue_us is measured from the first arrival: the flush must land
@@ -443,8 +771,8 @@ mod tests {
     #[test]
     fn batcher_splits_oversized_queue() {
         let b: Arc<Batcher<u32, u32>> =
-            Arc::new(Batcher::new(2, Duration::from_millis(5)));
-        let rxs: Vec<_> = (0..5).map(|i| b.submit(i)).collect();
+            Arc::new(Batcher::new(2, Duration::from_millis(5), 64));
+        let rxs: Vec<_> = (0..5).map(|i| b.submit(i).unwrap()).collect();
         let worker = {
             let b = b.clone();
             std::thread::spawn(move || b.run_worker(|xs| xs.to_vec()))
@@ -459,6 +787,70 @@ mod tests {
         worker.join().unwrap();
         assert_eq!(b.items.load(Ordering::Relaxed), 5);
         assert!(b.batches.load(Ordering::Relaxed) >= 3);
+        // occupancy histogram sums (weighted) to the item count
+        let weighted: u64 = b
+            .occupancy
+            .counts()
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| (i as u64 + 1) * c)
+            .sum();
+        assert_eq!(weighted, 5);
+        assert_eq!(b.queue_hist.count(), 5);
+    }
+
+    #[test]
+    fn batcher_submit_after_close_is_rejected_not_hung() {
+        // Regression: a post-close submission used to sit in the queue
+        // forever (workers already gone), leaving the receiver hanging.
+        let b: Arc<Batcher<u32, u32>> =
+            Arc::new(Batcher::new(4, Duration::from_millis(5), 64));
+        let worker = {
+            let b = b.clone();
+            std::thread::spawn(move || b.run_worker(|xs| xs.to_vec()))
+        };
+        let rx = b.submit(1).unwrap();
+        rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        b.close();
+        worker.join().unwrap();
+        assert_eq!(b.submit(2).unwrap_err(), SubmitError::Closed);
+        assert_eq!(b.depth(), 0, "rejected item must not be queued");
+    }
+
+    #[test]
+    fn batcher_close_drains_pending_items_first() {
+        // close() with items queued and no worker yet: a late worker
+        // must still flush every accepted item before exiting (the
+        // graceful-drain contract), and post-close submissions are
+        // rejected mid-drain.
+        let b: Arc<Batcher<u32, u32>> =
+            Arc::new(Batcher::new(2, Duration::from_secs(10), 64));
+        let rxs: Vec<_> = (0..5).map(|i| b.submit(i).unwrap()).collect();
+        b.close();
+        assert_eq!(b.submit(99).unwrap_err(), SubmitError::Closed);
+        let worker = {
+            let b = b.clone();
+            std::thread::spawn(move || {
+                b.run_worker(|xs| xs.iter().map(|x| x * 2).collect())
+            })
+        };
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let (r, _) = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert_eq!(r, 2 * i as u32, "drained reply {i}");
+        }
+        worker.join().unwrap();
+        assert_eq!(b.items.load(Ordering::Relaxed), 5);
+    }
+
+    #[test]
+    fn batcher_bounded_queue_rejects_overload() {
+        let b: Batcher<u32, u32> =
+            Batcher::new(4, Duration::from_secs(10), 2);
+        let _r1 = b.submit(1).unwrap();
+        let _r2 = b.submit(2).unwrap();
+        assert_eq!(b.submit(3).unwrap_err(), SubmitError::Overloaded);
+        assert_eq!(b.rejected.load(Ordering::Relaxed), 1);
+        assert_eq!(b.depth(), 2);
     }
 
     #[test]
@@ -466,7 +858,7 @@ mod tests {
         // Mirror of the serve() worker contract: a batch-level failure
         // maps to per-item Err replies and the worker keeps running.
         let b: Arc<Batcher<u32, Result<u32, String>>> =
-            Arc::new(Batcher::new(4, Duration::from_millis(3)));
+            Arc::new(Batcher::new(4, Duration::from_millis(3), 64));
         let worker = {
             let b = b.clone();
             std::thread::spawn(move || {
@@ -479,11 +871,11 @@ mod tests {
                 })
             })
         };
-        let rx = b.submit(13);
+        let rx = b.submit(13).unwrap();
         let (r, _) = rx.recv_timeout(Duration::from_secs(5)).unwrap();
         assert_eq!(r, Err("boom".to_string()));
         // the worker survived the failed batch and keeps serving
-        let rx = b.submit(7);
+        let rx = b.submit(7).unwrap();
         let (r, _) = rx.recv_timeout(Duration::from_secs(5)).unwrap();
         assert_eq!(r, Ok(7));
         b.close();
@@ -491,20 +883,93 @@ mod tests {
     }
 
     #[test]
+    fn batcher_two_workers_share_the_queue() {
+        // Both workers must make progress on one queue; every item gets
+        // exactly one reply and the counters agree.
+        let b: Arc<Batcher<u32, u32>> =
+            Arc::new(Batcher::new(2, Duration::from_millis(2), 64));
+        let workers: Vec<_> = (0..2)
+            .map(|_| {
+                let b = b.clone();
+                std::thread::spawn(move || {
+                    b.run_worker(|xs| xs.iter().map(|x| x + 1).collect())
+                })
+            })
+            .collect();
+        let rxs: Vec<_> = (0..16).map(|i| b.submit(i).unwrap()).collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let (r, _) = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert_eq!(r, i as u32 + 1);
+        }
+        b.close();
+        for w in workers {
+            w.join().unwrap();
+        }
+        assert_eq!(b.items.load(Ordering::Relaxed), 16);
+    }
+
+    #[test]
+    fn bounded_line_reader_caps_length() {
+        use std::io::Cursor;
+        let mut buf = Vec::new();
+        let mut r = Cursor::new(b"short\nnext\n".to_vec());
+        assert!(matches!(
+            read_bounded_line(&mut r, &mut buf, 64).unwrap(),
+            LineRead::Line
+        ));
+        assert_eq!(buf, b"short");
+        assert!(matches!(
+            read_bounded_line(&mut r, &mut buf, 64).unwrap(),
+            LineRead::Line
+        ));
+        assert_eq!(buf, b"next");
+        assert!(matches!(
+            read_bounded_line(&mut r, &mut buf, 64).unwrap(),
+            LineRead::Eof
+        ));
+        // a newline-free flood trips the cap instead of growing memory
+        let mut r = Cursor::new(vec![b'x'; 1000]);
+        assert!(matches!(
+            read_bounded_line(&mut r, &mut buf, 64).unwrap(),
+            LineRead::TooLong
+        ));
+        // a terminated line just over the cap trips it too
+        let mut long = vec![b'y'; 65];
+        long.push(b'\n');
+        let mut r = Cursor::new(long);
+        assert!(matches!(
+            read_bounded_line(&mut r, &mut buf, 64).unwrap(),
+            LineRead::TooLong
+        ));
+    }
+
+    #[test]
     fn request_parsing() {
-        let (req, want_rtl) = parse_request(
-            r#"{"net":[16,32,28,28,3,3],"lo":0.01,"po":1.5,"rtl":true}"#,
-        )
-        .unwrap();
+        let (id, parsed) = parse_request(
+            r#"{"net":[16,32,28,28,3,3],"lo":0.01,"po":1.5,"rtl":true,"id":7}"#,
+        );
+        let Ok(Request::Dse { req, want_rtl }) = parsed else {
+            panic!("expected a DSE request")
+        };
         assert_eq!(req.net, [16.0, 32.0, 28.0, 28.0, 3.0, 3.0]);
         assert_eq!(req.lo, 0.01);
         assert!(want_rtl);
-        assert!(parse_request("{}").is_err());
-        assert!(parse_request(r#"{"net":[1,2],"lo":1,"po":1}"#).is_err());
-        assert!(
-            parse_request(r#"{"net":[1,2,3,4,5,6],"lo":-1,"po":1}"#).is_err()
-        );
-        assert!(parse_request("not json").is_err());
+        assert_eq!(id, Some(Json::Num(7.0)));
+        // stats probe
+        let (id, parsed) = parse_request(r#"{"stats":true,"id":"s"}"#);
+        assert_eq!(parsed, Ok(Request::Stats));
+        assert_eq!(id, Some(Json::str("s")));
+        // malformed lines: the id still comes back when the JSON parsed
+        let (id, parsed) = parse_request(r#"{"id":3,"lo":1,"po":1}"#);
+        assert!(parsed.is_err());
+        assert_eq!(id, Some(Json::Num(3.0)));
+        assert!(parse_request("{}").1.is_err());
+        assert!(parse_request(r#"{"net":[1,2],"lo":1,"po":1}"#).1.is_err());
+        assert!(parse_request(r#"{"net":[1,2,3,4,5,6],"lo":-1,"po":1}"#)
+            .1
+            .is_err());
+        let (id, parsed) = parse_request("not json");
+        assert!(id.is_none() && parsed.is_err());
     }
 
     #[test]
@@ -518,11 +983,13 @@ mod tests {
             n_candidates: 6.0,
             satisfied: true,
         };
+        let id = Json::Num(42.0);
         let line = encode_response(
             &spec,
             &res,
             BatchInfo { batch_size: 3, queue_us: 42 },
             None,
+            Some(&id),
         );
         let v = Json::parse(&line).unwrap();
         assert_eq!(v.get("ok").unwrap().as_bool(), Some(true));
@@ -531,8 +998,13 @@ mod tests {
             Some(16.0)
         );
         assert_eq!(v.get("batch_size").unwrap().as_usize(), Some(3));
-        let err = encode_error("boom");
+        assert_eq!(v.get("id").unwrap().as_f64(), Some(42.0));
+        let err = encode_error("boom", Some(&id));
         let v = Json::parse(&err).unwrap();
         assert_eq!(v.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(v.get("id").unwrap().as_f64(), Some(42.0));
+        // without a tag, no id field is emitted
+        let v = Json::parse(&encode_error("x", None)).unwrap();
+        assert!(v.get("id").is_none());
     }
 }

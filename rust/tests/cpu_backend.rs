@@ -372,3 +372,61 @@ fn cpu_train_then_explore_end_to_end() {
     let net_res = ex.explore_network(&layers, 1e6, 1e6).unwrap();
     assert!(net_res.satisfied);
 }
+
+/// The serving path's per-batch fork-join (`Explorer::select_batch`,
+/// tasks sharded across workers with a sequential per-task scan) must be
+/// bitwise identical to the serial per-task loop at any thread count.
+#[test]
+fn explorer_batch_selection_is_thread_count_independent() {
+    use gandse::select::SelectEngine;
+
+    let meta = Meta::builtin(16, 2, 2, 16, 8);
+    let mm = meta.model(MODEL).unwrap();
+    let ds = dataset::generate(&mm.spec, 64, 12, 5);
+    let backend = CpuBackend::new(1);
+    let mut ex = Explorer::new(
+        &backend,
+        &meta,
+        MODEL,
+        GanState::init(mm, MODEL, 11).g,
+        ds.stats.to_vec(),
+    )
+    .unwrap();
+    let reqs: Vec<DseRequest> = ds
+        .test
+        .iter()
+        .map(|s| DseRequest {
+            net: s.net,
+            lo: s.latency * 1.1,
+            po: s.power * 1.1,
+        })
+        .collect();
+    let probs = ex.infer_probs(&reqs).unwrap();
+
+    // reference: the serial per-task loop on the sequential engine
+    ex.engine = SelectEngine::sequential();
+    let reference: Vec<_> = reqs
+        .iter()
+        .zip(&probs)
+        .map(|(r, p)| ex.select_from_probs(r, p))
+        .collect();
+    for threads in [1usize, 2, 3, env_threads(), 0] {
+        ex.engine = SelectEngine::with_threads(threads);
+        let batch = ex.select_batch(&reqs, &probs);
+        assert_eq!(batch.len(), reference.len());
+        for (i, (b, r)) in batch.iter().zip(&reference).enumerate() {
+            assert_eq!(b.cfg_idx, r.cfg_idx, "task {i} threads={threads}");
+            assert_eq!(
+                b.latency.to_bits(),
+                r.latency.to_bits(),
+                "task {i} threads={threads}"
+            );
+            assert_eq!(
+                b.power.to_bits(),
+                r.power.to_bits(),
+                "task {i} threads={threads}"
+            );
+            assert_eq!(b.n_candidates, r.n_candidates, "task {i}");
+        }
+    }
+}

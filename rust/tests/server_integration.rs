@@ -1,9 +1,9 @@
 //! End-to-end DSE server tests: real TCP sockets, concurrent clients,
-//! dynamic batching.
+//! dynamic batching, request pipelining, admission control, live stats.
 //!
-//! The cpu-backend test always runs (no artifacts needed) — it is the
-//! in-tree twin of CI's pipeline-smoke job.  The PJRT test requires
-//! `make artifacts` and skips gracefully otherwise.
+//! The cpu-backend tests always run (no artifacts needed) — they are the
+//! in-tree twin of CI's pipeline-smoke and serve-load jobs.  The PJRT
+//! test requires `make artifacts` and skips gracefully otherwise.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -13,8 +13,9 @@ use std::time::Duration;
 use gandse::dataset;
 use gandse::explorer::Explorer;
 use gandse::gan::{GanState, TrainConfig, Trainer};
+use gandse::loadtest::{self, RoundSpec};
 use gandse::runtime::{Backend, CpuBackend, PjrtBackend};
-use gandse::server;
+use gandse::server::{self, ServeConfig};
 use gandse::space::Meta;
 use gandse::util::json::Json;
 
@@ -22,8 +23,32 @@ fn artifact_dir() -> PathBuf {
     Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
 
-/// Drive `n_clients x n_reqs` concurrent requests against a server and
-/// assert every reply is `{"ok": true}` with a plausible payload.
+/// Spawn a tiny cpu-backend server with `workers` batch workers and a
+/// fresh (untrained) generator — serving-layer behavior is independent
+/// of checkpoint quality.  Leaks the backend/meta (tests only).
+fn spawn_cpu_server(workers: usize, cfg: ServeConfig) -> server::ServerHandle {
+    let model = "dnnweaver";
+    let meta: &'static Meta =
+        Box::leak(Box::new(Meta::builtin(16, 2, 2, 16, 8)));
+    let backend: &'static dyn Backend =
+        Box::leak(Box::new(CpuBackend::new(1)));
+    let mm = meta.model(model).unwrap();
+    let ds = dataset::generate(&mm.spec, 64, 0, 42);
+    let st = GanState::init(mm, model, 3);
+    let mut explorers = Vec::with_capacity(workers);
+    for _ in 0..workers {
+        explorers.push(
+            Explorer::new(backend, meta, model, st.g.clone(),
+                          ds.stats.to_vec())
+                .unwrap(),
+        );
+    }
+    server::serve("127.0.0.1:0", explorers, cfg).unwrap()
+}
+
+/// Drive `n_clients x n_reqs` serial (ping-pong) requests against a
+/// server and assert every reply is `{"ok": true}` with a plausible
+/// payload.
 fn hammer(addr: std::net::SocketAddr, n_clients: usize, n_reqs: usize) {
     let mut clients = Vec::new();
     for c in 0..n_clients {
@@ -69,7 +94,8 @@ fn hammer(addr: std::net::SocketAddr, n_clients: usize, n_reqs: usize) {
 }
 
 /// The full pipeline on the pure-Rust cpu backend: train a tiny GAN,
-/// serve it over TCP, answer concurrent clients — no artifacts anywhere.
+/// serve it over TCP with two batch workers, answer concurrent clients
+/// — no artifacts anywhere.
 #[test]
 fn cpu_backend_train_then_serve_roundtrip() {
     let model = "dnnweaver";
@@ -87,14 +113,22 @@ fn cpu_backend_train_then_serve_roundtrip() {
         .unwrap();
     assert_eq!(tr.state.step, 8); // 64 samples / batch 16, 2 epochs
 
-    let ex = Explorer::new(backend, meta, model, tr.state.g.clone(),
-                           ds.stats.to_vec())
-        .unwrap();
+    let mut explorers = Vec::new();
+    for _ in 0..2 {
+        explorers.push(
+            Explorer::new(backend, meta, model, tr.state.g.clone(),
+                          ds.stats.to_vec())
+                .unwrap(),
+        );
+    }
     let handle = server::serve(
         "127.0.0.1:0",
-        ex,
-        meta.infer_batch,
-        Duration::from_millis(3),
+        explorers,
+        ServeConfig {
+            max_batch: meta.infer_batch,
+            max_wait: Duration::from_millis(3),
+            max_queue: 256,
+        },
     )
     .unwrap();
     hammer(handle.addr, 4, 5);
@@ -102,6 +136,175 @@ fn cpu_backend_train_then_serve_roundtrip() {
     assert_eq!(items, 20);
     assert!(batches <= 20, "some coalescing expected, got {batches}");
     handle.shutdown();
+}
+
+/// The pipelining contract under concurrency: N connections each write
+/// M tagged requests before reading anything, then read exactly M
+/// replies — every one `{"ok":true}`, in submission order — and the
+/// server's live stats counters sum to the traffic afterwards.
+#[test]
+fn pipelined_concurrent_clients_ordered_replies_and_stats() {
+    let handle = spawn_cpu_server(
+        2,
+        ServeConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            max_queue: 512,
+        },
+    );
+    let addr = handle.addr;
+    let n_clients = 8usize;
+    let n_reqs = 16usize;
+    let mut clients = Vec::new();
+    for c in 0..n_clients {
+        clients.push(std::thread::spawn(move || {
+            let stream = TcpStream::connect(addr).unwrap();
+            stream.set_nodelay(true).unwrap();
+            let mut w = stream.try_clone().unwrap();
+            let mut r = BufReader::new(stream);
+            // full pipelining: every request is in flight before the
+            // first reply is read
+            for i in 0..n_reqs {
+                let req = format!(
+                    r#"{{"net":[32,32,32,32,3,3],"lo":{},"po":2.0,"id":{i}}}"#,
+                    0.001 * (((c + i) % 20) + 1) as f64
+                );
+                w.write_all(req.as_bytes()).unwrap();
+                w.write_all(b"\n").unwrap();
+            }
+            let mut line = String::new();
+            for i in 0..n_reqs {
+                line.clear();
+                assert!(
+                    r.read_line(&mut line).unwrap() > 0,
+                    "client {c}: reply {i} was dropped"
+                );
+                let v = Json::parse(line.trim()).unwrap();
+                assert_eq!(
+                    v.get("ok").and_then(Json::as_bool),
+                    Some(true),
+                    "client {c} reply {i}: {line}"
+                );
+                assert_eq!(
+                    v.get("id").and_then(Json::as_f64),
+                    Some(i as f64),
+                    "client {c}: out-of-order reply: {line}"
+                );
+            }
+        }));
+    }
+    for c in clients {
+        c.join().unwrap();
+    }
+
+    // live stats over the wire (bypasses the batcher, id echoed)
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    let mut r = BufReader::new(stream);
+    w.write_all(b"{\"stats\":true,\"id\":\"s1\"}\n").unwrap();
+    let mut line = String::new();
+    r.read_line(&mut line).unwrap();
+    let v = Json::parse(line.trim()).unwrap();
+    assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true));
+    assert_eq!(v.get("id").and_then(Json::as_str), Some("s1"));
+    let st = v.get("stats").unwrap();
+    let total = (n_clients * n_reqs) as f64;
+    assert_eq!(st.get("items").unwrap().as_f64(), Some(total));
+    assert_eq!(st.get("queue_depth").unwrap().as_f64(), Some(0.0));
+    assert_eq!(st.get("rejected").unwrap().as_f64(), Some(0.0));
+    assert_eq!(st.get("workers").unwrap().as_f64(), Some(2.0));
+    // occupancy histogram: one bucket per batch size up to max_batch;
+    // counts sum to batches, weighted-sum to items
+    let occ = st.get("batch_occupancy").unwrap().as_arr().unwrap();
+    assert_eq!(occ.len(), 8);
+    let batches: f64 =
+        occ.iter().map(|c| c.as_f64().unwrap()).sum();
+    assert_eq!(st.get("batches").unwrap().as_f64(), Some(batches));
+    let weighted: f64 = occ
+        .iter()
+        .enumerate()
+        .map(|(i, c)| (i + 1) as f64 * c.as_f64().unwrap())
+        .sum();
+    assert_eq!(weighted, total, "occupancy must sum to served items");
+    // queue-wait percentiles are present and ordered
+    let q = st.get("queue_us").unwrap();
+    let p50 = q.get("p50").unwrap().as_f64().unwrap();
+    let p99 = q.get("p99").unwrap().as_f64().unwrap();
+    let qmax = q.get("max").unwrap().as_f64().unwrap();
+    assert!(p50 <= p99 && p99 <= qmax, "{p50} {p99} {qmax}");
+    // the in-process handle agrees with the wire stats
+    let (srv_batches, srv_items) = handle.stats();
+    assert_eq!(srv_items as f64, total);
+    assert_eq!(srv_batches as f64, batches);
+    handle.shutdown();
+}
+
+/// The loadtest harness itself against a live server: zero errors, sane
+/// percentiles (this is the in-tree twin of CI's serve-load job).
+#[test]
+fn loadtest_round_zero_errors_against_live_server() {
+    let handle = spawn_cpu_server(
+        2,
+        ServeConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+            max_queue: 512,
+        },
+    );
+    // the stats probe reports the server's true worker count (what
+    // `loadtest --addr` keys BENCH_serve.json rows with)
+    assert_eq!(loadtest::probe_workers(handle.addr).unwrap(), 2);
+    let spec = RoundSpec { clients: 6, pipeline: 4, reqs: 10 };
+    let stats = loadtest::run_round(handle.addr, spec).unwrap();
+    assert_eq!(stats.errors, 0, "dropped/mismatched replies");
+    assert_eq!(stats.total, 60);
+    assert!(stats.req_per_sec > 0.0);
+    assert!(stats.p50_us <= stats.p95_us && stats.p95_us <= stats.p99_us);
+    assert!(stats.p99_us <= stats.max_us);
+    let (_, items) = handle.stats();
+    assert_eq!(items, 60);
+    handle.shutdown();
+}
+
+/// Graceful drain: connections that survive shutdown get structured
+/// "server shutting down" errors for new work instead of hangs or dead
+/// sockets.
+#[test]
+fn shutdown_rejects_new_work_with_error_reply() {
+    let handle = spawn_cpu_server(
+        1,
+        ServeConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+            max_queue: 64,
+        },
+    );
+    let addr = handle.addr;
+    // open (and exercise) a connection BEFORE shutdown so its threads
+    // are alive across the drain
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    let mut r = BufReader::new(stream);
+    let req = r#"{"net":[32,32,32,32,3,3],"lo":0.01,"po":2.0,"id":0}"#;
+    w.write_all(req.as_bytes()).unwrap();
+    w.write_all(b"\n").unwrap();
+    let mut line = String::new();
+    r.read_line(&mut line).unwrap();
+    let v = Json::parse(line.trim()).unwrap();
+    assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true));
+
+    handle.shutdown(); // drains and joins the workers
+
+    let req = r#"{"net":[32,32,32,32,3,3],"lo":0.01,"po":2.0,"id":1}"#;
+    w.write_all(req.as_bytes()).unwrap();
+    w.write_all(b"\n").unwrap();
+    line.clear();
+    r.read_line(&mut line).unwrap();
+    let v = Json::parse(line.trim()).unwrap();
+    assert_eq!(v.get("ok").and_then(Json::as_bool), Some(false));
+    let err = v.get("error").unwrap().as_str().unwrap();
+    assert!(err.contains("shutting down"), "unexpected error: {err}");
+    assert_eq!(v.get("id").and_then(Json::as_f64), Some(1.0));
 }
 
 #[test]
@@ -122,9 +325,12 @@ fn server_answers_concurrent_clients_and_batches() {
         .unwrap();
     let handle = server::serve(
         "127.0.0.1:0",
-        ex,
-        meta.infer_batch,
-        Duration::from_millis(3),
+        vec![ex],
+        ServeConfig {
+            max_batch: meta.infer_batch,
+            max_wait: Duration::from_millis(3),
+            max_queue: 256,
+        },
     )
     .unwrap();
     hammer(handle.addr, 4, 5);

@@ -6,8 +6,10 @@
 
 Rows are keyed by ``(shape, threads)`` — ``shape`` is optional (the
 select/train benches emit one row per thread count; BENCH_gemm.json emits
-one per GEMM shape per thread count).  A throughput metric more than
-``--threshold`` below the committed baseline is a regression:
+one per GEMM shape per thread count; BENCH_serve.json one per
+(clients, pipeline-depth) load round, shape ``c<N>_p<D>``).  A
+throughput metric more than ``--threshold`` below the committed baseline
+is a regression:
 
 * default (warn-only): prints a GitHub Actions ``::warning::`` annotation
   and REGRESSION lines but exits 0 — the e2e select/train numbers on
@@ -33,7 +35,13 @@ import os
 import sys
 
 DEFAULT_THRESHOLD = 0.20
-METRICS = ("cands_per_sec", "steps_per_sec", "samples_per_sec", "gflops")
+METRICS = (
+    "cands_per_sec",
+    "steps_per_sec",
+    "samples_per_sec",
+    "gflops",
+    "req_per_sec",
+)
 
 
 def rows_by_key(doc):

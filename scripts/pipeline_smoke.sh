@@ -38,9 +38,10 @@ echo "== eval =="
 "$BIN" eval --model dnnweaver --backend cpu "${SIZES[@]}" \
     --train 256 --test 32 --ckpt "$WORK/smoke.ckpt"
 
-echo "== serve round-trip =="
+echo "== serve round-trip (2 workers, pipelined clients) =="
 "$BIN" serve --model dnnweaver --backend cpu "${SIZES[@]}" \
     --train 256 --test 16 --ckpt "$WORK/smoke.ckpt" \
+    --workers 2 --max-queue 256 \
     --addr 127.0.0.1:0 >"$WORK/serve.log" 2>&1 &
 SERVER_PID=$!
 PORT=""
@@ -60,6 +61,14 @@ if [ -z "$PORT" ]; then
     cat "$WORK/serve.log" >&2
     exit 1
 fi
-python3 "$HERE/serve_probe.py" 127.0.0.1 "$PORT"
+# serial round trip + stats probe + 4 concurrent connections with 8
+# pipelined in-flight requests each (the new serving path)
+python3 "$HERE/serve_probe.py" 127.0.0.1 "$PORT" 4 8
+
+echo "== loadtest smoke (spawns its own server) =="
+"$BIN" loadtest --model dnnweaver --backend cpu "${SIZES[@]}" \
+    --train 64 --test 8 --clients 2,8 --pipeline 1,4 --reqs 8 \
+    --workers 2 --out "$WORK/BENCH_serve_smoke.json"
+test -s "$WORK/BENCH_serve_smoke.json"
 
 echo "pipeline smoke OK"

@@ -1,44 +1,71 @@
 #!/usr/bin/env python3
-"""One JSON-lines round trip against a running gandse DSE server.
+"""Serial round trips + concurrent pipelined load against a running
+gandse DSE server.
 
 Used by scripts/pipeline_smoke.sh (and handy interactively):
 
-    python3 scripts/serve_probe.py 127.0.0.1 7878
+    python3 scripts/serve_probe.py 127.0.0.1 7878 [CLIENTS] [PIPELINE]
 
-Connects (retrying until the server is up), sends a DSE request with
-inline RTL generation, asserts the reply is {"ok": true} with Verilog in
-it, then checks that a malformed line yields {"ok": false} WITHOUT
-killing the connection.  Exits non-zero on any failed expectation, which
-is what makes the CI smoke job fail on "ok": false responses.
+Phase 1 (serial, one connection): sends a DSE request with inline RTL
+generation, asserts the reply is {"ok": true} with Verilog in it, checks
+that a malformed line yields {"ok": false} WITHOUT killing the
+connection, and probes the {"stats": true} endpoint.
+
+Phase 2 (concurrent): CLIENTS threads (default 4) each open one
+connection and write PIPELINE requests (default 8) — every request
+tagged with an "id" — before reading anything, then read exactly
+PIPELINE replies and assert each is {"ok": true} and arrives in
+submission order (the server's pipelining contract).  Afterwards the
+stats counters must have advanced by at least the traffic generated.
+
+Exits non-zero on any failed expectation, which is what makes the CI
+smoke job fail on "ok": false responses, dropped replies, or reply
+reordering.
 """
 
 import json
 import socket
 import sys
+import threading
 import time
 
 
-def main() -> int:
-    host, port = sys.argv[1], int(sys.argv[2])
-    deadline = time.time() + 30
+def connect(host, port, timeout=30):
+    deadline = time.time() + timeout
     while True:
         try:
-            sock = socket.create_connection((host, port), timeout=10)
-            break
+            return socket.create_connection((host, port), timeout=10)
         except OSError:
             if time.time() > deadline:
                 raise
             time.sleep(0.3)
+
+
+def get_stats(f):
+    f.write(json.dumps({"stats": True}) + "\n")
+    f.flush()
+    resp = json.loads(f.readline())
+    assert resp.get("ok") is True, f"stats probe failed: {resp}"
+    stats = resp.get("stats", {})
+    for key in ("queue_depth", "items", "batches", "rejected",
+                "batch_occupancy", "queue_us", "workers"):
+        assert key in stats, f"stats missing {key!r}: {stats}"
+    return stats
+
+
+def serial_phase(host, port):
+    sock = connect(host, port)
     f = sock.makefile("rw")
 
     req = {"net": [32, 32, 32, 32, 3, 3], "lo": 0.01, "po": 2.0,
-           "rtl": True}
+           "rtl": True, "id": "serial-0"}
     f.write(json.dumps(req) + "\n")
     f.flush()
     resp = json.loads(f.readline())
     assert resp.get("ok") is True, f"server replied not-ok: {resp}"
     assert resp.get("latency", 0) > 0, f"non-positive latency: {resp}"
     assert "module gandse_acc" in resp.get("rtl", ""), "missing RTL"
+    assert resp.get("id") == "serial-0", f"id not echoed: {resp}"
 
     # malformed line -> ok:false, connection stays usable
     f.write("garbage\n")
@@ -47,13 +74,83 @@ def main() -> int:
     assert err.get("ok") is False, f"garbage was accepted: {err}"
 
     req["rtl"] = False
+    del req["id"]
     f.write(json.dumps(req) + "\n")
     f.flush()
     resp2 = json.loads(f.readline())
     assert resp2.get("ok") is True, f"connection died after error: {resp2}"
+    assert "id" not in resp2, f"unsolicited id echo: {resp2}"
 
+    stats = get_stats(f)
     keys = ("latency", "power", "satisfied", "batch_size", "queue_us")
-    print("serve round-trip ok:", {k: resp[k] for k in keys if k in resp})
+    print("serial round-trip ok:",
+          {k: resp[k] for k in keys if k in resp})
+    print("stats ok:", {k: stats[k] for k in ("items", "batches",
+                                              "workers", "queue_depth")})
+    sock.close()
+    return stats
+
+
+def pipelined_client(host, port, cid, n, failures):
+    try:
+        sock = connect(host, port)
+        f = sock.makefile("rw")
+        # write the whole window before reading anything
+        for i in range(n):
+            req = {"net": [32, 32, 32, 32, 3, 3],
+                   "lo": 0.001 * ((cid + i) % 20 + 1), "po": 2.0, "id": i}
+            f.write(json.dumps(req) + "\n")
+        f.flush()
+        for i in range(n):
+            line = f.readline()
+            if not line:
+                failures.append(f"client {cid}: reply {i} dropped")
+                return
+            resp = json.loads(line)
+            if resp.get("ok") is not True:
+                failures.append(f"client {cid}: reply {i} not ok: {resp}")
+                return
+            if resp.get("id") != i:
+                failures.append(
+                    f"client {cid}: out-of-order reply {i}: {resp}")
+                return
+        sock.close()
+    except Exception as e:  # noqa: BLE001 - any failure must fail CI
+        failures.append(f"client {cid}: {e!r}")
+
+
+def main() -> int:
+    host, port = sys.argv[1], int(sys.argv[2])
+    clients = int(sys.argv[3]) if len(sys.argv) > 3 else 4
+    pipeline = int(sys.argv[4]) if len(sys.argv) > 4 else 8
+
+    stats_before = serial_phase(host, port)
+
+    failures = []
+    threads = [
+        threading.Thread(target=pipelined_client,
+                         args=(host, port, c, pipeline, failures))
+        for c in range(clients)
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not failures, "pipelined phase failed:\n" + "\n".join(failures)
+
+    sock = connect(host, port)
+    stats_after = get_stats(sock.makefile("rw"))
+    sock.close()
+    grew = stats_after["items"] - stats_before["items"]
+    want = clients * pipeline
+    assert grew >= want, (
+        f"items counter grew by {grew}, expected >= {want}")
+    occ = stats_after["batch_occupancy"]
+    weighted = sum((i + 1) * c for i, c in enumerate(occ))
+    assert weighted == stats_after["items"], (
+        f"occupancy {occ} does not sum to items {stats_after['items']}")
+    print(f"pipelined phase ok: {clients} clients x {pipeline} in-flight, "
+          f"all replies in order; served items {stats_after['items']}")
     return 0
 
 

@@ -1,0 +1,150 @@
+#!/usr/bin/env python3
+"""Self-tests for scripts/compare_bench.py — run as a CI step.
+
+Builds fixture BENCH JSONs in a temp dir and exercises every mode the
+CI jobs rely on:
+
+* improvement / no-regression      -> exit 0
+* regression, warn-only (default)  -> exit 0 + ``::warning::`` + REGRESSION
+* regression, --fail-on-regression -> exit 1 + ``::error::``
+* loosened --threshold             -> exit 0
+* missing baseline                 -> exit 0 + seeding reminder
+* malformed or row-less fresh file -> exit 1 (the bench itself broke)
+* shape-keyed rows (gemm/serve schema) including the serve-load
+  ``req_per_sec`` metric
+* $GITHUB_STEP_SUMMARY markdown table append
+
+Usage: python3 scripts/test_compare_bench.py   (exits non-zero on any
+failed expectation).
+"""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+SCRIPT = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "compare_bench.py"
+)
+
+FAILURES = []
+
+
+def check(name, cond, detail=""):
+    status = "ok" if cond else "FAIL"
+    print(f"{status}: {name}" + (f" ({detail})" if detail and not cond else ""))
+    if not cond:
+        FAILURES.append(name)
+
+
+def run(args, summary_path=None):
+    env = dict(os.environ)
+    env.pop("GITHUB_STEP_SUMMARY", None)
+    if summary_path:
+        env["GITHUB_STEP_SUMMARY"] = summary_path
+    return subprocess.run(
+        [sys.executable, SCRIPT, *args],
+        capture_output=True,
+        text=True,
+        env=env,
+    )
+
+
+def write(d, name, doc):
+    path = os.path.join(d, name)
+    with open(path, "w") as f:
+        if isinstance(doc, str):
+            f.write(doc)
+        else:
+            json.dump(doc, f)
+    return path
+
+
+def rows(serve_rps, select_cps):
+    """Fixtures exercise both keying styles: shape-keyed (serve/gemm
+    schema) and bare-threads (select/train schema)."""
+    return {
+        "rows": [
+            {"shape": "c64_p8", "threads": 2, "req_per_sec": serve_rps},
+            {"threads": 1, "cands_per_sec": select_cps},
+        ]
+    }
+
+
+def main() -> int:
+    with tempfile.TemporaryDirectory() as d:
+        base = write(d, "base.json", rows(1000.0, 5e6))
+        better = write(d, "better.json", rows(1200.0, 6e6))
+        worse = write(d, "worse.json", rows(500.0, 2e6))
+
+        r = run([better, base])
+        check("improvement exits 0", r.returncode == 0, r.stdout + r.stderr)
+        check(
+            "improvement reports both keyed rows",
+            "c64_p8 threads=2 req_per_sec" in r.stdout
+            and "threads=1 cands_per_sec" in r.stdout,
+            r.stdout,
+        )
+        check("improvement has no REGRESSION", "REGRESSION" not in r.stdout)
+
+        r = run([worse, base])
+        check("warn-only regression exits 0", r.returncode == 0, r.stdout)
+        check(
+            "warn-only regression annotates ::warning::",
+            "::warning" in r.stdout and "REGRESSION" in r.stdout,
+            r.stdout,
+        )
+
+        r = run([worse, base, "--fail-on-regression"])
+        check("hard-gated regression exits 1", r.returncode == 1, r.stdout)
+        check("hard gate annotates ::error::", "::error" in r.stdout, r.stdout)
+
+        r = run([worse, base, "--fail-on-regression", "--threshold", "0.9"])
+        check(
+            "loosened threshold passes the same drop",
+            r.returncode == 0,
+            r.stdout,
+        )
+
+        r = run([better, os.path.join(d, "missing.json")])
+        check("missing baseline exits 0", r.returncode == 0, r.stdout)
+        check(
+            "missing baseline prints seeding reminder",
+            "no committed baseline" in r.stdout,
+            r.stdout,
+        )
+
+        malformed = write(d, "malformed.json", "{not json")
+        r = run([malformed, base])
+        check("malformed fresh file exits 1", r.returncode == 1, r.stderr)
+
+        empty = write(d, "empty.json", {"rows": []})
+        r = run([empty, base])
+        check("row-less fresh file exits 1", r.returncode == 1, r.stderr)
+
+        summary = os.path.join(d, "summary.md")
+        r = run([worse, base, "--fail-on-regression"], summary_path=summary)
+        check(
+            "step-summary run still exits 1",
+            r.returncode == 1,
+            r.stdout,
+        )
+        with open(summary) as f:
+            text = f.read()
+        check(
+            "step summary holds the markdown table",
+            "| row | metric | baseline | new | ratio | status |" in text
+            and "**REGRESSION**" in text,
+            text,
+        )
+
+    if FAILURES:
+        print(f"\n{len(FAILURES)} self-test(s) failed: {FAILURES}")
+        return 1
+    print("\nall compare_bench.py self-tests passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
