@@ -224,88 +224,145 @@ fn bench_gemm_microbench(b: &mut Bench) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// Selection-engine throughput: scan the same capped candidate space at
+/// Selection-engine throughput: scan candidate spaces of two sizes at
 /// several thread counts, confirm bit-identical outcomes, and record
-/// candidates/sec.  Artifact-free (builtin spec + synthetic G output).
+/// candidates/sec per (shape, threads) row.  Artifact-free (builtin
+/// spec + synthetic G output).
+///
+/// Shapes:
+/// * `im2col_cap250k` — the historical trajectory row: 3 hot choices
+///   per group (3^12 = 531441 candidates) capped at 250k.
+/// * `im2col_full16p7M` — the streaming-engine acceptance row: the full
+///   4-hot kept-choice product (4^12 = 16 777 216 candidates, 16x the
+///   old 1M cap) scanned **exactly** — the run asserts no truncation
+///   (objectives are unreachable, so the terminal state never fires)
+///   and bitwise thread parity, while peak engine memory stays
+///   O(threads x chunk) by construction.
 fn bench_selection_throughput(b: &mut Bench) -> anyhow::Result<()> {
     println!("== selection engine throughput (no artifacts needed) ==");
     let spec = builtin_spec("im2col")?;
-    // Three hot choices per group = 3^12 = 531441 candidates; cap at 250k
-    // so one scan stays sub-second even single-threaded.
-    let mut probs = vec![0.01f32; spec.onehot_dim];
     let offs = spec.group_offsets();
-    for (g, grp) in spec.groups.iter().enumerate() {
-        for c in [0usize, 2, 4] {
-            if c < grp.size() {
-                probs[offs[g] + c] = 0.33;
+    let hot_probs = |hot: &[usize]| {
+        let mut probs = vec![0.01f32; spec.onehot_dim];
+        for (g, grp) in spec.groups.iter().enumerate() {
+            for &c in hot {
+                if c < grp.size() {
+                    probs[offs[g] + c] = 0.9 / hot.len() as f32;
+                }
             }
         }
-    }
-    let cands = Candidates::from_probs(&spec, &probs, 0.2);
-    let cap = 250_000usize;
-    let net = [64.0f32, 64.0, 32.0, 32.0, 3.0, 3.0];
-    let (lo, po) = (1e-4f32, 2.0f32);
-    let kind = spec.kind;
+        probs
+    };
     let cores = std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(1);
+    let kind = spec.kind;
+    let net = [64.0f32, 64.0, 32.0, 32.0, 3.0, 3.0];
+
+    // (shape, candidates, cap, objectives, iters, thread counts):
+    // the large row uses fixed thread keys {1, 4} so the baseline rows
+    // match on any runner, unreachable objectives so the exact full
+    // scan is enforced, and fewer iters (one pass is ~17M evals).
+    let small = Candidates::from_probs(&spec, &hot_probs(&[0, 2, 4]), 0.2);
+    let large = Candidates::from_probs(&spec, &hot_probs(&[0, 1, 2, 4]), 0.2);
+    assert_eq!(large.count(), 16_777_216.0, "4-hot product moved");
     let mut thread_counts = vec![1usize, 2, 4, cores];
     thread_counts.sort_unstable();
     thread_counts.dedup();
-
-    let mut baseline: Option<(f64, gandse::select::SelectOutcome)> = None;
-    let mut rows: Vec<Json> = Vec::new();
-    let mut best_cps = 0f64;
-    for &threads in &thread_counts {
-        let engine =
-            SelectEngine { threads, cap, ..SelectEngine::default() };
-        let mut out = None;
-        b.run(
-            &format!("select_engine/im2col cap{cap} threads={threads}"),
+    let cases: [(&str, &Candidates, usize, (f32, f32), usize, Vec<usize>);
+        2] = [
+        // unreachable objectives for both rows: the selector can never
+        // hit its terminal state, so every run scans exactly
+        // min(count, cap) candidates and the rows time a fixed workload
+        (
+            "im2col_cap250k",
+            &small,
+            250_000,
+            (1e-30, 1e-30),
             5,
-            cap,
-            || {
-                let r = engine
-                    .run(&spec, &cands, lo, po, |raw| kind.eval(&net, raw))
-                    .expect("non-empty candidates");
-                out = Some(r);
-            },
-        );
-        let out = out.expect("bench ran at least once");
-        let secs = b.rows.last().expect("bench recorded a row").1; // mean
-        let n = out.n_enumerated;
-        let cps = n as f64 / secs;
-        best_cps = best_cps.max(cps);
-        if baseline.is_none() {
-            baseline = Some((cps, out.clone()));
-        } else {
-            // parity: every thread count returns the same winner
-            let ref_out = &baseline.as_ref().unwrap().1;
-            assert_eq!(&out, ref_out, "threads={threads} diverged");
+            thread_counts,
+        ),
+        (
+            "im2col_full16p7M",
+            &large,
+            gandse::select::DEFAULT_CAP,
+            (1e-30, 1e-30),
+            3,
+            vec![1, 4],
+        ),
+    ];
+
+    let mut rows: Vec<Json> = Vec::new();
+    let mut speedups: Vec<Json> = Vec::new();
+    for (shape, cands, cap, (lo, po), iters, threads_list) in cases {
+        let expect_scan = (cands.count() as usize).min(cap);
+        let mut baseline: Option<gandse::select::SelectOutcome> = None;
+        // the parallel-scaling canary: a scheduling bug that serializes
+        // the streaming merge shows up here as speedup ~1x
+        let mut cps_1thread: Option<f64> = None;
+        let mut best_cps = 0f64;
+        for &threads in &threads_list {
+            let engine =
+                SelectEngine { threads, cap, ..SelectEngine::default() };
+            let mut out = None;
+            b.run(
+                &format!("select_engine/{shape} threads={threads}"),
+                iters,
+                expect_scan,
+                || {
+                    let r = engine
+                        .run(&spec, cands, lo, po, |raw| {
+                            kind.eval(&net, raw)
+                        })
+                        .expect("non-empty candidates");
+                    out = Some(r);
+                },
+            );
+            let out = out.expect("bench ran at least once");
+            assert_eq!(
+                out.n_enumerated, expect_scan,
+                "{shape}: scan truncated or early-exited unexpectedly"
+            );
+            let secs = b.rows.last().expect("bench recorded a row").1;
+            let cps = out.n_enumerated as f64 / secs;
+            if threads == 1 {
+                cps_1thread = Some(cps);
+            }
+            best_cps = best_cps.max(cps);
+            if let Some(ref_out) = &baseline {
+                // parity: every thread count returns the same winner
+                assert_eq!(&out, ref_out, "{shape} threads={threads}");
+            } else {
+                baseline = Some(out.clone());
+            }
+            rows.push(Json::obj(vec![
+                ("shape", Json::str(shape)),
+                ("threads", Json::Num(threads as f64)),
+                ("secs", Json::Num(secs)),
+                ("candidates", Json::Num(out.n_enumerated as f64)),
+                ("candidate_space", Json::Num(cands.count())),
+                ("cands_per_sec", Json::Num(cps)),
+            ]));
         }
-        rows.push(Json::obj(vec![
-            ("threads", Json::Num(threads as f64)),
-            ("secs", Json::Num(secs)),
-            ("candidates", Json::Num(n as f64)),
-            ("cands_per_sec", Json::Num(cps)),
+        let speedup = best_cps / cps_1thread.unwrap_or(best_cps).max(1e-12);
+        println!(
+            "select_engine/{shape}: best speedup {speedup:.2}x over 1 \
+             thread on {cores} cores"
+        );
+        speedups.push(Json::obj(vec![
+            ("shape", Json::str(shape)),
+            ("speedup_best_vs_1thread", Json::Num(speedup)),
         ]));
     }
-    let (cps_1, _) = baseline.expect("at least one thread count");
     let doc = Json::obj(vec![
         ("bench", Json::str("select_throughput")),
         ("model", Json::str("im2col")),
-        ("cap", Json::Num(cap as f64)),
-        ("candidate_space", Json::Num(cands.count())),
         ("available_parallelism", Json::Num(cores as f64)),
         ("rows", Json::Arr(rows)),
-        ("speedup_best_vs_1thread", Json::Num(best_cps / cps_1)),
+        ("speedups", Json::Arr(speedups)),
     ]);
     std::fs::write("BENCH_select.json", format!("{doc}\n"))?;
-    println!(
-        "wrote BENCH_select.json (best speedup {:.2}x over 1 thread on \
-         {cores} cores)\n",
-        best_cps / cps_1
-    );
+    println!("wrote BENCH_select.json\n");
     Ok(())
 }
 

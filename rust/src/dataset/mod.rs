@@ -145,6 +145,13 @@ pub fn compute_stats(samples: &[Sample]) -> Stats {
 
 const MAGIC: &[u8; 8] = b"GANDSEd1";
 
+/// Upper bound on the per-sample group count accepted from a file
+/// header.  Real specs have a dozen-ish groups; the bound exists so a
+/// corrupt header (e.g. `n_groups = 4e9`) cannot drive the per-sample
+/// `Vec::with_capacity(n_groups)` below toward OOM before the first
+/// short read would have failed the load anyway.
+const MAX_FILE_GROUPS: usize = 4_096;
+
 impl Dataset {
     pub fn save(&self, path: &Path) -> Result<(), DatasetError> {
         let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
@@ -201,6 +208,20 @@ impl Dataset {
         let model = String::from_utf8(name)
             .map_err(|_| DatasetError::Corrupt("model name not utf8"))?;
         let n_groups = read_u32(&mut r)? as usize;
+        if n_groups > MAX_FILE_GROUPS {
+            return Err(DatasetError::Corrupt("implausible group count"));
+        }
+        // Cross-check against the named model's spec when it resolves to
+        // a builtin (an empty dataset legitimately records 0 groups).
+        if n_groups != 0 {
+            if let Ok(spec) = crate::space::builtin_spec(&model) {
+                if n_groups != spec.groups.len() {
+                    return Err(DatasetError::Corrupt(
+                        "group count does not match the named model's spec",
+                    ));
+                }
+            }
+        }
         let mut stats = Stats {
             net_mean: [0.0; N_NET],
             net_std: [0.0; N_NET],
@@ -362,6 +383,47 @@ mod tests {
         std::fs::write(&tmp, b"not a dataset").unwrap();
         assert!(Dataset::load(&tmp).is_err());
         std::fs::remove_file(&tmp).ok();
+    }
+
+    /// Valid magic + model name, then adversarial `n_groups` values: the
+    /// loader must fail via the typed header checks (or a short read),
+    /// never by attempting the header's implied multi-GB allocations.
+    #[test]
+    fn load_rejects_crafted_headers() {
+        fn header(model: &str, n_groups: u32) -> Vec<u8> {
+            let mut b = Vec::new();
+            b.extend_from_slice(MAGIC);
+            b.extend_from_slice(&(model.len() as u32).to_le_bytes());
+            b.extend_from_slice(model.as_bytes());
+            b.extend_from_slice(&n_groups.to_le_bytes());
+            b
+        }
+        let dir = std::env::temp_dir();
+        // a ~4e9 group count trips the sanity bound immediately
+        let p = dir.join("gandse_ds_hdr_huge.bin");
+        std::fs::write(&p, header("custom", 4_000_000_000)).unwrap();
+        assert!(matches!(
+            Dataset::load(&p).unwrap_err(),
+            DatasetError::Corrupt("implausible group count")
+        ));
+        std::fs::remove_file(&p).ok();
+        // a known model whose group count disagrees with its spec
+        let p = dir.join("gandse_ds_hdr_mismatch.bin");
+        std::fs::write(&p, header("dnnweaver", 7)).unwrap();
+        assert!(matches!(
+            Dataset::load(&p).unwrap_err(),
+            DatasetError::Corrupt(_)
+        ));
+        std::fs::remove_file(&p).ok();
+        // an unknown model at the bound passes the header checks, then
+        // fails on the truncated body (Io) — still no giant allocation
+        let p = dir.join("gandse_ds_hdr_trunc.bin");
+        std::fs::write(&p, header("custom", 4_096)).unwrap();
+        assert!(matches!(
+            Dataset::load(&p).unwrap_err(),
+            DatasetError::Io(_)
+        ));
+        std::fs::remove_file(&p).ok();
     }
 
     #[test]

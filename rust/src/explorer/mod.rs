@@ -51,8 +51,13 @@ pub struct DseResult {
     pub latency: f32,
     pub power: f32,
     /// Number of candidate configuration sets implied by the threshold
-    /// (product of per-group kept-choice counts; Table 5 column).
+    /// (product of per-group kept-choice counts; Table 5 column).  This
+    /// is the **true uncapped count**, whatever the engine's cap.
     pub n_candidates: f64,
+    /// Candidates the engine actually offered to Algorithm 2 —
+    /// `min(n_candidates, cap)` unless the selector's terminal state
+    /// ended the scan early (see `crate::select`).
+    pub n_scanned: usize,
     /// Both objectives met (with the paper's 1% evaluation noise applied
     /// by the harness, not here).
     pub satisfied: bool,
@@ -71,7 +76,15 @@ pub struct Explorer<'a> {
     /// Selection engine shared by every request this explorer serves.
     /// Defaults to all-cores; results are identical at any thread count.
     pub engine: SelectEngine,
-    noise_rng: Rng,
+    /// Base seed for G's noise input.  The per-request noise stream is
+    /// derived from a hash of the request itself plus this seed (see
+    /// [`Explorer::noise_seed_for`]), so a given request's reply is a
+    /// pure function of (checkpoint, stats, threshold, engine cap,
+    /// noise_seed) — independent of which server worker handles it or
+    /// how many requests that worker served before (the multi-worker
+    /// determinism fix; regression-tested in
+    /// `tests/server_integration.rs`).
+    pub noise_seed: u64,
 }
 
 impl<'a> Explorer<'a> {
@@ -102,14 +115,35 @@ impl<'a> Explorer<'a> {
             stats,
             threshold: DEFAULT_THRESHOLD,
             engine: SelectEngine::default(),
-            noise_rng: Rng::new(0x5EED),
+            noise_seed: 0x5EED,
         })
+    }
+
+    /// Noise-stream seed for one request: a SplitMix-style avalanche
+    /// over the request's payload bits mixed with the explorer's
+    /// `noise_seed`.  Two explorers with the same configuration produce
+    /// the same seed for the same request — the property that makes
+    /// server replies worker-assignment-invariant.  (The seed's old
+    /// scheme — one sequential `Rng` per explorer — made a reply depend
+    /// on how many prior requests that explorer happened to consume.)
+    fn noise_seed_for(&self, req: &DseRequest) -> u64 {
+        use crate::util::rng::mix;
+        let mut h = self.noise_seed ^ 0x9E3779B97F4A7C15;
+        for &v in &req.net {
+            h = mix(h ^ v.to_bits() as u64);
+        }
+        h = mix(h ^ req.lo.to_bits() as u64);
+        h = mix(h ^ req.po.to_bits() as u64);
+        h
     }
 
     /// Run G on the requests in `infer_batch`-sized chunks; returns one
     /// probability row per request.  (The pjrt backend pads the final
     /// chunk to the artifact's fixed batch shape internally; the cpu
-    /// backend handles any row count natively.)
+    /// backend handles any row count natively.)  Each request's noise
+    /// block comes from its own derived stream (`noise_seed_for`), so
+    /// the output rows do not depend on batch composition or on any
+    /// earlier call on this explorer.
     pub fn infer_probs(
         &mut self,
         reqs: &[DseRequest],
@@ -126,9 +160,10 @@ impl<'a> Explorer<'a> {
                 net.extend_from_slice(&r.net);
                 obj.push(r.lo);
                 obj.push(r.po);
-            }
-            for _ in 0..rows * spec.noise_dim {
-                noise.push(self.noise_rng.normal() * 0.1);
+                let mut rng = Rng::new(self.noise_seed_for(r));
+                for _ in 0..spec.noise_dim {
+                    noise.push(rng.normal() * 0.1);
+                }
             }
             let probs = self.backend.infer_probs(
                 self.meta,
@@ -162,7 +197,7 @@ impl<'a> Explorer<'a> {
     /// expansion, design-model evaluation, Algorithm-2 selection.
     pub fn explore(&mut self, reqs: &[DseRequest]) -> Result<Vec<DseResult>> {
         let probs = self.infer_probs(reqs)?;
-        Ok(self.select_batch(reqs, &probs))
+        self.select_batch(reqs, &probs)
     }
 
     /// Candidate expansion + selection for a whole batch: when the
@@ -181,16 +216,25 @@ impl<'a> Explorer<'a> {
         &self,
         reqs: &[DseRequest],
         probs: &[Vec<f32>],
-    ) -> Vec<DseResult> {
-        debug_assert_eq!(reqs.len(), probs.len());
+    ) -> Result<Vec<DseResult>> {
+        // A real error, not a debug_assert: a release-build mismatch
+        // (e.g. a backend returning short output) would otherwise index
+        // out of bounds in the fan-out below.
+        if reqs.len() != probs.len() {
+            bail!(
+                "select_batch: {} requests but {} probability rows",
+                reqs.len(),
+                probs.len()
+            );
+        }
         let threads = self.engine.resolved_threads();
         if reqs.len() < threads.max(2) {
             // fewer tasks than workers: intra-task sharding wins
-            return reqs
+            return Ok(reqs
                 .iter()
                 .zip(probs)
                 .map(|(r, p)| self.select_from_probs(r, p))
-                .collect();
+                .collect());
         }
         // One task per worker is already worthwhile: a task scans up to
         // `engine.cap` candidates, dwarfing the spawn cost.
@@ -200,7 +244,7 @@ impl<'a> Explorer<'a> {
                 .map(|i| self.select_with(&per_task, &reqs[i], &probs[i]))
                 .collect::<Vec<_>>()
         });
-        shards.into_iter().flatten().collect()
+        Ok(shards.into_iter().flatten().collect())
     }
 
     /// Candidate expansion + selection for one request given G's output.
@@ -220,11 +264,20 @@ impl<'a> Explorer<'a> {
     ) -> DseResult {
         let spec = self.spec;
         let cands = Candidates::from_probs(spec, probs, self.threshold);
-        let kind = spec.kind;
+        let count = cands.count();
+        // Batched hot path: the engine streams chunks through the
+        // model's eval_batch over flat buffers (bit-identical to the
+        // scalar closure, see NetChunkEval).  rows_max is a throughput
+        // estimate of the largest chunk this scan produces — an
+        // undersized buffer degrades to NetChunkEval's slab path, it
+        // cannot break correctness.
+        let rows_max = (engine.chunk.max(1) as f64)
+            .min(count.max(1.0))
+            .min(engine.cap.max(1) as f64) as usize;
+        let eval =
+            crate::model::NetChunkEval::new(spec.kind, &req.net, rows_max);
         let out = engine
-            .run(spec, &cands, req.lo, req.po, |raw| {
-                kind.eval(&req.net, raw)
-            })
+            .run_chunked(spec, &cands, req.lo, req.po, eval)
             .expect("at least one candidate is guaranteed");
         let cfg_raw = spec.raw_values(&out.cfg_idx);
         DseResult {
@@ -232,7 +285,8 @@ impl<'a> Explorer<'a> {
             cfg_raw,
             latency: out.latency,
             power: out.power,
-            n_candidates: cands.count(),
+            n_candidates: count,
+            n_scanned: out.n_enumerated,
             satisfied: out.latency <= req.lo && out.power <= req.po,
         }
     }
@@ -296,6 +350,7 @@ impl<'a> Explorer<'a> {
             latency: out.latency,
             power: out.power,
             n_candidates: cands.count(),
+            n_scanned: out.n_enumerated,
             satisfied: out.latency <= lo && out.power <= po,
         })
     }

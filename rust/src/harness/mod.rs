@@ -37,6 +37,10 @@ pub struct TaskOutcome {
     pub latency: f32,
     pub power: f32,
     pub n_candidates: f64,
+    /// Candidates the engine actually offered to Algorithm 2 for this
+    /// task (cap / early-exit aware); equals the method's evaluation
+    /// count for the scan-free baselines.
+    pub n_scanned: f64,
 }
 
 impl TaskOutcome {
@@ -67,6 +71,17 @@ impl MethodResult {
             return 0.0;
         }
         self.outcomes.iter().map(|o| o.n_candidates).sum::<f64>()
+            / self.outcomes.len() as f64
+    }
+
+    /// Mean candidates actually scanned per task (differs from
+    /// `avg_candidates` when the cap or the selector's early exit cut a
+    /// scan short).
+    pub fn avg_scanned(&self) -> f64 {
+        if self.outcomes.is_empty() {
+            return 0.0;
+        }
+        self.outcomes.iter().map(|o| o.n_scanned).sum::<f64>()
             / self.outcomes.len() as f64
     }
 
@@ -155,6 +170,7 @@ pub fn run_gan_method(
             latency: r.latency,
             power: r.power,
             n_candidates: r.n_candidates,
+            n_scanned: r.n_scanned as f64,
         })
         .collect();
     Ok(MethodResult {
@@ -188,6 +204,7 @@ pub fn run_sa_method(
                 latency: r.latency,
                 power: r.power,
                 n_candidates: r.evals as f64,
+                n_scanned: r.evals as f64,
             }
         })
         .collect();
@@ -233,6 +250,7 @@ pub fn run_drl_method(
                 latency: l,
                 power: p,
                 n_candidates: 0.0,
+                n_scanned: 0.0,
             }
         })
         .collect();
@@ -283,15 +301,16 @@ pub fn table5(model: &str, results: &[MethodResult]) -> String {
 
 pub fn table5_csv(results: &[MethodResult]) -> String {
     let mut out = String::from(
-        "method,train_time_s,avg_candidates,nn_params,dse_time_s,\
-         n_satisfied,n_tasks,improvement_ratio\n",
+        "method,train_time_s,avg_candidates,avg_scanned,nn_params,\
+         dse_time_s,n_satisfied,n_tasks,improvement_ratio\n",
     );
     for r in results {
         out.push_str(&format!(
-            "{},{},{},{},{},{},{},{}\n",
+            "{},{},{},{},{},{},{},{},{}\n",
             r.method,
             r.train_time_s,
             r.avg_candidates(),
+            r.avg_scanned(),
             r.nn_params,
             r.dse_time_s,
             r.n_satisfied(),
@@ -435,7 +454,14 @@ mod tests {
     use super::*;
 
     fn outcome(lo: f32, po: f32, l: f32, p: f32) -> TaskOutcome {
-        TaskOutcome { lo, po, latency: l, power: p, n_candidates: 4.0 }
+        TaskOutcome {
+            lo,
+            po,
+            latency: l,
+            power: p,
+            n_candidates: 4.0,
+            n_scanned: 4.0,
+        }
     }
 
     fn method(name: &str, outs: Vec<TaskOutcome>) -> MethodResult {

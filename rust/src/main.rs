@@ -44,8 +44,10 @@ COMMANDS
             [--lr LR] [--mlp] [--ckpt out.ckpt] [--loss-csv out.csv]
   explore   --model M --ckpt c.ckpt (--net-file f | --lo L --po P
             --ic .. --oc .. --ow .. --oh .. --kw .. --kh ..)
-            [--rtl out.v] [--threshold T] [--threads N]
+            [--rtl out.v] [--threshold T] [--threads N] [--cap C]
+            [--chunk K]
   eval      --model M --ckpt c.ckpt [--test N] [--threshold T] [--threads N]
+            [--cap C] [--chunk K]
             (held-out satisfaction / improvement-ratio / difficulty report)
   serve     --model M --ckpt c.ckpt [--addr 127.0.0.1:7878]
             [--workers 2] [--max-wait-ms 5] [--max-batch B]
@@ -73,6 +75,10 @@ COMMON
   (--threads: worker threads for the selection engine and the cpu
    backend, 0 = all cores; selection results are identical at any thread
    count — only wall-clock changes)
+  (--cap: guard on candidates scanned per task, default 100000000,
+   0 = uncapped; the streaming engine's memory is O(threads x chunk)
+   regardless.  --chunk: candidates per streamed chunk, default 65536,
+   0 = default — a tuning knob, results are identical at any value)
 ";
 
 fn main() {
@@ -117,6 +123,26 @@ fn make_backend(
     let kind = BackendKind::from_name(&args.get_or("backend", "cpu"))?;
     let threads = args.get_usize("threads", 0)?;
     Ok((kind, backend::create(kind, dir, threads)?))
+}
+
+/// Selection engine from the shared CLI knobs (`--threads`, `--cap`,
+/// `--chunk`).  Cap and chunk only bound wall-clock/memory; results are
+/// identical at any setting.  Like `--threads`, `0` means "no limit":
+/// `--cap 0` scans uncapped and `--chunk 0` takes the default — the
+/// alternative (silently clamping 0 to a 1-candidate scan) would return
+/// the first enumerated candidate as the "winner".
+fn engine_from_args(args: &Args) -> Result<SelectEngine> {
+    let mut e = SelectEngine::with_threads(args.get_usize("threads", 0)?);
+    e.cap = match args.get_usize("cap", gandse::select::DEFAULT_CAP)? {
+        0 => usize::MAX,
+        cap => cap,
+    };
+    e.chunk = match args.get_usize("chunk", gandse::select::DEFAULT_CHUNK)?
+    {
+        0 => gandse::select::DEFAULT_CHUNK,
+        chunk => chunk,
+    };
+    Ok(e)
 }
 
 /// `artifacts/meta.json` when present (the artifact contract wins);
@@ -254,7 +280,7 @@ fn cmd_explore(args: &Args) -> Result<()> {
         ds.stats.to_vec(),
     )?;
     ex.threshold = args.get_f32("threshold", 0.2)?;
-    ex.engine = SelectEngine::with_threads(args.get_usize("threads", 0)?);
+    ex.engine = engine_from_args(args)?;
 
     let lo = args.get_f32("lo", 0.0)?;
     let po = args.get_f32("po", 0.0)?;
@@ -283,12 +309,13 @@ fn cmd_explore(args: &Args) -> Result<()> {
         let r = ex.explore_network(&nets, lo, po)?;
         println!(
             "network ({} conv layers): satisfied={} total_latency={:.6e}s \
-             max_power={:.4}W candidates={}",
+             max_power={:.4}W candidates={} scanned={}",
             nets.len(),
             r.satisfied,
             r.latency,
             r.power,
-            r.n_candidates
+            r.n_candidates,
+            r.n_scanned
         );
         for (g, &v) in ex.spec.groups.iter().zip(&r.cfg_raw) {
             print!("  {}={}", g.name, v);
@@ -309,8 +336,10 @@ fn cmd_explore(args: &Args) -> Result<()> {
     let dt = t0.elapsed();
     for (layer, r) in layers.iter().zip(&results) {
         println!(
-            "{}: satisfied={} latency={:.6e}s power={:.4}W candidates={}",
-            layer.name, r.satisfied, r.latency, r.power, r.n_candidates
+            "{}: satisfied={} latency={:.6e}s power={:.4}W \
+             candidates={} scanned={}",
+            layer.name, r.satisfied, r.latency, r.power, r.n_candidates,
+            r.n_scanned
         );
         for (g, &v) in ex.spec.groups.iter().zip(&r.cfg_raw) {
             print!("  {}={}", g.name, v);
@@ -346,7 +375,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
         ds.stats.to_vec(),
     )?;
     ex.threshold = args.get_f32("threshold", 0.2)?;
-    ex.engine = SelectEngine::with_threads(args.get_usize("threads", 0)?);
+    ex.engine = engine_from_args(args)?;
     args.reject_unknown()?;
 
     let t0 = std::time::Instant::now();
@@ -381,6 +410,12 @@ fn cmd_eval(args: &Args) -> Result<()> {
         100.0 * sat as f64 / tasks.len().max(1) as f64
     );
     println!("  improvement ratio  {:.4}", metrics::mean(&ratios));
+    let n = results.len().max(1) as f64;
+    println!(
+        "  avg candidates     {:.1} (scanned {:.1})",
+        results.iter().map(|r| r.n_candidates).sum::<f64>() / n,
+        results.iter().map(|r| r.n_scanned as f64).sum::<f64>() / n
+    );
     println!(
         "  err stddev         lat {:.4}  pow {:.4}",
         metrics::std_dev(&lerr),
@@ -437,7 +472,7 @@ fn make_worker_explorers(
     };
     let ds = load_or_generate_dataset(args, model, 2048, 16)?;
     let threshold = args.get_f32("threshold", 0.2)?;
-    let threads = args.get_usize("threads", 0)?;
+    let engine = engine_from_args(args)?;
     let mut explorers = Vec::with_capacity(workers);
     for _ in 0..workers {
         let mut ex = Explorer::new(
@@ -448,7 +483,7 @@ fn make_worker_explorers(
             ds.stats.to_vec(),
         )?;
         ex.threshold = threshold;
-        ex.engine = SelectEngine::with_threads(threads);
+        ex.engine = engine;
         explorers.push(ex);
     }
     Ok((explorers, meta))
@@ -524,8 +559,8 @@ fn cmd_loadtest(args: &Args) -> Result<()> {
         let ignored: Vec<&str> = [
             "ckpt", "backend", "artifacts", "width", "g-depth", "d-depth",
             "train-batch", "infer-batch", "max-batch", "max-queue",
-            "max-wait-ms", "threshold", "threads", "seed", "train",
-            "test", "dataset", "workers",
+            "max-wait-ms", "threshold", "threads", "cap", "chunk",
+            "seed", "train", "test", "dataset", "workers",
         ]
         .into_iter()
         .filter(|k| args.get(k).is_some())
@@ -619,7 +654,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         .split(',')
         .map(|s| s.parse().unwrap_or(0.5))
         .collect();
-    let engine = SelectEngine::with_threads(args.get_usize("threads", 0)?);
+    let engine = engine_from_args(args)?;
     args.reject_unknown()?;
 
     if exp == "ablate" {

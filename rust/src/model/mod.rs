@@ -178,6 +178,70 @@ impl DesignModel for ModelKind {
     }
 }
 
+/// The selection engine's batched hot path: evaluate whole chunks of
+/// candidate configurations against **one** network through
+/// [`ModelKind::eval_batch`] — flat `nets`/`cfgs` buffers, one tight
+/// loop over inlined model code per chunk instead of one dynamic call
+/// per candidate (better ILP and cache behavior; bit-identical to
+/// scalar calls by `eval_batch`'s contract).
+///
+/// The request's 6 network parameters are replicated once into a flat
+/// `[max_rows, 6]` buffer at construction and shared read-only by every
+/// engine worker; `eval_chunk` slices the prefix matching the chunk's
+/// row count, so no per-chunk allocation happens on the request path.
+pub struct NetChunkEval {
+    kind: ModelKind,
+    /// `net` repeated `max_rows` times, row-major `[max_rows, 6]`.
+    nets: Vec<f32>,
+}
+
+impl NetChunkEval {
+    /// `max_rows` sizes the replicated-net buffer; chunks up to that
+    /// many rows take the single-`eval_batch` fast path.  Larger chunks
+    /// still work (they are evaluated in `max_rows`-sized slabs), so a
+    /// caller's row estimate being wrong costs throughput, never
+    /// correctness.
+    pub fn new(kind: ModelKind, net: &[f32; N_NET], max_rows: usize) -> Self {
+        let mut nets = Vec::with_capacity(max_rows.max(1) * N_NET);
+        for _ in 0..max_rows.max(1) {
+            nets.extend_from_slice(net);
+        }
+        NetChunkEval { kind, nets }
+    }
+}
+
+impl crate::select::ChunkEval for NetChunkEval {
+    fn eval_chunk(
+        &self,
+        cfgs: &[f32],
+        rows: usize,
+        out: &mut Vec<(f32, f32)>,
+    ) {
+        let cap_rows = self.nets.len() / N_NET;
+        if rows <= cap_rows {
+            self.kind.eval_batch(&self.nets[..rows * N_NET], cfgs, out);
+            return;
+        }
+        // Oversized chunk (caller sized max_rows below the engine's
+        // actual chunking): evaluate in buffer-sized slabs.  Row i goes
+        // through the identical f32 operations either way, so this path
+        // only changes batching, not bits.
+        let c = self.kind.cfg_len();
+        out.clear();
+        out.reserve(rows);
+        let mut slab_out = Vec::with_capacity(cap_rows);
+        for slab in cfgs.chunks(cap_rows * c) {
+            let slab_rows = slab.len() / c;
+            self.kind.eval_batch(
+                &self.nets[..slab_rows * N_NET],
+                slab,
+                &mut slab_out,
+            );
+            out.extend_from_slice(&slab_out);
+        }
+    }
+}
+
 /// Evaluate a design model by name on raw values (boundary entry point —
 /// golden-vector tests, ad-hoc tools).  Hot paths should resolve a
 /// [`ModelKind`] once and call [`ModelKind::eval`] instead.
@@ -253,6 +317,33 @@ mod tests {
             assert_eq!(kind.to_string(), kind.name());
             assert_eq!(kind.name().parse::<ModelKind>().unwrap(), kind);
         }
+    }
+
+    #[test]
+    fn net_chunk_eval_matches_scalar_and_reuses_rows() {
+        use crate::select::ChunkEval;
+        let net = [32.0, 32.0, 32.0, 32.0, 3.0, 3.0];
+        let ev = NetChunkEval::new(ModelKind::Dnnweaver, &net, 4);
+        let cfgs = [
+            32.0, 512.0, 512.0, 512.0, // row 0
+            128.0, 2048.0, 128.0, 1024.0, // row 1
+        ];
+        let mut out = vec![(9.0, 9.0)]; // stale contents must be cleared
+        ev.eval_chunk(&cfgs, 2, &mut out);
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0], ModelKind::Dnnweaver.eval(&net, &cfgs[..4]));
+        assert_eq!(out[1], ModelKind::Dnnweaver.eval(&net, &cfgs[4..]));
+        // a shorter chunk reuses the prefix of the replicated nets
+        ev.eval_chunk(&cfgs[..4], 1, &mut out);
+        assert_eq!(out, vec![ModelKind::Dnnweaver.eval(&net, &cfgs[..4])]);
+        // an undersized buffer falls back to slab-wise evaluation with
+        // identical results (robustness, not a supported fast path)
+        let small = NetChunkEval::new(ModelKind::Dnnweaver, &net, 1);
+        let mut out2 = vec![(7.0, 7.0)];
+        small.eval_chunk(&cfgs, 2, &mut out2);
+        assert_eq!(out2.len(), 2);
+        assert_eq!(out2[0], ModelKind::Dnnweaver.eval(&net, &cfgs[..4]));
+        assert_eq!(out2[1], ModelKind::Dnnweaver.eval(&net, &cfgs[4..]));
     }
 
     #[test]

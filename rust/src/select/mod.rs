@@ -16,14 +16,49 @@
 //! different configuration than the sequential scan (a shard's fresh local
 //! selector can reject a candidate that the true global state would have
 //! accepted).  The engine therefore parallelizes the expensive part only:
-//! worker threads evaluate disjoint, contiguous shards of the mixed-radix
-//! candidate space into `(latency, power)` vectors, and a deterministic
-//! in-order merge replays the **complete** objective stream — shard 0
-//! first, shard 1 second, … — through one sequential [`Selector`].  Every
-//! candidate is evaluated with the same f32 operations and offered in the
-//! same order as the single-thread scan, so results agree bit-for-bit with
-//! the sequential path for any shard count (property-tested in
-//! `tests/select_parity.rs`).
+//! worker threads evaluate disjoint chunks of the mixed-radix candidate
+//! space, and a deterministic in-order merge replays the **complete**
+//! objective stream — chunk 0 first, chunk 1 second, … — through one
+//! sequential [`Selector`].  Every candidate is evaluated with the same
+//! f32 operations and offered in the same order as the single-thread
+//! scan, so results agree bit-for-bit with the sequential path for any
+//! worker count (property-tested in `tests/select_parity.rs`).
+//!
+//! # Streaming and memory
+//!
+//! Workers do **not** materialize whole per-worker objective vectors
+//! (that O(candidates) footprint is why the old engine needed a 1M cap):
+//! the space is cut into fixed-size chunks ([`SelectEngine::chunk`],
+//! default [`DEFAULT_CHUNK`]) assigned round-robin — worker `k` takes
+//! chunks `k, k+W, k+2W, …` via `skip_to` — evaluated into recycled
+//! buffers and handed to the merging thread through bounded channels.
+//! The merger cycles the channels in the same round-robin order, which
+//! both replays chunks strictly in candidate order through the one
+//! sequential [`Selector`] *and* keeps every worker within a bounded
+//! lookahead of the merge point, so evaluation stays fully parallel
+//! (the streaming scan's source documents why a contiguous-shard split
+//! would serialize under the same memory bound).  Peak engine memory is
+//! O(threads x chunk) regardless of the candidate count, which is what
+//! lets the default cap sit at 100M ([`DEFAULT_CAP`]) — the cap
+//! survives only as an explicit guard knob against runaway requests, no
+//! longer as a memory bound.  Per-chunk evaluation goes through
+//! [`ChunkEval`] so the hot path can run the models' batched
+//! `eval_batch` over flat buffers (bit-identical to scalar calls)
+//! instead of one dynamic call per candidate.
+//!
+//! # Early exit
+//!
+//! Algorithm 2 has a terminal state ([`Selector::is_terminal`]): once
+//! the recorded optimum satisfies the latency objective **exactly**
+//! (`l_opt == lo`), or satisfies power exactly while latency is
+//! unsatisfied (`l_opt > lo && p_opt == po`), none of the three
+//! scenario branches can ever fire again — no later candidate can win.
+//! Both the sequential scan and the streaming merge check this after
+//! every offer and stop scanning (the merge additionally cancels the
+//! outstanding workers), so [`SelectOutcome::n_enumerated`]
+//! reports the offers actually made and is identical at any thread
+//! count.  Early exit never changes the winner — it only skips offers
+//! that provably cannot update the selector.
 //!
 //! # Enumeration
 //!
@@ -33,18 +68,36 @@
 //! radix decomposition, which is what lets shards start mid-space in
 //! O(groups) instead of O(offset).
 
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+
 use crate::space::SpaceSpec;
 
-/// Default safety cap on enumerated candidates per task.  The true
-/// candidate count is still reported for Table 5; the cap only bounds the
-/// scan.  Raised 10x over the seed's single-threaded 100k: the sharded
-/// scan clears the larger space at equal wall-clock (see
-/// `BENCH_select.json`).
-pub const DEFAULT_CAP: usize = 1_000_000;
+/// Default safety cap on enumerated candidates per task.
+///
+/// This is a **guard knob**, not a memory bound: the streaming engine's
+/// footprint is O(threads x chunk) whatever the candidate count, so the
+/// default covers im2col's full 12-knob kept-choice products (which
+/// routinely exceed the old 1M ceiling) while still bounding a
+/// pathological request's wall-clock.  The true uncapped count is
+/// always reported separately (`DseResult::n_candidates`, Table 5);
+/// `n_enumerated` says how far the scan actually got.
+pub const DEFAULT_CAP: usize = 100_000_000;
+
+/// Default candidates per streamed chunk ([`SelectEngine::chunk`]): big
+/// enough to amortize channel hand-off and batch-eval dispatch, small
+/// enough that threads x chunk x 8 bytes stays a few MB.
+pub const DEFAULT_CHUNK: usize = 65_536;
 
 /// Below this many candidates per worker the engine stays sequential —
 /// thread spawn + merge overhead would dominate.
 const MIN_SHARD: usize = 4_096;
+
+/// Bounded depth of each worker→merger chunk channel: with round-robin
+/// chunk assignment this is the per-worker lookahead past the merge
+/// point — enough to ride out merge-side jitter, small enough that
+/// in-flight memory stays O(workers x chunk).
+const CHUNKS_IN_FLIGHT: usize = 2;
 
 // ---------------------------------------------------------------------------
 // Shared fork-join machinery
@@ -53,9 +106,11 @@ const MIN_SHARD: usize = 4_096;
 /// Shard `n` items into up to `threads` contiguous ranges of at least
 /// `min_shard` items each and run `f(start, end)` on scoped worker
 /// threads; returns the per-shard results **in shard order**.  This is
-/// the fork-join machinery behind [`SelectEngine::run`];
-/// [`run_sharded_rows`] is its mutable-output sibling behind the GEMM
-/// engine ([`crate::nn::gemm`]) and therefore the CPU training backend.
+/// the fork-join machinery behind the explorer's per-batch task fan-out
+/// (`Explorer::select_batch`); [`run_sharded_rows`] is its
+/// mutable-output sibling behind the GEMM engine ([`crate::nn::gemm`])
+/// and therefore the CPU training backend.  (The selection engine
+/// itself streams round-robin chunks instead — see the module docs.)
 ///
 /// `threads == 0` means "use every available core".  With one effective
 /// worker (or `n < 2 * min_shard`), `f` runs inline on the caller's
@@ -334,6 +389,57 @@ impl<'a> Iterator for CandidateIter<'a> {
 }
 
 // ---------------------------------------------------------------------------
+// Chunk evaluation
+// ---------------------------------------------------------------------------
+
+/// Per-chunk candidate evaluator — the seam between the streaming scan
+/// and the evaluation core.
+///
+/// `cfgs` is a row-major `[rows, cfg_len]` buffer of raw configuration
+/// values (one enumerated candidate per row, in enumeration order);
+/// implementations must clear `out` and push exactly one
+/// `(latency, power)` pair per row, computing row `i` with the same f32
+/// operations a scalar evaluation of that candidate would use — the
+/// engine's bit-exactness contract flows through this requirement.
+/// Implementations must be pure (same input → same output): the engine
+/// may evaluate chunks on any thread in any temporal order.
+///
+/// Any `Fn(&[f32]) -> (f32, f32) + Sync` closure implements the trait
+/// row-by-row; the serving hot path uses
+/// [`crate::model::NetChunkEval`], which dispatches whole chunks
+/// through the models' batched `eval_batch` instead.
+pub trait ChunkEval: Sync {
+    fn eval_chunk(
+        &self,
+        cfgs: &[f32],
+        rows: usize,
+        out: &mut Vec<(f32, f32)>,
+    );
+}
+
+impl<F> ChunkEval for F
+where
+    F: Fn(&[f32]) -> (f32, f32) + Sync,
+{
+    fn eval_chunk(
+        &self,
+        cfgs: &[f32],
+        rows: usize,
+        out: &mut Vec<(f32, f32)>,
+    ) {
+        out.clear();
+        out.reserve(rows);
+        if rows == 0 {
+            return;
+        }
+        let w = cfgs.len() / rows;
+        for row in cfgs.chunks_exact(w) {
+            out.push(self(row));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Algorithm 2
 // ---------------------------------------------------------------------------
 
@@ -390,6 +496,32 @@ impl Selector {
     pub fn result(&self) -> Option<(usize, f32, f32)> {
         self.best.map(|i| (i, self.l_opt, self.p_opt))
     }
+
+    /// True once **no** possible `(l_g, p_g)` can change the selection —
+    /// Algorithm 2's terminal state, derived branch by branch from
+    /// [`Selector::offer`]:
+    ///
+    /// * the `(0, 0)` sentinel re-initializes on the next offer, so it
+    ///   is never terminal;
+    /// * scenario 1 can fire whenever `(l_opt, p_opt)` is strictly on
+    ///   one side of `(lo, po)` on both axes (a strictly smaller pair
+    ///   always exists as an f32 input);
+    /// * scenario 2 can fire whenever `l_opt > lo && p_opt < po`;
+    /// * scenario 3 can fire whenever `l_opt < lo`.
+    ///
+    /// All three are structurally dead exactly when `l_opt == lo`, or
+    /// when `l_opt > lo && p_opt == po` — the "objective satisfied
+    /// exactly" boundaries the strict inequalities of the update rule
+    /// cannot cross.  The streaming engine uses this to cancel
+    /// outstanding workers; because the predicate is independent of the
+    /// inputs still to come, early exit is sound for any evaluator.
+    pub fn is_terminal(&self) -> bool {
+        if self.best.is_none() || (self.l_opt == 0.0 && self.p_opt == 0.0) {
+            return false;
+        }
+        self.l_opt == self.lo
+            || (self.l_opt > self.lo && self.p_opt == self.po)
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -405,29 +537,44 @@ pub struct SelectOutcome {
     pub cfg_idx: Vec<usize>,
     pub latency: f32,
     pub power: f32,
-    /// Candidates actually scanned (== min(count, cap)).
+    /// Candidates actually offered to the selector before the scan
+    /// concluded — `min(count, cap)` unless the selector hit its
+    /// terminal state first ([`Selector::is_terminal`]), in which case
+    /// the scan stopped early.  Identical at any thread count.
     pub n_enumerated: usize,
 }
 
-/// Sharded candidate-selection engine.
+/// Streaming chunked candidate-selection engine.
 ///
 /// `threads == 0` means "use every available core"; `threads == 1` is the
 /// plain sequential scan.  Whatever the setting, results are bit-for-bit
 /// identical (see the module docs) — threads only change wall-clock.
+/// Memory is O(`threads` x `chunk`) regardless of `cap`.
 #[derive(Debug, Clone, Copy)]
 pub struct SelectEngine {
     /// Worker threads (0 = `std::thread::available_parallelism`).
     pub threads: usize,
-    /// Safety cap on enumerated candidates per run.
+    /// Safety cap on enumerated candidates per run.  A guard knob
+    /// against runaway wall-clock, **not** a memory bound (the
+    /// streaming scan never materializes the space); see
+    /// [`DEFAULT_CAP`].
     pub cap: usize,
     /// Minimum candidates per worker before sharding engages (tuning and
     /// test knob; parity holds for any value ≥ 1).
     pub min_shard: usize,
+    /// Candidates per streamed chunk (tuning and test knob; parity
+    /// holds for any value ≥ 1).  See [`DEFAULT_CHUNK`].
+    pub chunk: usize,
 }
 
 impl Default for SelectEngine {
     fn default() -> SelectEngine {
-        SelectEngine { threads: 0, cap: DEFAULT_CAP, min_shard: MIN_SHARD }
+        SelectEngine {
+            threads: 0,
+            cap: DEFAULT_CAP,
+            min_shard: MIN_SHARD,
+            chunk: DEFAULT_CHUNK,
+        }
     }
 }
 
@@ -459,11 +606,10 @@ impl SelectEngine {
     /// Scan `cands` with Algorithm 2 against objectives `(lo, po)`.
     ///
     /// `eval` maps one candidate's raw configuration values to
-    /// `(latency, power)`; it must be pure (same input → same output) —
-    /// shards may evaluate candidates in any temporal order, though each
-    /// candidate's objectives are *offered* to the selector strictly in
-    /// enumeration order.  Returns None only for degenerate candidate
-    /// sets (a group with no kept choices, or a group-count mismatch).
+    /// `(latency, power)`; it must be pure (same input → same output).
+    /// This is the closure-friendly front of [`SelectEngine::run_chunked`]
+    /// (a plain `Fn` bound keeps closure-argument inference working);
+    /// hot paths with a batch evaluator call `run_chunked` directly.
     pub fn run<F>(
         &self,
         spec: &SpaceSpec,
@@ -475,6 +621,26 @@ impl SelectEngine {
     where
         F: Fn(&[f32]) -> (f32, f32) + Sync,
     {
+        self.run_chunked(spec, cands, lo, po, eval)
+    }
+
+    /// Scan `cands` with Algorithm 2 against objectives `(lo, po)`
+    /// through a chunk evaluator ([`ChunkEval`]).
+    ///
+    /// Workers may evaluate chunks in any temporal order, but every
+    /// candidate's objectives are *offered* to the selector strictly in
+    /// enumeration order, and the scan stops at the selector's terminal
+    /// state, the cap, or exhaustion — whichever comes first.  Returns
+    /// None only for degenerate candidate sets (a group with no kept
+    /// choices, or a group-count mismatch).
+    pub fn run_chunked<E: ChunkEval>(
+        &self,
+        spec: &SpaceSpec,
+        cands: &Candidates,
+        lo: f32,
+        po: f32,
+        eval: E,
+    ) -> Option<SelectOutcome> {
         if cands.kept.len() != spec.groups.len()
             || cands.kept.iter().any(|ks| ks.is_empty())
         {
@@ -494,49 +660,13 @@ impl SelectEngine {
         let min_shard = self.min_shard.max(1);
         let workers =
             self.resolved_threads().min((n / min_shard).max(1));
-        if workers == 1 {
-            return run_sequential(spec, cands, lo, po, &eval, n);
-        }
-
-        // Shard the first n candidates into `workers` contiguous ranges;
-        // each worker evaluates its range into an objective vector
-        // (the shared fork-join helper — same machinery as the CPU
-        // training backend).
-        let kept = &cands.kept;
-        let groups = &spec.groups;
-        let objs: Vec<Vec<(f32, f32)>> =
-            run_sharded(n, workers, min_shard, |start, end| {
-                let mut out = Vec::with_capacity(end - start);
-                let mut cur = CandidateCursor::new(kept);
-                if !cur.skip_to(start as u128) {
-                    return out;
-                }
-                let mut raw = vec![0f32; groups.len()];
-                for j in start..end {
-                    for ((r, g), &ci) in
-                        raw.iter_mut().zip(groups).zip(cur.current())
-                    {
-                        *r = g.choices[ci];
-                    }
-                    out.push(eval(&raw));
-                    if j + 1 < end && !cur.advance() {
-                        break;
-                    }
-                }
-                out
-            });
-
-        // Deterministic in-order merge: replay the complete objective
-        // stream, shard by shard, through one sequential Selector — the
-        // exact offer sequence of the single-thread scan.
-        let mut sel = Selector::new(lo, po);
-        let mut i = 0usize;
-        for shard_objs in &objs {
-            for &(l, p) in shard_objs {
-                sel.offer(i, l, p);
-                i += 1;
-            }
-        }
+        let (sel, offered) = if workers == 1 {
+            scan_sequential(spec, cands, lo, po, &eval, n, self.chunk)
+        } else {
+            scan_streaming(
+                spec, cands, lo, po, &eval, n, self.chunk, workers,
+            )
+        };
         let (ordinal, l_opt, p_opt) = sel.result()?;
         let mut cur = cands.cursor();
         cur.skip_to(ordinal as u128);
@@ -545,50 +675,193 @@ impl SelectEngine {
             cfg_idx: cur.current().to_vec(),
             latency: l_opt,
             power: p_opt,
-            n_enumerated: i,
+            n_enumerated: offered,
         })
     }
 }
 
-/// The single-threaded scan (also the reference semantics).
-fn run_sequential<F>(
+/// Fill `cfgs` (row-major `[rows, groups]`) with the raw values of the
+/// next `rows` candidates from `cur`, advancing it.  `remaining` is how
+/// many candidates the caller still owes after this chunk's first row —
+/// the cursor is left positioned on the first candidate *after* the
+/// chunk (matching the classic `advance-unless-last` enumeration
+/// pattern, so the final advance past a shard's end never trips the
+/// done flag of an exactly-exhausted space).
+fn fill_chunk(
+    cur: &mut CandidateCursor<'_>,
+    groups: &[crate::space::ConfigGroup],
+    cfgs: &mut [f32],
+    rows: usize,
+    remaining: usize,
+) {
+    let gl = groups.len();
+    for r in 0..rows {
+        for ((c, g), &ci) in cfgs[r * gl..(r + 1) * gl]
+            .iter_mut()
+            .zip(groups)
+            .zip(cur.current())
+        {
+            *c = g.choices[ci];
+        }
+        if r + 1 < remaining {
+            cur.advance();
+        }
+    }
+}
+
+/// The single-threaded scan (also the reference semantics): stream
+/// chunk-sized batches through the evaluator and the selector, with the
+/// same per-offer early-exit rule as the merge.
+fn scan_sequential<E: ChunkEval>(
     spec: &SpaceSpec,
     cands: &Candidates,
     lo: f32,
     po: f32,
-    eval: &F,
+    eval: &E,
     n: usize,
-) -> Option<SelectOutcome>
-where
-    F: Fn(&[f32]) -> (f32, f32),
-{
-    let mut sel = Selector::new(lo, po);
+    chunk: usize,
+) -> (Selector, usize) {
+    let gl = spec.groups.len();
+    let chunk = chunk.max(1).min(n);
+    let mut cfgs = vec![0f32; chunk * gl];
+    let mut objs: Vec<(f32, f32)> = Vec::with_capacity(chunk);
     let mut cur = cands.cursor();
-    let mut raw = vec![0f32; spec.groups.len()];
-    let mut best_idx = vec![0usize; spec.groups.len()];
+    let mut sel = Selector::new(lo, po);
     let mut i = 0usize;
-    while !cur.is_done() && i < n {
-        for ((r, g), &ci) in
-            raw.iter_mut().zip(&spec.groups).zip(cur.current())
-        {
-            *r = g.choices[ci];
+    'scan: while i < n {
+        let rows = chunk.min(n - i);
+        fill_chunk(&mut cur, &spec.groups, &mut cfgs, rows, n - i);
+        eval.eval_chunk(&cfgs[..rows * gl], rows, &mut objs);
+        for &(l, p) in objs.iter() {
+            sel.offer(i, l, p);
+            i += 1;
+            if sel.is_terminal() {
+                break 'scan; // no later candidate can win
+            }
         }
-        let (l, p) = eval(&raw);
-        let before = sel.result().map(|(b, _, _)| b);
-        sel.offer(i, l, p);
-        if sel.result().map(|(b, _, _)| b) != before {
-            best_idx.copy_from_slice(cur.current());
-        }
-        i += 1;
-        cur.advance();
     }
-    let (ordinal, l_opt, p_opt) = sel.result()?;
-    Some(SelectOutcome {
-        ordinal,
-        cfg_idx: best_idx,
-        latency: l_opt,
-        power: p_opt,
-        n_enumerated: i,
+    (sel, i)
+}
+
+/// The streaming parallel scan, with **round-robin chunk assignment**:
+/// chunk `j` (candidates `j*chunk .. (j+1)*chunk`) is evaluated by
+/// worker `j % workers` — each worker walks chunks `k, k+W, k+2W, …`
+/// (an O(groups) [`CandidateCursor::skip_to`] per chunk), evaluates
+/// them into recycled buffers, and sends them through its bounded
+/// channel; the merger cycles the channels in the same round-robin
+/// order, replaying chunk 0, chunk 1, … — every candidate strictly in
+/// enumeration order through one sequential [`Selector`] (the exact
+/// offer sequence of the single-thread scan) — and returns each drained
+/// buffer to its producer.
+///
+/// Round-robin (not contiguous shards) is what keeps evaluation
+/// parallel under bounded memory: the merger's consumption order
+/// matches the production interleaving, so every worker stays at most
+/// ~[`CHUNKS_IN_FLIGHT`] chunks ahead of the merge and none ever stalls
+/// waiting for "its shard's turn".  (A contiguous-shard split with the
+/// same bounded channels would serialize: workers 1..W fill their
+/// 2-chunk channels and then block until the merger finishes replaying
+/// every earlier shard — ~1x sequential wall-clock exactly on the large
+/// spaces this engine exists for.  Exact in-order merge + *unbounded*
+/// shard lookahead is the old O(candidates)-memory design.)
+///
+/// Once the selector turns terminal the merger raises `cancel`, stops
+/// offering, and drains the channels so blocked producers can exit.
+#[allow(clippy::too_many_arguments)]
+fn scan_streaming<E: ChunkEval>(
+    spec: &SpaceSpec,
+    cands: &Candidates,
+    lo: f32,
+    po: f32,
+    eval: &E,
+    n: usize,
+    chunk: usize,
+    workers: usize,
+) -> (Selector, usize) {
+    let chunk = chunk.max(1);
+    let kept = &cands.kept;
+    let groups = &spec.groups;
+    // Overflow-safe ceil-div: n can be usize::MAX (an uncapped scan of
+    // an astronomically large space), where `n + chunk - 1` would wrap.
+    let n_chunks = n / chunk + usize::from(n % chunk != 0);
+    let workers = workers.min(n_chunks).max(1);
+    let cancel = AtomicBool::new(false);
+    std::thread::scope(|s| {
+        // One (chunk channel, recycle channel) pair per worker; both
+        // bounded, so total in-flight memory is O(workers x chunk).
+        let mut chans = Vec::with_capacity(workers);
+        for k in 0..workers {
+            let (tx, rx) =
+                mpsc::sync_channel::<Vec<(f32, f32)>>(CHUNKS_IN_FLIGHT);
+            let (rec_tx, rec_rx) =
+                mpsc::sync_channel::<Vec<(f32, f32)>>(CHUNKS_IN_FLIGHT + 2);
+            let cancel = &cancel;
+            s.spawn(move || {
+                let mut cur = CandidateCursor::new(kept);
+                let mut cfgs = vec![0f32; chunk.min(n) * groups.len()];
+                let mut cj = k;
+                while cj < n_chunks {
+                    if cancel.load(Ordering::Relaxed) {
+                        break; // merger proved no later candidate wins
+                    }
+                    let start = cj * chunk;
+                    let end = (start + chunk).min(n);
+                    if !cur.skip_to(start as u128) {
+                        break; // cannot happen while start < n <= count
+                    }
+                    let rows = end - start;
+                    fill_chunk(&mut cur, groups, &mut cfgs, rows, rows);
+                    // recycle a drained buffer when one is available;
+                    // the first CHUNKS_IN_FLIGHT chunks allocate
+                    let mut out =
+                        rec_rx.try_recv().unwrap_or_default();
+                    eval.eval_chunk(&cfgs[..rows * groups.len()], rows,
+                                    &mut out);
+                    if tx.send(out).is_err() {
+                        break; // merger is gone (early exit)
+                    }
+                    cj += workers;
+                }
+            });
+            chans.push((rx, rec_tx));
+        }
+
+        // Deterministic in-order merge on the caller's thread: chunk j
+        // comes off channel j % workers, and each channel delivers its
+        // worker's chunks in ascending order, so cycling the channels
+        // replays the global enumeration order.  After early exit the
+        // drain loop keeps receiving (without offering) so producers
+        // blocked on a full channel always complete.
+        let mut sel = Selector::new(lo, po);
+        let mut i = 0usize;
+        let mut stopped = false;
+        for j in 0..n_chunks {
+            let (rx, rec_tx) = &chans[j % workers];
+            let Ok(buf) = rx.recv() else {
+                break; // producer cancelled (early exit already seen)
+            };
+            if !stopped {
+                for &(l, p) in buf.iter() {
+                    sel.offer(i, l, p);
+                    i += 1;
+                    if sel.is_terminal() {
+                        stopped = true;
+                        cancel.store(true, Ordering::Relaxed);
+                        break;
+                    }
+                }
+            }
+            let _ = rec_tx.try_send(buf); // producer may be done
+        }
+        // Unconditionally drain every channel to disconnect: after an
+        // early exit a producer may be blocked mid-send, and the scope
+        // cannot join it until its chunk is received.  (After a normal
+        // completion every producer has already hung up, so this is W
+        // immediate Errs.)
+        for (rx, _) in &chans {
+            while rx.recv().is_ok() {}
+        }
+        (sel, i)
     })
 }
 
@@ -832,13 +1105,18 @@ mod tests {
         let (ord, l_ref, p_ref) = sel.result().unwrap();
 
         let out = SelectEngine::sequential()
-            .run(&spec, &cands, lo, po, |raw| kind.eval(&net, raw))
+            .run(&spec, &cands, lo, po, |raw: &[f32]| kind.eval(&net, raw))
             .unwrap();
         assert_eq!(out.ordinal, ord);
         assert_eq!(out.cfg_idx, best);
         assert_eq!(out.latency.to_bits(), l_ref.to_bits());
         assert_eq!(out.power.to_bits(), p_ref.to_bits());
-        assert_eq!(out.n_enumerated, i);
+        // the engine may stop early at the selector's terminal state;
+        // the winner above is unchanged either way
+        assert!(out.n_enumerated <= i);
+        if !sel.is_terminal() {
+            assert_eq!(out.n_enumerated, i);
+        }
     }
 
     #[test]
@@ -855,8 +1133,14 @@ mod tests {
         let (lo, po) = (1e-4f32, 2.0f32);
         let kind = spec.kind;
         let cap = 60_000; // > min_shard * 4, < full product
-        let engine =
-            |threads| SelectEngine { threads, cap, ..SelectEngine::default() };
+        // small chunk: every shard streams several chunks through the
+        // bounded channels instead of fitting in one
+        let engine = |threads| SelectEngine {
+            threads,
+            cap,
+            chunk: 4_096,
+            ..SelectEngine::default()
+        };
         let seq = engine(1)
             .run(&spec, &cands, lo, po, |raw| kind.eval(&net, raw))
             .unwrap();
@@ -868,6 +1152,106 @@ mod tests {
             assert_eq!(par.latency.to_bits(), seq.latency.to_bits());
             assert_eq!(par.power.to_bits(), seq.power.to_bits());
         }
+    }
+
+    #[test]
+    fn selector_terminal_state_detection() {
+        // nothing offered yet: never terminal
+        let mut s = Selector::new(10.0, 10.0);
+        assert!(!s.is_terminal());
+        // both-worse state: strict improvements remain possible
+        s.offer(0, 20.0, 20.0);
+        assert!(!s.is_terminal());
+        // both-satisfied (non-exact) state: still optimizing
+        let mut s = Selector::new(10.0, 10.0);
+        s.offer(0, 8.0, 8.0);
+        assert!(!s.is_terminal());
+        // latency hits LO exactly via scenario 2 -> terminal, and offers
+        // after terminal can never update (the early-exit soundness)
+        let mut s = Selector::new(10.0, 10.0);
+        s.offer(0, 20.0, 5.0);
+        assert!(!s.is_terminal());
+        s.offer(1, 10.0, 6.0);
+        assert_eq!(s.result().unwrap().0, 1);
+        assert!(s.is_terminal());
+        s.offer(2, 1.0, 1.0);
+        assert_eq!(s.result().unwrap().0, 1);
+        // power exactly at PO while latency unsatisfied -> terminal
+        let mut s = Selector::new(10.0, 10.0);
+        s.offer(0, 20.0, 10.0);
+        assert!(s.is_terminal());
+        s.offer(1, 1.0, 1.0);
+        assert_eq!(s.result().unwrap().0, 0);
+    }
+
+    #[test]
+    fn early_exit_stops_identically_at_any_thread_count() {
+        let spec = builtin_spec("dnnweaver").unwrap();
+        let p = probs_for(
+            &spec,
+            &[(0, &[0, 1, 2, 3]), (1, &[0, 1, 2]), (2, &[1, 4]), (3, &[0, 2])],
+        );
+        let cands = Candidates::from_probs(&spec, &p, 0.2);
+        let n = cands.count() as usize;
+        assert!(n >= 48, "need a multi-chunk space, got {n}");
+        // the candidate halfway through the space hits the latency
+        // objective exactly; everything else sits in the scenario-2
+        // no-update region, so the selector turns terminal exactly there
+        let target_ord = n / 2;
+        let mut cur = cands.cursor();
+        assert!(cur.skip_to(target_ord as u128));
+        let target = spec.raw_values(cur.current());
+        let (lo, po) = (10.0f32, 10.0f32);
+        let eval = |raw: &[f32]| {
+            if raw == &target[..] {
+                (10.0, 5.0)
+            } else {
+                (20.0, 5.0)
+            }
+        };
+        for threads in [1usize, 2, 3, 8] {
+            let out = SelectEngine {
+                threads,
+                cap: DEFAULT_CAP,
+                min_shard: 1,
+                chunk: 16,
+            }
+            .run(&spec, &cands, lo, po, eval)
+            .unwrap();
+            assert_eq!(out.ordinal, target_ord, "threads={threads}");
+            assert_eq!(
+                out.n_enumerated,
+                target_ord + 1,
+                "offers past the terminal state at threads={threads}"
+            );
+            assert_eq!(out.latency.to_bits(), 10.0f32.to_bits());
+        }
+        // a first candidate that is terminal on arrival stops the scan
+        // at one offer, at any thread count
+        for threads in [1usize, 4] {
+            let out = SelectEngine {
+                threads,
+                cap: DEFAULT_CAP,
+                min_shard: 1,
+                chunk: 16,
+            }
+            .run(&spec, &cands, lo, po, |_: &[f32]| (10.0, 5.0))
+            .unwrap();
+            assert_eq!((out.ordinal, out.n_enumerated), (0, 1));
+        }
+    }
+
+    #[test]
+    fn chunk_eval_closure_matches_scalar_rows() {
+        // the blanket ChunkEval impl must clear stale contents and
+        // evaluate row-by-row in order
+        let eval = |raw: &[f32]| (raw[0] * 2.0, raw[1] + 1.0);
+        let cfgs = [1.0f32, 10.0, 2.0, 20.0, 3.0, 30.0];
+        let mut out = vec![(9.0, 9.0)];
+        ChunkEval::eval_chunk(&eval, &cfgs, 3, &mut out);
+        assert_eq!(out, vec![(2.0, 11.0), (4.0, 21.0), (6.0, 31.0)]);
+        ChunkEval::eval_chunk(&eval, &[], 0, &mut out);
+        assert!(out.is_empty());
     }
 
     #[test]

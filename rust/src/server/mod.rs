@@ -19,8 +19,8 @@
 //!   stats:    {"stats": true, "id": <optional>}
 //!   response: {"ok": true, "cfg": {...}, "latency": <f>, "power": <f>,
 //!              "satisfied": <bool>, "n_candidates": <f>,
-//!              "batch_size": <n>, "queue_us": <n>, "rtl": "...",
-//!              "id": <echo>}
+//!              "n_scanned": <n>, "batch_size": <n>, "queue_us": <n>,
+//!              "rtl": "...", "id": <echo>}
 //!   errors:   {"ok": false, "error": "...", "id": <echo>} — notably
 //!             "overloaded" (queue full) and "server shutting down".
 
@@ -296,6 +296,7 @@ pub fn encode_response(
         ("power", Json::Num(res.power as f64)),
         ("satisfied", Json::Bool(res.satisfied)),
         ("n_candidates", Json::Num(res.n_candidates)),
+        ("n_scanned", Json::Num(res.n_scanned as f64)),
         ("batch_size", Json::Num(info.batch_size as f64)),
         ("queue_us", Json::Num(info.queue_us as f64)),
     ];
@@ -331,6 +332,15 @@ struct Shared {
     batcher: Batcher<DseRequest, DseReply>,
     spec: SpaceSpec,
     workers: usize,
+    /// Per-request candidate-set size (the threshold's cartesian
+    /// product, uncapped).  Large-space requests are the ones that
+    /// stretch batch evaluation time — and therefore queue wait and
+    /// overload rejections — so the distribution is first-class
+    /// serving telemetry next to `queue_us`.
+    cand_hist: LogHistogram,
+    /// Per-request candidates actually offered to Algorithm 2
+    /// (cap/early-exit aware; see `crate::select`).
+    scanned_hist: LogHistogram,
 }
 
 /// Serving-layer tunables (see DESIGN.md §4).
@@ -418,17 +428,29 @@ pub fn serve(
         batcher: Batcher::new(cfg.max_batch, cfg.max_wait, cfg.max_queue),
         spec: explorers[0].spec.clone(),
         workers: explorers.len(),
+        cand_hist: LogHistogram::new(),
+        scanned_hist: LogHistogram::new(),
     });
 
     let mut workers = Vec::with_capacity(shared.workers);
     for mut ex in explorers {
         let sh = shared.clone();
         workers.push(std::thread::spawn(move || {
+            let stats_sh = sh.clone();
             sh.batcher.run_worker(|reqs: &[DseRequest]| {
                 // A failed batch must not kill the worker: every request
                 // in it gets an error reply and the loop keeps serving.
                 match ex.explore(reqs) {
-                    Ok(results) => results.into_iter().map(Ok).collect(),
+                    Ok(results) => results
+                        .into_iter()
+                        .map(|r| {
+                            stats_sh.cand_hist.record(r.n_candidates as u64);
+                            stats_sh
+                                .scanned_hist
+                                .record(r.n_scanned as u64);
+                            Ok(r)
+                        })
+                        .collect(),
                     Err(e) => {
                         let msg = format!("exploration failed: {e:#}");
                         reqs.iter().map(|_| Err(msg.clone())).collect()
@@ -471,6 +493,17 @@ pub fn serve(
     })
 }
 
+/// Percentile summary of one [`LogHistogram`] as a JSON object.
+fn encode_hist(h: &LogHistogram) -> Json {
+    Json::obj(vec![
+        ("count", Json::Num(h.count() as f64)),
+        ("p50", Json::Num(h.percentile(0.50) as f64)),
+        ("p95", Json::Num(h.percentile(0.95) as f64)),
+        ("p99", Json::Num(h.percentile(0.99) as f64)),
+        ("max", Json::Num(h.max() as f64)),
+    ])
+}
+
 fn encode_stats(sh: &Shared, id: Option<&Json>) -> String {
     let b = &sh.batcher;
     let occupancy = Json::Arr(
@@ -480,12 +513,7 @@ fn encode_stats(sh: &Shared, id: Option<&Json>) -> String {
             .map(|c| Json::Num(c as f64))
             .collect(),
     );
-    let queue_us = Json::obj(vec![
-        ("p50", Json::Num(b.queue_hist.percentile(0.50) as f64)),
-        ("p95", Json::Num(b.queue_hist.percentile(0.95) as f64)),
-        ("p99", Json::Num(b.queue_hist.percentile(0.99) as f64)),
-        ("max", Json::Num(b.queue_hist.max() as f64)),
-    ]);
+    let queue_us = encode_hist(&b.queue_hist);
     let stats = Json::obj(vec![
         ("queue_depth", Json::Num(b.depth() as f64)),
         ("max_queue", Json::Num(b.max_queue as f64)),
@@ -496,6 +524,10 @@ fn encode_stats(sh: &Shared, id: Option<&Json>) -> String {
         ("rejected", Json::Num(b.rejected.load(Ordering::Relaxed) as f64)),
         ("batch_occupancy", occupancy),
         ("queue_us", queue_us),
+        // per-request candidate-space telemetry: the uncapped set size
+        // and how far Algorithm 2 actually scanned (cap / early exit)
+        ("candidates", encode_hist(&sh.cand_hist)),
+        ("scanned", encode_hist(&sh.scanned_hist)),
     ]);
     let mut fields = vec![("ok", Json::Bool(true)), ("stats", stats)];
     if let Some(id) = id {
@@ -981,6 +1013,7 @@ mod tests {
             latency: 0.01,
             power: 1.0,
             n_candidates: 6.0,
+            n_scanned: 6,
             satisfied: true,
         };
         let id = Json::Num(42.0);

@@ -55,6 +55,10 @@ pub enum SpecError {
     Field(&'static str),
     #[error("unknown design model {0:?}")]
     UnknownModel(String),
+    #[error(
+        "meta.json: model {model:?} needs {want} config groups, got {got}"
+    )]
+    GroupCount { model: String, want: usize, got: usize },
 }
 
 impl SpaceSpec {
@@ -85,6 +89,18 @@ impl SpaceSpec {
                 })
             })
             .collect::<Result<Vec<_>, SpecError>>()?;
+        // The design models consume exactly cfg_len raw values per
+        // candidate; a spec with any other group count can never be
+        // evaluated correctly (the batched hot path packs rows at
+        // groups.len() and splits them at cfg_len), so reject it here
+        // rather than mis-striding silently in release builds.
+        if groups.len() != kind.cfg_len() {
+            return Err(SpecError::GroupCount {
+                model,
+                want: kind.cfg_len(),
+                got: groups.len(),
+            });
+        }
         let net_fields: Vec<String> = v
             .get("net_fields")
             .and_then(Json::as_arr)
@@ -541,7 +557,35 @@ mod tests {
 
     #[test]
     fn spec_from_json_roundtrip() {
-        // Build the JSON shape aot.py emits and parse it back.
+        // Build the JSON shape aot.py emits and parse it back (the
+        // group count must match the model's cfg_len — 4 for
+        // dnnweaver — or evaluation could never stride the rows
+        // correctly).
+        let txt = r#"{
+          "model": "dnnweaver",
+          "net_fields": ["IC","OC","OW","OH","KW","KH"],
+          "net_choices": {"IC":[16,32],"OC":[16,32],"OW":[16],"OH":[16],
+                          "KW":[1,3],"KH":[1,3]},
+          "noise_dim": 8,
+          "groups": [{"name":"PEN","choices":[8,16]},
+                     {"name":"ISS","choices":[128,256,512]},
+                     {"name":"WSS","choices":[128,256]},
+                     {"name":"OSS","choices":[512]}],
+          "onehot_dim": 8, "g_in": 16, "d_in": 16
+        }"#;
+        let v = Json::parse(txt).unwrap();
+        let s = SpaceSpec::from_json(&v).unwrap();
+        assert_eq!(s.kind, ModelKind::Dnnweaver);
+        assert_eq!(s.onehot_dim, 8);
+        assert_eq!(s.groups[1].choices, vec![128.0, 256.0, 512.0]);
+        assert_eq!(s.group_offsets(), vec![0, 2, 5, 7]);
+    }
+
+    #[test]
+    fn spec_from_json_rejects_wrong_group_count() {
+        // A 2-group dnnweaver space cannot feed the 4-value design
+        // model: the loader must reject it instead of letting the
+        // batched evaluation path mis-stride candidate rows.
         let txt = r#"{
           "model": "dnnweaver",
           "net_fields": ["IC","OC","OW","OH","KW","KH"],
@@ -553,10 +597,13 @@ mod tests {
           "onehot_dim": 5, "g_in": 16, "d_in": 13
         }"#;
         let v = Json::parse(txt).unwrap();
-        let s = SpaceSpec::from_json(&v).unwrap();
-        assert_eq!(s.kind, ModelKind::Dnnweaver);
-        assert_eq!(s.onehot_dim, 5);
-        assert_eq!(s.groups[1].choices, vec![128.0, 256.0, 512.0]);
-        assert_eq!(s.group_offsets(), vec![0, 2]);
+        let err = SpaceSpec::from_json(&v).unwrap_err();
+        assert!(
+            matches!(
+                err,
+                SpecError::GroupCount { want: 4, got: 2, .. }
+            ),
+            "{err}"
+        );
     }
 }

@@ -3,6 +3,16 @@
 //! SA/DRL baselines.  Deterministic given a seed so every experiment in
 //! EXPERIMENTS.md is exactly reproducible.
 
+/// The SplitMix64 finalizer — the avalanche behind [`Rng::next_u64`],
+/// exposed on its own for stateless seed derivation (e.g. the
+/// explorer's per-request noise seeds, which hash request payload bits
+/// through it).
+pub fn mix(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
 /// SplitMix64: tiny, fast, passes BigCrush for our purposes.
 #[derive(Debug, Clone)]
 pub struct Rng {
@@ -16,10 +26,7 @@ impl Rng {
 
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
-        let mut z = self.state;
-        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
-        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
-        z ^ (z >> 31)
+        mix(self.state)
     }
 
     /// Uniform f32 in [0, 1).
@@ -70,6 +77,16 @@ impl Rng {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn mix_is_the_next_u64_finalizer() {
+        // the exposed finalizer and the generator must stay one
+        // algorithm: next_u64 = mix(state + gamma)
+        let gamma = 0x9E3779B97F4A7C15u64;
+        let mut r = Rng::new(9);
+        let expect = mix(9u64.wrapping_add(gamma).wrapping_add(gamma));
+        assert_eq!(r.next_u64(), expect);
+    }
 
     #[test]
     fn deterministic_given_seed() {

@@ -412,7 +412,7 @@ fn explorer_batch_selection_is_thread_count_independent() {
         .collect();
     for threads in [1usize, 2, 3, env_threads(), 0] {
         ex.engine = SelectEngine::with_threads(threads);
-        let batch = ex.select_batch(&reqs, &probs);
+        let batch = ex.select_batch(&reqs, &probs).unwrap();
         assert_eq!(batch.len(), reference.len());
         for (i, (b, r)) in batch.iter().zip(&reference).enumerate() {
             assert_eq!(b.cfg_idx, r.cfg_idx, "task {i} threads={threads}");
@@ -429,4 +429,73 @@ fn explorer_batch_selection_is_thread_count_independent() {
             assert_eq!(b.n_candidates, r.n_candidates, "task {i}");
         }
     }
+}
+
+/// `select_batch` with mismatched request/probability lengths must be a
+/// structured error in every build profile — the old `debug_assert_eq!`
+/// guard let release builds index out of bounds.
+#[test]
+fn select_batch_length_mismatch_is_an_error() {
+    let meta = Meta::builtin(16, 2, 2, 16, 8);
+    let mm = meta.model(MODEL).unwrap();
+    let ds = dataset::generate(&mm.spec, 64, 4, 5);
+    let backend = CpuBackend::new(1);
+    let mut ex = Explorer::new(
+        &backend,
+        &meta,
+        MODEL,
+        GanState::init(mm, MODEL, 11).g,
+        ds.stats.to_vec(),
+    )
+    .unwrap();
+    let reqs: Vec<DseRequest> = ds
+        .test
+        .iter()
+        .map(|s| DseRequest { net: s.net, lo: s.latency, po: s.power })
+        .collect();
+    let probs = ex.infer_probs(&reqs).unwrap();
+    assert!(ex.select_batch(&reqs[..2], &probs[..1]).is_err());
+    assert!(ex.select_batch(&reqs[..1], &probs[..2]).is_err());
+    // matched lengths still work
+    assert_eq!(ex.select_batch(&reqs, &probs).unwrap().len(), reqs.len());
+}
+
+/// The multi-worker determinism fix: a request's result is a pure
+/// function of the request and the explorer's configuration — not of
+/// which explorer instance serves it or how many requests that instance
+/// served before (the noise stream derives from a per-request hash, not
+/// a shared sequential RNG).
+#[test]
+fn explorer_results_are_history_and_instance_invariant() {
+    let meta = Meta::builtin(16, 2, 2, 16, 8);
+    let mm = meta.model(MODEL).unwrap();
+    let ds = dataset::generate(&mm.spec, 64, 8, 5);
+    let backend = CpuBackend::new(1);
+    let g = GanState::init(mm, MODEL, 11).g;
+    let mk = || {
+        Explorer::new(&backend, &meta, MODEL, g.clone(), ds.stats.to_vec())
+            .unwrap()
+    };
+    let reqs: Vec<DseRequest> = ds
+        .test
+        .iter()
+        .map(|s| DseRequest {
+            net: s.net,
+            lo: s.latency * 1.2,
+            po: s.power * 1.2,
+        })
+        .collect();
+    // explorer A serves the whole batch in one go; explorer B first
+    // serves unrelated traffic, then the final request alone
+    let mut a = mk();
+    let all = a.explore(&reqs).unwrap();
+    let mut b = mk();
+    b.explore(&reqs[..3]).unwrap();
+    let last = b.explore(&reqs[reqs.len() - 1..]).unwrap();
+    let (x, y) = (&all[reqs.len() - 1], &last[0]);
+    assert_eq!(x.cfg_idx, y.cfg_idx);
+    assert_eq!(x.latency.to_bits(), y.latency.to_bits());
+    assert_eq!(x.power.to_bits(), y.power.to_bits());
+    assert_eq!(x.n_candidates, y.n_candidates);
+    assert_eq!(x.n_scanned, y.n_scanned);
 }

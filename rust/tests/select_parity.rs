@@ -101,6 +101,39 @@ fn assert_outcomes_bit_identical(
     );
 }
 
+/// Engine-vs-full-scan-reference comparison: the winner must be bitwise
+/// identical, but the engine may legitimately stop offering early at
+/// the selector's terminal state, so `n_enumerated` is only bounded by
+/// the reference's full count (early exit can never *add* offers).
+fn assert_winner_matches_reference(
+    engine: &SelectOutcome,
+    reference: &SelectOutcome,
+    ctx: &str,
+) {
+    assert_eq!(engine.ordinal, reference.ordinal, "{ctx}");
+    assert_eq!(engine.cfg_idx, reference.cfg_idx, "{ctx}");
+    assert_eq!(
+        engine.latency.to_bits(),
+        reference.latency.to_bits(),
+        "{ctx}: latency {} vs {}",
+        engine.latency,
+        reference.latency
+    );
+    assert_eq!(
+        engine.power.to_bits(),
+        reference.power.to_bits(),
+        "{ctx}: power {} vs {}",
+        engine.power,
+        reference.power
+    );
+    assert!(
+        engine.n_enumerated <= reference.n_enumerated,
+        "{ctx}: engine offered {} > reference {}",
+        engine.n_enumerated,
+        reference.n_enumerated
+    );
+}
+
 #[test]
 fn prop_parallel_selection_matches_sequential() {
     for (model, max_hot) in [("dnnweaver", 4), ("im2col", 2)] {
@@ -118,12 +151,16 @@ fn prop_parallel_selection_matches_sequential() {
                 (count / 2.0).max(1.0) as usize,
                 usize::MAX,
             ];
+            // random chunk size: chunk boundaries must never be
+            // observable
+            let chunk = 1 + rng.below(96);
             for cap in caps {
                 // min_shard 1 forces real sharding even on tiny sets
                 let engine = |threads| SelectEngine {
                     threads,
                     cap,
                     min_shard: 1,
+                    chunk,
                 };
                 let kind = spec.kind;
                 let eval = |raw: &[f32]| kind.eval(&req.net, raw);
@@ -132,7 +169,7 @@ fn prop_parallel_selection_matches_sequential() {
                     .unwrap();
                 let reference =
                     reference_select(&spec, &cands, &req, cap).unwrap();
-                assert_outcomes_bit_identical(
+                assert_winner_matches_reference(
                     &seq,
                     &reference,
                     &format!("{model} seed={seed} cap={cap} vs reference"),
@@ -165,26 +202,16 @@ fn prop_parallel_matches_sequential_on_synthetic_objectives() {
         let probs = random_probs(&spec, 2, &mut rng);
         let cands = Candidates::from_probs(&spec, &probs, 0.15);
         let (lo, po) = (0.5 + rng.f32(), 0.5 + rng.f32());
-        let salt = rng.next_u64();
-        let eval = move |raw: &[f32]| {
-            // SplitMix-style hash of the config bits -> (l, p) in (0, 2):
-            // pure, deterministic, thread-order independent.
-            let mut h = salt;
-            for &v in raw {
-                h = (h ^ v.to_bits() as u64)
-                    .wrapping_mul(0x9E3779B97F4A7C15);
-                h ^= h >> 29;
-            }
-            let l = ((h >> 40) as f32 / (1u64 << 24) as f32) * 2.0;
-            let h2 = h.wrapping_mul(0xBF58476D1CE4E5B9);
-            let p = ((h2 >> 40) as f32 / (1u64 << 24) as f32) * 2.0;
-            (l.max(1e-6), p.max(1e-6))
+        let eval = hash_eval(rng.next_u64());
+        let engine = |threads| SelectEngine {
+            threads,
+            cap: 50_000,
+            min_shard: 1,
+            chunk: 512,
         };
-        let seq = SelectEngine { threads: 1, cap: 50_000, min_shard: 1 }
-            .run(&spec, &cands, lo, po, eval)
-            .unwrap();
+        let seq = engine(1).run(&spec, &cands, lo, po, eval).unwrap();
         for threads in [2, 4, 6] {
-            let par = SelectEngine { threads, cap: 50_000, min_shard: 1 }
+            let par = engine(threads)
                 .run(&spec, &cands, lo, po, eval)
                 .unwrap();
             assert_outcomes_bit_identical(
@@ -193,6 +220,153 @@ fn prop_parallel_matches_sequential_on_synthetic_objectives() {
                 &format!("seed={seed} threads={threads}"),
             );
         }
+    }
+}
+
+/// Chunk-boundary property: random spaces run with chunk sizes that
+/// straddle the candidate count — chunk = count+1 (space one short of a
+/// chunk), count (exact fit), count−1 (one-candidate tail chunk), and a
+/// small multi-chunk value — plus a cap-hit variant, at threads
+/// {1, 2, 8}.  Neither the chunk layout nor the thread count may be
+/// observable in the outcome.
+#[test]
+fn prop_chunk_boundaries_are_unobservable() {
+    let spec = builtin_spec("dnnweaver").unwrap();
+    for seed in 0..CASES {
+        let mut rng = Rng::new(0xC41C ^ seed);
+        let probs = random_probs(&spec, 4, &mut rng);
+        let cands = Candidates::from_probs(&spec, &probs, 0.1);
+        let count = cands.count() as usize;
+        if count < 4 {
+            continue; // nothing to straddle
+        }
+        let req = random_request(&spec, &mut rng);
+        let kind = spec.kind;
+        let eval = |raw: &[f32]| kind.eval(&req.net, raw);
+        let full = reference_select(&spec, &cands, &req, usize::MAX).unwrap();
+        let capped =
+            reference_select(&spec, &cands, &req, count - 1).unwrap();
+        let chunks =
+            [count + 1, count, count - 1, (count / 3).max(1), 1];
+        for chunk in chunks {
+            // (cap, matching full-capped-scan reference)
+            for (cap, reference) in
+                [(usize::MAX, &full), (count - 1, &capped)]
+            {
+                let engine = |threads| SelectEngine {
+                    threads,
+                    cap,
+                    min_shard: 1,
+                    chunk,
+                };
+                let seq = engine(1)
+                    .run(&spec, &cands, req.lo, req.po, eval)
+                    .unwrap();
+                assert_winner_matches_reference(
+                    &seq,
+                    reference,
+                    &format!("seed={seed} chunk={chunk} cap={cap}"),
+                );
+                for threads in [2, 8] {
+                    let par = engine(threads)
+                        .run(&spec, &cands, req.lo, req.po, eval)
+                        .unwrap();
+                    assert_outcomes_bit_identical(
+                        &par,
+                        &seq,
+                        &format!(
+                            "seed={seed} chunk={chunk} cap={cap} \
+                             threads={threads}"
+                        ),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Synthetic hash objectives in (0, 2) — cheap enough for million-scale
+/// debug-mode scans, and unreachable-by-construction objectives keep
+/// the selector out of its terminal state so the scan must go the
+/// distance.
+fn hash_eval(salt: u64) -> impl Fn(&[f32]) -> (f32, f32) + Sync + Copy {
+    move |raw: &[f32]| {
+        let mut h = salt;
+        for &v in raw {
+            h = (h ^ v.to_bits() as u64).wrapping_mul(0x9E3779B97F4A7C15);
+            h ^= h >> 29;
+        }
+        let l = ((h >> 40) as f32 / (1u64 << 24) as f32) * 2.0;
+        let h2 = h.wrapping_mul(0xBF58476D1CE4E5B9);
+        let p = ((h2 >> 40) as f32 / (1u64 << 24) as f32) * 2.0;
+        (l.max(1e-6), p.max(1e-6))
+    }
+}
+
+/// The tentpole regression: a candidate space **past the old 1M
+/// DEFAULT_CAP** is scanned completely — no truncation — with the
+/// streaming engine bitwise equal to the sequential scan.  (Memory
+/// stays O(threads x chunk) by construction; the 16M+ release-scale
+/// variant below and the `cargo bench` select section exercise the same
+/// property at full size.)
+#[test]
+fn streaming_scan_clears_spaces_beyond_the_old_cap() {
+    let spec = builtin_spec("im2col").unwrap();
+    // eight groups keep 4 choices, two keep 3, one keeps 2, one keeps 1:
+    // 4^8 * 3^2 * 2 * 1 = 1_179_648 candidates > the old 1M ceiling.
+    let want = [4usize, 4, 4, 4, 4, 4, 4, 4, 3, 3, 2, 1];
+    let kept: Vec<Vec<usize>> = spec
+        .groups
+        .iter()
+        .zip(want)
+        .map(|(g, w)| (0..g.size().min(w)).collect())
+        .collect();
+    let cands = Candidates { kept };
+    let n = cands.count() as usize;
+    assert_eq!(n, 1_179_648);
+    let eval = hash_eval(0xB16_5CA1E);
+    // objectives no candidate can hit exactly: the terminal state never
+    // fires and the engine must offer every candidate
+    let (lo, po) = (1e-30f32, 1e-30f32);
+    let engine = |threads| SelectEngine {
+        threads,
+        cap: gandse::select::DEFAULT_CAP,
+        min_shard: 1,
+        chunk: gandse::select::DEFAULT_CHUNK,
+    };
+    let seq = engine(1).run(&spec, &cands, lo, po, eval).unwrap();
+    assert_eq!(seq.n_enumerated, n, "sequential scan was truncated");
+    let par = engine(4).run(&spec, &cands, lo, po, eval).unwrap();
+    assert_outcomes_bit_identical(&par, &seq, "threads=4");
+}
+
+/// Release-scale version of the above: the full 4-hot im2col product
+/// (4^12 = 16 777 216 candidates, >16M) scanned exactly, streaming vs
+/// sequential.  Ignored by default (tens of millions of debug-mode
+/// evaluations); run with `cargo test --release -- --ignored`, and note
+/// `cargo bench` asserts the same property on every CI run.
+#[test]
+#[ignore = "release-scale: ~33M evaluations; cargo bench gates this in CI"]
+fn streaming_scan_clears_16m_candidates_exactly() {
+    let spec = builtin_spec("im2col").unwrap();
+    let kept: Vec<Vec<usize>> =
+        spec.groups.iter().map(|g| (0..g.size().min(4)).collect()).collect();
+    let cands = Candidates { kept };
+    let n = cands.count() as usize;
+    assert_eq!(n, 16_777_216);
+    let eval = hash_eval(0x16_000_000);
+    let (lo, po) = (1e-30f32, 1e-30f32);
+    let engine = |threads| SelectEngine {
+        threads,
+        cap: gandse::select::DEFAULT_CAP,
+        min_shard: 1,
+        chunk: gandse::select::DEFAULT_CHUNK,
+    };
+    let seq = engine(1).run(&spec, &cands, lo, po, eval).unwrap();
+    assert_eq!(seq.n_enumerated, n, "sequential scan was truncated");
+    for threads in [2, 8] {
+        let par = engine(threads).run(&spec, &cands, lo, po, eval).unwrap();
+        assert_outcomes_bit_identical(&par, &seq, &format!("threads={threads}"));
     }
 }
 
@@ -218,6 +392,7 @@ fn tiny_candidate_sets_are_threadcount_invariant() {
                     threads,
                     cap: gandse::select::DEFAULT_CAP,
                     min_shard,
+                    chunk: 8,
                 }
                 .run(&spec, &cands, req.lo, req.po, eval)
                 .unwrap();

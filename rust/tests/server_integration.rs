@@ -226,6 +226,17 @@ fn pipelined_concurrent_clients_ordered_replies_and_stats() {
         .map(|(i, c)| (i + 1) as f64 * c.as_f64().unwrap())
         .sum();
     assert_eq!(weighted, total, "occupancy must sum to served items");
+    // per-request candidate-space telemetry: one histogram sample per
+    // served request, scanned <= candidates per request
+    let cand = st.get("candidates").unwrap();
+    assert_eq!(cand.get("count").unwrap().as_f64(), Some(total));
+    let scanned = st.get("scanned").unwrap();
+    assert_eq!(scanned.get("count").unwrap().as_f64(), Some(total));
+    assert!(
+        scanned.get("max").unwrap().as_f64().unwrap()
+            <= cand.get("max").unwrap().as_f64().unwrap(),
+        "a request cannot scan more candidates than its set holds"
+    );
     // queue-wait percentiles are present and ordered
     let q = st.get("queue_us").unwrap();
     let p50 = q.get("p50").unwrap().as_f64().unwrap();
@@ -237,6 +248,71 @@ fn pipelined_concurrent_clients_ordered_replies_and_stats() {
     assert_eq!(srv_items as f64, total);
     assert_eq!(srv_batches as f64, batches);
     handle.shutdown();
+}
+
+/// Regression for the noise-seed bug: with the old per-explorer
+/// sequential noise RNG, a reply depended on which batch worker took the
+/// request and how many requests that worker had served before — the
+/// same request sequence answered by `--workers 1` vs `--workers 4`
+/// produced different bytes.  Noise now derives from a per-request hash,
+/// so the semantic reply payload must be byte-identical across worker
+/// counts (and across repeat runs).
+#[test]
+fn replies_are_byte_identical_across_worker_counts() {
+    /// Strip the per-run batching/timing metadata (`queue_us`,
+    /// `batch_size` — legitimately nondeterministic), then re-serialize:
+    /// the Json serializer emits sorted keys, so equal payloads are
+    /// equal bytes.
+    fn normalized(line: &str) -> String {
+        let Json::Obj(mut map) = Json::parse(line.trim()).unwrap() else {
+            panic!("non-object reply: {line}");
+        };
+        map.remove("queue_us");
+        map.remove("batch_size");
+        Json::Obj(map).to_string()
+    }
+    fn collect(workers: usize) -> Vec<String> {
+        let handle = spawn_cpu_server(
+            workers,
+            ServeConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(1),
+                max_queue: 64,
+            },
+        );
+        let stream = TcpStream::connect(handle.addr).unwrap();
+        let mut w = stream.try_clone().unwrap();
+        let mut r = BufReader::new(stream);
+        let mut out = Vec::new();
+        let mut line = String::new();
+        for i in 0..12usize {
+            // ping-pong: each request goes to whichever worker grabs it,
+            // with whatever per-worker history has accumulated
+            let req = format!(
+                r#"{{"net":[{},32,28,28,3,3],"lo":{},"po":1.5,"id":{i}}}"#,
+                16 + 16 * (i % 3),
+                0.002 * ((i % 5) + 1) as f64,
+            );
+            w.write_all(req.as_bytes()).unwrap();
+            w.write_all(b"\n").unwrap();
+            line.clear();
+            assert!(r.read_line(&mut line).unwrap() > 0, "dropped reply {i}");
+            let v = Json::parse(line.trim()).unwrap();
+            assert_eq!(
+                v.get("ok").and_then(Json::as_bool),
+                Some(true),
+                "reply {i}: {line}"
+            );
+            out.push(normalized(&line));
+        }
+        handle.shutdown();
+        out
+    }
+    let one = collect(1);
+    let four = collect(4);
+    assert_eq!(one, four, "replies depend on the worker count");
+    // and the 4-worker run is reproducible against itself
+    assert_eq!(four, collect(4));
 }
 
 /// The loadtest harness itself against a live server: zero errors, sane

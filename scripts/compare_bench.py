@@ -20,6 +20,12 @@ is a regression:
   35% threshold): fixed-shape kernel timings are stable enough to gate,
   so the GEMM perf trajectory is enforced, not just observed.
 
+Baseline rows (or their metrics) with no counterpart in the fresh file
+count as lost gate coverage: annotated ``MISSING`` and, under
+``--fail-on-regression``, a failure — a renamed shape or changed thread
+list must break the gate loudly instead of silently passing a
+comparison of zero rows.
+
 In both modes a markdown comparison table is appended to
 ``$GITHUB_STEP_SUMMARY`` when that variable is set.
 
@@ -118,15 +124,35 @@ def main() -> int:
         "|---|---|---:|---:|---:|---|",
     ]
     regressions = []
+    missing = []
     new_rows, base_rows = rows_by_key(new), rows_by_key(base)
     for key in sorted(base_rows):
         brow, nrow = base_rows[key], new_rows.get(key)
         if nrow is None:
+            # A baseline row with no fresh counterpart means the gate
+            # lost coverage (renamed shape, changed thread list) — under
+            # --fail-on-regression that must FAIL, not silently pass.
+            missing.append(
+                f"{args.new} has no row for baseline {fmt_key(key)}"
+            )
+            table.append(
+                f"| {fmt_key(key)} | — | — | — | — | **MISSING** |"
+            )
             continue
         for metric in METRICS:
-            if metric not in brow or metric not in nrow:
+            if metric not in brow:
                 continue
             if brow[metric] <= 0:
+                continue
+            if metric not in nrow:
+                missing.append(
+                    f"{args.new} {fmt_key(key)} lacks baseline metric "
+                    f"{metric}"
+                )
+                table.append(
+                    f"| {fmt_key(key)} | {metric} | {brow[metric]:.2f} "
+                    f"| — | — | **MISSING** |"
+                )
                 continue
             ratio = nrow[metric] / brow[metric]
             regressed = ratio < 1.0 - args.threshold
@@ -148,18 +174,23 @@ def main() -> int:
     append_step_summary(table)
 
     level = "error" if args.fail_on_regression else "warning"
+    for m in missing:
+        print(f"::{level} file={args.baseline}::baseline coverage lost: {m}")
+        print("MISSING:", m)
     for r in regressions:
         print(
             f"::{level} file={args.baseline}::throughput regression "
             f">{args.threshold:.0%}: {r}"
         )
         print("REGRESSION:", r)
-    if not regressions:
+    if not regressions and not missing:
         print(
             f"{args.new}: no >{args.threshold:.0%} regressions vs "
             f"{args.baseline}"
         )
-    return 1 if regressions and args.fail_on_regression else 0
+    return (
+        1 if (regressions or missing) and args.fail_on_regression else 0
+    )
 
 
 if __name__ == "__main__":

@@ -48,7 +48,8 @@ def get_stats(f):
     assert resp.get("ok") is True, f"stats probe failed: {resp}"
     stats = resp.get("stats", {})
     for key in ("queue_depth", "items", "batches", "rejected",
-                "batch_occupancy", "queue_us", "workers"):
+                "batch_occupancy", "queue_us", "workers",
+                "candidates", "scanned"):
         assert key in stats, f"stats missing {key!r}: {stats}"
     return stats
 

@@ -107,6 +107,30 @@ def main() -> int:
             r.stdout,
         )
 
+        # a fresh file that lost a baseline-keyed row: warn-only mode
+        # stays green but flags it; the hard gate must fail (coverage
+        # loss, e.g. a renamed shape, must not pass vacuously)
+        partial = write(
+            d,
+            "partial.json",
+            {"rows": [{"shape": "c64_p8", "threads": 2,
+                       "req_per_sec": 1200.0}]},
+        )
+        r = run([partial, base])
+        check("lost row warn-only exits 0", r.returncode == 0, r.stdout)
+        check(
+            "lost row annotates MISSING",
+            "MISSING" in r.stdout and "::warning" in r.stdout,
+            r.stdout,
+        )
+        r = run([partial, base, "--fail-on-regression"])
+        check("lost row fails the hard gate", r.returncode == 1, r.stdout)
+        check(
+            "lost row hard gate annotates ::error::",
+            "::error" in r.stdout and "MISSING" in r.stdout,
+            r.stdout,
+        )
+
         r = run([better, os.path.join(d, "missing.json")])
         check("missing baseline exits 0", r.returncode == 0, r.stdout)
         check(
