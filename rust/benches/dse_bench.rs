@@ -6,8 +6,9 @@
 //!
 //! The gemm, selection-throughput, and cpu-training sections need no
 //! artifacts and always run; they write machine-readable
-//! `BENCH_gemm.json` (GFLOP/s of the blocked GEMM engine on the exact
-//! forward/backward shapes of the G/D networks), `BENCH_select.json`
+//! `BENCH_gemm.json` (GFLOP/s of the blocked GEMM engine, one row per
+//! (shape, threads, microkernel ISA), on the exact forward/backward
+//! shapes of the G/D networks), `BENCH_select.json`
 //! (candidates/sec at 1 vs N threads) and `BENCH_train.json` (train
 //! steps/sec + samples/sec on the pure-Rust cpu backend) — the perf
 //! trajectories CI compares against the committed baselines in
@@ -22,7 +23,7 @@ use gandse::baselines::{sa_search, SaConfig};
 use gandse::dataset;
 use gandse::explorer::{Candidates, DseRequest, Explorer, Selector};
 use gandse::gan::{GanState, TrainConfig, Trainer};
-use gandse::nn::gemm::{gemm, Epilogue};
+use gandse::nn::gemm::{gemm_blocked, Epilogue, Isa};
 use gandse::runtime::{CpuBackend, PjrtBackend};
 use gandse::select::SelectEngine;
 use gandse::space::{builtin_spec, Meta};
@@ -78,12 +79,20 @@ impl Bench {
 /// Algorithm-1 train step at the bench network size (w=64, depth 3,
 /// batch 64): per unique layer, the forward (`X·W`), weight-gradient
 /// (`Xᵀ·dY`, transposed-A packing) and input-gradient (`dY·Wᵀ`,
-/// transposed-B packing) GEMMs, each at 1 and all-cores threads.  Writes
-/// `BENCH_gemm.json` with one `gflops` row per (shape, threads) — the
-/// hard-gated perf trajectory (fixed-shape kernel timing is stable
-/// enough for `compare_bench.py --fail-on-regression`, unlike the noisy
-/// e2e numbers).  Asserts the bitwise thread-parity contract along the
-/// way.  Artifact-free.
+/// transposed-B packing) GEMMs, each on **every microkernel ISA this CPU
+/// supports** (scalar always, plus the detected AVX2/NEON path) at fixed
+/// thread keys {1, 4} plus all-cores.  Writes `BENCH_gemm.json` with one
+/// `gflops` row per (shape, threads, isa) — the hard-gated perf
+/// trajectory (fixed-shape kernel timing is stable enough for
+/// `compare_bench.py --fail-on-regression`, unlike the noisy e2e
+/// numbers; keying by ISA means a baseline is never compared across
+/// kernels).  The scalar rows are benched via an explicit `Isa`
+/// parameter, so the scalar trajectory stays gated even on runs where
+/// the SIMD path is active — and vice versa under
+/// `GANDSE_FORCE_SCALAR=1`.  Asserts the per-ISA bitwise thread-parity
+/// contract along the way, and prints the per-shape SIMD-over-scalar
+/// speedup (the ISSUE-6 acceptance number: ≥2x on the large train-batch
+/// shapes on an AVX2 runner).  Artifact-free.
 fn bench_gemm_microbench(b: &mut Bench) -> anyhow::Result<()> {
     println!("== gemm microkernel (no artifacts needed) ==");
     let (width, depth, batch) = (64usize, 3usize, 64usize);
@@ -144,11 +153,18 @@ fn bench_gemm_microbench(b: &mut Bench) -> anyhow::Result<()> {
     let cores = std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(1);
-    let mut thread_counts = vec![1usize, cores];
+    // fixed thread keys {1, 4} (so the committed baseline rows match on
+    // any runner) plus all-cores for the headline number
+    let mut thread_counts = vec![1usize, 4, cores];
     thread_counts.sort_unstable();
     thread_counts.dedup();
+    // every kernel this CPU can run — scalar first, detected SIMD last —
+    // driven explicitly so all trajectories are measured on every run
+    let isas = Isa::available();
+    let isa_detected = *isas.last().expect("scalar always available");
     let mut rng = Rng::new(11);
     let mut rows: Vec<Json> = Vec::new();
+    let mut isa_speedups: Vec<Json> = Vec::new();
     let mut best_gflops = 0f64;
     for (shape, m, n, k, a_trans, b_trans) in shapes {
         let a: Vec<f32> = (0..m * k).map(|_| rng.normal() * 0.1).collect();
@@ -157,53 +173,79 @@ fn bench_gemm_microbench(b: &mut Bench) -> anyhow::Result<()> {
         let mut c = vec![0f32; m * n];
         // enough inner reps that one timed call does ~50 MFLOP
         let reps = (25_000_000 / (m * n * k).max(1)).clamp(1, 4000);
-        let mut parity: Option<Vec<f32>> = None;
-        for &threads in &thread_counts {
-            b.run(
-                &format!("gemm/{shape} threads={threads}"),
-                5,
-                reps,
-                || {
-                    for _ in 0..reps {
-                        gemm(
-                            m,
-                            n,
-                            k,
-                            &a,
-                            a_trans,
-                            &bmat,
-                            b_trans,
-                            &mut c,
-                            false,
-                            Epilogue::None,
-                            threads,
-                        );
-                        std::hint::black_box(&mut c);
-                    }
-                },
-            );
-            let secs = b.rows.last().expect("bench recorded a row").1;
-            let gflops = 2.0 * (m * n * k * reps) as f64 / secs / 1e9;
-            best_gflops = best_gflops.max(gflops);
-            if let Some(p) = &parity {
-                // the engine's contract: bitwise identical at any
-                // thread count
-                assert_eq!(
-                    p, &c,
-                    "gemm {shape} diverged at {threads} threads"
+        let mut scalar_best = 0f64;
+        for &isa in isas {
+            let mut parity: Option<Vec<f32>> = None;
+            let mut isa_best = 0f64;
+            for &threads in &thread_counts {
+                b.run(
+                    &format!(
+                        "gemm/{shape} {} threads={threads}",
+                        isa.name()
+                    ),
+                    5,
+                    reps,
+                    || {
+                        for _ in 0..reps {
+                            gemm_blocked(
+                                m,
+                                n,
+                                k,
+                                &a,
+                                a_trans,
+                                &bmat,
+                                b_trans,
+                                &mut c,
+                                false,
+                                Epilogue::None,
+                                threads,
+                                isa,
+                            );
+                            std::hint::black_box(&mut c);
+                        }
+                    },
                 );
-            } else {
-                parity = Some(c.clone());
+                let secs = b.rows.last().expect("bench recorded a row").1;
+                let gflops = 2.0 * (m * n * k * reps) as f64 / secs / 1e9;
+                isa_best = isa_best.max(gflops);
+                best_gflops = best_gflops.max(gflops);
+                if let Some(p) = &parity {
+                    // the engine's contract: bitwise identical at any
+                    // thread count *within one ISA path*
+                    assert_eq!(
+                        p,
+                        &c,
+                        "gemm {shape} [{}] diverged at {threads} threads",
+                        isa.name()
+                    );
+                } else {
+                    parity = Some(c.clone());
+                }
+                rows.push(Json::obj(vec![
+                    ("shape", Json::str(&shape)),
+                    ("isa", Json::str(isa.name())),
+                    ("m", Json::Num(m as f64)),
+                    ("k", Json::Num(k as f64)),
+                    ("n", Json::Num(n as f64)),
+                    ("threads", Json::Num(threads as f64)),
+                    ("secs", Json::Num(secs)),
+                    ("gflops", Json::Num(gflops)),
+                ]));
             }
-            rows.push(Json::obj(vec![
-                ("shape", Json::str(&shape)),
-                ("m", Json::Num(m as f64)),
-                ("k", Json::Num(k as f64)),
-                ("n", Json::Num(n as f64)),
-                ("threads", Json::Num(threads as f64)),
-                ("secs", Json::Num(secs)),
-                ("gflops", Json::Num(gflops)),
-            ]));
+            if isa == Isa::Scalar {
+                scalar_best = isa_best;
+            } else if scalar_best > 0.0 {
+                let speedup = isa_best / scalar_best;
+                println!(
+                    "gemm/{shape}: {} {speedup:.2}x over scalar",
+                    isa.name()
+                );
+                isa_speedups.push(Json::obj(vec![
+                    ("shape", Json::str(&shape)),
+                    ("isa", Json::str(isa.name())),
+                    ("speedup_vs_scalar", Json::Num(speedup)),
+                ]));
+            }
         }
     }
     let doc = Json::obj(vec![
@@ -213,13 +255,16 @@ fn bench_gemm_microbench(b: &mut Bench) -> anyhow::Result<()> {
         ("depth", Json::Num(depth as f64)),
         ("batch", Json::Num(batch as f64)),
         ("available_parallelism", Json::Num(cores as f64)),
+        ("isa_detected", Json::str(isa_detected.name())),
         ("rows", Json::Arr(rows)),
+        ("isa_speedups", Json::Arr(isa_speedups)),
         ("best_gflops", Json::Num(best_gflops)),
     ]);
     std::fs::write("BENCH_gemm.json", format!("{doc}\n"))?;
     println!(
-        "wrote BENCH_gemm.json (best {best_gflops:.2} GFLOP/s on {cores} \
-         cores)\n"
+        "wrote BENCH_gemm.json (best {best_gflops:.2} GFLOP/s, detected \
+         isa {}, {cores} cores)\n",
+        isa_detected.name()
     );
     Ok(())
 }

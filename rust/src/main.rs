@@ -23,6 +23,7 @@ use gandse::explorer::{DseRequest, Explorer};
 use gandse::gan::{history_csv, GanState, TrainConfig, Trainer};
 use gandse::harness;
 use gandse::loadtest::{self, RoundSpec};
+use gandse::nn::gemm::Isa;
 use gandse::parser;
 use gandse::rtl;
 use gandse::runtime::backend::{self, Backend, BackendKind};
@@ -79,6 +80,10 @@ COMMON
    0 = uncapped; the streaming engine's memory is O(threads x chunk)
    regardless.  --chunk: candidates per streamed chunk, default 65536,
    0 = default — a tuning knob, results are identical at any value)
+  (env GANDSE_FORCE_SCALAR=1: pin the GEMM engine to its portable scalar
+   microkernel instead of the auto-detected AVX2/NEON one — results are
+   bitwise deterministic per ISA path, so use this to reproduce
+   scalar-path numbers on SIMD-capable hardware)
 ";
 
 fn main() {
@@ -122,6 +127,10 @@ fn make_backend(
 ) -> Result<(BackendKind, Box<dyn Backend>)> {
     let kind = BackendKind::from_name(&args.get_or("backend", "cpu"))?;
     let threads = args.get_usize("threads", 0)?;
+    // One line of triage context: which GEMM microkernel this process
+    // selected (results are bitwise deterministic per ISA path; set
+    // GANDSE_FORCE_SCALAR=1 to pin the portable scalar kernel).
+    eprintln!("[gandse] gemm microkernel: {}", Isa::active().name());
     Ok((kind, backend::create(kind, dir, threads)?))
 }
 
@@ -491,6 +500,7 @@ fn make_worker_explorers(
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let model = args.get_or("model", "dnnweaver");
+    eprintln!("[gandse] gemm microkernel: {}", Isa::active().name());
     let ckpt = args.get("ckpt").context("--ckpt <file> is required")?;
     let state = GanState::load(Path::new(ckpt))?;
     let workers = args.get_usize("workers", 2)?.max(1);

@@ -13,12 +13,15 @@
 //! `tests/cpu_backend.rs`).
 //!
 //! Every matmul — forward, `dX = dY·Wᵀ`, `dW = Xᵀ·dY` — runs on the
-//! blocked, register-tiled, multithreaded engine in [`gemm`], with the
-//! bias-add (+ ReLU for hidden layers) fused into the GEMM epilogue and
-//! the transposed backward operands absorbed by panel packing.  Results
-//! are bitwise identical at any `threads` value (see the [`gemm`] module
-//! docs for the contract); cross-batch reductions outside the GEMMs (the
-//! bias gradients) run in fixed row order for the same reason.
+//! blocked, register-tiled, SIMD-microkerneled, multithreaded engine in
+//! [`gemm`], with the bias-add (+ ReLU for hidden layers) fused into the
+//! GEMM epilogue and the transposed backward operands absorbed by panel
+//! packing.  Results are bitwise identical at any `threads` value
+//! **within one microkernel ISA path** (AVX2/NEON/scalar, selected once
+//! per process; `GANDSE_FORCE_SCALAR=1` pins the scalar path — see the
+//! [`gemm`] module docs for the full contract); cross-batch reductions
+//! outside the GEMMs (the bias gradients) run in fixed row order for the
+//! same reason.
 
 pub mod gemm;
 

@@ -29,10 +29,16 @@
 //! is computed by exactly one worker with a fixed reduction order, and
 //! every cross-row reduction outside the GEMMs (losses, bias gradients)
 //! runs sequentially in row order — so one train step is **bitwise
-//! deterministic at any thread count**, not merely reproducible at a
-//! fixed one.  CI's determinism matrix re-runs the test suite at
-//! `GANDSE_THREADS=1` and `=4` to hold that line; correctness is anchored
-//! by finite-difference gradient checks in `tests/cpu_backend.rs`.
+//! deterministic at any thread count within one GEMM microkernel ISA
+//! path** (AVX2/NEON/scalar, runtime-detected once per process), not
+//! merely reproducible at a fixed thread count.  Results *are*
+//! ISA-dependent — the SIMD kernels fuse multiply-adds — so fixed-seed
+//! goldens are regenerated in-process, never committed as floats, and
+//! `GANDSE_FORCE_SCALAR=1` pins the portable scalar path bit-for-bit.
+//! CI's determinism matrix re-runs the test suite across
+//! `GANDSE_THREADS={1,4}` x `GANDSE_FORCE_SCALAR={0,1}` to hold that
+//! line; correctness is anchored by finite-difference gradient checks in
+//! `tests/cpu_backend.rs`.
 
 use anyhow::{bail, Result};
 

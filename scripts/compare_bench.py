@@ -4,12 +4,16 @@
     python3 scripts/compare_bench.py NEW BASELINE \
         [--fail-on-regression] [--threshold 0.20]
 
-Rows are keyed by ``(shape, threads)`` — ``shape`` is optional (the
-select/train benches emit one row per thread count; BENCH_gemm.json emits
-one per GEMM shape per thread count; BENCH_serve.json one per
-(clients, pipeline-depth) load round, shape ``c<N>_p<D>``).  A
-throughput metric more than ``--threshold`` below the committed baseline
-is a regression:
+Rows are keyed by ``(shape, threads, isa)`` — ``shape`` and ``isa`` are
+optional and default to ``""`` (the select/train benches emit one row
+per thread count; BENCH_gemm.json emits one per GEMM shape per thread
+count per microkernel ISA path, ``isa`` in {scalar, avx2, neon};
+BENCH_serve.json one per (clients, pipeline-depth) load round, shape
+``c<N>_p<D>``).  Keying by ISA means a committed scalar baseline is
+never compared against an AVX2/NEON run or vice versa — per-kernel
+trajectories are gated independently on the same runner.  A throughput
+metric more than ``--threshold`` below the committed baseline is a
+regression:
 
 * default (warn-only): prints a GitHub Actions ``::warning::`` annotation
   and REGRESSION lines but exits 0 — the e2e select/train numbers on
@@ -51,18 +55,23 @@ METRICS = (
 
 
 def rows_by_key(doc):
-    """Key each row by (shape, threads); shape defaults to ''."""
+    """Key each row by (shape, threads, isa); shape/isa default to ''."""
     return {
-        (str(r.get("shape", "")), int(r["threads"])): r
+        (
+            str(r.get("shape", "")),
+            int(r["threads"]),
+            str(r.get("isa", "")),
+        ): r
         for r in doc.get("rows", [])
         if "threads" in r
     }
 
 
 def fmt_key(key):
-    shape, threads = key
+    shape, threads, isa = key
     prefix = f"{shape} " if shape else ""
-    return f"{prefix}threads={threads}"
+    suffix = f" isa={isa}" if isa else ""
+    return f"{prefix}threads={threads}{suffix}"
 
 
 def append_step_summary(lines):

@@ -12,6 +12,9 @@ CI jobs rely on:
 * malformed or row-less fresh file -> exit 1 (the bench itself broke)
 * shape-keyed rows (gemm/serve schema) including the serve-load
   ``req_per_sec`` metric
+* mixed-ISA gemm rows: (shape, threads, isa) keying keeps scalar and
+  avx2 trajectories separate, and a fresh file that lost one ISA's rows
+  fails the hard gate (coverage loss)
 * $GITHUB_STEP_SUMMARY markdown table append
 
 Usage: python3 scripts/test_compare_bench.py   (exits non-zero on any
@@ -128,6 +131,52 @@ def main() -> int:
         check(
             "lost row hard gate annotates ::error::",
             "::error" in r.stdout and "MISSING" in r.stdout,
+            r.stdout,
+        )
+
+        # mixed-ISA gemm schema: the same (shape, threads) exists for
+        # both the scalar and the avx2 kernel, keyed separately.  A
+        # scalar-only regression must be attributed to the scalar row —
+        # the improving avx2 row must NOT mask it.
+        def gemm_rows(scalar_gf, avx2_gf):
+            return {
+                "rows": [
+                    {"shape": "fwd 64x64x64", "threads": 4,
+                     "isa": "scalar", "gflops": scalar_gf},
+                    {"shape": "fwd 64x64x64", "threads": 4,
+                     "isa": "avx2", "gflops": avx2_gf},
+                ]
+            }
+
+        isa_base = write(d, "isa_base.json", gemm_rows(2.0, 10.0))
+        isa_mixed = write(d, "isa_mixed.json", gemm_rows(0.5, 20.0))
+        r = run([isa_mixed, isa_base, "--fail-on-regression"])
+        check(
+            "scalar-row regression fails despite avx2 improvement",
+            r.returncode == 1,
+            r.stdout,
+        )
+        check(
+            "regression is attributed to the scalar-keyed row",
+            "isa=scalar" in r.stdout
+            and "REGRESSION" in r.stdout
+            and "isa=avx2 gflops" in r.stdout
+            and "ok: " in r.stdout,
+            r.stdout,
+        )
+        # a fresh file that only ran one ISA (e.g. the runner lost AVX2,
+        # or the bench stopped emitting scalar rows) loses gate coverage
+        isa_partial = write(
+            d,
+            "isa_partial.json",
+            {"rows": [{"shape": "fwd 64x64x64", "threads": 4,
+                       "isa": "avx2", "gflops": 20.0}]},
+        )
+        r = run([isa_partial, isa_base, "--fail-on-regression"])
+        check(
+            "lost ISA rows fail the hard gate as MISSING",
+            r.returncode == 1 and "MISSING" in r.stdout
+            and "isa=scalar" in r.stdout,
             r.stdout,
         )
 
