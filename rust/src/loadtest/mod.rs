@@ -12,18 +12,77 @@
 //! loadtest` exits non-zero when a round observes any, which is what
 //! makes CI's `serve-load` job a correctness hard gate.
 //!
+//! Request **keys** — the `(net, lo, po)` triple the server caches on —
+//! come from a pluggable popularity distribution ([`KeyDist`]): uniform
+//! over a large universe (cold baseline), zipf (hot-head traffic, the
+//! response cache's target workload), or a single fixed key (pure-hit
+//! ceiling).  All modes share the same generate/verify path, so the
+//! zero-error gate covers mixed cache/worker replies too.
+//!
 //! Rounds report client-observed latency percentiles (exact, from the
 //! full sample set — not bucketed) and throughput; [`json_row`] emits
 //! them in the row schema `scripts/compare_bench.py` keys: rows by
-//! `(shape, threads)`, throughput metric `req_per_sec`.
+//! `(shape, threads)`, throughput metric `req_per_sec` — zipf/fixed
+//! rounds get a `_zipf<s>`/`_fixed` shape suffix so they land as their
+//! own baseline rows.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::util::json::Json;
+use crate::util::rng::{mix, Rng};
+
+/// Default key universe per round: large enough that a uniform draw is
+/// almost always a compulsory cache miss (an honest cold baseline), yet
+/// bounded so the zipf head still repeats within a short CI round.
+pub const DEFAULT_UNIVERSE: usize = 65536;
+
+/// Keys live in `[0, MAX_KEY)`; [`lo_for_key`] maps them injectively
+/// (after f32 + wire round-trip) onto the `lo` objective.
+pub const MAX_KEY: u64 = 1 << 20;
+
+/// How a client picks the request key (= the server's cache key).
+///
+/// The serving layer caches on the exact bits of `(net, lo, po)`, so
+/// key popularity is *the* variable that decides whether the response
+/// cache matters: uniform over a large universe is all compulsory
+/// misses (a cold baseline), zipf concentrates traffic on a hot head
+/// the way real request mixes do, and fixed is the pure-hit ceiling.
+/// All three share one generator/verify path — only `next_key` differs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum KeyDist {
+    /// Every key equally likely — worst case for the cache.
+    Uniform,
+    /// Rank-`r` key drawn with probability ∝ `r^-s` (s = the shape
+    /// parameter; web/CDN traces are typically s ≈ 0.9–1.4).
+    Zipf(f64),
+    /// One single key — upper bound on cache benefit.
+    Fixed,
+}
+
+impl KeyDist {
+    /// Suffix appended to the `BENCH_serve.json` row shape.  Uniform is
+    /// empty so pre-cache baseline rows keep their historical keys.
+    pub fn shape_suffix(&self) -> String {
+        match self {
+            KeyDist::Uniform => String::new(),
+            KeyDist::Zipf(s) => format!("_zipf{s}"),
+            KeyDist::Fixed => "_fixed".to_string(),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            KeyDist::Uniform => "uniform".to_string(),
+            KeyDist::Zipf(s) => format!("zipf({s})"),
+            KeyDist::Fixed => "fixed".to_string(),
+        }
+    }
+}
 
 /// One (clients, pipeline-depth) load round.
 #[derive(Debug, Clone, Copy)]
@@ -33,6 +92,30 @@ pub struct RoundSpec {
     pub pipeline: usize,
     /// Requests per client; the round issues `clients * reqs` total.
     pub reqs: usize,
+    /// Key-popularity distribution (see [`KeyDist`]).
+    pub dist: KeyDist,
+    /// Number of distinct keys the round draws from.
+    pub universe: usize,
+    /// Offset added to every key (mod [`MAX_KEY`]).  The CLI gives each
+    /// round a disjoint base so an earlier round's cache fills cannot
+    /// inflate a later round's hit rate — uniform-vs-zipf comparisons
+    /// stay apples-to-apples within one invocation.
+    pub key_base: u64,
+}
+
+impl RoundSpec {
+    /// Uniform keys over the default universe (the historical behavior
+    /// modulo universe size).
+    pub fn new(clients: usize, pipeline: usize, reqs: usize) -> RoundSpec {
+        RoundSpec {
+            clients,
+            pipeline,
+            reqs,
+            dist: KeyDist::Uniform,
+            universe: DEFAULT_UNIVERSE,
+            key_base: 0,
+        }
+    }
 }
 
 /// Client-observed outcome of one round.
@@ -56,9 +139,17 @@ pub struct RoundStats {
 /// failures (e.g. the listener is gone entirely) map to `Err`.
 pub fn run_round(addr: SocketAddr, spec: RoundSpec) -> Result<RoundStats> {
     let t0 = Instant::now();
+    // the zipf CDF is O(universe) to build — compute once, share
+    let cdf = match spec.dist {
+        KeyDist::Zipf(s) => Some(Arc::new(zipf_cdf(s, spec.universe))),
+        _ => None,
+    };
     let mut handles = Vec::with_capacity(spec.clients);
     for c in 0..spec.clients {
-        handles.push(std::thread::spawn(move || client_loop(addr, c, spec)));
+        let cdf = cdf.clone();
+        handles.push(std::thread::spawn(move || {
+            client_loop(addr, c, spec, cdf)
+        }));
     }
     let mut lats: Vec<u64> = Vec::with_capacity(spec.clients * spec.reqs);
     let mut errors = 0u64;
@@ -101,6 +192,7 @@ fn client_loop(
     addr: SocketAddr,
     client: usize,
     spec: RoundSpec,
+    cdf: Option<Arc<Vec<f64>>>,
 ) -> Result<(Vec<u64>, u64)> {
     let stream = TcpStream::connect(addr).context("connect")?;
     stream.set_nodelay(true)?;
@@ -109,6 +201,7 @@ fn client_loop(
     stream.set_read_timeout(Some(Duration::from_secs(30)))?;
     let mut w = stream.try_clone()?;
     let mut r = BufReader::new(stream);
+    let mut keys = KeySampler::new(&spec, client, cdf);
     let n = spec.reqs;
     let mut t_send: Vec<Option<Instant>> = vec![None; n];
     let mut lats = Vec::with_capacity(n);
@@ -117,7 +210,7 @@ fn client_loop(
     let window = spec.pipeline.max(1).min(n);
     for _ in 0..window {
         t_send[sent] = Some(Instant::now());
-        write_req(&mut w, client, sent)?;
+        write_req(&mut w, keys.next_key(), sent)?;
         sent += 1;
     }
     let mut line = String::new();
@@ -147,7 +240,7 @@ fn client_loop(
             // arrive, so the read loop's end-of-stream accounting above
             // covers it exactly once (counting both would let errors
             // exceed `total` and push err_rate past 1.0)
-            let _ = write_req(&mut w, client, sent);
+            let _ = write_req(&mut w, keys.next_key(), sent);
             sent += 1;
         }
     }
@@ -174,12 +267,78 @@ pub fn probe_workers(addr: SocketAddr) -> Result<usize> {
         .context("stats reply has no workers field")
 }
 
-fn write_req(w: &mut TcpStream, client: usize, i: usize) -> Result<()> {
-    // vary the objective so successive requests are not identical work;
-    // one write_all per request — with TCP_NODELAY a separate newline
-    // write would cost an extra syscall (and possibly packet) inside
-    // the very round trip this tool measures
-    let lo = 1e-3 * (((i + client) % 40) + 1) as f64;
+/// Unnormalized zipf CDF over ranks `1..=universe`: `cdf[k] = Σ_{r≤k+1}
+/// r^-s`.  Sampling inverts it by binary search against a uniform draw
+/// scaled to the total mass — no normalization pass needed.
+fn zipf_cdf(s: f64, universe: usize) -> Vec<f64> {
+    assert!(universe > 0);
+    let mut acc = 0.0;
+    (1..=universe)
+        .map(|r| {
+            acc += (r as f64).powf(-s);
+            acc
+        })
+        .collect()
+}
+
+/// Per-client key stream: all three [`KeyDist`] modes behind one
+/// `next_key`, so the pipelining/verification path is shared verbatim.
+struct KeySampler {
+    dist: KeyDist,
+    universe: usize,
+    key_base: u64,
+    cdf: Option<Arc<Vec<f64>>>,
+    rng: Rng,
+}
+
+impl KeySampler {
+    fn new(
+        spec: &RoundSpec,
+        client: usize,
+        cdf: Option<Arc<Vec<f64>>>,
+    ) -> KeySampler {
+        KeySampler {
+            dist: spec.dist,
+            universe: spec.universe.max(1),
+            key_base: spec.key_base,
+            cdf,
+            // distinct stream per (round, client); mix decorrelates
+            // adjacent client indices
+            rng: Rng::new(mix(spec.key_base
+                ^ (client as u64).wrapping_mul(0x9E3779B97F4A7C15)
+                ^ 0x10AD7E57)),
+        }
+    }
+
+    fn next_key(&mut self) -> u64 {
+        let raw = match self.dist {
+            KeyDist::Fixed => 0,
+            KeyDist::Uniform => self.rng.below(self.universe) as u64,
+            KeyDist::Zipf(_) => {
+                let cdf = self.cdf.as_ref().expect("zipf needs its CDF");
+                let u = self.rng.f64() * cdf.last().copied().unwrap_or(1.0);
+                // rank of the first cumulative mass ≥ u (rank 1 = key 0)
+                cdf.partition_point(|&c| c < u) as u64
+            }
+        };
+        (self.key_base + raw) % MAX_KEY
+    }
+}
+
+/// Map a key to the `lo` objective it rides in on.  Adjacent keys are
+/// ~8 f32 ulps apart near 1e-3, so every key in `[0, MAX_KEY)` is a
+/// **distinct** f32 — and therefore a distinct server cache key — even
+/// after the JSON wire round-trip; `net` and `po` stay constant.
+pub fn lo_for_key(key: u64) -> f64 {
+    1e-3 * (1.0 + (key % MAX_KEY) as f64 / MAX_KEY as f64)
+}
+
+fn write_req(w: &mut TcpStream, key: u64, i: usize) -> Result<()> {
+    // the key varies the objective (so repeated keys are identical work
+    // and distinct keys are not); one write_all per request — with
+    // TCP_NODELAY a separate newline write would cost an extra syscall
+    // (and possibly packet) inside the very round trip this measures
+    let lo = lo_for_key(key);
     let req = format!(
         r#"{{"net":[32,32,32,32,3,3],"lo":{lo},"po":2.0,"id":{i}}}"#
     ) + "\n";
@@ -194,10 +353,16 @@ pub fn json_row(s: &RoundStats, server_workers: usize) -> Json {
     Json::obj(vec![
         (
             "shape",
-            Json::str(&format!("c{}_p{}", s.spec.clients, s.spec.pipeline)),
+            Json::str(&format!(
+                "c{}_p{}{}",
+                s.spec.clients,
+                s.spec.pipeline,
+                s.spec.dist.shape_suffix()
+            )),
         ),
         ("clients", Json::Num(s.spec.clients as f64)),
         ("pipeline", Json::Num(s.spec.pipeline as f64)),
+        ("dist", Json::str(&s.spec.dist.label())),
         ("threads", Json::Num(server_workers as f64)),
         ("reqs", Json::Num(s.total as f64)),
         ("req_per_sec", Json::Num(s.req_per_sec)),
@@ -211,16 +376,17 @@ pub fn json_row(s: &RoundStats, server_workers: usize) -> Json {
 }
 
 pub fn markdown_header() -> String {
-    "| clients | pipeline | reqs | req/s | p50 us | p95 us | p99 us \
-     | errors |\n|---:|---:|---:|---:|---:|---:|---:|---:|"
+    "| clients | pipeline | dist | reqs | req/s | p50 us | p95 us \
+     | p99 us | errors |\n|---:|---:|:---|---:|---:|---:|---:|---:|---:|"
         .to_string()
 }
 
 pub fn markdown_row(s: &RoundStats) -> String {
     format!(
-        "| {} | {} | {} | {:.0} | {} | {} | {} | {} |",
+        "| {} | {} | {} | {} | {:.0} | {} | {} | {} | {} |",
         s.spec.clients,
         s.spec.pipeline,
+        s.spec.dist.label(),
         s.total,
         s.req_per_sec,
         s.p50_us,
@@ -236,7 +402,7 @@ mod tests {
 
     fn stats() -> RoundStats {
         RoundStats {
-            spec: RoundSpec { clients: 64, pipeline: 8, reqs: 32 },
+            spec: RoundSpec::new(64, 8, 32),
             total: 2048,
             errors: 0,
             wall_secs: 2.0,
@@ -274,5 +440,118 @@ mod tests {
         let sep = lines.next().unwrap();
         assert_eq!(cols(head), cols(sep));
         assert_eq!(cols(head), cols(&row));
+    }
+
+    #[test]
+    fn zipf_and_fixed_rows_get_their_own_shape_keys() {
+        let mut s = stats();
+        s.spec.dist = KeyDist::Zipf(1.4);
+        let v = json_row(&s, 2);
+        // the shape string must embed the *exact* CLI-provided shape
+        // value (parsed as f64 straight from the flag string — never
+        // widened from f32, which would print 1.399999976158142)
+        assert_eq!(v.get("shape").unwrap().as_str(), Some("c64_p8_zipf1.4"));
+        assert_eq!(v.get("dist").unwrap().as_str(), Some("zipf(1.4)"));
+        s.spec.dist = KeyDist::Fixed;
+        let v = json_row(&s, 2);
+        assert_eq!(v.get("shape").unwrap().as_str(), Some("c64_p8_fixed"));
+    }
+
+    fn sampler(spec: &RoundSpec, client: usize) -> KeySampler {
+        let cdf = match spec.dist {
+            KeyDist::Zipf(s) => {
+                Some(Arc::new(zipf_cdf(s, spec.universe)))
+            }
+            _ => None,
+        };
+        KeySampler::new(spec, client, cdf)
+    }
+
+    #[test]
+    fn zipf_sampler_matches_the_power_law() {
+        let s = 1.2f64;
+        let universe = 1024usize;
+        let mut spec = RoundSpec::new(1, 1, 0);
+        spec.dist = KeyDist::Zipf(s);
+        spec.universe = universe;
+        let mut keys = sampler(&spec, 0);
+        let draws = 200_000usize;
+        let mut counts = vec![0u64; universe];
+        for _ in 0..draws {
+            let k = keys.next_key() as usize;
+            assert!(k < universe, "key {k} outside the universe");
+            counts[k] += 1;
+        }
+        // rank-1 : rank-2 frequency ratio ≈ 2^s (within sampling noise)
+        let ratio = counts[0] as f64 / counts[1].max(1) as f64;
+        let want = 2f64.powf(s);
+        assert!(
+            (ratio / want - 1.0).abs() < 0.25,
+            "rank1/rank2 = {ratio:.3}, want ≈ {want:.3}"
+        );
+        // the head dominates: top 16 of 1024 keys draw the majority
+        let head: u64 = counts[..16].iter().sum();
+        assert!(
+            head as f64 > 0.5 * draws as f64,
+            "head mass {head} of {draws}"
+        );
+        // frequencies decay with rank (spot-check widely spaced ranks)
+        assert!(counts[0] > counts[15]);
+        assert!(counts[15] > counts[255]);
+    }
+
+    #[test]
+    fn uniform_sampler_stays_in_range_and_spreads() {
+        let mut spec = RoundSpec::new(1, 1, 0);
+        spec.universe = 64;
+        spec.key_base = 7;
+        let mut keys = sampler(&spec, 3);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..4096 {
+            let k = keys.next_key();
+            assert!((7..7 + 64).contains(&k), "key {k} outside base+universe");
+            seen.insert(k);
+        }
+        // 4096 draws over 64 keys: missing many would be a broken rng
+        assert!(seen.len() > 56, "only {} distinct keys", seen.len());
+    }
+
+    #[test]
+    fn fixed_sampler_repeats_one_key_and_clients_differ_elsewhere() {
+        let mut spec = RoundSpec::new(2, 1, 0);
+        spec.dist = KeyDist::Fixed;
+        spec.key_base = 100;
+        let mut a = sampler(&spec, 0);
+        for _ in 0..32 {
+            assert_eq!(a.next_key(), 100);
+        }
+        // uniform clients with different ids draw different streams
+        let mut spec_u = RoundSpec::new(2, 1, 0);
+        spec_u.universe = DEFAULT_UNIVERSE;
+        let s0: Vec<u64> =
+            (0..32).map(|_| sampler(&spec_u, 0).next_key()).collect();
+        let mut c0 = sampler(&spec_u, 0);
+        let mut c1 = sampler(&spec_u, 1);
+        let a: Vec<u64> = (0..32).map(|_| c0.next_key()).collect();
+        let b: Vec<u64> = (0..32).map(|_| c1.next_key()).collect();
+        assert_ne!(a, b, "client streams must be decorrelated");
+        // and deterministic per (round, client) — same seed, same keys
+        assert_eq!(s0[0], a[0]);
+    }
+
+    #[test]
+    fn lo_for_key_is_injective_through_f32() {
+        // adjacent keys and wide key spans all map to distinct f32 `lo`
+        // values — the property that makes loadtest keys distinct
+        // server cache keys after the JSON wire round-trip
+        let probes: Vec<u64> =
+            vec![0, 1, 2, 39, 40, 65535, 65536, MAX_KEY - 2, MAX_KEY - 1];
+        let mut bits: Vec<u32> = probes
+            .iter()
+            .map(|&k| (lo_for_key(k) as f32).to_bits())
+            .collect();
+        bits.sort_unstable();
+        bits.dedup();
+        assert_eq!(bits.len(), probes.len(), "lo_for_key collided in f32");
     }
 }

@@ -22,7 +22,7 @@ use gandse::dataset::{self, Dataset};
 use gandse::explorer::{DseRequest, Explorer};
 use gandse::gan::{history_csv, GanState, TrainConfig, Trainer};
 use gandse::harness;
-use gandse::loadtest::{self, RoundSpec};
+use gandse::loadtest::{self, KeyDist, RoundSpec, DEFAULT_UNIVERSE, MAX_KEY};
 use gandse::nn::gemm::Isa;
 use gandse::parser;
 use gandse::rtl;
@@ -52,12 +52,18 @@ COMMANDS
             (held-out satisfaction / improvement-ratio / difficulty report)
   serve     --model M --ckpt c.ckpt [--addr 127.0.0.1:7878]
             [--workers 2] [--max-wait-ms 5] [--max-batch B]
-            [--max-queue 1024] [--threads N]
+            [--max-queue 1024] [--threads N] [--cache-entries 4096]
+            [--cache-shards 8] [--cache-bytes 16777216]
+            (--cache-entries 0 disables the response cache + dedup)
   loadtest  --model M [--ckpt c.ckpt] [--addr host:port]
             [--clients 4,16,64] [--pipeline 1,8] [--reqs 64]
             [--workers 2] [--max-queue 1024] [--out BENCH_serve.json]
+            [--zipf S] [--fixed-key] [--key-universe 65536]
             (without --addr, spawns an in-process cpu-backend server;
-             exits non-zero on ANY dropped/out-of-order/error reply)
+             exits non-zero on ANY dropped/out-of-order/error reply.
+             --zipf S runs every (clients, pipeline) round twice —
+             uniform keys, then zipf(S) keys — and reports the cache's
+             throughput multiplier; --fixed-key hammers a single key)
   bench     --exp <table5|fig5|fig67|fig89|fig1011|all> --model M
             [--train N] [--test N] [--epochs E] [--out-dir results/]
             [--threads N]
@@ -507,28 +513,47 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let (explorers, meta) =
         make_worker_explorers(args, &model, Some(state.g), workers)?;
     let addr = args.get_or("addr", "127.0.0.1:7878");
-    let cfg = ServeConfig {
-        max_batch: args.get_usize("max-batch", meta.infer_batch)?,
-        max_wait: Duration::from_millis(args.get_u64("max-wait-ms", 5)?),
-        max_queue: args.get_usize("max-queue", 1024)?,
-    };
+    let cfg = serve_config_from_args(args, meta.infer_batch, 5)?;
     args.reject_unknown()?;
     let handle = gandse::server::serve(&addr, explorers, cfg)?;
     println!(
         "gandse dse server listening on {} ({workers} workers, \
-         max_batch {}, max_queue {})",
-        handle.addr, cfg.max_batch, cfg.max_queue
+         max_batch {}, max_queue {}, cache {} entries)",
+        handle.addr, cfg.max_batch, cfg.max_queue, cfg.cache_entries
     );
     loop {
         std::thread::sleep(Duration::from_secs(60));
         let (batches, items) = handle.stats();
+        let (hits, misses, coalesced, _) = handle.cache_stats();
         println!(
             "served {items} requests in {batches} batches \
-             (queue depth {}, rejected {})",
+             (queue depth {}, rejected {}, cache {hits} hits / \
+             {misses} misses / {coalesced} coalesced)",
             handle.queue_depth(),
             handle.rejected()
         );
     }
+}
+
+/// The serving-layer knobs shared by `serve` and the spawned `loadtest`
+/// server (defaults from [`ServeConfig::default`] except where the two
+/// commands differ, e.g. `max-wait-ms`).
+fn serve_config_from_args(
+    args: &Args,
+    max_batch_default: usize,
+    max_wait_ms_default: u64,
+) -> Result<ServeConfig> {
+    let d = ServeConfig::default();
+    Ok(ServeConfig {
+        max_batch: args.get_usize("max-batch", max_batch_default)?,
+        max_wait: Duration::from_millis(
+            args.get_u64("max-wait-ms", max_wait_ms_default)?,
+        ),
+        max_queue: args.get_usize("max-queue", d.max_queue)?,
+        cache_entries: args.get_usize("cache-entries", d.cache_entries)?,
+        cache_shards: args.get_usize("cache-shards", d.cache_shards)?,
+        cache_bytes: args.get_usize("cache-bytes", d.cache_bytes)?,
+    })
 }
 
 fn parse_usize_list(s: &str) -> Result<Vec<usize>> {
@@ -556,6 +581,32 @@ fn cmd_loadtest(args: &Args) -> Result<()> {
     let reqs = args.get_usize("reqs", 64)?.max(1);
     let out = args.get_or("out", "BENCH_serve.json");
     let workers = args.get_usize("workers", 2)?.max(1);
+    // parse --zipf as f64 straight from the flag string: widening an
+    // f32 would turn "1.4" into shape key "..._zipf1.399999976158142"
+    let zipf: Option<f64> = args
+        .get("zipf")
+        .map(|s| {
+            s.parse::<f64>()
+                .with_context(|| format!("parsing --zipf {s:?}"))
+        })
+        .transpose()?;
+    if let Some(s) = zipf {
+        if !(s.is_finite() && s > 0.0) {
+            bail!("--zipf shape must be a positive finite number");
+        }
+    }
+    let dists: Vec<KeyDist> = if args.has_flag("fixed-key") {
+        vec![KeyDist::Fixed]
+    } else if let Some(s) = zipf {
+        // uniform first so the zipf speedup is reported against a
+        // same-invocation baseline
+        vec![KeyDist::Uniform, KeyDist::Zipf(s)]
+    } else {
+        vec![KeyDist::Uniform]
+    };
+    let universe = args
+        .get_usize("key-universe", DEFAULT_UNIVERSE)?
+        .clamp(1, MAX_KEY as usize);
 
     let (addr, handle, server_workers) = if let Some(a) = args.get("addr") {
         let addr = a
@@ -571,6 +622,7 @@ fn cmd_loadtest(args: &Args) -> Result<()> {
             "train-batch", "infer-batch", "max-batch", "max-queue",
             "max-wait-ms", "threshold", "threads", "cap", "chunk",
             "seed", "train", "test", "dataset", "workers",
+            "cache-entries", "cache-shards", "cache-bytes",
         ]
         .into_iter()
         .filter(|k| args.get(k).is_some())
@@ -593,11 +645,7 @@ fn cmd_loadtest(args: &Args) -> Result<()> {
             .transpose()?;
         let (explorers, meta) =
             make_worker_explorers(args, &model, g, workers)?;
-        let cfg = ServeConfig {
-            max_batch: args.get_usize("max-batch", meta.infer_batch)?,
-            max_wait: Duration::from_millis(args.get_u64("max-wait-ms", 2)?),
-            max_queue: args.get_usize("max-queue", 1024)?,
-        };
+        let cfg = serve_config_from_args(args, meta.infer_batch, 2)?;
         let handle = gandse::server::serve("127.0.0.1:0", explorers, cfg)?;
         (handle.addr, Some(handle), workers)
     };
@@ -605,18 +653,47 @@ fn cmd_loadtest(args: &Args) -> Result<()> {
 
     println!(
         "loadtest against {addr}: {} rounds, {reqs} reqs/client",
-        clients.len() * pipelines.len()
+        clients.len() * pipelines.len() * dists.len()
     );
     println!("{}", loadtest::markdown_header());
     let mut rows = Vec::new();
     let mut total_errors = 0u64;
+    // same-invocation uniform baseline per (clients, pipeline), for the
+    // zipf throughput-multiplier report
+    let mut uniform_rps: std::collections::HashMap<(usize, usize), f64> =
+        std::collections::HashMap::new();
+    let mut round_idx = 0u64;
     for &c in &clients {
         for &p in &pipelines {
-            let spec = RoundSpec { clients: c, pipeline: p, reqs };
-            let stats = loadtest::run_round(addr, spec)?;
-            println!("{}", loadtest::markdown_row(&stats));
-            total_errors += stats.errors;
-            rows.push(loadtest::json_row(&stats, server_workers));
+            for &dist in &dists {
+                let spec = RoundSpec {
+                    clients: c,
+                    pipeline: p,
+                    reqs,
+                    dist,
+                    universe,
+                    // disjoint key range per round: an earlier round's
+                    // cache fills must not inflate a later round's hit
+                    // rate (keeps uniform vs zipf apples-to-apples)
+                    key_base: (round_idx * universe as u64) % MAX_KEY,
+                };
+                round_idx += 1;
+                let stats = loadtest::run_round(addr, spec)?;
+                println!("{}", loadtest::markdown_row(&stats));
+                total_errors += stats.errors;
+                if dist == KeyDist::Uniform {
+                    uniform_rps.insert((c, p), stats.req_per_sec);
+                } else if let (KeyDist::Zipf(_), Some(&base)) =
+                    (dist, uniform_rps.get(&(c, p)))
+                {
+                    println!(
+                        "    zipf throughput multiplier at c{c}_p{p}: \
+                         {:.2}x over uniform",
+                        stats.req_per_sec / base.max(1e-9)
+                    );
+                }
+                rows.push(loadtest::json_row(&stats, server_workers));
+            }
         }
     }
     let cores = std::thread::available_parallelism()
@@ -634,11 +711,18 @@ fn cmd_loadtest(args: &Args) -> Result<()> {
     println!("wrote {out}");
     if let Some(h) = handle {
         let (batches, items) = h.stats();
+        let (hits, misses, coalesced, evictions) = h.cache_stats();
+        let admitted = hits + misses + coalesced;
         println!(
             "server: {items} requests in {batches} batches \
              (rejected {}, queue depth {})",
             h.rejected(),
             h.queue_depth()
+        );
+        println!(
+            "cache: {hits} hits / {misses} misses / {coalesced} \
+             coalesced / {evictions} evictions (hit rate {:.1}%)",
+            100.0 * (hits + coalesced) as f64 / admitted.max(1) as f64
         );
         h.shutdown();
     }

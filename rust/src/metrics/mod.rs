@@ -231,9 +231,55 @@ impl BucketCounters {
     }
 }
 
+/// One lock-free event counter: a relaxed fetch-add, safe on any hot
+/// path.  The response cache's hit/miss/coalesced/eviction counters are
+/// these; relaxed ordering is enough because the `stats` probe only
+/// needs eventually consistent totals, never cross-counter ordering.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn counter_sums_concurrent_increments() {
+        use std::sync::Arc;
+        let c = Arc::new(Counter::new());
+        let hs: Vec<_> = (0..4)
+            .map(|_| {
+                let c = c.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        c.inc();
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        c.add(5);
+        assert_eq!(c.get(), 4005);
+    }
 
     #[test]
     fn satisfied_with_noise_band() {

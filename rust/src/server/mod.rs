@@ -13,6 +13,18 @@
 //! no tokio, so the building blocks are `std::net` + threads (see
 //! DESIGN.md §4 for the architecture and §7 for the constraint).
 //!
+//! In front of the batch workers sits a **sharded LRU response cache
+//! with in-flight dedup** ([`ResponseCache`]): a reply is a pure
+//! function of the request key `(net, lo, po)` (the explorer derives
+//! its noise stream from a hash of exactly those bits), so a repeated
+//! key is answered from cache bitwise-identically to the cold reply,
+//! and N concurrent requests for the same *uncached* key trigger
+//! exactly one scan — the first becomes the leader (a normal batcher
+//! submission), the rest park as waiters and are fanned the leader's
+//! reply (including structured error replies, which are propagated but
+//! never cached) by the batch worker that resolves it.  See DESIGN.md
+//! §4 "Response cache & dedup".
+//!
 //! Protocol (one JSON object per line, newline-terminated):
 //!   request:  {"net": [ic,oc,ow,oh,kw,kh], "lo": <f>, "po": <f>,
 //!              "rtl": <bool, optional>, "id": <any, optional — echoed>}
@@ -24,6 +36,7 @@
 //!   errors:   {"ok": false, "error": "...", "id": <echo>} — notably
 //!             "overloaded" (queue full) and "server shutting down".
 
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -34,10 +47,11 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::explorer::{DseRequest, DseResult, Explorer};
-use crate::metrics::{BucketCounters, LogHistogram};
+use crate::metrics::{BucketCounters, Counter, LogHistogram};
 use crate::rtl;
 use crate::space::{SpaceSpec, N_NET};
 use crate::util::json::Json;
+use crate::util::rng::mix;
 
 /// Per-response batching metadata surfaced to clients.
 #[derive(Debug, Clone, Copy)]
@@ -165,7 +179,22 @@ impl<T, R> Batcher<T, R> {
     /// neither a trickle of submissions nor a partial drain can push a
     /// pending request's flush past its deadline.  With an empty queue
     /// there is no deadline and the worker blocks untimed.
-    pub fn run_worker(&self, mut f: impl FnMut(&[T]) -> Vec<R>) {
+    pub fn run_worker(&self, f: impl FnMut(&[T]) -> Vec<R>) {
+        self.run_worker_with(f, |_, _, _| {});
+    }
+
+    /// [`Batcher::run_worker`] with a per-reply hook: `on_reply(item,
+    /// result, info)` runs on the worker thread for every item of a
+    /// completed batch, *before* the reply is sent to its submitter.
+    /// This is where the serving layer publishes replies into the
+    /// response cache and fans them out to dedup waiters — on the
+    /// worker thread, so a waiter can never deadlock behind the reply
+    /// ordering of the leader's (possibly slow or dead) connection.
+    pub fn run_worker_with(
+        &self,
+        mut f: impl FnMut(&[T]) -> Vec<R>,
+        mut on_reply: impl FnMut(&T, &R, BatchInfo),
+    ) {
         loop {
             let mut st = self.inner.lock().unwrap();
             loop {
@@ -214,7 +243,10 @@ impl<T, R> Batcher<T, R> {
             self.occupancy.record(items.len() - 1);
             let info =
                 BatchInfo { batch_size: items.len(), queue_us };
-            for (r, tx) in results.into_iter().zip(senders) {
+            for (i, (r, tx)) in
+                results.into_iter().zip(senders).enumerate()
+            {
+                on_reply(&items[i], &r, info);
                 let _ = tx.send((r, info)); // receiver may have hung up
             }
         }
@@ -327,11 +359,269 @@ pub fn encode_error(msg: &str, id: Option<&Json>) -> String {
 /// thread — affected requests get an `{"ok": false}` reply instead.
 type DseReply = Result<DseResult, String>;
 
+// ---------------------------------------------------------------------------
+// Response cache + in-flight dedup
+// ---------------------------------------------------------------------------
+
+/// Canonical cache key: the exact bit patterns of `(net, lo, po)`.
+/// Replies are a pure function of these bits (the explorer hashes the
+/// same bits into its noise seed), so two requests with equal keys are
+/// guaranteed byte-equal semantic replies.  Keying on the full bits —
+/// not just a 64-bit digest — means a hash collision can degrade to a
+/// HashMap probe, never to serving the wrong design.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct CacheKey([u32; N_NET + 2]);
+
+impl CacheKey {
+    pub fn of(req: &DseRequest) -> CacheKey {
+        let mut w = [0u32; N_NET + 2];
+        for (i, v) in req.net.iter().enumerate() {
+            w[i] = v.to_bits();
+        }
+        w[N_NET] = req.lo.to_bits();
+        w[N_NET + 1] = req.po.to_bits();
+        CacheKey(w)
+    }
+
+    /// Shard index: a SplitMix fold over the key words.
+    fn shard_of(&self, n_shards: usize) -> usize {
+        let mut h = 0xCAC4E_u64;
+        for &w in &self.0 {
+            h = mix(h ^ w as u64);
+        }
+        (h % n_shards as u64) as usize
+    }
+}
+
+struct CacheEntry {
+    res: DseResult,
+    /// The cold reply's batching metadata, replayed on hits so a cached
+    /// reply is bitwise equal to the cold reply that filled the entry.
+    info: BatchInfo,
+    last_used: u64,
+    cost: usize,
+}
+
+struct CacheShard {
+    map: HashMap<CacheKey, CacheEntry>,
+    /// Keys with a leader submission in flight → the waiters parked on
+    /// it.  An entry exists from leader admission until the batch
+    /// worker publishes the reply (or `fail_all` on shutdown).
+    inflight: HashMap<CacheKey, Vec<mpsc::Sender<(DseReply, BatchInfo)>>>,
+    /// Monotone recency clock for exact LRU.
+    tick: u64,
+    bytes: usize,
+}
+
+/// How one DSE request was admitted (see [`ResponseCache::admit`]).
+enum Admitted {
+    /// Cached: the cold reply's payload + batching metadata, verbatim.
+    Hit(DseResult, BatchInfo),
+    /// Wait on this channel — either the leader's own batcher receiver
+    /// or a dedup waiter fed by the publishing batch worker (the two
+    /// are indistinguishable to the connection, by design).
+    Wait(mpsc::Receiver<(DseReply, BatchInfo)>),
+    /// Leader admission whose batcher submission was refused.
+    Rejected(SubmitError),
+}
+
+/// Sharded LRU response cache with in-flight dedup, in front of the
+/// batch workers.
+///
+/// Admission (reader threads) and publication (batch-worker threads)
+/// both take one shard mutex, so the hit / coalesce / lead decision is
+/// linearizable per key.  Publication happens on the **worker** thread
+/// the moment a batch completes — never on a connection's writer thread
+/// — so parked waiters are fed even if the leader's connection is slow,
+/// wedged, or already gone, and pipelined reply order on every
+/// connection is preserved independently.  Error replies are fanned out
+/// to waiters but never inserted: a transient overload or backend fault
+/// must not poison a key until eviction.
+pub struct ResponseCache {
+    shards: Vec<Mutex<CacheShard>>,
+    /// Entry cap per shard (total cap distributed across shards).
+    per_shard_entries: usize,
+    /// Approximate-byte cap per shard.
+    per_shard_bytes: usize,
+    pub hits: Counter,
+    pub misses: Counter,
+    pub coalesced: Counter,
+    pub evictions: Counter,
+}
+
+/// Approximate heap footprint of one cache entry (bookkeeping included).
+fn entry_cost(res: &DseResult) -> usize {
+    std::mem::size_of::<CacheEntry>()
+        + std::mem::size_of::<CacheKey>()
+        + res.cfg_idx.len() * std::mem::size_of::<usize>()
+        + res.cfg_raw.len() * std::mem::size_of::<f32>()
+}
+
+impl ResponseCache {
+    /// `entries` > 0 (0 disables caching — handled by the caller, which
+    /// simply does not construct one); `max_bytes` 0 means unbounded.
+    pub fn new(
+        entries: usize,
+        shards: usize,
+        max_bytes: usize,
+    ) -> ResponseCache {
+        assert!(entries > 0, "a zero-entry cache should not be built");
+        // more shards than entries would make some shards uncacheable
+        let n = shards.clamp(1, entries);
+        let max_bytes = if max_bytes == 0 { usize::MAX } else { max_bytes };
+        ResponseCache {
+            shards: (0..n)
+                .map(|_| {
+                    Mutex::new(CacheShard {
+                        map: HashMap::new(),
+                        inflight: HashMap::new(),
+                        tick: 0,
+                        bytes: 0,
+                    })
+                })
+                .collect(),
+            per_shard_entries: entries.div_ceil(n),
+            per_shard_bytes: if max_bytes == usize::MAX {
+                usize::MAX
+            } else {
+                max_bytes.div_ceil(n)
+            },
+            hits: Counter::new(),
+            misses: Counter::new(),
+            coalesced: Counter::new(),
+            evictions: Counter::new(),
+        }
+    }
+
+    fn shard(&self, key: &CacheKey) -> &Mutex<CacheShard> {
+        &self.shards[key.shard_of(self.shards.len())]
+    }
+
+    /// Classify one request: cache hit, coalesce onto an in-flight
+    /// leader, or become the leader by running `submit` (the batcher
+    /// submission) **under the shard lock** — so no waiter can attach
+    /// to a leader whose submission is about to be refused, and every
+    /// request is counted exactly once (hits + misses + coalesced =
+    /// admitted DSE requests; a refused leader still counts as a miss).
+    fn admit(
+        &self,
+        key: CacheKey,
+        submit: impl FnOnce() -> Result<
+            mpsc::Receiver<(DseReply, BatchInfo)>,
+            SubmitError,
+        >,
+    ) -> Admitted {
+        let mut sh = self.shard(&key).lock().unwrap();
+        sh.tick += 1;
+        let tick = sh.tick;
+        if let Some(e) = sh.map.get_mut(&key) {
+            e.last_used = tick;
+            self.hits.inc();
+            return Admitted::Hit(e.res.clone(), e.info);
+        }
+        if let Some(waiters) = sh.inflight.get_mut(&key) {
+            let (tx, rx) = mpsc::channel();
+            waiters.push(tx);
+            self.coalesced.inc();
+            return Admitted::Wait(rx);
+        }
+        self.misses.inc();
+        match submit() {
+            Ok(rx) => {
+                sh.inflight.insert(key, Vec::new());
+                Admitted::Wait(rx)
+            }
+            Err(e) => Admitted::Rejected(e),
+        }
+    }
+
+    /// Called by a batch worker for every completed reply: insert into
+    /// the cache (success only) and fan the reply out to every waiter
+    /// parked on the key.  The sends happen outside the shard lock.
+    fn publish(&self, key: CacheKey, reply: &DseReply, info: BatchInfo) {
+        let waiters = {
+            let mut sh = self.shard(&key).lock().unwrap();
+            let waiters = sh.inflight.remove(&key).unwrap_or_default();
+            if let Ok(res) = reply {
+                self.insert(&mut sh, key, res.clone(), info);
+            }
+            waiters
+        };
+        for tx in waiters {
+            let _ = tx.send((reply.clone(), info)); // waiter may be gone
+        }
+    }
+
+    fn insert(
+        &self,
+        sh: &mut CacheShard,
+        key: CacheKey,
+        res: DseResult,
+        info: BatchInfo,
+    ) {
+        sh.tick += 1;
+        let cost = entry_cost(&res);
+        let entry =
+            CacheEntry { res, info, last_used: sh.tick, cost };
+        if let Some(prev) = sh.map.insert(key, entry) {
+            sh.bytes -= prev.cost;
+        }
+        sh.bytes += cost;
+        while sh.map.len() > self.per_shard_entries
+            || sh.bytes > self.per_shard_bytes
+        {
+            // exact LRU by scan: a shard holds at most entries/shards
+            // items, and one scan is nanoseconds next to the candidate
+            // scan an eviction mistake would cost
+            let Some((&victim, _)) =
+                sh.map.iter().min_by_key(|(_, e)| e.last_used)
+            else {
+                break;
+            };
+            let gone = sh.map.remove(&victim).expect("victim exists");
+            sh.bytes -= gone.cost;
+            self.evictions.inc();
+        }
+    }
+
+    /// Fail out every parked waiter with a structured error.  Called
+    /// after the workers join at shutdown: the drain guarantees every
+    /// accepted leader published (feeding its waiters), so this only
+    /// fires for waiters orphaned by a worker that died mid-batch —
+    /// they get `"server shutting down"` instead of a hang.
+    fn fail_all(&self, msg: &str) {
+        for m in &self.shards {
+            let waiters: Vec<_> = {
+                let mut sh = m.lock().unwrap();
+                sh.inflight.drain().flat_map(|(_, v)| v).collect()
+            };
+            let info = BatchInfo { batch_size: 0, queue_us: 0 };
+            for tx in waiters {
+                let _ = tx.send((Err(msg.to_string()), info));
+            }
+        }
+    }
+
+    /// Live entry count across shards (a gauge, not a counter).
+    pub fn entries(&self) -> usize {
+        self.shards.iter().map(|m| m.lock().unwrap().map.len()).sum()
+    }
+
+    /// Approximate resident bytes across shards.
+    pub fn bytes(&self) -> usize {
+        self.shards.iter().map(|m| m.lock().unwrap().bytes).sum()
+    }
+}
+
 /// Everything the connection and worker threads share.
 struct Shared {
     batcher: Batcher<DseRequest, DseReply>,
     spec: SpaceSpec,
     workers: usize,
+    /// Response cache + in-flight dedup; `None` when disabled
+    /// (`cache_entries` 0), in which case every request goes straight
+    /// to the batcher exactly as before the cache existed.
+    cache: Option<ResponseCache>,
     /// Per-request candidate-set size (the threshold's cartesian
     /// product, uncapped).  Large-space requests are the ones that
     /// stretch batch evaluation time — and therefore queue wait and
@@ -354,6 +644,15 @@ pub struct ServeConfig {
     /// Admission bound on waiting requests; beyond it, submissions get
     /// `{"ok":false,"error":"overloaded"}`.
     pub max_queue: usize,
+    /// Response-cache capacity in entries (across all shards).
+    /// **0 disables** both the cache and in-flight dedup.
+    pub cache_entries: usize,
+    /// Independently locked cache shards (clamped to `[1,
+    /// cache_entries]`); more shards = less admission contention.
+    pub cache_shards: usize,
+    /// Approximate byte bound on cached payloads (0 = unbounded; the
+    /// entry bound is normally the binding one — entries are ~200 B).
+    pub cache_bytes: usize,
 }
 
 impl Default for ServeConfig {
@@ -362,6 +661,9 @@ impl Default for ServeConfig {
             max_batch: 64,
             max_wait: Duration::from_millis(5),
             max_queue: 1024,
+            cache_entries: 4096,
+            cache_shards: 8,
+            cache_bytes: 16 << 20,
         }
     }
 }
@@ -384,6 +686,12 @@ impl ServerHandle {
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
+        // drain backstop: every accepted leader has published by now
+        // (feeding its dedup waiters); any waiter still parked was
+        // orphaned by a dead worker and gets a structured error
+        if let Some(c) = &self.shared.cache {
+            c.fail_all("server shutting down");
+        }
         // acceptor blocks in accept(); connect once to unblock it
         let _ = TcpStream::connect(self.addr);
         if let Some(a) = self.acceptor.take() {
@@ -396,6 +704,20 @@ impl ServerHandle {
             self.shared.batcher.batches.load(Ordering::Relaxed),
             self.shared.batcher.items.load(Ordering::Relaxed),
         )
+    }
+
+    /// `(hits, misses, coalesced, evictions)` — all zero when the
+    /// cache is disabled.
+    pub fn cache_stats(&self) -> (u64, u64, u64, u64) {
+        match &self.shared.cache {
+            Some(c) => (
+                c.hits.get(),
+                c.misses.get(),
+                c.coalesced.get(),
+                c.evictions.get(),
+            ),
+            None => (0, 0, 0, 0),
+        }
     }
 
     pub fn rejected(&self) -> u64 {
@@ -428,6 +750,13 @@ pub fn serve(
         batcher: Batcher::new(cfg.max_batch, cfg.max_wait, cfg.max_queue),
         spec: explorers[0].spec.clone(),
         workers: explorers.len(),
+        cache: (cfg.cache_entries > 0).then(|| {
+            ResponseCache::new(
+                cfg.cache_entries,
+                cfg.cache_shards.max(1),
+                cfg.cache_bytes,
+            )
+        }),
         cand_hist: LogHistogram::new(),
         scanned_hist: LogHistogram::new(),
     });
@@ -437,26 +766,39 @@ pub fn serve(
         let sh = shared.clone();
         workers.push(std::thread::spawn(move || {
             let stats_sh = sh.clone();
-            sh.batcher.run_worker(|reqs: &[DseRequest]| {
-                // A failed batch must not kill the worker: every request
-                // in it gets an error reply and the loop keeps serving.
-                match ex.explore(reqs) {
-                    Ok(results) => results
-                        .into_iter()
-                        .map(|r| {
-                            stats_sh.cand_hist.record(r.n_candidates as u64);
-                            stats_sh
-                                .scanned_hist
-                                .record(r.n_scanned as u64);
-                            Ok(r)
-                        })
-                        .collect(),
-                    Err(e) => {
-                        let msg = format!("exploration failed: {e:#}");
-                        reqs.iter().map(|_| Err(msg.clone())).collect()
+            let publish_sh = sh.clone();
+            sh.batcher.run_worker_with(
+                |reqs: &[DseRequest]| {
+                    // A failed batch must not kill the worker: every
+                    // request in it gets an error reply and the loop
+                    // keeps serving.
+                    match ex.explore(reqs) {
+                        Ok(results) => results
+                            .into_iter()
+                            .map(|r| {
+                                stats_sh
+                                    .cand_hist
+                                    .record(r.n_candidates as u64);
+                                stats_sh
+                                    .scanned_hist
+                                    .record(r.n_scanned as u64);
+                                Ok(r)
+                            })
+                            .collect(),
+                        Err(e) => {
+                            let msg = format!("exploration failed: {e:#}");
+                            reqs.iter().map(|_| Err(msg.clone())).collect()
+                        }
                     }
-                }
-            });
+                },
+                // publish on the worker thread: cache the success,
+                // fan the reply (success or error) to dedup waiters
+                |req, reply, info| {
+                    if let Some(c) = &publish_sh.cache {
+                        c.publish(CacheKey::of(req), reply, info);
+                    }
+                },
+            );
         }));
     }
 
@@ -514,6 +856,21 @@ fn encode_stats(sh: &Shared, id: Option<&Json>) -> String {
             .collect(),
     );
     let queue_us = encode_hist(&b.queue_hist);
+    // cache counters: hits + misses + coalesced = admitted DSE requests
+    // (each request is classified exactly once; a refused leader still
+    // counts as a miss) — the invariant scripts/serve_probe.py asserts
+    let (hits, misses, coalesced, evictions, entries, bytes) =
+        match &sh.cache {
+            Some(c) => (
+                c.hits.get() as f64,
+                c.misses.get() as f64,
+                c.coalesced.get() as f64,
+                c.evictions.get() as f64,
+                c.entries() as f64,
+                c.bytes() as f64,
+            ),
+            None => (0.0, 0.0, 0.0, 0.0, 0.0, 0.0),
+        };
     let stats = Json::obj(vec![
         ("queue_depth", Json::Num(b.depth() as f64)),
         ("max_queue", Json::Num(b.max_queue as f64)),
@@ -522,6 +879,13 @@ fn encode_stats(sh: &Shared, id: Option<&Json>) -> String {
         ("batches", Json::Num(b.batches.load(Ordering::Relaxed) as f64)),
         ("items", Json::Num(b.items.load(Ordering::Relaxed) as f64)),
         ("rejected", Json::Num(b.rejected.load(Ordering::Relaxed) as f64)),
+        ("cache_enabled", Json::Bool(sh.cache.is_some())),
+        ("cache_hits", Json::Num(hits)),
+        ("cache_misses", Json::Num(misses)),
+        ("coalesced", Json::Num(coalesced)),
+        ("evictions", Json::Num(evictions)),
+        ("cache_entries", Json::Num(entries)),
+        ("cache_bytes", Json::Num(bytes)),
         ("batch_occupancy", occupancy),
         ("queue_us", queue_us),
         // per-request candidate-space telemetry: the uncapped set size
@@ -648,14 +1012,30 @@ fn handle_conn(stream: TcpStream, sh: &Arc<Shared>) {
             Ok(Request::Stats) => {
                 Pending::Ready(encode_stats(sh, id.as_ref()))
             }
-            Ok(Request::Dse { req, want_rtl }) => {
-                match sh.batcher.submit(req) {
+            Ok(Request::Dse { req, want_rtl }) => match &sh.cache {
+                // Cache path: hits encode immediately (the reader thread
+                // never blocks — encoding is pure CPU), coalesced waiters
+                // and leaders park on a channel exactly like the plain
+                // batcher path, so write_replies preserves submission
+                // order for mixed cache/worker replies for free.
+                Some(c) => match c.admit(CacheKey::of(&req), || {
+                    sh.batcher.submit(req)
+                }) {
+                    Admitted::Hit(res, info) => Pending::Ready(
+                        render_reply(sh, &res, info, want_rtl, id.as_ref()),
+                    ),
+                    Admitted::Wait(rx) => Pending::Wait { rx, want_rtl, id },
+                    Admitted::Rejected(e) => Pending::Ready(
+                        encode_error(&e.to_string(), id.as_ref()),
+                    ),
+                },
+                None => match sh.batcher.submit(req) {
                     Ok(rx) => Pending::Wait { rx, want_rtl, id },
                     Err(e) => Pending::Ready(
                         encode_error(&e.to_string(), id.as_ref()),
                     ),
-                }
-            }
+                },
+            },
         };
         if tx.send(pending).is_err() {
             break; // writer half died on a socket error
@@ -714,14 +1094,30 @@ fn resolve(p: Pending, sh: &Shared) -> String {
             Err(_) => encode_error("server shutting down", id.as_ref()),
             Ok((Err(e), _)) => encode_error(&e, id.as_ref()),
             Ok((Ok(res), info)) => {
-                let verilog = want_rtl.then(|| {
-                    rtl::generate(&sh.spec, &res.cfg_raw, "gandse_acc")
-                        .unwrap_or_else(|e| format!("// error: {e}"))
-                });
-                encode_response(&sh.spec, &res, info, verilog, id.as_ref())
+                render_reply(sh, &res, info, want_rtl, id.as_ref())
             }
         },
     }
+}
+
+/// Encode a successful DSE reply.  Shared between the worker path and
+/// the cache-hit path: a hit replays the cold reply's `BatchInfo`
+/// (stored alongside the result), so for equal `id` and `rtl` flags a
+/// cache hit is **bitwise equal** to the cold reply that filled the
+/// entry — RTL is regenerated per request (`rtl::generate` is a pure
+/// function of spec + cfg) rather than cached, keeping entries small.
+fn render_reply(
+    sh: &Shared,
+    res: &DseResult,
+    info: BatchInfo,
+    want_rtl: bool,
+    id: Option<&Json>,
+) -> String {
+    let verilog = want_rtl.then(|| {
+        rtl::generate(&sh.spec, &res.cfg_raw, "gandse_acc")
+            .unwrap_or_else(|e| format!("// error: {e}"))
+    });
+    encode_response(&sh.spec, res, info, verilog, id)
 }
 
 #[cfg(test)]
@@ -1039,5 +1435,182 @@ mod tests {
         // without a tag, no id field is emitted
         let v = Json::parse(&encode_error("x", None)).unwrap();
         assert!(v.get("id").is_none());
+    }
+
+    // -- ResponseCache ------------------------------------------------
+
+    fn key(lo: f32) -> CacheKey {
+        CacheKey::of(&DseRequest { net: [8.0; N_NET], lo, po: 1.0 })
+    }
+
+    fn res(v: f32) -> DseResult {
+        DseResult {
+            cfg_idx: vec![1, 2],
+            cfg_raw: vec![v, v],
+            latency: v,
+            power: v,
+            n_candidates: 4.0,
+            n_scanned: 4,
+            satisfied: true,
+        }
+    }
+
+    const INFO: BatchInfo = BatchInfo { batch_size: 2, queue_us: 7 };
+
+    /// A leader submission that always succeeds (the sender is kept
+    /// alive so the receiver stays connected).
+    fn ok_submit() -> (
+        mpsc::Sender<(DseReply, BatchInfo)>,
+        mpsc::Receiver<(DseReply, BatchInfo)>,
+    ) {
+        mpsc::channel()
+    }
+
+    #[test]
+    fn cache_miss_publish_then_hit_replays_cold_metadata() {
+        let c = ResponseCache::new(8, 2, 0);
+        let k = key(0.01);
+        let (_tx, rx) = ok_submit();
+        assert!(matches!(c.admit(k, || Ok(rx)), Admitted::Wait(_)));
+        c.publish(k, &Ok(res(3.0)), INFO);
+        match c.admit(k, || panic!("hit must not submit")) {
+            Admitted::Hit(r, info) => {
+                assert_eq!(r.latency, 3.0);
+                // hits replay the cold reply's batching metadata so the
+                // encoded line is bitwise equal to the cold one
+                assert_eq!(info.batch_size, INFO.batch_size);
+                assert_eq!(info.queue_us, INFO.queue_us);
+            }
+            _ => panic!("expected a hit"),
+        }
+        assert_eq!(c.hits.get(), 1);
+        assert_eq!(c.misses.get(), 1);
+        assert_eq!(c.coalesced.get(), 0);
+        assert_eq!(c.entries(), 1);
+        assert!(c.bytes() > 0);
+    }
+
+    #[test]
+    fn coalesced_waiters_all_fed_and_errors_are_not_cached() {
+        let c = ResponseCache::new(8, 1, 0);
+        let k = key(0.02);
+        let (_tx, rx) = ok_submit();
+        assert!(matches!(c.admit(k, || Ok(rx)), Admitted::Wait(_)));
+        let waiters: Vec<_> = (0..3)
+            .map(|_| match c.admit(k, || panic!("must coalesce")) {
+                Admitted::Wait(rx) => rx,
+                _ => panic!("expected coalesce"),
+            })
+            .collect();
+        assert_eq!(c.coalesced.get(), 3);
+        // an error reply reaches every waiter but never the cache
+        c.publish(k, &Err("backend fault".into()), INFO);
+        for rx in waiters {
+            match rx.recv_timeout(Duration::from_secs(5)).unwrap() {
+                (Err(e), _) => assert_eq!(e, "backend fault"),
+                _ => panic!("expected the error fan-out"),
+            }
+        }
+        assert_eq!(c.entries(), 0, "errors must not be cached");
+        // the key is admissible again: next request leads a fresh scan
+        let (_tx2, rx2) = ok_submit();
+        assert!(matches!(c.admit(k, || Ok(rx2)), Admitted::Wait(_)));
+        assert_eq!(c.misses.get(), 2);
+    }
+
+    #[test]
+    fn tiny_cache_evicts_least_recently_used() {
+        let c = ResponseCache::new(2, 1, 0);
+        let (k1, k2, k3) = (key(0.01), key(0.02), key(0.03));
+        for k in [k1, k2] {
+            let (_tx, rx) = ok_submit();
+            c.admit(k, || Ok(rx));
+            c.publish(k, &Ok(res(1.0)), INFO);
+        }
+        // touch k1 so k2 becomes the LRU victim
+        assert!(matches!(
+            c.admit(k1, || panic!("hit")),
+            Admitted::Hit(..)
+        ));
+        let (_tx, rx) = ok_submit();
+        c.admit(k3, || Ok(rx));
+        c.publish(k3, &Ok(res(3.0)), INFO);
+        assert_eq!(c.evictions.get(), 1);
+        assert_eq!(c.entries(), 2);
+        assert!(matches!(c.admit(k1, || panic!("hit")), Admitted::Hit(..)));
+        assert!(matches!(c.admit(k3, || panic!("hit")), Admitted::Hit(..)));
+        // k2 was evicted: admitting it again is a miss
+        let (_tx, rx) = ok_submit();
+        assert!(matches!(c.admit(k2, || Ok(rx)), Admitted::Wait(_)));
+        assert_eq!(c.misses.get(), 4);
+        assert_eq!(c.hits.get(), 3);
+    }
+
+    #[test]
+    fn byte_bound_evicts_even_below_entry_cap() {
+        // per-entry cost is ~hundreds of bytes; a 1-byte budget forces
+        // every insert to evict down to a single entry at most
+        let c = ResponseCache::new(1024, 1, 1);
+        for i in 0..4 {
+            let k = key(0.01 * (i + 1) as f32);
+            let (_tx, rx) = ok_submit();
+            c.admit(k, || Ok(rx));
+            c.publish(k, &Ok(res(1.0)), INFO);
+        }
+        assert!(c.entries() <= 1, "byte bound not enforced");
+        assert!(c.evictions.get() >= 3);
+    }
+
+    #[test]
+    fn rejected_leader_counts_as_miss_and_leaves_no_inflight() {
+        let c = ResponseCache::new(8, 1, 0);
+        let k = key(0.04);
+        assert!(matches!(
+            c.admit(k, || Err(SubmitError::Overloaded)),
+            Admitted::Rejected(SubmitError::Overloaded)
+        ));
+        assert_eq!(c.misses.get(), 1);
+        // no inflight entry was registered: the next request must lead
+        // (a waiter parked on a refused leader would hang forever)
+        let (_tx, rx) = ok_submit();
+        assert!(matches!(c.admit(k, || Ok(rx)), Admitted::Wait(_)));
+        assert_eq!(c.coalesced.get(), 0);
+        assert_eq!(c.misses.get(), 2);
+    }
+
+    #[test]
+    fn fail_all_feeds_parked_waiters_a_structured_error() {
+        let c = ResponseCache::new(8, 4, 0);
+        let k = key(0.05);
+        let (_tx, rx_leader) = ok_submit();
+        c.admit(k, || Ok(rx_leader));
+        let rx = match c.admit(k, || panic!("must coalesce")) {
+            Admitted::Wait(rx) => rx,
+            _ => panic!("expected coalesce"),
+        };
+        c.fail_all("server shutting down");
+        match rx.recv_timeout(Duration::from_secs(5)).unwrap() {
+            (Err(e), _) => assert_eq!(e, "server shutting down"),
+            _ => panic!("expected the shutdown error"),
+        }
+        // inflight table is empty: a fresh admit leads again
+        let (_tx2, rx2) = ok_submit();
+        assert!(matches!(c.admit(k, || Ok(rx2)), Admitted::Wait(_)));
+    }
+
+    #[test]
+    fn cache_key_is_exact_bits_and_shards_stay_in_range() {
+        let a = key(0.01);
+        assert_eq!(a, key(0.01));
+        assert_ne!(a, key(0.010000001));
+        let b = CacheKey::of(&DseRequest {
+            net: [8.0, 8.0, 8.0, 8.0, 8.0, 9.0],
+            lo: 0.01,
+            po: 1.0,
+        });
+        assert_ne!(a, b, "net bits must participate in the key");
+        for n in [1usize, 2, 7, 8] {
+            assert!(a.shard_of(n) < n);
+        }
     }
 }

@@ -128,6 +128,10 @@ fn cpu_backend_train_then_serve_roundtrip() {
             max_batch: meta.infer_batch,
             max_wait: Duration::from_millis(3),
             max_queue: 256,
+            // hammer's clients repeat keys across each other; this test
+            // pins the plain batcher path (items == every request)
+            cache_entries: 0,
+            ..Default::default()
         },
     )
     .unwrap();
@@ -150,6 +154,10 @@ fn pipelined_concurrent_clients_ordered_replies_and_stats() {
             max_batch: 8,
             max_wait: Duration::from_millis(2),
             max_queue: 512,
+            // clients deliberately share keys ((c+i)%20); disable the
+            // cache so the batcher-counter assertions below stay exact
+            cache_entries: 0,
+            ..Default::default()
         },
     );
     let addr = handle.addr;
@@ -274,10 +282,14 @@ fn replies_are_byte_identical_across_worker_counts() {
     fn collect(workers: usize) -> Vec<String> {
         let handle = spawn_cpu_server(
             workers,
+            // cache stays on (all 12 keys are distinct, so every reply
+            // is cold) — the byte-identity contract must hold on the
+            // cache-enabled admit path too
             ServeConfig {
                 max_batch: 8,
                 max_wait: Duration::from_millis(1),
                 max_queue: 64,
+                ..Default::default()
             },
         );
         let stream = TcpStream::connect(handle.addr).unwrap();
@@ -321,24 +333,32 @@ fn replies_are_byte_identical_across_worker_counts() {
 fn loadtest_round_zero_errors_against_live_server() {
     let handle = spawn_cpu_server(
         2,
+        // cache on: the loadtest's zero-error verification must hold
+        // when some replies come from cache and some from workers
         ServeConfig {
             max_batch: 8,
             max_wait: Duration::from_millis(1),
             max_queue: 512,
+            ..Default::default()
         },
     );
     // the stats probe reports the server's true worker count (what
     // `loadtest --addr` keys BENCH_serve.json rows with)
     assert_eq!(loadtest::probe_workers(handle.addr).unwrap(), 2);
-    let spec = RoundSpec { clients: 6, pipeline: 4, reqs: 10 };
+    let spec = RoundSpec::new(6, 4, 10);
     let stats = loadtest::run_round(handle.addr, spec).unwrap();
     assert_eq!(stats.errors, 0, "dropped/mismatched replies");
     assert_eq!(stats.total, 60);
     assert!(stats.req_per_sec > 0.0);
     assert!(stats.p50_us <= stats.p95_us && stats.p95_us <= stats.p99_us);
     assert!(stats.p99_us <= stats.max_us);
+    // every request was classified exactly once, and the batch workers
+    // only saw the unique-key leaders (uniform draws over 65536 keys
+    // can still collide — the cache makes items == misses, not == 60)
+    let (hits, misses, coalesced, _) = handle.cache_stats();
+    assert_eq!(hits + misses + coalesced, 60);
     let (_, items) = handle.stats();
-    assert_eq!(items, 60);
+    assert_eq!(items, misses);
     handle.shutdown();
 }
 
@@ -353,6 +373,7 @@ fn shutdown_rejects_new_work_with_error_reply() {
             max_batch: 8,
             max_wait: Duration::from_millis(1),
             max_queue: 64,
+            ..Default::default()
         },
     );
     let addr = handle.addr;
@@ -371,7 +392,23 @@ fn shutdown_rejects_new_work_with_error_reply() {
 
     handle.shutdown(); // drains and joins the workers
 
+    // the pre-shutdown key is cached: it is still answered (cache hits
+    // need no worker), which is the drain contract's useful half
     let req = r#"{"net":[32,32,32,32,3,3],"lo":0.01,"po":2.0,"id":1}"#;
+    w.write_all(req.as_bytes()).unwrap();
+    w.write_all(b"\n").unwrap();
+    line.clear();
+    r.read_line(&mut line).unwrap();
+    let v = Json::parse(line.trim()).unwrap();
+    assert_eq!(
+        v.get("ok").and_then(Json::as_bool),
+        Some(true),
+        "a cached key must survive the drain: {line}"
+    );
+    assert_eq!(v.get("id").and_then(Json::as_f64), Some(1.0));
+
+    // an UNCACHED key needs a scan, and scans are refused after close
+    let req = r#"{"net":[32,32,32,32,3,3],"lo":0.02,"po":2.0,"id":2}"#;
     w.write_all(req.as_bytes()).unwrap();
     w.write_all(b"\n").unwrap();
     line.clear();
@@ -380,7 +417,243 @@ fn shutdown_rejects_new_work_with_error_reply() {
     assert_eq!(v.get("ok").and_then(Json::as_bool), Some(false));
     let err = v.get("error").unwrap().as_str().unwrap();
     assert!(err.contains("shutting down"), "unexpected error: {err}");
-    assert_eq!(v.get("id").and_then(Json::as_f64), Some(1.0));
+    assert_eq!(v.get("id").and_then(Json::as_f64), Some(2.0));
+}
+
+/// The tentpole correctness contract: a cache hit is **bitwise equal**
+/// to the cold reply that filled the entry — same payload bits, same
+/// replayed batch metadata, same echoed id — so callers cannot tell
+/// (and need not care) whether a scan ran.
+#[test]
+fn cached_reply_is_bitwise_equal_to_cold_reply() {
+    let handle = spawn_cpu_server(
+        2,
+        ServeConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+            max_queue: 64,
+            ..Default::default()
+        },
+    );
+    let stream = TcpStream::connect(handle.addr).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    let mut r = BufReader::new(stream);
+    // rtl:true too: RTL is regenerated per request from the cached cfg,
+    // and must come out byte-identical
+    let req = r#"{"net":[32,32,32,32,3,3],"lo":0.01,"po":2.0,"rtl":true,"id":7}"#;
+    let mut lines = Vec::new();
+    for i in 0..2 {
+        w.write_all(req.as_bytes()).unwrap();
+        w.write_all(b"\n").unwrap();
+        let mut line = String::new();
+        assert!(r.read_line(&mut line).unwrap() > 0, "dropped reply {i}");
+        let v = Json::parse(line.trim()).unwrap();
+        assert_eq!(
+            v.get("ok").and_then(Json::as_bool),
+            Some(true),
+            "reply {i}: {line}"
+        );
+        lines.push(line);
+    }
+    assert_eq!(
+        lines[0], lines[1],
+        "cached reply differs from the cold reply"
+    );
+    let (hits, misses, coalesced, _) = handle.cache_stats();
+    assert_eq!((hits, misses, coalesced), (1, 1, 0));
+    let (_, items) = handle.stats();
+    assert_eq!(items, 1, "the second request must not reach a worker");
+    handle.shutdown();
+}
+
+/// In-flight dedup: N concurrent connections asking for the same
+/// uncached key trigger exactly ONE scan (single `batches`/`items`
+/// increment), and every connection gets the same reply.
+#[test]
+fn coalesced_waiters_all_get_the_reply_in_one_batch() {
+    // a long max_wait parks the leader's 1-item batch long enough that
+    // the followers provably arrive while the key is still in flight
+    let handle = spawn_cpu_server(
+        2,
+        ServeConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(300),
+            max_queue: 64,
+            ..Default::default()
+        },
+    );
+    let addr = handle.addr;
+    let n = 6usize;
+    let mut clients = Vec::new();
+    for c in 0..n {
+        clients.push(std::thread::spawn(move || {
+            let stream = TcpStream::connect(addr).unwrap();
+            let mut w = stream.try_clone().unwrap();
+            let mut r = BufReader::new(stream);
+            let req =
+                r#"{"net":[32,32,32,32,3,3],"lo":0.015,"po":2.0,"id":0}"#;
+            w.write_all(req.as_bytes()).unwrap();
+            w.write_all(b"\n").unwrap();
+            let mut line = String::new();
+            assert!(r.read_line(&mut line).unwrap() > 0, "client {c} dropped");
+            line
+        }));
+    }
+    let lines: Vec<String> =
+        clients.into_iter().map(|c| c.join().unwrap()).collect();
+    for line in &lines {
+        let v = Json::parse(line.trim()).unwrap();
+        assert_eq!(
+            v.get("ok").and_then(Json::as_bool),
+            Some(true),
+            "reply: {line}"
+        );
+        // leader and waiters all see the leader's batch metadata —
+        // every line is byte-identical, not just payload-equal
+        assert_eq!(line, &lines[0]);
+    }
+    let (batches, items) = handle.stats();
+    assert_eq!(items, 1, "dedup must collapse {n} requests into one scan");
+    assert_eq!(batches, 1);
+    let (hits, misses, coalesced, _) = handle.cache_stats();
+    assert_eq!(misses, 1, "exactly one leader");
+    // a follower that raced ahead of the publish coalesced; one that
+    // arrived after it hit — either way all are accounted for
+    assert_eq!(hits + coalesced, (n - 1) as u64);
+
+    // the wire stats probe carries the same counters
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    let mut r = BufReader::new(stream);
+    w.write_all(b"{\"stats\":true}\n").unwrap();
+    let mut line = String::new();
+    r.read_line(&mut line).unwrap();
+    let st = Json::parse(line.trim()).unwrap();
+    let st = st.get("stats").unwrap();
+    assert_eq!(st.get("cache_enabled").unwrap().as_bool(), Some(true));
+    let probe = |k: &str| st.get(k).unwrap().as_f64().unwrap();
+    assert_eq!(
+        probe("cache_hits") + probe("cache_misses") + probe("coalesced"),
+        n as f64,
+        "hits + misses + coalesced must equal admitted DSE requests"
+    );
+    assert_eq!(probe("cache_misses"), 1.0);
+    assert_eq!(probe("evictions"), 0.0);
+    assert!(probe("cache_entries") >= 1.0);
+    assert!(probe("cache_bytes") > 0.0);
+    handle.shutdown();
+}
+
+/// A tiny `--cache-entries` bound: LRU eviction keeps the hot keys,
+/// drops the cold one, and an evicted key misses again.
+#[test]
+fn tiny_cache_evicts_lru_and_misses_again() {
+    let handle = spawn_cpu_server(
+        1,
+        ServeConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+            max_queue: 64,
+            cache_entries: 2,
+            cache_shards: 1, // one shard so the 2-entry bound is exact
+            ..Default::default()
+        },
+    );
+    let stream = TcpStream::connect(handle.addr).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    let mut r = BufReader::new(stream);
+    let mut send = |lo: &str| {
+        let req = format!(
+            r#"{{"net":[32,32,32,32,3,3],"lo":{lo},"po":2.0}}"#
+        );
+        w.write_all(req.as_bytes()).unwrap();
+        w.write_all(b"\n").unwrap();
+        let mut line = String::new();
+        assert!(r.read_line(&mut line).unwrap() > 0);
+        let v = Json::parse(line.trim()).unwrap();
+        assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true));
+    };
+    send("0.01"); // K1 miss  -> {K1}
+    send("0.011"); // K2 miss -> {K1, K2}
+    send("0.01"); // K1 hit (K2 becomes LRU)
+    send("0.012"); // K3 miss -> evicts K2 -> {K1, K3}
+    send("0.012"); // K3 hit (K1 becomes LRU)
+    send("0.011"); // K2 MISSES again -> evicts K1
+    let (hits, misses, _, evictions) = handle.cache_stats();
+    assert_eq!(misses, 4, "K1, K2, K3, then the evicted K2 again");
+    assert_eq!(hits, 2);
+    assert_eq!(evictions, 2, "K2 then K1");
+    let (_, items) = handle.stats();
+    assert_eq!(items, 4, "only the misses reached the workers");
+    handle.shutdown();
+}
+
+/// Graceful drain with dedup waiters parked on an in-flight key: the
+/// drain flushes the leader's batch, the worker-side publish feeds
+/// every waiter, and all connections get the same successful reply.
+#[test]
+fn shutdown_drains_parked_dedup_waiters() {
+    // one worker and a very long max_wait: the leader's 1-item batch
+    // sits collecting until close() forces the drain flush
+    let handle = spawn_cpu_server(
+        1,
+        ServeConfig {
+            max_batch: 8,
+            max_wait: Duration::from_secs(60),
+            max_queue: 64,
+            ..Default::default()
+        },
+    );
+    let addr = handle.addr;
+    let req = r#"{"net":[32,32,32,32,3,3],"lo":0.03,"po":2.0,"id":4}"#;
+    let mut conns = Vec::new();
+    for _ in 0..4 {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(30)))
+            .unwrap();
+        let mut w = stream.try_clone().unwrap();
+        w.write_all(req.as_bytes()).unwrap();
+        w.write_all(b"\n").unwrap();
+        conns.push((w, BufReader::new(stream)));
+        // first connection leads; give each write time to land so the
+        // rest provably park as waiters on the in-flight key
+        std::thread::sleep(Duration::from_millis(150));
+    }
+    let (_, misses, coalesced, _) = handle.cache_stats();
+    assert_eq!(misses, 1, "one leader");
+    assert_eq!(coalesced, 3, "three parked waiters");
+
+    handle.shutdown(); // close -> drain flush -> publish -> join
+
+    let mut lines = Vec::new();
+    for (i, (_w, r)) in conns.iter_mut().enumerate() {
+        let mut line = String::new();
+        assert!(
+            r.read_line(&mut line).unwrap() > 0,
+            "waiter {i}'s reply was dropped by the drain"
+        );
+        let v = Json::parse(line.trim()).unwrap();
+        assert_eq!(
+            v.get("ok").and_then(Json::as_bool),
+            Some(true),
+            "waiter {i}: {line}"
+        );
+        lines.push(line);
+    }
+    for line in &lines {
+        assert_eq!(line, &lines[0], "waiters must all get the same reply");
+    }
+    // the handle was consumed by shutdown(), but the reply metadata
+    // proves the single scan: the drained batch held exactly the
+    // leader's item (the 3 waiters parked on the dedup table instead
+    // of becoming batch items), so every fanned-out reply says so
+    let v = Json::parse(lines[0].trim()).unwrap();
+    assert_eq!(
+        v.get("batch_size").and_then(Json::as_f64),
+        Some(1.0),
+        "exactly one scan for 4 connections"
+    );
 }
 
 #[test]
@@ -406,6 +679,8 @@ fn server_answers_concurrent_clients_and_batches() {
             max_batch: meta.infer_batch,
             max_wait: Duration::from_millis(3),
             max_queue: 256,
+            cache_entries: 0, // hammer repeats keys; see the cpu twin
+            ..Default::default()
         },
     )
     .unwrap();

@@ -65,10 +65,11 @@ fi
 # pipelined in-flight requests each (the new serving path)
 python3 "$HERE/serve_probe.py" 127.0.0.1 "$PORT" 4 8
 
-echo "== loadtest smoke (spawns its own server) =="
+echo "== loadtest smoke (spawns its own server; uniform + zipf keys) =="
 "$BIN" loadtest --model dnnweaver --backend cpu "${SIZES[@]}" \
     --train 64 --test 8 --clients 2,8 --pipeline 1,4 --reqs 8 \
-    --workers 2 --out "$WORK/BENCH_serve_smoke.json"
+    --workers 2 --zipf 1.4 --out "$WORK/BENCH_serve_smoke.json"
 test -s "$WORK/BENCH_serve_smoke.json"
+grep -q "zipf1.4" "$WORK/BENCH_serve_smoke.json"
 
 echo "pipeline smoke OK"

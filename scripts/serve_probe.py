@@ -49,7 +49,9 @@ def get_stats(f):
     stats = resp.get("stats", {})
     for key in ("queue_depth", "items", "batches", "rejected",
                 "batch_occupancy", "queue_us", "workers",
-                "candidates", "scanned"):
+                "candidates", "scanned", "cache_enabled", "cache_hits",
+                "cache_misses", "coalesced", "evictions",
+                "cache_entries", "cache_bytes"):
         assert key in stats, f"stats missing {key!r}: {stats}"
     return stats
 
@@ -142,10 +144,32 @@ def main() -> int:
     sock = connect(host, port)
     stats_after = get_stats(sock.makefile("rw"))
     sock.close()
-    grew = stats_after["items"] - stats_before["items"]
     want = clients * pipeline
-    assert grew >= want, (
-        f"items counter grew by {grew}, expected >= {want}")
+    if stats_after["cache_enabled"]:
+        # every admitted DSE request is classified exactly once:
+        # hits + misses + coalesced == requests admitted this phase
+        classified = lambda s: (  # noqa: E731
+            s["cache_hits"] + s["cache_misses"] + s["coalesced"])
+        grew = classified(stats_after) - classified(stats_before)
+        assert grew == want, (
+            f"cache counters grew by {grew}, expected exactly {want} "
+            f"(hits + misses + coalesced must cover every request)")
+        # only cache misses reach the batch workers
+        if stats_after["rejected"] == 0:
+            assert stats_after["items"] == stats_after["cache_misses"], (
+                f"items {stats_after['items']} != misses "
+                f"{stats_after['cache_misses']} with zero rejections")
+        hot = stats_after["cache_hits"] + stats_after["coalesced"]
+        rate = 100.0 * hot / max(1, classified(stats_after))
+        print(f"cache ok: {stats_after['cache_hits']} hits / "
+              f"{stats_after['cache_misses']} misses / "
+              f"{stats_after['coalesced']} coalesced "
+              f"({rate:.1f}% served without a scan)")
+    else:
+        # cache disabled: every request reaches the workers
+        grew = stats_after["items"] - stats_before["items"]
+        assert grew >= want, (
+            f"items counter grew by {grew}, expected >= {want}")
     occ = stats_after["batch_occupancy"]
     weighted = sum((i + 1) * c for i, c in enumerate(occ))
     assert weighted == stats_after["items"], (
