@@ -283,6 +283,10 @@ fn bench_gemm_microbench(b: &mut Bench) -> anyhow::Result<()> {
 ///   (objectives are unreachable, so the terminal state never fires)
 ///   and bitwise thread parity, while peak engine memory stays
 ///   O(threads x chunk) by construction.
+/// * `dist_im2col_cap250k` — the distributed-selection scaling rows:
+///   the 250k-cap scan through {1, 2, 4} loopback worker processes
+///   (`threads` keys the worker count), parity-checked against the
+///   local engine.
 fn bench_selection_throughput(b: &mut Bench) -> anyhow::Result<()> {
     println!("== selection engine throughput (no artifacts needed) ==");
     let spec = builtin_spec("im2col")?;
@@ -397,6 +401,86 @@ fn bench_selection_throughput(b: &mut Bench) -> anyhow::Result<()> {
         speedups.push(Json::obj(vec![
             ("shape", Json::str(shape)),
             ("speedup_best_vs_1thread", Json::Num(speedup)),
+        ]));
+    }
+
+    // Distributed selection over loopback worker processes (in-process
+    // `serve_worker` instances — the same code `gandse worker` runs):
+    // one coordinator scanning the 250k-cap shape through {1, 2, 4}
+    // workers in 16384-row leases.  The `dist_*` rows key `threads` by
+    // worker count and seed the scaling trajectory that CI diffs
+    // against the floor rows in bench/baseline/BENCH_select.json;
+    // parity with the local engine is asserted at every worker count.
+    {
+        use gandse::model::NetChunkEval;
+        use gandse::select::dist::{run_distributed, serve_worker};
+        let shape = "dist_im2col_cap250k";
+        let cap = 250_000usize;
+        let engine = SelectEngine {
+            threads: 1,
+            cap,
+            chunk: 16_384,
+            ..SelectEngine::default()
+        };
+        let serial = engine
+            .run_chunked(
+                &spec,
+                &small,
+                1e-30,
+                1e-30,
+                NetChunkEval::new(kind, &net, engine.chunk),
+            )
+            .expect("non-empty candidates");
+        let handles: Vec<_> =
+            (0..4).map(|_| serve_worker("127.0.0.1:0").unwrap()).collect();
+        let addrs: Vec<String> =
+            handles.iter().map(|h| h.addr.to_string()).collect();
+        let mut cps_1worker: Option<f64> = None;
+        let mut best_cps = 0f64;
+        for wc in [1usize, 2, 4] {
+            let workers = &addrs[..wc];
+            let mut out = None;
+            b.run(
+                &format!("select_engine/{shape} workers={wc}"),
+                3,
+                cap,
+                || {
+                    let r = run_distributed(
+                        &spec, &small, 1e-30, 1e-30, &net, &engine,
+                        workers,
+                    )
+                    .expect("non-empty candidates");
+                    out = Some(r);
+                },
+            );
+            let out = out.expect("bench ran at least once");
+            assert_eq!(out, serial, "{shape} workers={wc} lost parity");
+            let secs = b.rows.last().expect("bench recorded a row").1;
+            let cps = out.n_enumerated as f64 / secs;
+            if wc == 1 {
+                cps_1worker = Some(cps);
+            }
+            best_cps = best_cps.max(cps);
+            rows.push(Json::obj(vec![
+                ("shape", Json::str(shape)),
+                ("threads", Json::Num(wc as f64)),
+                ("secs", Json::Num(secs)),
+                ("candidates", Json::Num(out.n_enumerated as f64)),
+                ("candidate_space", Json::Num(small.count())),
+                ("cands_per_sec", Json::Num(cps)),
+            ]));
+        }
+        for h in handles {
+            h.shutdown();
+        }
+        let speedup = best_cps / cps_1worker.unwrap_or(best_cps).max(1e-12);
+        println!(
+            "select_engine/{shape}: best speedup {speedup:.2}x over 1 \
+             worker process (loopback)"
+        );
+        speedups.push(Json::obj(vec![
+            ("shape", Json::str(shape)),
+            ("speedup_best_vs_1worker", Json::Num(speedup)),
         ]));
     }
     let doc = Json::obj(vec![

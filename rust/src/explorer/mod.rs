@@ -85,6 +85,13 @@ pub struct Explorer<'a> {
     /// determinism fix; regression-tested in
     /// `tests/server_integration.rs`).
     pub noise_seed: u64,
+    /// Addresses of remote `gandse worker` evaluator processes
+    /// (`host:port`).  Empty (the default) keeps every scan local; set,
+    /// per-request selection routes through the distributed coordinator
+    /// (`select::dist::run_distributed`), which is bitwise-identical to
+    /// the local engine at any worker count and falls back to local
+    /// evaluation when no worker is reachable.
+    pub dist_workers: Vec<String>,
 }
 
 impl<'a> Explorer<'a> {
@@ -116,6 +123,7 @@ impl<'a> Explorer<'a> {
             threshold: DEFAULT_THRESHOLD,
             engine: SelectEngine::default(),
             noise_seed: 0x5EED,
+            dist_workers: Vec::new(),
         })
     }
 
@@ -228,7 +236,12 @@ impl<'a> Explorer<'a> {
             );
         }
         let threads = self.engine.resolved_threads();
-        if reqs.len() < threads.max(2) {
+        // Distributed selection parallelizes *within* a scan across
+        // remote workers; fanning tasks out across local threads on top
+        // would multiply coordinator connections without adding remote
+        // compute, so dist-configured explorers keep the serial
+        // per-task loop (bits are identical either way).
+        if !self.dist_workers.is_empty() || reqs.len() < threads.max(2) {
             // fewer tasks than workers: intra-task sharding wins
             return Ok(reqs
                 .iter()
@@ -271,14 +284,29 @@ impl<'a> Explorer<'a> {
         // estimate of the largest chunk this scan produces — an
         // undersized buffer degrades to NetChunkEval's slab path, it
         // cannot break correctness.
-        let rows_max = (engine.chunk.max(1) as f64)
-            .min(count.max(1.0))
-            .min(engine.cap.max(1) as f64) as usize;
-        let eval =
-            crate::model::NetChunkEval::new(spec.kind, &req.net, rows_max);
-        let out = engine
-            .run_chunked(spec, &cands, req.lo, req.po, eval)
-            .expect("at least one candidate is guaranteed");
+        let out = if self.dist_workers.is_empty() {
+            let rows_max = (engine.chunk.max(1) as f64)
+                .min(count.max(1.0))
+                .min(engine.cap.max(1) as f64) as usize;
+            let eval = crate::model::NetChunkEval::new(
+                spec.kind, &req.net, rows_max,
+            );
+            engine.run_chunked(spec, &cands, req.lo, req.po, eval)
+        } else {
+            // Bitwise-identical to the local engine (see select::dist);
+            // unreachable workers degrade to local evaluation, never to
+            // a different answer.
+            crate::select::dist::run_distributed(
+                spec,
+                &cands,
+                req.lo,
+                req.po,
+                &req.net,
+                engine,
+                &self.dist_workers,
+            )
+        }
+        .expect("at least one candidate is guaranteed");
         let cfg_raw = spec.raw_values(&out.cfg_idx);
         DseResult {
             cfg_idx: out.cfg_idx,

@@ -9,6 +9,8 @@
 //!   loadtest — closed-loop pipelined load generator against a spawned
 //!              or external server; writes BENCH_serve.json
 //!   bench    — regenerate the paper's tables/figures (Table 5, Figs 5-11)
+//!   worker   — run a remote chunk-lease evaluator for distributed
+//!              selection (PROTOCOL.md §4)
 //!   rtl      — Implementation Phase only: emit Verilog for a config
 
 use std::net::ToSocketAddrs;
@@ -43,12 +45,17 @@ COMMANDS
             [--out file.bin] [--show]
   train     --model M [--dataset file.bin] [--epochs E] [--wcritic W]
             [--lr LR] [--mlp] [--ckpt out.ckpt] [--loss-csv out.csv]
+            [--resume c.ckpt] [--train-seed S] [--init-seed S]
+            [--log-every N]
   explore   --model M --ckpt c.ckpt (--net-file f | --lo L --po P
             --ic .. --oc .. --ow .. --oh .. --kw .. --kh ..)
-            [--rtl out.v] [--threshold T] [--threads N] [--cap C]
-            [--chunk K]
+            [--network] [--rtl out.v] [--threshold T] [--threads N]
+            [--cap C] [--chunk K] [--workers host:port,...]
+            (--network selects ONE shared config for all layers;
+             --workers distributes the scan across running
+             `gandse worker` processes — bitwise-identical results)
   eval      --model M --ckpt c.ckpt [--test N] [--threshold T] [--threads N]
-            [--cap C] [--chunk K]
+            [--cap C] [--chunk K] [--workers host:port,...]
             (held-out satisfaction / improvement-ratio / difficulty report)
   serve     --model M --ckpt c.ckpt [--addr 127.0.0.1:7878]
             [--workers 2] [--max-wait-ms 5] [--max-batch B]
@@ -66,8 +73,13 @@ COMMANDS
              throughput multiplier; --fixed-key hammers a single key)
   bench     --exp <table5|fig5|fig67|fig89|fig1011|all> --model M
             [--train N] [--test N] [--epochs E] [--out-dir results/]
-            [--threads N]
-  rtl       --model M --cfg v1,v2,... [--out file.v]
+            [--threads N] [--wcritics W1,W2,...]
+  worker    [--addr 127.0.0.1:7900]
+            (remote chunk-lease evaluator for distributed selection;
+             point explore/eval --workers at one or more of these.
+             --addr with port 0 picks an ephemeral port; the bound
+             address is printed on stdout.  Protocol: PROTOCOL.md)
+  rtl       --model M --cfg v1,v2,... [--out file.v] [--tb tb.v]
 
 COMMON
   --backend <cpu|pjrt>  execution backend for train/explore/eval/serve/
@@ -109,6 +121,7 @@ fn main() {
         "serve" => cmd_serve(&args),
         "loadtest" => cmd_loadtest(&args),
         "bench" => cmd_bench(&args),
+        "worker" => cmd_worker(&args),
         "rtl" => cmd_rtl(&args),
         _ => {
             eprintln!("{USAGE}");
@@ -158,6 +171,22 @@ fn engine_from_args(args: &Args) -> Result<SelectEngine> {
         chunk => chunk,
     };
     Ok(e)
+}
+
+/// `--workers host:port,...` on explore/eval: remote evaluator addresses
+/// for distributed selection (empty → all scans stay local).  Note this
+/// is a different knob from serve/loadtest's `--workers N` thread count —
+/// the subcommands do not overlap.
+fn dist_workers_from_args(args: &Args) -> Vec<String> {
+    args.get("workers")
+        .map(|s| {
+            s.split(',')
+                .map(str::trim)
+                .filter(|a| !a.is_empty())
+                .map(str::to_string)
+                .collect()
+        })
+        .unwrap_or_default()
 }
 
 /// `artifacts/meta.json` when present (the artifact contract wins);
@@ -296,6 +325,7 @@ fn cmd_explore(args: &Args) -> Result<()> {
     )?;
     ex.threshold = args.get_f32("threshold", 0.2)?;
     ex.engine = engine_from_args(args)?;
+    ex.dist_workers = dist_workers_from_args(args);
 
     let lo = args.get_f32("lo", 0.0)?;
     let po = args.get_f32("po", 0.0)?;
@@ -391,6 +421,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
     )?;
     ex.threshold = args.get_f32("threshold", 0.2)?;
     ex.engine = engine_from_args(args)?;
+    ex.dist_workers = dist_workers_from_args(args);
     args.reject_unknown()?;
 
     let t0 = std::time::Instant::now();
@@ -848,6 +879,20 @@ fn cmd_bench(args: &Args) -> Result<()> {
             &harness::fig1011_csv(&results),
         )?;
     }
+    Ok(())
+}
+
+/// Remote chunk-lease evaluator for distributed selection.  Runs until
+/// killed; the coordinator (explore/eval `--workers`) connects, leases
+/// chunk ranges, and merges the replies in candidate order, so killing a
+/// worker mid-scan only costs a re-lease — never changes the result.
+fn cmd_worker(args: &Args) -> Result<()> {
+    let addr = args.get_or("addr", "127.0.0.1:7900");
+    args.reject_unknown()?;
+    let h = gandse::select::dist::serve_worker(&addr)?;
+    // Parsed by scripts/tests to learn the ephemeral port — keep stable.
+    println!("gandse worker listening on {}", h.addr);
+    h.run_forever();
     Ok(())
 }
 

@@ -208,6 +208,21 @@ impl NetChunkEval {
         }
         NetChunkEval { kind, nets }
     }
+
+    /// True when this evaluator was built for exactly `kind` and `net`
+    /// (compared **bitwise** — the distributed purity contract keys on
+    /// exact f32 bit patterns, see PROTOCOL.md) with a replicated-net
+    /// buffer of at least `rows` rows.  The remote worker uses this to
+    /// reuse one evaluator across the consecutive leases of a scan
+    /// instead of rebuilding the `[max_rows, 6]` buffer per chunk.
+    pub fn covers(&self, kind: ModelKind, net: &[f32; N_NET], rows: usize) -> bool {
+        self.kind == kind
+            && self.nets.len() / N_NET >= rows.max(1)
+            && self.nets[..N_NET]
+                .iter()
+                .zip(net.iter())
+                .all(|(a, b)| a.to_bits() == b.to_bits())
+    }
 }
 
 impl crate::select::ChunkEval for NetChunkEval {

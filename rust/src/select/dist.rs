@@ -1,0 +1,1092 @@
+//! Distributed selection: chunk-lease coordinator + remote evaluator
+//! workers (DESIGN.md §8, PROTOCOL.md §4).
+//!
+//! Scales the streaming engine's chunked round-robin + in-order-merge
+//! design across **processes**: `gandse worker` runs [`serve_worker`] —
+//! a stateless evaluator that accepts chunk-range *leases* over the
+//! same line-JSON TCP framing the DSE server speaks, evaluates them
+//! through [`NetChunkEval`], and streams the per-chunk objective
+//! vectors back — while [`run_distributed`] plays the coordinator:
+//! fetcher threads (one per worker address) lease chunks round-robin
+//! exactly like the local streaming scan's workers, and the caller's
+//! thread replays every chunk strictly in candidate order through the
+//! one sequential [`Selector`].
+//!
+//! # The bitwise contract, cluster-wide
+//!
+//! Every f32 on the wire travels as its IEEE-754 bit pattern (a JSON
+//! integer — exact, NaN/Inf-safe, no decimal formatting anywhere), so
+//! the worker evaluates bit-for-bit the rows the coordinator would have
+//! built locally, with the identical [`fill_chunk`] enumeration and the
+//! identical [`ModelKind::eval_batch`] f32 operations.  The merge is
+//! the same code shape as the local streaming merge (same round-robin
+//! channel cycling, same [`CHUNKS_IN_FLIGHT`] lookahead bound, same
+//! early-exit cancel + drain), so a distributed scan returns the same
+//! bits as `SelectEngine::run_chunked` at any worker count — including
+//! `n_enumerated`, because the terminal-state check runs on the same
+//! offer sequence.
+//!
+//! # Failure semantics
+//!
+//! Leases are **stateless** (model + net bits + kept choice values +
+//! `[start, end)`) and evaluation is **pure**, so re-evaluating a chunk
+//! anywhere is always safe.  A fetcher whose connection dies (EOF,
+//! timeout, refused, bad reply) re-leases the chunk to the other
+//! configured addresses in round-robin order, and as a last resort
+//! evaluates it **locally** — a distributed scan therefore cannot fail
+//! for a valid configuration, it only degrades toward local compute.
+//! Early exit cancels outstanding leases by dropping the connections;
+//! workers discard the dead socket and keep serving others.
+
+use std::io::{self, Write as _};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use crate::model::{ModelKind, NetChunkEval};
+use crate::select::{
+    fill_chunk, CandidateCursor, Candidates, ChunkEval, SelectEngine,
+    SelectOutcome, Selector, CHUNKS_IN_FLIGHT,
+};
+use crate::server::{read_bounded_line, LineRead, MAX_LINE_BYTES};
+use crate::space::{ConfigGroup, SpaceSpec, N_NET};
+use crate::util::json::Json;
+
+/// Wire-protocol version spoken by both sides (PROTOCOL.md §5).
+/// Changes within a version are additive only (unknown fields are
+/// ignored); anything else bumps the number, and a coordinator treats a
+/// mismatched worker exactly like a dead one.
+pub const PROTO_VERSION: u64 = 1;
+
+/// Hard cap on rows per lease.  Bounds a worker's per-lease memory and
+/// keeps the largest possible reply line (`2 * rows` u32 bit patterns,
+/// ≤ 10 digits + comma each) safely under [`MAX_REPLY_LINE_BYTES`].
+pub const MAX_LEASE_ROWS: usize = 524_288;
+
+/// Bound on one reply line at the coordinator (a 524288-row lease
+/// replies with ~11.5 MB of JSON).  Lease lines stay under the server's
+/// shared 64 KiB bound — kept sets are a few dozen numbers.
+pub const MAX_REPLY_LINE_BYTES: usize = 16 * 1024 * 1024;
+
+/// Largest candidate ordinal that is exact as a JSON number (f64).
+/// Scans past this stay on the local engine (which handles them fine);
+/// the worker rejects leases beyond it.
+const MAX_EXACT_ORDINAL: u128 = 1 << 53;
+
+/// Coordinator-side networking knobs (library callers and tests;
+/// the CLI uses the defaults).
+#[derive(Debug, Clone, Copy)]
+pub struct DistOptions {
+    /// Per-address TCP connect budget before trying the next address.
+    pub connect_timeout: Duration,
+    /// Read/write budget per lease round trip.  Must exceed the
+    /// worst-case chunk evaluation time on a loaded worker; on expiry
+    /// the chunk is re-leased (re-evaluation is safe — results are
+    /// pure), so a hung worker costs one timeout, not the scan.
+    pub io_timeout: Duration,
+}
+
+impl Default for DistOptions {
+    fn default() -> DistOptions {
+        DistOptions {
+            connect_timeout: Duration::from_secs(2),
+            io_timeout: Duration::from_secs(10),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator
+// ---------------------------------------------------------------------------
+
+/// Distributed Algorithm-2 scan over `workers` (addresses of running
+/// `gandse worker` processes) with default [`DistOptions`].
+///
+/// Bitwise-identical to `engine.run_chunked(spec, cands, lo, po,
+/// NetChunkEval::new(spec.kind, net, …))` at any worker count — see the
+/// module docs for why.  An empty `workers` slice falls back to the
+/// local engine unchanged.
+pub fn run_distributed(
+    spec: &SpaceSpec,
+    cands: &Candidates,
+    lo: f32,
+    po: f32,
+    net: &[f32; N_NET],
+    engine: &SelectEngine,
+    workers: &[String],
+) -> Option<SelectOutcome> {
+    run_distributed_with(
+        spec,
+        cands,
+        lo,
+        po,
+        net,
+        engine,
+        workers,
+        &DistOptions::default(),
+    )
+}
+
+/// [`run_distributed`] with explicit networking options.
+#[allow(clippy::too_many_arguments)]
+pub fn run_distributed_with(
+    spec: &SpaceSpec,
+    cands: &Candidates,
+    lo: f32,
+    po: f32,
+    net: &[f32; N_NET],
+    engine: &SelectEngine,
+    workers: &[String],
+    opts: &DistOptions,
+) -> Option<SelectOutcome> {
+    if cands.kept.len() != spec.groups.len()
+        || cands.kept.iter().any(|ks| ks.is_empty())
+    {
+        return None;
+    }
+    let total = cands.count();
+    let n = if total < engine.cap as f64 {
+        total as usize
+    } else {
+        engine.cap
+    };
+    if n == 0 {
+        return None;
+    }
+    // Zero-worker fallback, and the ordinal-exactness guard: candidate
+    // ordinals travel as JSON numbers (f64), exact only below 2^53.
+    if workers.is_empty() || n as u128 > MAX_EXACT_ORDINAL {
+        let rows_max = engine.chunk.max(1).min(n);
+        let eval = NetChunkEval::new(spec.kind, net, rows_max);
+        return engine.run_chunked(spec, cands, lo, po, eval);
+    }
+    let chunk = engine.chunk.max(1).min(MAX_LEASE_ROWS);
+    let n_chunks = n / chunk + usize::from(n % chunk != 0);
+    // One fetcher per worker address (capped by the chunk count):
+    // fetcher k leases chunks k, k+W, k+2W, … — the same round-robin
+    // assignment as the local streaming scan's threads.
+    let slots = workers.len().min(n_chunks).max(1);
+    let tpl = LeaseTemplate::new(spec, cands, net);
+    let kept = &cands.kept;
+    let groups = &spec.groups;
+    let cancel = AtomicBool::new(false);
+    let (sel, offered) = std::thread::scope(|s| {
+        let mut chans = Vec::with_capacity(slots);
+        for k in 0..slots {
+            let (tx, rx) =
+                mpsc::sync_channel::<Vec<(f32, f32)>>(CHUNKS_IN_FLIGHT);
+            let (rec_tx, rec_rx) =
+                mpsc::sync_channel::<Vec<(f32, f32)>>(CHUNKS_IN_FLIGHT + 2);
+            let cancel = &cancel;
+            let tpl = &tpl;
+            s.spawn(move || {
+                let mut f = Fetcher {
+                    slot: k,
+                    addrs: workers,
+                    opts,
+                    tpl,
+                    kept,
+                    groups,
+                    kind: spec.kind,
+                    net,
+                    max_rows: chunk.min(n),
+                    conn: None,
+                    local: None,
+                    warned_local: false,
+                };
+                let mut cj = k;
+                while cj < n_chunks {
+                    if cancel.load(Ordering::Relaxed) {
+                        break; // merger proved no later candidate wins
+                    }
+                    let start = cj * chunk;
+                    let end = (start + chunk).min(n);
+                    let mut out = rec_rx.try_recv().unwrap_or_default();
+                    f.eval_range(start, end, &mut out);
+                    if tx.send(out).is_err() {
+                        break; // merger is gone (early exit)
+                    }
+                    cj += slots;
+                }
+                // Dropping `f.conn` closes the socket: that is the
+                // lease-cancellation rule — the worker sees EOF/EPIPE
+                // and discards the connection (PROTOCOL.md §4.4).
+            });
+            chans.push((rx, rec_tx));
+        }
+
+        // The identical deterministic in-order merge as the local
+        // streaming scan: chunk j comes off channel j % slots, each
+        // channel delivers its fetcher's chunks in ascending order, so
+        // cycling the channels replays the global enumeration order
+        // through one sequential Selector.
+        let mut sel = Selector::new(lo, po);
+        let mut i = 0usize;
+        let mut stopped = false;
+        for j in 0..n_chunks {
+            let (rx, rec_tx) = &chans[j % slots];
+            let Ok(buf) = rx.recv() else {
+                break; // producer cancelled (early exit already seen)
+            };
+            if !stopped {
+                for &(l, p) in buf.iter() {
+                    sel.offer(i, l, p);
+                    i += 1;
+                    if sel.is_terminal() {
+                        stopped = true;
+                        cancel.store(true, Ordering::Relaxed);
+                        break;
+                    }
+                }
+            }
+            let _ = rec_tx.try_send(buf); // producer may be done
+        }
+        // Unconditional drain so producers blocked mid-send can exit
+        // (same as the local merge).
+        for (rx, _) in &chans {
+            while rx.recv().is_ok() {}
+        }
+        (sel, i)
+    });
+    let (ordinal, l_opt, p_opt) = sel.result()?;
+    let mut cur = cands.cursor();
+    cur.skip_to(ordinal as u128);
+    Some(SelectOutcome {
+        ordinal,
+        cfg_idx: cur.current().to_vec(),
+        latency: l_opt,
+        power: p_opt,
+        n_enumerated: offered,
+    })
+}
+
+/// The constant prefix of every lease line of one scan (kept choice
+/// values, model, net — all f32s as bit patterns), pre-serialized once;
+/// per-chunk lines append only `start`/`end`.
+struct LeaseTemplate {
+    prefix: String,
+}
+
+impl LeaseTemplate {
+    fn new(
+        spec: &SpaceSpec,
+        cands: &Candidates,
+        net: &[f32; N_NET],
+    ) -> LeaseTemplate {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        s.push_str("{\"lease\":{\"kept\":[");
+        for (gi, (ks, g)) in
+            cands.kept.iter().zip(&spec.groups).enumerate()
+        {
+            if gi > 0 {
+                s.push(',');
+            }
+            s.push('[');
+            for (i, &ci) in ks.iter().enumerate() {
+                if i > 0 {
+                    s.push(',');
+                }
+                let _ = write!(s, "{}", g.choices[ci].to_bits());
+            }
+            s.push(']');
+        }
+        s.push_str("],\"model\":");
+        let _ = write!(s, "{}", Json::str(spec.kind.name()));
+        s.push_str(",\"net\":[");
+        for (i, v) in net.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            let _ = write!(s, "{}", v.to_bits());
+        }
+        let _ = write!(s, "],\"proto\":{PROTO_VERSION},");
+        LeaseTemplate { prefix: s }
+    }
+
+    fn lease_line(&self, start: usize, end: usize) -> String {
+        format!("{}\"start\":{start},\"end\":{end}}}}}", self.prefix)
+    }
+}
+
+/// Local (coordinator-side) evaluation state, built lazily by a fetcher
+/// the first time every configured worker is unreachable.
+struct LocalEval<'a> {
+    cur: CandidateCursor<'a>,
+    eval: NetChunkEval,
+    cfgs: Vec<f32>,
+}
+
+/// One coordinator fetcher: owns (at most) one worker connection and
+/// delivers its round-robin share of chunks, in order, whatever fails.
+struct Fetcher<'a> {
+    slot: usize,
+    addrs: &'a [String],
+    opts: &'a DistOptions,
+    tpl: &'a LeaseTemplate,
+    kept: &'a [Vec<usize>],
+    groups: &'a [ConfigGroup],
+    kind: ModelKind,
+    net: &'a [f32; N_NET],
+    /// Rows of the largest lease this scan produces (buffer sizing).
+    max_rows: usize,
+    conn: Option<WireConn>,
+    local: Option<LocalEval<'a>>,
+    warned_local: bool,
+}
+
+impl<'a> Fetcher<'a> {
+    /// Evaluate candidates `[start, end)` into `out`, by remote lease
+    /// if at all possible, locally as the last resort.  Infallible:
+    /// evaluation is pure, so every route yields identical bits.
+    fn eval_range(
+        &mut self,
+        start: usize,
+        end: usize,
+        out: &mut Vec<(f32, f32)>,
+    ) {
+        let line = self.tpl.lease_line(start, end);
+        let rows = end - start;
+        // 1. The connection this fetcher already holds.
+        let mut conn_err: Option<io::Error> = None;
+        if let Some(c) = self.conn.as_mut() {
+            match c.round_trip(&line, rows, out) {
+                Ok(()) => return,
+                Err(e) => conn_err = Some(e),
+            }
+        }
+        if let Some(e) = conn_err {
+            let addr = self
+                .conn
+                .take()
+                .map(|c| c.addr)
+                .unwrap_or_default();
+            eprintln!(
+                "[gandse] dist: worker {addr} failed mid-scan ({e}); \
+                 re-leasing candidates {start}..{end}"
+            );
+        }
+        // 2. (Re)connect: every configured address once, preferred
+        // (slot-th) address first so healthy configurations pin one
+        // fetcher per worker.
+        for i in 0..self.addrs.len() {
+            let a = &self.addrs[(self.slot + i) % self.addrs.len()];
+            let Ok(mut c) = WireConn::connect(a, self.opts) else {
+                continue;
+            };
+            if c.round_trip(&line, rows, out).is_ok() {
+                self.conn = Some(c);
+                return;
+            }
+        }
+        // 3. Local fallback.
+        if !self.warned_local {
+            self.warned_local = true;
+            eprintln!(
+                "[gandse] dist: no worker reachable; evaluating \
+                 candidates {start}..{end} locally (results are pure — \
+                 bits are unchanged)"
+            );
+        }
+        self.eval_local(start, end, out);
+    }
+
+    fn eval_local(
+        &mut self,
+        start: usize,
+        end: usize,
+        out: &mut Vec<(f32, f32)>,
+    ) {
+        let (kept, kind, net, max_rows, gl) = (
+            self.kept,
+            self.kind,
+            self.net,
+            self.max_rows,
+            self.groups.len(),
+        );
+        let lf = self.local.get_or_insert_with(|| LocalEval {
+            cur: CandidateCursor::new(kept),
+            eval: NetChunkEval::new(kind, net, max_rows),
+            cfgs: vec![0f32; max_rows * gl],
+        });
+        let rows = end - start;
+        if !lf.cur.skip_to(start as u128) {
+            out.clear();
+            return; // unreachable while start < n <= count
+        }
+        fill_chunk(
+            &mut lf.cur,
+            self.groups,
+            &mut lf.cfgs[..rows * gl],
+            rows,
+            rows,
+        );
+        lf.eval.eval_chunk(&lf.cfgs[..rows * gl], rows, out);
+    }
+}
+
+/// One framed line-JSON connection to a worker, version-checked at
+/// connect time.
+struct WireConn {
+    addr: String,
+    r: io::BufReader<TcpStream>,
+    w: TcpStream,
+    buf: Vec<u8>,
+}
+
+impl WireConn {
+    fn connect(addr: &str, opts: &DistOptions) -> io::Result<WireConn> {
+        let sa = addr.to_socket_addrs()?.next().ok_or_else(|| {
+            io::Error::new(
+                io::ErrorKind::InvalidInput,
+                format!("unresolvable worker address {addr:?}"),
+            )
+        })?;
+        let stream = TcpStream::connect_timeout(&sa, opts.connect_timeout)?;
+        // Small request line + reply ping-pong, same as the DSE server:
+        // Nagle + delayed ACK would add ~40-90 ms per lease.
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(opts.io_timeout))?;
+        stream.set_write_timeout(Some(opts.io_timeout))?;
+        let w = stream.try_clone()?;
+        let mut c = WireConn {
+            addr: addr.to_string(),
+            r: io::BufReader::new(stream),
+            w,
+            buf: Vec::new(),
+        };
+        // Version handshake (PROTOCOL.md §5): a worker speaking another
+        // proto is treated exactly like a dead one.
+        c.send_line("{\"hello\":true}")?;
+        let v = c.recv_json()?;
+        let proto = v.get("proto").and_then(Json::as_f64).unwrap_or(0.0);
+        if v.get("ok").and_then(Json::as_bool) != Some(true)
+            || proto != PROTO_VERSION as f64
+        {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("peer speaks proto {proto}, need {PROTO_VERSION}"),
+            ));
+        }
+        Ok(c)
+    }
+
+    fn send_line(&mut self, line: &str) -> io::Result<()> {
+        self.w.write_all(line.as_bytes())?;
+        self.w.write_all(b"\n")
+    }
+
+    fn recv_json(&mut self) -> io::Result<Json> {
+        match read_bounded_line(
+            &mut self.r,
+            &mut self.buf,
+            MAX_REPLY_LINE_BYTES,
+        )? {
+            LineRead::Line => {}
+            LineRead::Eof => {
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "worker closed the connection",
+                ))
+            }
+            LineRead::TooLong => {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    "oversized worker reply",
+                ))
+            }
+        }
+        let s = std::str::from_utf8(&self.buf).map_err(|_| {
+            io::Error::new(io::ErrorKind::InvalidData, "non-utf8 reply")
+        })?;
+        Json::parse(s).map_err(|e| {
+            io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("bad reply json: {e}"),
+            )
+        })
+    }
+
+    /// One lease round trip: send the line, decode `rows` objective
+    /// pairs from the reply's bit-pattern array into `out`.
+    fn round_trip(
+        &mut self,
+        lease_line: &str,
+        rows: usize,
+        out: &mut Vec<(f32, f32)>,
+    ) -> io::Result<()> {
+        self.send_line(lease_line)?;
+        let v = self.recv_json()?;
+        if v.get("ok").and_then(Json::as_bool) != Some(true) {
+            let msg = v
+                .get("error")
+                .and_then(Json::as_str)
+                .unwrap_or("unknown worker error");
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("worker rejected lease: {msg}"),
+            ));
+        }
+        let objs = v.get("objs").and_then(Json::as_arr).ok_or_else(|| {
+            io::Error::new(
+                io::ErrorKind::InvalidData,
+                "reply missing objs array",
+            )
+        })?;
+        if objs.len() != rows * 2 {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!(
+                    "reply has {} objective values, want {}",
+                    objs.len(),
+                    rows * 2
+                ),
+            ));
+        }
+        out.clear();
+        out.reserve(rows);
+        let mut it = objs.iter();
+        while let (Some(l), Some(p)) = (it.next(), it.next()) {
+            let lb = bits_u32(l).map_err(invalid_data)?;
+            let pb = bits_u32(p).map_err(invalid_data)?;
+            out.push((f32::from_bits(lb), f32::from_bits(pb)));
+        }
+        Ok(())
+    }
+}
+
+fn invalid_data(msg: String) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg)
+}
+
+/// Decode one f32 bit pattern: a JSON integer in `0..=u32::MAX`
+/// (u32 < 2^53, so the f64 round trip is exact).
+fn bits_u32(v: &Json) -> Result<u32, String> {
+    let f = v
+        .as_f64()
+        .ok_or_else(|| "expected a bit-pattern number".to_string())?;
+    if f.fract() != 0.0 || !(0.0..=u32::MAX as f64).contains(&f) {
+        return Err(format!("bad f32 bit pattern {f}"));
+    }
+    Ok(f as u32)
+}
+
+/// Decode a nonnegative integer that must be exact as f64 (< 2^53).
+fn exact_u64(v: &Json, what: &str) -> Result<u64, String> {
+    let f = v
+        .as_f64()
+        .ok_or_else(|| format!("{what}: expected a number"))?;
+    if f.fract() != 0.0 || f < 0.0 || f > MAX_EXACT_ORDINAL as f64 {
+        return Err(format!("{what}: {f} is not an exact ordinal"));
+    }
+    Ok(f as u64)
+}
+
+// ---------------------------------------------------------------------------
+// Worker
+// ---------------------------------------------------------------------------
+
+/// Handle to a running evaluator worker (tests, benches, embedding).
+pub struct WorkerHandle {
+    pub addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    acceptor: Option<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerHandle {
+    /// Stop accepting new connections and join the acceptor.  Existing
+    /// connections are serviced by detached threads that exit when
+    /// their coordinator hangs up.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // The acceptor blocks in accept(); connect once to unblock it.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
+    }
+
+    /// Block until the acceptor exits.  It only exits after
+    /// [`WorkerHandle::shutdown`], so a foreground `gandse worker`
+    /// process parks here until it is killed.
+    pub fn run_forever(mut self) {
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
+    }
+}
+
+/// Start a chunk-lease evaluator worker on `addr` (e.g.
+/// `"127.0.0.1:0"` for an ephemeral port).  Thread per connection; each
+/// connection handles its leases strictly in arrival order (which is
+/// what lets the coordinator read replies without ids — PROTOCOL.md
+/// §4.2).  Workers are stateless across connections: every lease
+/// carries everything needed to evaluate it, which is what makes
+/// re-leasing a dead worker's chunk to any other worker safe.
+pub fn serve_worker(addr: &str) -> io::Result<WorkerHandle> {
+    let listener = TcpListener::bind(addr)?;
+    let local = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let acceptor = {
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            for stream in listener.incoming() {
+                if stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(stream) = stream else { continue };
+                let _ = stream.set_nodelay(true);
+                std::thread::spawn(move || handle_conn(stream));
+            }
+        })
+    };
+    Ok(WorkerHandle { addr: local, stop, acceptor: Some(acceptor) })
+}
+
+/// Per-connection evaluation scratch, reused across leases: the
+/// evaluator survives as long as consecutive leases share (model, net)
+/// bits ([`NetChunkEval::covers`]), which holds for all leases of one
+/// scan.
+#[derive(Default)]
+struct LeaseScratch {
+    eval: Option<NetChunkEval>,
+    cfgs: Vec<f32>,
+    objs: Vec<(f32, f32)>,
+}
+
+fn handle_conn(stream: TcpStream) {
+    let Ok(write_half) = stream.try_clone() else { return };
+    let mut w = io::BufWriter::new(write_half);
+    let mut r = io::BufReader::new(stream);
+    let mut buf = Vec::new();
+    let mut sc = LeaseScratch::default();
+    loop {
+        match read_bounded_line(&mut r, &mut buf, MAX_LINE_BYTES) {
+            Ok(LineRead::Line) => {}
+            Ok(LineRead::Eof) | Err(_) => return,
+            Ok(LineRead::TooLong) => {
+                // The stream is mid-line; reply once and hang up (the
+                // same rule as the DSE server).
+                let _ = writeln!(
+                    w,
+                    "{}",
+                    err_reply("lease line exceeds the 64 KiB bound")
+                );
+                let _ = w.flush();
+                return;
+            }
+        }
+        let line = String::from_utf8_lossy(&buf);
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let reply = match handle_line(line, &mut sc) {
+            Ok(s) => s,
+            Err(msg) => err_reply(&msg),
+        };
+        if writeln!(w, "{reply}").is_err() || w.flush().is_err() {
+            return; // coordinator hung up (early exit / re-lease)
+        }
+    }
+}
+
+fn err_reply(msg: &str) -> String {
+    Json::obj(vec![
+        ("error", Json::str(msg)),
+        ("ok", Json::Bool(false)),
+    ])
+    .to_string()
+}
+
+fn hello_reply() -> String {
+    Json::obj(vec![
+        (
+            "models",
+            Json::Arr(
+                ModelKind::ALL
+                    .iter()
+                    .map(|k| Json::str(k.name()))
+                    .collect(),
+            ),
+        ),
+        ("ok", Json::Bool(true)),
+        ("proto", Json::Num(PROTO_VERSION as f64)),
+        ("service", Json::str("gandse-worker")),
+    ])
+    .to_string()
+}
+
+fn handle_line(line: &str, sc: &mut LeaseScratch) -> Result<String, String> {
+    let v = Json::parse(line).map_err(|e| format!("bad json: {e}"))?;
+    if v.get("hello").and_then(Json::as_bool) == Some(true) {
+        return Ok(hello_reply());
+    }
+    let lease = v
+        .get("lease")
+        .ok_or("expected a \"hello\" or \"lease\" message")?;
+    let (kind, net, kept_vals, start, end) = decode_lease(lease)?;
+    let rows = (end - start) as usize;
+    let gl = kept_vals.len();
+
+    // Rebuild the coordinator's kept sub-space: synthetic groups whose
+    // choice lists are exactly the kept values, with identity kept
+    // indices — candidate ordinal i of this space is candidate ordinal
+    // i of the coordinator's, and fill_chunk emits identical rows.
+    let groups: Vec<ConfigGroup> = kept_vals
+        .into_iter()
+        .enumerate()
+        .map(|(i, choices)| ConfigGroup { name: format!("g{i}"), choices })
+        .collect();
+    let kept_idx: Vec<Vec<usize>> =
+        groups.iter().map(|g| (0..g.choices.len()).collect()).collect();
+    let mut cur = CandidateCursor::new(&kept_idx);
+    if !cur.skip_to(start as u128) {
+        return Err(format!("start {start} is past the leased space"));
+    }
+    if sc.cfgs.len() < rows * gl {
+        sc.cfgs.resize(rows * gl, 0.0);
+    }
+    fill_chunk(&mut cur, &groups, &mut sc.cfgs[..rows * gl], rows, rows);
+
+    let reuse = sc
+        .eval
+        .as_ref()
+        .is_some_and(|e| e.covers(kind, &net, rows));
+    if !reuse {
+        sc.eval = Some(NetChunkEval::new(kind, &net, rows.max(1)));
+    }
+    let eval = sc.eval.as_ref().expect("just installed");
+    eval.eval_chunk(&sc.cfgs[..rows * gl], rows, &mut sc.objs);
+    if sc.objs.len() != rows {
+        return Err(format!(
+            "model produced {} rows for a {rows}-row lease",
+            sc.objs.len()
+        ));
+    }
+    Ok(ok_reply(&sc.objs))
+}
+
+type LeaseFields = (ModelKind, [f32; N_NET], Vec<Vec<f32>>, u64, u64);
+
+fn decode_lease(lease: &Json) -> Result<LeaseFields, String> {
+    let proto = exact_u64(
+        lease.get("proto").ok_or("lease missing proto")?,
+        "proto",
+    )?;
+    if proto != PROTO_VERSION {
+        return Err(format!(
+            "unsupported proto {proto} (this worker speaks \
+             {PROTO_VERSION})"
+        ));
+    }
+    let name = lease
+        .get("model")
+        .and_then(Json::as_str)
+        .ok_or("lease missing model")?;
+    let kind = ModelKind::from_name(name).map_err(|e| e.to_string())?;
+    let net_arr = lease
+        .get("net")
+        .and_then(Json::as_arr)
+        .ok_or("lease missing net")?;
+    if net_arr.len() != N_NET {
+        return Err(format!(
+            "net has {} values, want {N_NET}",
+            net_arr.len()
+        ));
+    }
+    let mut net = [0f32; N_NET];
+    for (dst, v) in net.iter_mut().zip(net_arr) {
+        *dst = f32::from_bits(bits_u32(v)?);
+    }
+    let kept_arr = lease
+        .get("kept")
+        .and_then(Json::as_arr)
+        .ok_or("lease missing kept")?;
+    if kept_arr.len() != kind.cfg_len() {
+        return Err(format!(
+            "kept has {} groups, model {name} wants {}",
+            kept_arr.len(),
+            kind.cfg_len()
+        ));
+    }
+    let mut kept_vals = Vec::with_capacity(kept_arr.len());
+    let mut size: u128 = 1;
+    for g in kept_arr {
+        let bits =
+            g.as_arr().ok_or("kept groups must be arrays")?;
+        if bits.is_empty() {
+            return Err("kept group with no choices".to_string());
+        }
+        let mut vals = Vec::with_capacity(bits.len());
+        for b in bits {
+            vals.push(f32::from_bits(bits_u32(b)?));
+        }
+        size = size.saturating_mul(vals.len() as u128);
+        kept_vals.push(vals);
+    }
+    let start =
+        exact_u64(lease.get("start").ok_or("lease missing start")?, "start")?;
+    let end =
+        exact_u64(lease.get("end").ok_or("lease missing end")?, "end")?;
+    if start >= end {
+        return Err(format!("empty lease range {start}..{end}"));
+    }
+    if (end - start) as usize > MAX_LEASE_ROWS {
+        return Err(format!(
+            "lease of {} rows exceeds the {MAX_LEASE_ROWS}-row cap",
+            end - start
+        ));
+    }
+    if end as u128 > size {
+        return Err(format!(
+            "lease end {end} is past the {size}-candidate space"
+        ));
+    }
+    Ok((kind, net, kept_vals, start, end))
+}
+
+/// Success reply, hand-serialized: `objs` is ~2 numbers per row, so the
+/// generic `Json` tree (one boxed enum per number) would dominate the
+/// worker's allocation profile.
+fn ok_reply(objs: &[(f32, f32)]) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::with_capacity(32 + objs.len() * 22);
+    s.push_str("{\"objs\":[");
+    for (i, &(l, p)) in objs.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        let _ = write!(s, "{},{}", l.to_bits(), p.to_bits());
+    }
+    let _ = write!(s, "],\"ok\":true,\"rows\":{}}}", objs.len());
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::space::builtin_spec;
+
+    fn spec_and_cands() -> (SpaceSpec, Candidates) {
+        let spec = builtin_spec("dnnweaver").unwrap();
+        // keep every choice of every group (the full 4-knob space)
+        let kept = spec
+            .groups
+            .iter()
+            .map(|g| (0..g.choices.len()).collect())
+            .collect();
+        (spec, Candidates { kept })
+    }
+
+    fn local_outcome(
+        spec: &SpaceSpec,
+        cands: &Candidates,
+        lo: f32,
+        po: f32,
+        net: &[f32; N_NET],
+        engine: &SelectEngine,
+    ) -> SelectOutcome {
+        let rows_max = engine.chunk.max(1);
+        let eval = NetChunkEval::new(spec.kind, net, rows_max);
+        engine
+            .run_chunked(spec, cands, lo, po, eval)
+            .expect("non-degenerate")
+    }
+
+    fn assert_bit_identical(a: &SelectOutcome, b: &SelectOutcome) {
+        assert_eq!(a.ordinal, b.ordinal);
+        assert_eq!(a.cfg_idx, b.cfg_idx);
+        assert_eq!(a.latency.to_bits(), b.latency.to_bits());
+        assert_eq!(a.power.to_bits(), b.power.to_bits());
+        assert_eq!(a.n_enumerated, b.n_enumerated);
+    }
+
+    const NET: [f32; N_NET] = [64.0, 128.0, 28.0, 28.0, 3.0, 3.0];
+
+    #[test]
+    fn lease_roundtrip_decodes_exactly() {
+        let (spec, cands) = spec_and_cands();
+        let tpl = LeaseTemplate::new(&spec, &cands, &NET);
+        let line = tpl.lease_line(5, 17);
+        let v = Json::parse(&line).unwrap();
+        let (kind, net, kept_vals, start, end) =
+            decode_lease(v.get("lease").unwrap()).unwrap();
+        assert_eq!(kind, spec.kind);
+        assert_eq!(start, 5);
+        assert_eq!(end, 17);
+        for (a, b) in net.iter().zip(&NET) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (vals, g) in kept_vals.iter().zip(&spec.groups) {
+            assert_eq!(vals.len(), g.choices.len());
+            for (a, b) in vals.iter().zip(&g.choices) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn worker_line_evaluates_a_lease() {
+        let (spec, cands) = spec_and_cands();
+        let tpl = LeaseTemplate::new(&spec, &cands, &NET);
+        let mut sc = LeaseScratch::default();
+        let reply = handle_line(&tpl.lease_line(0, 4), &mut sc).unwrap();
+        let v = Json::parse(&reply).unwrap();
+        assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(v.get("rows").and_then(Json::as_f64), Some(4.0));
+        let objs = v.get("objs").and_then(Json::as_arr).unwrap();
+        assert_eq!(objs.len(), 8);
+        // row 0 must be bit-identical to a direct model call
+        let cfg: Vec<f32> = spec
+            .groups
+            .iter()
+            .map(|g| g.choices[0])
+            .collect();
+        let (l, p) = spec.kind.eval(&NET, &cfg);
+        assert_eq!(bits_u32(&objs[0]).unwrap(), l.to_bits());
+        assert_eq!(bits_u32(&objs[1]).unwrap(), p.to_bits());
+    }
+
+    #[test]
+    fn worker_rejects_malformed_leases() {
+        let mut sc = LeaseScratch::default();
+        for bad in [
+            "{\"lease\":{}}",
+            "{\"lease\":{\"proto\":99,\"model\":\"dnnweaver\",\
+             \"net\":[0,0,0,0,0,0],\"kept\":[[0],[0],[0],[0]],\
+             \"start\":0,\"end\":1}}",
+            "{\"lease\":{\"proto\":1,\"model\":\"nope\",\
+             \"net\":[0,0,0,0,0,0],\"kept\":[[0],[0],[0],[0]],\
+             \"start\":0,\"end\":1}}",
+            "{\"lease\":{\"proto\":1,\"model\":\"dnnweaver\",\
+             \"net\":[0,0,0,0,0,0],\"kept\":[[0],[0],[0],[0]],\
+             \"start\":1,\"end\":1}}",
+            "{\"lease\":{\"proto\":1,\"model\":\"dnnweaver\",\
+             \"net\":[0,0,0,0,0,0],\"kept\":[[0],[0],[0],[0]],\
+             \"start\":0,\"end\":2}}",
+            "{\"nonsense\":true}",
+        ] {
+            assert!(handle_line(bad, &mut sc).is_err(), "{bad}");
+        }
+        // hello still works on the same scratch
+        let hello = handle_line("{\"hello\":true}", &mut sc).unwrap();
+        let v = Json::parse(&hello).unwrap();
+        assert_eq!(
+            v.get("proto").and_then(Json::as_f64),
+            Some(PROTO_VERSION as f64)
+        );
+    }
+
+    #[test]
+    fn distributed_matches_serial_in_process() {
+        let (spec, cands) = spec_and_cands();
+        let w1 = serve_worker("127.0.0.1:0").unwrap();
+        let w2 = serve_worker("127.0.0.1:0").unwrap();
+        let addrs =
+            vec![w1.addr.to_string(), w2.addr.to_string()];
+        // tiny chunks force many leases across both workers; the
+        // unreachable objectives pin a full scan
+        let engine = SelectEngine {
+            chunk: 16,
+            ..SelectEngine::sequential()
+        };
+        let serial =
+            local_outcome(&spec, &cands, 1e-30, 1e-30, &NET, &engine);
+        let dist = run_distributed(
+            &spec, &cands, 1e-30, 1e-30, &NET, &engine, &addrs,
+        )
+        .expect("non-degenerate");
+        assert_bit_identical(&dist, &serial);
+        w1.shutdown();
+        w2.shutdown();
+    }
+
+    #[test]
+    fn distributed_early_exit_matches_serial() {
+        let (spec, cands) = spec_and_cands();
+        // objectives equal to candidate 0's exact objectives: the
+        // selector turns terminal on the very first offer, so the
+        // coordinator must cancel outstanding leases and still agree
+        let cfg0: Vec<f32> =
+            spec.groups.iter().map(|g| g.choices[0]).collect();
+        let (l0, p0) = spec.kind.eval(&NET, &cfg0);
+        let w = serve_worker("127.0.0.1:0").unwrap();
+        let addrs = vec![w.addr.to_string()];
+        let engine = SelectEngine {
+            chunk: 16,
+            ..SelectEngine::sequential()
+        };
+        let serial = local_outcome(&spec, &cands, l0, p0, &NET, &engine);
+        let dist =
+            run_distributed(&spec, &cands, l0, p0, &NET, &engine, &addrs)
+                .expect("non-degenerate");
+        assert_bit_identical(&dist, &serial);
+        assert!(
+            dist.n_enumerated < cands.count() as usize,
+            "terminal state should stop the scan early"
+        );
+        w.shutdown();
+    }
+
+    #[test]
+    fn dead_address_re_leases_to_healthy_worker() {
+        let (spec, cands) = spec_and_cands();
+        let w = serve_worker("127.0.0.1:0").unwrap();
+        // port 1 refuses immediately: every chunk the dead slot owns is
+        // re-leased to the healthy worker
+        let addrs =
+            vec!["127.0.0.1:1".to_string(), w.addr.to_string()];
+        let engine = SelectEngine {
+            chunk: 16,
+            ..SelectEngine::sequential()
+        };
+        let opts = DistOptions {
+            connect_timeout: Duration::from_millis(500),
+            io_timeout: Duration::from_secs(5),
+        };
+        let serial =
+            local_outcome(&spec, &cands, 1e-30, 1e-30, &NET, &engine);
+        let dist = run_distributed_with(
+            &spec, &cands, 1e-30, 1e-30, &NET, &engine, &addrs, &opts,
+        )
+        .expect("non-degenerate");
+        assert_bit_identical(&dist, &serial);
+        w.shutdown();
+    }
+
+    #[test]
+    fn all_workers_dead_falls_back_to_local() {
+        let (spec, cands) = spec_and_cands();
+        let addrs = vec!["127.0.0.1:1".to_string()];
+        let engine = SelectEngine {
+            chunk: 64,
+            ..SelectEngine::sequential()
+        };
+        let opts = DistOptions {
+            connect_timeout: Duration::from_millis(200),
+            io_timeout: Duration::from_secs(1),
+        };
+        let serial =
+            local_outcome(&spec, &cands, 1e-30, 1e-30, &NET, &engine);
+        let dist = run_distributed_with(
+            &spec, &cands, 1e-30, 1e-30, &NET, &engine, &addrs, &opts,
+        )
+        .expect("non-degenerate");
+        assert_bit_identical(&dist, &serial);
+    }
+
+    #[test]
+    fn zero_workers_is_the_local_engine() {
+        let (spec, cands) = spec_and_cands();
+        let engine = SelectEngine::sequential();
+        let serial =
+            local_outcome(&spec, &cands, 1e-30, 1e-30, &NET, &engine);
+        let dist = run_distributed(
+            &spec, &cands, 1e-30, 1e-30, &NET, &engine, &[],
+        )
+        .expect("non-degenerate");
+        assert_bit_identical(&dist, &serial);
+    }
+}

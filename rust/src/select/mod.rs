@@ -96,8 +96,12 @@ const MIN_SHARD: usize = 4_096;
 /// Bounded depth of each worker→merger chunk channel: with round-robin
 /// chunk assignment this is the per-worker lookahead past the merge
 /// point — enough to ride out merge-side jitter, small enough that
-/// in-flight memory stays O(workers x chunk).
-const CHUNKS_IN_FLIGHT: usize = 2;
+/// in-flight memory stays O(workers x chunk).  Crate-visible so the
+/// distributed coordinator ([`dist`]) applies the identical lookahead
+/// bound to remote workers.
+pub(crate) const CHUNKS_IN_FLIGHT: usize = 2;
+
+pub mod dist;
 
 // ---------------------------------------------------------------------------
 // Shared fork-join machinery
@@ -686,8 +690,10 @@ impl SelectEngine {
 /// the cursor is left positioned on the first candidate *after* the
 /// chunk (matching the classic `advance-unless-last` enumeration
 /// pattern, so the final advance past a shard's end never trips the
-/// done flag of an exactly-exhausted space).
-fn fill_chunk(
+/// done flag of an exactly-exhausted space).  Crate-visible: the
+/// distributed worker ([`dist`]) re-enumerates leased chunk ranges with
+/// the identical fill loop so remote rows are bit-for-bit the local rows.
+pub(crate) fn fill_chunk(
     cur: &mut CandidateCursor<'_>,
     groups: &[crate::space::ConfigGroup],
     cfgs: &mut [f32],

@@ -904,9 +904,9 @@ fn encode_stats(sh: &Shared, id: Option<&Json>) -> String {
 /// bytes; the cap exists so a newline-free byte stream cannot grow a
 /// connection's read buffer without bound (the queue/reply bounds would
 /// never engage).
-const MAX_LINE_BYTES: usize = 64 * 1024;
+pub(crate) const MAX_LINE_BYTES: usize = 64 * 1024;
 
-enum LineRead {
+pub(crate) enum LineRead {
     Line,
     Eof,
     TooLong,
@@ -916,7 +916,9 @@ enum LineRead {
 /// most `max` payload bytes in memory.  `TooLong` leaves the stream
 /// mid-line — the caller must drop the connection (resyncing on an
 /// attacker-chosen line length would itself be unbounded work).
-fn read_bounded_line(
+/// Crate-visible: the distributed-selection worker (`select::dist`)
+/// speaks the same line-JSON framing (PROTOCOL.md).
+pub(crate) fn read_bounded_line(
     r: &mut impl BufRead,
     buf: &mut Vec<u8>,
     max: usize,

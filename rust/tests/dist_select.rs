@@ -1,0 +1,215 @@
+//! Multi-process distributed-selection tests: real `gandse worker`
+//! processes over real TCP sockets, driven by the in-process
+//! coordinator (`select::dist::run_distributed`) and by a full
+//! `Explorer` with `dist_workers` set.
+//!
+//! The contract under test is the cluster-wide bitwise one (DESIGN.md
+//! §8): a coordinator scan across N worker processes returns the same
+//! `SelectOutcome` bits — ordinal, cfg, objective f32 bits, and
+//! `n_enumerated` — as the single-process serial scan, including when a
+//! worker is killed mid-scan (its chunks re-lease; evaluation is pure).
+
+use std::io::{BufRead, BufReader};
+use std::process::{Child, Command, Stdio};
+use std::time::Duration;
+
+use gandse::dataset;
+use gandse::explorer::{DseRequest, Explorer};
+use gandse::gan::GanState;
+use gandse::model::NetChunkEval;
+use gandse::runtime::{Backend, CpuBackend};
+use gandse::select::dist::{run_distributed, run_distributed_with, DistOptions};
+use gandse::select::{Candidates, SelectEngine, SelectOutcome};
+use gandse::space::{builtin_spec, Meta, SpaceSpec, N_NET};
+
+/// A spawned `gandse worker` child process, killed on drop so a failing
+/// assertion cannot leak listeners.
+struct WorkerProc {
+    child: Child,
+    addr: String,
+}
+
+impl WorkerProc {
+    /// Spawn `gandse worker --addr 127.0.0.1:0` and parse the bound
+    /// ephemeral address from its first stdout line (the line
+    /// `cmd_worker` prints for exactly this purpose).
+    fn spawn() -> WorkerProc {
+        let mut child = Command::new(env!("CARGO_BIN_EXE_gandse"))
+            .args(["worker", "--addr", "127.0.0.1:0"])
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawn gandse worker");
+        let stdout = child.stdout.take().expect("piped stdout");
+        let mut line = String::new();
+        BufReader::new(stdout)
+            .read_line(&mut line)
+            .expect("worker banner");
+        let addr = line
+            .rsplit("listening on ")
+            .next()
+            .expect("banner format")
+            .trim()
+            .to_string();
+        assert!(
+            addr.starts_with("127.0.0.1:"),
+            "unexpected worker banner: {line:?}"
+        );
+        WorkerProc { child, addr }
+    }
+
+    fn kill(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+impl Drop for WorkerProc {
+    fn drop(&mut self) {
+        self.kill();
+    }
+}
+
+fn full_candidates(spec: &SpaceSpec) -> Candidates {
+    Candidates {
+        kept: spec
+            .groups
+            .iter()
+            .map(|g| (0..g.choices.len()).collect())
+            .collect(),
+    }
+}
+
+fn local_outcome(
+    spec: &SpaceSpec,
+    cands: &Candidates,
+    lo: f32,
+    po: f32,
+    net: &[f32; N_NET],
+    engine: &SelectEngine,
+) -> SelectOutcome {
+    let eval = NetChunkEval::new(spec.kind, net, engine.chunk.max(1));
+    engine
+        .run_chunked(spec, cands, lo, po, eval)
+        .expect("non-degenerate")
+}
+
+fn assert_bit_identical(dist: &SelectOutcome, serial: &SelectOutcome) {
+    assert_eq!(dist.ordinal, serial.ordinal);
+    assert_eq!(dist.cfg_idx, serial.cfg_idx);
+    assert_eq!(dist.latency.to_bits(), serial.latency.to_bits());
+    assert_eq!(dist.power.to_bits(), serial.power.to_bits());
+    assert_eq!(dist.n_enumerated, serial.n_enumerated);
+}
+
+const NET: [f32; N_NET] = [64.0, 128.0, 28.0, 28.0, 3.0, 3.0];
+
+/// Two real worker processes, an im2col scan capped at 50k candidates
+/// in 1024-row leases (~49 leases round-robined across both): the
+/// distributed outcome must be bitwise equal to the serial local scan.
+#[test]
+fn two_worker_processes_match_serial_scan() {
+    let spec = builtin_spec("im2col").unwrap();
+    let cands = full_candidates(&spec);
+    let w1 = WorkerProc::spawn();
+    let w2 = WorkerProc::spawn();
+    let addrs = vec![w1.addr.clone(), w2.addr.clone()];
+    let engine = SelectEngine {
+        cap: 50_000,
+        chunk: 1024,
+        ..SelectEngine::sequential()
+    };
+    // unreachable objectives pin a full (capped) scan
+    let serial = local_outcome(&spec, &cands, 1e-30, 1e-30, &NET, &engine);
+    let dist =
+        run_distributed(&spec, &cands, 1e-30, 1e-30, &NET, &engine, &addrs)
+            .expect("non-degenerate");
+    assert_bit_identical(&dist, &serial);
+    assert_eq!(dist.n_enumerated, 50_000, "cap must bound the scan");
+}
+
+/// Kill one of two worker processes mid-scan: its outstanding and
+/// future chunks re-lease to the survivor (and, transiently, to the
+/// local fallback) and the result is still bitwise equal to serial.
+/// The kill is timed, so on a fast machine it may land after the scan
+/// finished — parity is asserted either way, and the deterministic
+/// dead-address re-lease path has its own in-module test.
+#[test]
+fn killing_a_worker_mid_scan_re_leases_and_matches_serial() {
+    let spec = builtin_spec("im2col").unwrap();
+    let cands = full_candidates(&spec);
+    let mut w1 = WorkerProc::spawn();
+    let w2 = WorkerProc::spawn();
+    let addrs = vec![w1.addr.clone(), w2.addr.clone()];
+    let engine = SelectEngine {
+        cap: 120_000,
+        chunk: 2048,
+        ..SelectEngine::sequential()
+    };
+    let opts = DistOptions {
+        connect_timeout: Duration::from_millis(500),
+        io_timeout: Duration::from_secs(10),
+    };
+    let serial = local_outcome(&spec, &cands, 1e-30, 1e-30, &NET, &engine);
+    let killer = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(30));
+        w1.kill();
+        w1 // keep the guard alive until joined
+    });
+    let dist = run_distributed_with(
+        &spec, &cands, 1e-30, 1e-30, &NET, &engine, &addrs, &opts,
+    )
+    .expect("non-degenerate");
+    let _w1 = killer.join().unwrap();
+    assert_bit_identical(&dist, &serial);
+    drop(w2);
+}
+
+/// The full explorer path over real worker processes: the same
+/// `Explorer` answers the same requests with `dist_workers` unset and
+/// set, and every `DseResult` field that is not wall-clock must be
+/// byte-identical — the CLI-level `--workers` contract.
+#[test]
+fn explorer_results_identical_with_and_without_dist_workers() {
+    let model = "dnnweaver";
+    let meta = Meta::builtin(16, 2, 2, 16, 8);
+    let backend = CpuBackend::new(1);
+    let mm = meta.model(model).unwrap();
+    let ds = dataset::generate(&mm.spec, 64, 0, 42);
+    let st = GanState::init(mm, model, 3);
+    let mut ex = Explorer::new(
+        &backend as &dyn Backend,
+        &meta,
+        model,
+        st.g,
+        ds.stats.to_vec(),
+    )
+    .unwrap();
+    ex.engine.chunk = 64; // several leases even for the 750-cand space
+    let reqs: Vec<DseRequest> = (0..4)
+        .map(|i| DseRequest {
+            net: [16.0 + 16.0 * i as f32, 32.0, 28.0, 28.0, 3.0, 3.0],
+            lo: 0.001 * (i + 1) as f32,
+            po: 2.0,
+        })
+        .collect();
+    let local = ex.explore(&reqs).unwrap();
+
+    let w1 = WorkerProc::spawn();
+    let w2 = WorkerProc::spawn();
+    ex.dist_workers = vec![w1.addr.clone(), w2.addr.clone()];
+    let dist = ex.explore(&reqs).unwrap();
+
+    assert_eq!(local.len(), dist.len());
+    for (a, b) in local.iter().zip(&dist) {
+        assert_eq!(a.cfg_idx, b.cfg_idx);
+        let bits =
+            |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&a.cfg_raw), bits(&b.cfg_raw));
+        assert_eq!(a.latency.to_bits(), b.latency.to_bits());
+        assert_eq!(a.power.to_bits(), b.power.to_bits());
+        assert_eq!(a.n_candidates, b.n_candidates);
+        assert_eq!(a.n_scanned, b.n_scanned);
+        assert_eq!(a.satisfied, b.satisfied);
+    }
+}

@@ -1,0 +1,120 @@
+#!/usr/bin/env python3
+"""Cross-check CLI flags between the code and every document.
+
+    python3 scripts/check_docs_flags.py [repo-root]
+
+Three containment checks, all on flag *sets* (flags are global across
+subcommands in this CLI — the parser is shared and names never collide
+with different meanings except the documented serve/loadtest-vs-
+explore/eval `--workers` overload, which is a name either way):
+
+1. every flag the binary consumes (an ``args.get*("...")`` /
+   ``args.has_flag("...")`` call in ``rust/src/main.rs``) appears in the
+   ``USAGE`` string of ``rust/src/main.rs``;
+2. every ``--flag`` token in ``USAGE`` is consumed by the binary (no
+   phantom documentation);
+3. every ``--flag`` token in the prose docs (README.md, DESIGN.md,
+   EXPERIMENTS.md, PROTOCOL.md, bench/baseline/README.md) is consumed by
+   the binary — modulo ``FOREIGN_FLAGS``, the flags of *other* tools the
+   docs legitimately mention (cargo, pytest-style script options).
+
+Exit 1 with a per-violation line on any drift; exit 0 silently-ish
+otherwise.  CI runs this so a flag added to main.rs without docs (or
+documented without existing) fails the build.
+"""
+
+import pathlib
+import re
+import sys
+
+# Flags of other tools that the docs mention (cargo, CI scripts).  A
+# flag listed here is never required to exist in main.rs; it must NOT
+# also be a real gandse flag (the script errors on that overlap so the
+# allowlist cannot mask real drift) — except the ones actual gandse
+# flags share with scripts (none today).
+FOREIGN_FLAGS = {
+    "release",
+    "features",
+    "no-default-features",
+    "workspace",
+    "all-targets",
+    "ignored",
+    "fail-on-regression",
+    "help",
+    "version",
+    # the USAGE banner's generic "[--option value]..." placeholder
+    "option",
+}
+
+GETTERS = r"get|get_or|get_usize|get_u64|get_f32|has_flag"
+# whitespace-tolerant: rustfmt splits `args\n    .get_or("wcritics", …)`
+CODE_RE = re.compile(
+    r"args\s*\.\s*(?:" + GETTERS + r")\s*\(\s*\"([a-z][a-z0-9-]*)\""
+)
+DOC_RE = re.compile(r"--([a-z][a-z0-9-]*)")
+
+DOC_FILES = [
+    "README.md",
+    "DESIGN.md",
+    "EXPERIMENTS.md",
+    "PROTOCOL.md",
+    "bench/baseline/README.md",
+]
+
+
+def main() -> int:
+    root = pathlib.Path(sys.argv[1] if len(sys.argv) > 1 else ".")
+    main_rs = (root / "rust/src/main.rs").read_text()
+
+    code_flags = set(CODE_RE.findall(main_rs))
+    if not code_flags:
+        print("error: found no args.get*() calls in rust/src/main.rs")
+        return 1
+
+    usage_m = re.search(r'const USAGE: &str = "([^"]*)"', main_rs, re.S)
+    if not usage_m:
+        print("error: cannot locate the USAGE string in rust/src/main.rs")
+        return 1
+    usage_flags = set(DOC_RE.findall(usage_m.group(1)))
+
+    errors = []
+    for f in sorted(code_flags - usage_flags):
+        errors.append(
+            f"--{f} is consumed by rust/src/main.rs but missing from USAGE"
+        )
+    for f in sorted(usage_flags - code_flags - FOREIGN_FLAGS):
+        errors.append(
+            f"--{f} appears in USAGE but no args.get*(\"{f}\") consumes it"
+        )
+    for f in sorted(FOREIGN_FLAGS & code_flags):
+        errors.append(
+            f"--{f} is both a real flag and FOREIGN_FLAGS-allowlisted — "
+            "remove it from the allowlist so drift checks cover it"
+        )
+
+    for rel in DOC_FILES:
+        p = root / rel
+        if not p.exists():
+            errors.append(f"{rel} is missing (DOC_FILES in this script)")
+            continue
+        doc_flags = set(DOC_RE.findall(p.read_text()))
+        for f in sorted(doc_flags - code_flags - FOREIGN_FLAGS):
+            errors.append(
+                f"{rel} mentions --{f}, which rust/src/main.rs does not "
+                "consume (rename, remove, or allowlist a foreign tool's "
+                "flag in FOREIGN_FLAGS)"
+            )
+
+    for e in errors:
+        print(f"error: {e}")
+    if errors:
+        return 1
+    print(
+        f"docs/flags cross-check OK: {len(code_flags)} flags consumed, "
+        f"all documented; {len(DOC_FILES)} docs clean"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

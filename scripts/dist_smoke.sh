@@ -1,0 +1,90 @@
+#!/usr/bin/env bash
+# Distributed-selection smoke on the pure-Rust cpu backend: train a tiny
+# GAN, start two `gandse worker` evaluator processes on ephemeral ports,
+# then run the same explore twice — locally and with
+# `--workers host:port,host:port` — and require the *outputs to be
+# byte-identical* (modulo wall-clock lines).  That is the cluster-wide
+# bitwise contract (DESIGN.md §8) at the CLI level, which CI gates on.
+# Also exercises the degraded path: an explore pointed only at a dead
+# address must still succeed (local fallback) with identical output.
+#
+# Usage: scripts/dist_smoke.sh [path/to/gandse-binary]
+set -euo pipefail
+
+BIN=${1:-./target/release/gandse}
+# Tiny network so the whole script stays in seconds; the same flags must
+# be passed to every command that touches the checkpoint.
+SIZES=(--width 32 --g-depth 2 --d-depth 2 --train-batch 32 --infer-batch 16)
+WORK=$(mktemp -d)
+W1_PID=""
+W2_PID=""
+cleanup() {
+    [ -n "$W1_PID" ] && kill "$W1_PID" 2>/dev/null || true
+    [ -n "$W2_PID" ] && kill "$W2_PID" 2>/dev/null || true
+    rm -rf "$WORK"
+}
+trap cleanup EXIT
+
+# Scrape "gandse worker listening on 127.0.0.1:PORT" from a worker log.
+wait_port() { # $1 = logfile, $2 = pid
+    local port=""
+    for _ in $(seq 1 100); do
+        port=$(sed -n 's/.*listening on 127\.0\.0\.1:\([0-9]*\).*/\1/p' \
+            "$1" | head -1)
+        [ -n "$port" ] && break
+        if ! kill -0 "$2" 2>/dev/null; then
+            echo "worker exited early:" >&2
+            cat "$1" >&2
+            exit 1
+        fi
+        sleep 0.3
+    done
+    if [ -z "$port" ]; then
+        echo "worker never reported its port:" >&2
+        cat "$1" >&2
+        exit 1
+    fi
+    echo "$port"
+}
+
+echo "== train (cpu backend, no artifacts) =="
+"$BIN" train --model dnnweaver --backend cpu "${SIZES[@]}" \
+    --train 256 --test 16 --epochs 2 --lr 1e-3 --log-every 0 \
+    --ckpt "$WORK/smoke.ckpt"
+test -s "$WORK/smoke.ckpt"
+
+echo "== start 2 evaluator workers =="
+"$BIN" worker --addr 127.0.0.1:0 >"$WORK/w1.log" 2>&1 &
+W1_PID=$!
+"$BIN" worker --addr 127.0.0.1:0 >"$WORK/w2.log" 2>&1 &
+W2_PID=$!
+P1=$(wait_port "$WORK/w1.log" "$W1_PID")
+P2=$(wait_port "$WORK/w2.log" "$W2_PID")
+echo "workers on ports $P1 and $P2"
+
+# Several leases per scan: a small --chunk splits even the tiny builtin
+# space across both workers.
+EXPLORE=(explore --model dnnweaver --backend cpu "${SIZES[@]}"
+    --train 256 --test 16 --ckpt "$WORK/smoke.ckpt"
+    --lo 0.01 --po 2.0 --chunk 64)
+
+echo "== explore: local vs 2-worker distributed (must be identical) =="
+"$BIN" "${EXPLORE[@]}" | grep -v "DSE time" >"$WORK/local.out"
+"$BIN" "${EXPLORE[@]}" --workers "127.0.0.1:$P1,127.0.0.1:$P2" \
+    | grep -v "DSE time" >"$WORK/dist.out"
+if ! diff -u "$WORK/local.out" "$WORK/dist.out"; then
+    echo "FAIL: distributed explore output differs from local" >&2
+    exit 1
+fi
+test -s "$WORK/local.out"
+
+echo "== explore: dead worker address (must fall back, identically) =="
+"$BIN" "${EXPLORE[@]}" --workers 127.0.0.1:1 \
+    2>"$WORK/dead.err" | grep -v "DSE time" >"$WORK/dead.out"
+if ! diff -u "$WORK/local.out" "$WORK/dead.out"; then
+    echo "FAIL: local-fallback explore output differs from local" >&2
+    exit 1
+fi
+grep -q "no worker reachable" "$WORK/dead.err"
+
+echo "distributed-selection smoke OK (outputs byte-identical)"
