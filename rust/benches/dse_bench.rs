@@ -406,15 +406,19 @@ fn bench_selection_throughput(b: &mut Bench) -> anyhow::Result<()> {
 
     // Distributed selection over loopback worker processes (in-process
     // `serve_worker` instances — the same code `gandse worker` runs):
-    // one coordinator scanning the 250k-cap shape through {1, 2, 4}
-    // workers in 16384-row leases.  The `dist_*` rows key `threads` by
-    // worker count and seed the scaling trajectory that CI diffs
-    // against the floor rows in bench/baseline/BENCH_select.json;
-    // parity with the local engine is asserted at every worker count.
+    // one coordinator scanning the 250k-cap shape through a matrix of
+    // (workers, worker `--threads`, `--lease-depth`) combinations in
+    // 16384-row leases.  The `dist_*` rows key `threads` by worker
+    // count — non-default worker threading / pipeline depth get their
+    // own shape suffix (`_wt4_d1`, `_wt1_d4`, `_wt4_d4`) — and seed the
+    // scaling trajectory that CI diffs against the floor rows in
+    // bench/baseline/BENCH_select.json; parity with the local engine is
+    // asserted for every combination.
     {
         use gandse::model::NetChunkEval;
-        use gandse::select::dist::{run_distributed, serve_worker};
-        let shape = "dist_im2col_cap250k";
+        use gandse::select::dist::{
+            run_distributed_with, serve_worker, DistOptions,
+        };
         let cap = 250_000usize;
         let engine = SelectEngine {
             threads: 1,
@@ -431,36 +435,71 @@ fn bench_selection_throughput(b: &mut Bench) -> anyhow::Result<()> {
                 NetChunkEval::new(kind, &net, engine.chunk),
             )
             .expect("non-empty candidates");
-        let handles: Vec<_> =
-            (0..4).map(|_| serve_worker("127.0.0.1:0").unwrap()).collect();
-        let addrs: Vec<String> =
-            handles.iter().map(|h| h.addr.to_string()).collect();
-        let mut cps_1worker: Option<f64> = None;
-        let mut best_cps = 0f64;
-        for wc in [1usize, 2, 4] {
-            let workers = &addrs[..wc];
+        // One pool per worker-thread setting so a combo never measures a
+        // worker warmed by a different configuration.
+        let pool_wt1: Vec<_> = (0..4)
+            .map(|_| serve_worker("127.0.0.1:0", 1).unwrap())
+            .collect();
+        let pool_wt4: Vec<_> = (0..2)
+            .map(|_| serve_worker("127.0.0.1:0", 4).unwrap())
+            .collect();
+        let addrs_wt1: Vec<String> =
+            pool_wt1.iter().map(|h| h.addr.to_string()).collect();
+        let addrs_wt4: Vec<String> =
+            pool_wt4.iter().map(|h| h.addr.to_string()).collect();
+        // (shape, workers, worker threads, lease depth)
+        let combos = [
+            ("dist_im2col_cap250k", 1usize, 1usize, 1usize),
+            ("dist_im2col_cap250k", 2, 1, 1),
+            ("dist_im2col_cap250k", 4, 1, 1),
+            ("dist_im2col_cap250k_wt4_d1", 1, 4, 1),
+            ("dist_im2col_cap250k_wt1_d4", 2, 1, 4),
+            ("dist_im2col_cap250k_wt4_d4", 2, 4, 4),
+        ];
+        let mut cps_w1_wt1_d1 = 0f64;
+        let mut cps_w1_wt4_d1 = 0f64;
+        let mut best_cps_wt1_d1 = 0f64;
+        for (shape, wc, wt, depth) in combos {
+            let workers = match wt {
+                1 => &addrs_wt1[..wc],
+                _ => &addrs_wt4[..wc],
+            };
+            let opts = DistOptions {
+                lease_depth: depth,
+                ..DistOptions::default()
+            };
             let mut out = None;
             b.run(
-                &format!("select_engine/{shape} workers={wc}"),
+                &format!(
+                    "select_engine/{shape} workers={wc} wt={wt} d={depth}"
+                ),
                 3,
                 cap,
                 || {
-                    let r = run_distributed(
+                    let r = run_distributed_with(
                         &spec, &small, 1e-30, 1e-30, &net, &engine,
-                        workers,
+                        workers, &opts,
                     )
                     .expect("non-empty candidates");
                     out = Some(r);
                 },
             );
             let out = out.expect("bench ran at least once");
-            assert_eq!(out, serial, "{shape} workers={wc} lost parity");
+            assert_eq!(
+                out, serial,
+                "{shape} workers={wc} wt={wt} d={depth} lost parity"
+            );
             let secs = b.rows.last().expect("bench recorded a row").1;
             let cps = out.n_enumerated as f64 / secs;
-            if wc == 1 {
-                cps_1worker = Some(cps);
+            if (wc, wt, depth) == (1, 1, 1) {
+                cps_w1_wt1_d1 = cps;
             }
-            best_cps = best_cps.max(cps);
+            if (wc, wt, depth) == (1, 4, 1) {
+                cps_w1_wt4_d1 = cps;
+            }
+            if (wt, depth) == (1, 1) {
+                best_cps_wt1_d1 = best_cps_wt1_d1.max(cps);
+            }
             rows.push(Json::obj(vec![
                 ("shape", Json::str(shape)),
                 ("threads", Json::Num(wc as f64)),
@@ -470,17 +509,30 @@ fn bench_selection_throughput(b: &mut Bench) -> anyhow::Result<()> {
                 ("cands_per_sec", Json::Num(cps)),
             ]));
         }
-        for h in handles {
+        for h in pool_wt1.into_iter().chain(pool_wt4) {
             h.shutdown();
         }
-        let speedup = best_cps / cps_1worker.unwrap_or(best_cps).max(1e-12);
+        let speedup = best_cps_wt1_d1 / cps_w1_wt1_d1.max(1e-12);
         println!(
-            "select_engine/{shape}: best speedup {speedup:.2}x over 1 \
-             worker process (loopback)"
+            "select_engine/dist_im2col_cap250k: best speedup \
+             {speedup:.2}x over 1 worker process (loopback)"
         );
         speedups.push(Json::obj(vec![
-            ("shape", Json::str(shape)),
+            ("shape", Json::str("dist_im2col_cap250k")),
             ("speedup_best_vs_1worker", Json::Num(speedup)),
+        ]));
+        // The per-worker threading canary: one worker at `--threads 4`
+        // vs the same worker single-threaded, depth 1 both sides.  A
+        // regression here means the in-lease `run_sharded` split
+        // stopped scaling even though parity still holds.
+        let per_worker = cps_w1_wt4_d1 / cps_w1_wt1_d1.max(1e-12);
+        println!(
+            "select_engine/dist_im2col_cap250k: per-worker speedup \
+             {per_worker:.2}x at --threads 4 (1 worker, depth 1)"
+        );
+        speedups.push(Json::obj(vec![
+            ("shape", Json::str("dist_im2col_cap250k")),
+            ("per_worker_speedup_threads4_vs_1", Json::Num(per_worker)),
         ]));
     }
     let doc = Json::obj(vec![

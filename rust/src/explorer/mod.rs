@@ -92,6 +92,11 @@ pub struct Explorer<'a> {
     /// the local engine at any worker count and falls back to local
     /// evaluation when no worker is reachable.
     pub dist_workers: Vec<String>,
+    /// Coordinator knobs for the distributed path (timeouts and the
+    /// per-connection lease pipeline depth — `--lease-depth` on the
+    /// CLI).  Results are bitwise identical at any setting; only
+    /// wall-clock changes.  Ignored while `dist_workers` is empty.
+    pub dist_opts: crate::select::dist::DistOptions,
 }
 
 impl<'a> Explorer<'a> {
@@ -124,6 +129,7 @@ impl<'a> Explorer<'a> {
             engine: SelectEngine::default(),
             noise_seed: 0x5EED,
             dist_workers: Vec::new(),
+            dist_opts: crate::select::dist::DistOptions::default(),
         })
     }
 
@@ -296,7 +302,7 @@ impl<'a> Explorer<'a> {
             // Bitwise-identical to the local engine (see select::dist);
             // unreachable workers degrade to local evaluation, never to
             // a different answer.
-            crate::select::dist::run_distributed(
+            crate::select::dist::run_distributed_with(
                 spec,
                 &cands,
                 req.lo,
@@ -304,6 +310,7 @@ impl<'a> Explorer<'a> {
                 &req.net,
                 engine,
                 &self.dist_workers,
+                &self.dist_opts,
             )
         }
         .expect("at least one candidate is guaranteed");

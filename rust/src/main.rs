@@ -51,11 +51,15 @@ COMMANDS
             --ic .. --oc .. --ow .. --oh .. --kw .. --kh ..)
             [--network] [--rtl out.v] [--threshold T] [--threads N]
             [--cap C] [--chunk K] [--workers host:port,...]
+            [--lease-depth D]
             (--network selects ONE shared config for all layers;
              --workers distributes the scan across running
-             `gandse worker` processes — bitwise-identical results)
+             `gandse worker` processes — bitwise-identical results;
+             --lease-depth: leases pipelined per worker connection,
+             default 2 — results are identical at any depth)
   eval      --model M --ckpt c.ckpt [--test N] [--threshold T] [--threads N]
             [--cap C] [--chunk K] [--workers host:port,...]
+            [--lease-depth D]
             (held-out satisfaction / improvement-ratio / difficulty report)
   serve     --model M --ckpt c.ckpt [--addr 127.0.0.1:7878]
             [--workers 2] [--max-wait-ms 5] [--max-batch B]
@@ -74,11 +78,14 @@ COMMANDS
   bench     --exp <table5|fig5|fig67|fig89|fig1011|all> --model M
             [--train N] [--test N] [--epochs E] [--out-dir results/]
             [--threads N] [--wcritics W1,W2,...]
-  worker    [--addr 127.0.0.1:7900]
+  worker    [--addr 127.0.0.1:7900] [--threads N]
             (remote chunk-lease evaluator for distributed selection;
              point explore/eval --workers at one or more of these.
              --addr with port 0 picks an ephemeral port; the bound
-             address is printed on stdout.  Protocol: PROTOCOL.md)
+             address and thread count are printed on stdout.
+             --threads: evaluation threads per lease, 0 = all cores,
+             default 1 — replies are bitwise identical at any count.
+             Protocol: PROTOCOL.md)
   rtl       --model M --cfg v1,v2,... [--out file.v] [--tb tb.v]
 
 COMMON
@@ -326,6 +333,8 @@ fn cmd_explore(args: &Args) -> Result<()> {
     ex.threshold = args.get_f32("threshold", 0.2)?;
     ex.engine = engine_from_args(args)?;
     ex.dist_workers = dist_workers_from_args(args);
+    ex.dist_opts.lease_depth =
+        args.get_usize("lease-depth", ex.dist_opts.lease_depth)?.max(1);
 
     let lo = args.get_f32("lo", 0.0)?;
     let po = args.get_f32("po", 0.0)?;
@@ -422,6 +431,8 @@ fn cmd_eval(args: &Args) -> Result<()> {
     ex.threshold = args.get_f32("threshold", 0.2)?;
     ex.engine = engine_from_args(args)?;
     ex.dist_workers = dist_workers_from_args(args);
+    ex.dist_opts.lease_depth =
+        args.get_usize("lease-depth", ex.dist_opts.lease_depth)?.max(1);
     args.reject_unknown()?;
 
     let t0 = std::time::Instant::now();
@@ -888,10 +899,19 @@ fn cmd_bench(args: &Args) -> Result<()> {
 /// worker mid-scan only costs a re-lease — never changes the result.
 fn cmd_worker(args: &Args) -> Result<()> {
     let addr = args.get_or("addr", "127.0.0.1:7900");
+    let threads = args.get_usize("threads", 1)?;
     args.reject_unknown()?;
-    let h = gandse::select::dist::serve_worker(&addr)?;
-    // Parsed by scripts/tests to learn the ephemeral port — keep stable.
-    println!("gandse worker listening on {}", h.addr);
+    // Same triage line the other subcommands print: which GEMM
+    // microkernel this box resolved (lease evaluation is pure model
+    // math, but the line pins the binary's ISA path in logs).
+    eprintln!("[gandse] gemm microkernel: {}", Isa::active().name());
+    let h = gandse::select::dist::serve_worker(&addr, threads)?;
+    // Parsed by scripts/tests to learn the ephemeral port and assert
+    // the launched thread count — keep the format stable.
+    println!(
+        "gandse worker listening on {} (threads={})",
+        h.addr, h.threads
+    );
     h.run_forever();
     Ok(())
 }

@@ -12,6 +12,18 @@
 //! thread replays every chunk strictly in candidate order through the
 //! one sequential [`Selector`].
 //!
+//! Both tiers scale within one box too.  A fetcher keeps up to
+//! [`DistOptions::lease_depth`] leases in flight per connection,
+//! matching replies to leases **positionally** (a connection answers
+//! strictly in arrival order — PROTOCOL.md §4.2), which hides the
+//! round-trip latency between consecutive chunks.  A worker started
+//! with `threads > 1` splits each lease's `[start, end)` range into
+//! contiguous sub-ranges via [`run_sharded`] and evaluates them
+//! concurrently; sub-ranges concatenate in fixed order and per-row
+//! evaluation is chunk-boundary-independent, so the reply bytes are
+//! identical at any thread count.  Neither knob touches the wire
+//! format: proto stays 1.
+//!
 //! # The bitwise contract, cluster-wide
 //!
 //! Every f32 on the wire travels as its IEEE-754 bit pattern (a JSON
@@ -31,13 +43,16 @@
 //! Leases are **stateless** (model + net bits + kept choice values +
 //! `[start, end)`) and evaluation is **pure**, so re-evaluating a chunk
 //! anywhere is always safe.  A fetcher whose connection dies (EOF,
-//! timeout, refused, bad reply) re-leases the chunk to the other
-//! configured addresses in round-robin order, and as a last resort
-//! evaluates it **locally** — a distributed scan therefore cannot fail
-//! for a valid configuration, it only degrades toward local compute.
-//! Early exit cancels outstanding leases by dropping the connections;
-//! workers discard the dead socket and keep serving others.
+//! timeout, refused, bad reply) re-leases **every lease still
+//! unanswered on it** — up to the pipeline depth — to the other
+//! configured addresses in round-robin order, oldest first, and as a
+//! last resort evaluates them **locally** — a distributed scan
+//! therefore cannot fail for a valid configuration, it only degrades
+//! toward local compute.  Early exit cancels outstanding leases by
+//! dropping the connections (all in-flight leases at once); workers
+//! discard the dead socket and keep serving others.
 
+use std::collections::VecDeque;
 use std::io::{self, Write as _};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -46,8 +61,8 @@ use std::time::Duration;
 
 use crate::model::{ModelKind, NetChunkEval};
 use crate::select::{
-    fill_chunk, CandidateCursor, Candidates, ChunkEval, SelectEngine,
-    SelectOutcome, Selector, CHUNKS_IN_FLIGHT,
+    fill_chunk, run_sharded, CandidateCursor, Candidates, ChunkEval,
+    SelectEngine, SelectOutcome, Selector, CHUNKS_IN_FLIGHT,
 };
 use crate::server::{read_bounded_line, LineRead, MAX_LINE_BYTES};
 use crate::space::{ConfigGroup, SpaceSpec, N_NET};
@@ -74,8 +89,13 @@ pub const MAX_REPLY_LINE_BYTES: usize = 16 * 1024 * 1024;
 /// the worker rejects leases beyond it.
 const MAX_EXACT_ORDINAL: u128 = 1 << 53;
 
-/// Coordinator-side networking knobs (library callers and tests;
-/// the CLI uses the defaults).
+/// Per-lease threading floor inside a worker: a lease splits across the
+/// worker's threads only in sub-ranges of at least this many rows
+/// (below it spawn overhead beats the win; parity holds at any value).
+const WORKER_MIN_SHARD: usize = 1_024;
+
+/// Coordinator-side knobs (the CLI exposes `--lease-depth`; library
+/// callers and tests can set everything).
 #[derive(Debug, Clone, Copy)]
 pub struct DistOptions {
     /// Per-address TCP connect budget before trying the next address.
@@ -85,6 +105,14 @@ pub struct DistOptions {
     /// the chunk is re-leased (re-evaluation is safe — results are
     /// pure), so a hung worker costs one timeout, not the scan.
     pub io_timeout: Duration,
+    /// Leases kept in flight per worker connection (min 1, applied at
+    /// use).  Replies match outstanding leases positionally — a worker
+    /// answers strictly in arrival order (PROTOCOL.md §4.2) — so depth
+    /// only hides round-trip latency: the result is bitwise identical
+    /// at any depth.  Failure semantics compose: a connection that dies
+    /// re-leases all of its in-flight ranges (oldest first), and early
+    /// exit cancels all of them by dropping the connection.
+    pub lease_depth: usize,
 }
 
 impl Default for DistOptions {
@@ -92,6 +120,7 @@ impl Default for DistOptions {
         DistOptions {
             connect_timeout: Duration::from_secs(2),
             io_timeout: Duration::from_secs(10),
+            lease_depth: 2,
         }
     }
 }
@@ -191,27 +220,16 @@ pub fn run_distributed_with(
                     kind: spec.kind,
                     net,
                     max_rows: chunk.min(n),
+                    depth: opts.lease_depth.max(1),
                     conn: None,
                     local: None,
                     warned_local: false,
                 };
-                let mut cj = k;
-                while cj < n_chunks {
-                    if cancel.load(Ordering::Relaxed) {
-                        break; // merger proved no later candidate wins
-                    }
-                    let start = cj * chunk;
-                    let end = (start + chunk).min(n);
-                    let mut out = rec_rx.try_recv().unwrap_or_default();
-                    f.eval_range(start, end, &mut out);
-                    if tx.send(out).is_err() {
-                        break; // merger is gone (early exit)
-                    }
-                    cj += slots;
-                }
+                f.run(n, chunk, n_chunks, slots, cancel, &tx, &rec_rx);
                 // Dropping `f.conn` closes the socket: that is the
-                // lease-cancellation rule — the worker sees EOF/EPIPE
-                // and discards the connection (PROTOCOL.md §4.4).
+                // lease-cancellation rule — the worker sees EOF/EPIPE,
+                // discards the connection, and every lease still in
+                // flight on it dies with it (PROTOCOL.md §4.4).
             });
             chans.push((rx, rec_tx));
         }
@@ -320,6 +338,8 @@ struct LocalEval<'a> {
 
 /// One coordinator fetcher: owns (at most) one worker connection and
 /// delivers its round-robin share of chunks, in order, whatever fails.
+/// On a live connection it pipelines up to `depth` leases, pairing
+/// reply *k* with the *k*-th unanswered lease (positional matching).
 struct Fetcher<'a> {
     slot: usize,
     addrs: &'a [String],
@@ -331,27 +351,188 @@ struct Fetcher<'a> {
     net: &'a [f32; N_NET],
     /// Rows of the largest lease this scan produces (buffer sizing).
     max_rows: usize,
+    /// Outstanding-lease bound per connection (≥ 1).
+    depth: usize,
     conn: Option<WireConn>,
     local: Option<LocalEval<'a>>,
     warned_local: bool,
 }
 
 impl<'a> Fetcher<'a> {
+    /// Deliver this fetcher's round-robin share of chunks (`slot`,
+    /// `slot + slots`, …) to `tx` in ascending candidate order.
+    ///
+    /// Two queues drive the loop: `inflight` holds ranges leased on the
+    /// live connection (delivery order = send order), `redo` holds
+    /// ranges lost when a connection died — always earlier chunks than
+    /// any fresh `cj`, so serving `redo` first preserves the ascending
+    /// order the merge relies on.  Whatever fails, every chunk is
+    /// delivered exactly once, with bits identical to local evaluation.
+    #[allow(clippy::too_many_arguments)]
+    fn run(
+        &mut self,
+        n: usize,
+        chunk: usize,
+        n_chunks: usize,
+        slots: usize,
+        cancel: &AtomicBool,
+        tx: &mpsc::SyncSender<Vec<(f32, f32)>>,
+        rec_rx: &mpsc::Receiver<Vec<(f32, f32)>>,
+    ) {
+        let mut cj = self.slot;
+        let mut inflight: VecDeque<(usize, usize)> = VecDeque::new();
+        let mut redo: VecDeque<(usize, usize)> = VecDeque::new();
+        let fresh = |cj: usize| {
+            (cj < n_chunks).then(|| {
+                let s = cj * chunk;
+                (s, (s + chunk).min(n))
+            })
+        };
+        // One connection attempt up front so pipelining starts with the
+        // first lease; if it fails, `eval_anywhere` keeps retrying
+        // per-chunk below (and re-enters the pipeline on success).
+        self.ensure_conn();
+        loop {
+            if cancel.load(Ordering::Relaxed) {
+                break; // merger proved no later candidate wins
+            }
+            // Top up the pipeline on the held connection.
+            while self.conn.is_some() && inflight.len() < self.depth {
+                let next = redo.front().copied().or_else(|| fresh(cj));
+                let Some((s, e)) = next else { break };
+                if self.send_lease(s, e) {
+                    if redo.front() == Some(&(s, e)) {
+                        redo.pop_front();
+                    } else {
+                        cj += slots;
+                    }
+                    inflight.push_back((s, e));
+                } else {
+                    // The send dropped the connection: the leases
+                    // already on it are lost too ((s, e) itself was
+                    // never committed — it stays where it was).
+                    abandon(&mut inflight, &mut redo);
+                    break;
+                }
+            }
+            // Deliver the next range in ascending order.
+            let piped = inflight.front().copied();
+            let (s, e) = match piped
+                .or_else(|| redo.front().copied())
+                .or_else(|| fresh(cj))
+            {
+                Some(r) => r,
+                None => break, // every chunk delivered
+            };
+            let mut out = rec_rx.try_recv().unwrap_or_default();
+            if piped == Some((s, e)) {
+                inflight.pop_front();
+                if let Err(err) = self.recv_reply(s, e, &mut out) {
+                    let addr = self
+                        .conn
+                        .take()
+                        .map(|c| c.addr)
+                        .unwrap_or_default();
+                    eprintln!(
+                        "[gandse] dist: worker {addr} failed mid-scan \
+                         ({err}); re-leasing candidates {s}..{e} and {} \
+                         more in-flight lease(s)",
+                        inflight.len()
+                    );
+                    // Every unanswered lease on the dead connection is
+                    // lost: the front re-evaluates right here, the rest
+                    // go ahead of any fresh chunk.
+                    abandon(&mut inflight, &mut redo);
+                    self.eval_anywhere(s, e, &mut out);
+                }
+            } else {
+                // No live pipeline: blocking reconnect sweep + local
+                // fallback for this one chunk (a successful reconnect
+                // resumes pipelining on the next iteration).
+                if redo.front() == Some(&(s, e)) {
+                    redo.pop_front();
+                } else {
+                    cj += slots;
+                }
+                self.eval_anywhere(s, e, &mut out);
+            }
+            if tx.send(out).is_err() {
+                break; // merger is gone (early exit)
+            }
+        }
+    }
+
+    /// Try to (re)establish a connection: every configured address
+    /// once, preferred (slot-th) address first so healthy
+    /// configurations pin one fetcher per worker.
+    fn ensure_conn(&mut self) -> bool {
+        if self.conn.is_some() {
+            return true;
+        }
+        for i in 0..self.addrs.len() {
+            let a = &self.addrs[(self.slot + i) % self.addrs.len()];
+            if let Ok(c) = WireConn::connect(a, self.opts) {
+                self.conn = Some(c);
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Send one lease on the held connection.  On failure the
+    /// connection is dropped and `false` returned — the caller owns
+    /// re-leasing everything that was in flight on it.
+    fn send_lease(&mut self, start: usize, end: usize) -> bool {
+        let line = self.tpl.lease_line(start, end);
+        let Some(c) = self.conn.as_mut() else { return false };
+        match c.send_line(&line) {
+            Ok(()) => true,
+            Err(e) => {
+                let addr = self
+                    .conn
+                    .take()
+                    .map(|c| c.addr)
+                    .unwrap_or_default();
+                eprintln!(
+                    "[gandse] dist: worker {addr} failed mid-scan \
+                     ({e}); re-leasing candidates {start}..{end}"
+                );
+                false
+            }
+        }
+    }
+
+    /// Read the positionally-next reply off the held connection and
+    /// decode it as the objectives of `[start, end)`.
+    fn recv_reply(
+        &mut self,
+        start: usize,
+        end: usize,
+        out: &mut Vec<(f32, f32)>,
+    ) -> io::Result<()> {
+        match self.conn.as_mut() {
+            Some(c) => c.recv_reply(start, end, out),
+            None => Err(io::Error::new(
+                io::ErrorKind::NotConnected,
+                "no worker connection",
+            )),
+        }
+    }
+
     /// Evaluate candidates `[start, end)` into `out`, by remote lease
     /// if at all possible, locally as the last resort.  Infallible:
     /// evaluation is pure, so every route yields identical bits.
-    fn eval_range(
+    fn eval_anywhere(
         &mut self,
         start: usize,
         end: usize,
         out: &mut Vec<(f32, f32)>,
     ) {
         let line = self.tpl.lease_line(start, end);
-        let rows = end - start;
         // 1. The connection this fetcher already holds.
         let mut conn_err: Option<io::Error> = None;
         if let Some(c) = self.conn.as_mut() {
-            match c.round_trip(&line, rows, out) {
+            match c.round_trip(&line, start, end, out) {
                 Ok(()) => return,
                 Err(e) => conn_err = Some(e),
             }
@@ -375,7 +556,7 @@ impl<'a> Fetcher<'a> {
             let Ok(mut c) = WireConn::connect(a, self.opts) else {
                 continue;
             };
-            if c.round_trip(&line, rows, out).is_ok() {
+            if c.round_trip(&line, start, end, out).is_ok() {
                 self.conn = Some(c);
                 return;
             }
@@ -426,6 +607,17 @@ impl<'a> Fetcher<'a> {
     }
 }
 
+/// Move every not-yet-answered in-flight lease to the front of the
+/// re-lease queue, oldest first, preserving ascending chunk order.
+fn abandon(
+    inflight: &mut VecDeque<(usize, usize)>,
+    redo: &mut VecDeque<(usize, usize)>,
+) {
+    while let Some(r) = inflight.pop_back() {
+        redo.push_front(r);
+    }
+}
+
 /// One framed line-JSON connection to a worker, version-checked at
 /// connect time.
 struct WireConn {
@@ -459,7 +651,7 @@ impl WireConn {
         // Version handshake (PROTOCOL.md §5): a worker speaking another
         // proto is treated exactly like a dead one.
         c.send_line("{\"hello\":true}")?;
-        let v = c.recv_json()?;
+        let v = c.recv_json("hello reply")?;
         let proto = v.get("proto").and_then(Json::as_f64).unwrap_or(0.0);
         if v.get("ok").and_then(Json::as_bool) != Some(true)
             || proto != PROTO_VERSION as f64
@@ -477,7 +669,10 @@ impl WireConn {
         self.w.write_all(b"\n")
     }
 
-    fn recv_json(&mut self) -> io::Result<Json> {
+    /// Read one reply line; `what` names the lease (or handshake) the
+    /// reply answers, so a failure — an oversized reply in particular —
+    /// identifies the offending lease.
+    fn recv_json(&mut self, what: &str) -> io::Result<Json> {
         match read_bounded_line(
             &mut self.r,
             &mut self.buf,
@@ -493,7 +688,7 @@ impl WireConn {
             LineRead::TooLong => {
                 return Err(io::Error::new(
                     io::ErrorKind::InvalidData,
-                    "oversized worker reply",
+                    format!("oversized worker reply for {what}"),
                 ))
             }
         }
@@ -508,16 +703,32 @@ impl WireConn {
         })
     }
 
-    /// One lease round trip: send the line, decode `rows` objective
-    /// pairs from the reply's bit-pattern array into `out`.
+    /// One unpipelined lease round trip: send the line, decode the
+    /// reply (connection-establishment and fallback paths).
     fn round_trip(
         &mut self,
         lease_line: &str,
-        rows: usize,
+        start: usize,
+        end: usize,
         out: &mut Vec<(f32, f32)>,
     ) -> io::Result<()> {
         self.send_line(lease_line)?;
-        let v = self.recv_json()?;
+        self.recv_reply(start, end, out)
+    }
+
+    /// Decode the next reply line as the objectives of lease
+    /// `[start, end)` — replies carry no ids, they match outstanding
+    /// leases positionally (PROTOCOL.md §4.2), so the caller names the
+    /// lease a reply answers.
+    fn recv_reply(
+        &mut self,
+        start: usize,
+        end: usize,
+        out: &mut Vec<(f32, f32)>,
+    ) -> io::Result<()> {
+        let rows = end - start;
+        let what = format!("lease {start}..{end} ({rows} rows)");
+        let v = self.recv_json(&what)?;
         if v.get("ok").and_then(Json::as_bool) != Some(true) {
             let msg = v
                 .get("error")
@@ -525,7 +736,7 @@ impl WireConn {
                 .unwrap_or("unknown worker error");
             return Err(io::Error::new(
                 io::ErrorKind::InvalidData,
-                format!("worker rejected lease: {msg}"),
+                format!("worker rejected {what}: {msg}"),
             ));
         }
         let objs = v.get("objs").and_then(Json::as_arr).ok_or_else(|| {
@@ -590,6 +801,9 @@ fn exact_u64(v: &Json, what: &str) -> Result<u64, String> {
 /// Handle to a running evaluator worker (tests, benches, embedding).
 pub struct WorkerHandle {
     pub addr: SocketAddr,
+    /// Resolved per-lease evaluation thread count (`0` passed to
+    /// [`serve_worker`] resolves to all cores at bind time).
+    pub threads: usize,
     stop: Arc<AtomicBool>,
     acceptor: Option<std::thread::JoinHandle<()>>,
 }
@@ -621,12 +835,22 @@ impl WorkerHandle {
 /// `"127.0.0.1:0"` for an ephemeral port).  Thread per connection; each
 /// connection handles its leases strictly in arrival order (which is
 /// what lets the coordinator read replies without ids — PROTOCOL.md
-/// §4.2).  Workers are stateless across connections: every lease
-/// carries everything needed to evaluate it, which is what makes
-/// re-leasing a dead worker's chunk to any other worker safe.
-pub fn serve_worker(addr: &str) -> io::Result<WorkerHandle> {
+/// §4.2).  `threads` is the per-lease evaluation parallelism (`0` =
+/// all cores): a lease's `[start, end)` range splits into contiguous
+/// sub-ranges evaluated concurrently and concatenated in fixed order,
+/// so the reply bytes are bitwise identical at any thread count —
+/// threading is invisible on the wire.  Workers are stateless across
+/// connections: every lease carries everything needed to evaluate it,
+/// which is what makes re-leasing a dead worker's chunk to any other
+/// worker safe.
+pub fn serve_worker(addr: &str, threads: usize) -> io::Result<WorkerHandle> {
     let listener = TcpListener::bind(addr)?;
     let local = listener.local_addr()?;
+    let threads = if threads == 0 {
+        std::thread::available_parallelism().map_or(1, |c| c.get())
+    } else {
+        threads
+    };
     let stop = Arc::new(AtomicBool::new(false));
     let acceptor = {
         let stop = stop.clone();
@@ -637,30 +861,42 @@ pub fn serve_worker(addr: &str) -> io::Result<WorkerHandle> {
                 }
                 let Ok(stream) = stream else { continue };
                 let _ = stream.set_nodelay(true);
-                std::thread::spawn(move || handle_conn(stream));
+                std::thread::spawn(move || handle_conn(stream, threads));
             }
         })
     };
-    Ok(WorkerHandle { addr: local, stop, acceptor: Some(acceptor) })
+    Ok(WorkerHandle { addr: local, threads, stop, acceptor: Some(acceptor) })
 }
 
 /// Per-connection evaluation scratch, reused across leases: the
 /// evaluator survives as long as consecutive leases share (model, net)
 /// bits ([`NetChunkEval::covers`]), which holds for all leases of one
 /// scan.
-#[derive(Default)]
 struct LeaseScratch {
+    /// Per-lease evaluation thread count (resolved, ≥ 1).
+    threads: usize,
     eval: Option<NetChunkEval>,
     cfgs: Vec<f32>,
     objs: Vec<(f32, f32)>,
 }
 
-fn handle_conn(stream: TcpStream) {
+impl LeaseScratch {
+    fn new(threads: usize) -> LeaseScratch {
+        LeaseScratch {
+            threads: threads.max(1),
+            eval: None,
+            cfgs: Vec::new(),
+            objs: Vec::new(),
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, threads: usize) {
     let Ok(write_half) = stream.try_clone() else { return };
     let mut w = io::BufWriter::new(write_half);
     let mut r = io::BufReader::new(stream);
     let mut buf = Vec::new();
-    let mut sc = LeaseScratch::default();
+    let mut sc = LeaseScratch::new(threads);
     loop {
         match read_bounded_line(&mut r, &mut buf, MAX_LINE_BYTES) {
             Ok(LineRead::Line) => {}
@@ -745,11 +981,6 @@ fn handle_line(line: &str, sc: &mut LeaseScratch) -> Result<String, String> {
     if !cur.skip_to(start as u128) {
         return Err(format!("start {start} is past the leased space"));
     }
-    if sc.cfgs.len() < rows * gl {
-        sc.cfgs.resize(rows * gl, 0.0);
-    }
-    fill_chunk(&mut cur, &groups, &mut sc.cfgs[..rows * gl], rows, rows);
-
     let reuse = sc
         .eval
         .as_ref()
@@ -758,7 +989,47 @@ fn handle_line(line: &str, sc: &mut LeaseScratch) -> Result<String, String> {
         sc.eval = Some(NetChunkEval::new(kind, &net, rows.max(1)));
     }
     let eval = sc.eval.as_ref().expect("just installed");
-    eval.eval_chunk(&sc.cfgs[..rows * gl], rows, &mut sc.objs);
+    if sc.threads <= 1 {
+        if sc.cfgs.len() < rows * gl {
+            sc.cfgs.resize(rows * gl, 0.0);
+        }
+        fill_chunk(
+            &mut cur,
+            &groups,
+            &mut sc.cfgs[..rows * gl],
+            rows,
+            rows,
+        );
+        eval.eval_chunk(&sc.cfgs[..rows * gl], rows, &mut sc.objs);
+    } else {
+        // Split the lease over this worker's threads: contiguous
+        // sub-ranges in fixed order, each enumerated by its own cursor
+        // and evaluated against the one shared evaluator.  Per-row
+        // results never depend on chunk boundaries and `run_sharded`
+        // concatenates shard outputs in range order, so the reply is
+        // bitwise identical to the single-threaded path at any N.
+        let shards = run_sharded(
+            rows,
+            sc.threads,
+            WORKER_MIN_SHARD,
+            |s, e| -> Vec<(f32, f32)> {
+                let sub = e - s;
+                let mut cur = CandidateCursor::new(&kept_idx);
+                if !cur.skip_to(start as u128 + s as u128) {
+                    return Vec::new(); // unreachable: end <= size
+                }
+                let mut cfgs = vec![0f32; sub * gl];
+                fill_chunk(&mut cur, &groups, &mut cfgs, sub, sub);
+                let mut out = Vec::with_capacity(sub);
+                eval.eval_chunk(&cfgs, sub, &mut out);
+                out
+            },
+        );
+        sc.objs.clear();
+        for shard in shards {
+            sc.objs.extend_from_slice(&shard);
+        }
+    }
     if sc.objs.len() != rows {
         return Err(format!(
             "model produced {} rows for a {rows}-row lease",
@@ -868,6 +1139,7 @@ fn ok_reply(objs: &[(f32, f32)]) -> String {
 mod tests {
     use super::*;
     use crate::space::builtin_spec;
+    use std::io::Write as _; // writeln! on the fake workers' BufWriter
 
     fn spec_and_cands() -> (SpaceSpec, Candidates) {
         let spec = builtin_spec("dnnweaver").unwrap();
@@ -931,7 +1203,7 @@ mod tests {
     fn worker_line_evaluates_a_lease() {
         let (spec, cands) = spec_and_cands();
         let tpl = LeaseTemplate::new(&spec, &cands, &NET);
-        let mut sc = LeaseScratch::default();
+        let mut sc = LeaseScratch::new(1);
         let reply = handle_line(&tpl.lease_line(0, 4), &mut sc).unwrap();
         let v = Json::parse(&reply).unwrap();
         assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true));
@@ -951,7 +1223,7 @@ mod tests {
 
     #[test]
     fn worker_rejects_malformed_leases() {
-        let mut sc = LeaseScratch::default();
+        let mut sc = LeaseScratch::new(1);
         for bad in [
             "{\"lease\":{}}",
             "{\"lease\":{\"proto\":99,\"model\":\"dnnweaver\",\
@@ -982,8 +1254,8 @@ mod tests {
     #[test]
     fn distributed_matches_serial_in_process() {
         let (spec, cands) = spec_and_cands();
-        let w1 = serve_worker("127.0.0.1:0").unwrap();
-        let w2 = serve_worker("127.0.0.1:0").unwrap();
+        let w1 = serve_worker("127.0.0.1:0", 1).unwrap();
+        let w2 = serve_worker("127.0.0.1:0", 1).unwrap();
         let addrs =
             vec![w1.addr.to_string(), w2.addr.to_string()];
         // tiny chunks force many leases across both workers; the
@@ -1012,7 +1284,7 @@ mod tests {
         let cfg0: Vec<f32> =
             spec.groups.iter().map(|g| g.choices[0]).collect();
         let (l0, p0) = spec.kind.eval(&NET, &cfg0);
-        let w = serve_worker("127.0.0.1:0").unwrap();
+        let w = serve_worker("127.0.0.1:0", 1).unwrap();
         let addrs = vec![w.addr.to_string()];
         let engine = SelectEngine {
             chunk: 16,
@@ -1033,7 +1305,7 @@ mod tests {
     #[test]
     fn dead_address_re_leases_to_healthy_worker() {
         let (spec, cands) = spec_and_cands();
-        let w = serve_worker("127.0.0.1:0").unwrap();
+        let w = serve_worker("127.0.0.1:0", 1).unwrap();
         // port 1 refuses immediately: every chunk the dead slot owns is
         // re-leased to the healthy worker
         let addrs =
@@ -1045,6 +1317,7 @@ mod tests {
         let opts = DistOptions {
             connect_timeout: Duration::from_millis(500),
             io_timeout: Duration::from_secs(5),
+            ..DistOptions::default()
         };
         let serial =
             local_outcome(&spec, &cands, 1e-30, 1e-30, &NET, &engine);
@@ -1067,6 +1340,7 @@ mod tests {
         let opts = DistOptions {
             connect_timeout: Duration::from_millis(200),
             io_timeout: Duration::from_secs(1),
+            ..DistOptions::default()
         };
         let serial =
             local_outcome(&spec, &cands, 1e-30, 1e-30, &NET, &engine);
@@ -1088,5 +1362,287 @@ mod tests {
         )
         .expect("non-degenerate");
         assert_bit_identical(&dist, &serial);
+    }
+
+    #[test]
+    fn worker_threads_reply_bitwise_parity() {
+        // The tentpole contract on the worker side: splitting a lease
+        // over N evaluation threads must not change a single reply
+        // byte.  im2col's space is large enough for a lease that
+        // genuinely shards (8192 rows ≥ 8 × WORKER_MIN_SHARD).
+        let spec = builtin_spec("im2col").unwrap();
+        let kept: Vec<Vec<usize>> = spec
+            .groups
+            .iter()
+            .map(|g| (0..g.choices.len()).collect())
+            .collect();
+        let cands = Candidates { kept };
+        let tpl = LeaseTemplate::new(&spec, &cands, &NET);
+        // a non-zero start exercises the per-shard skip_to offsets
+        let big = tpl.lease_line(96, 96 + 8 * WORKER_MIN_SHARD);
+        // a tiny lease stays on the inline path at every thread count
+        let small = tpl.lease_line(3, 7);
+        let big_ref = handle_line(&big, &mut LeaseScratch::new(1)).unwrap();
+        let small_ref =
+            handle_line(&small, &mut LeaseScratch::new(1)).unwrap();
+        for threads in [2usize, 8] {
+            let mut sc = LeaseScratch::new(threads);
+            assert_eq!(
+                handle_line(&big, &mut sc).unwrap(),
+                big_ref,
+                "big lease, threads={threads}"
+            );
+            assert_eq!(
+                handle_line(&small, &mut sc).unwrap(),
+                small_ref,
+                "small lease, threads={threads}"
+            );
+        }
+    }
+
+    #[test]
+    fn pipelined_depths_match_serial_in_process() {
+        // Coordinator pipelining at depths {1, 2, 4} against a
+        // mixed-thread worker pair: identical bits every way.
+        let (spec, cands) = spec_and_cands();
+        let w1 = serve_worker("127.0.0.1:0", 1).unwrap();
+        let w2 = serve_worker("127.0.0.1:0", 2).unwrap();
+        let addrs = vec![w1.addr.to_string(), w2.addr.to_string()];
+        let engine = SelectEngine {
+            chunk: 16,
+            ..SelectEngine::sequential()
+        };
+        let serial =
+            local_outcome(&spec, &cands, 1e-30, 1e-30, &NET, &engine);
+        for depth in [1usize, 2, 4] {
+            let opts = DistOptions {
+                lease_depth: depth,
+                ..DistOptions::default()
+            };
+            let dist = run_distributed_with(
+                &spec, &cands, 1e-30, 1e-30, &NET, &engine, &addrs,
+                &opts,
+            )
+            .expect("non-degenerate");
+            assert_bit_identical(&dist, &serial);
+        }
+        w1.shutdown();
+        w2.shutdown();
+    }
+
+    #[test]
+    fn pipelined_early_exit_matches_serial() {
+        // Terminal on the very first offer while up to `depth` leases
+        // are in flight: the cancel must kill them all (by dropping the
+        // connection) and the result must still match serially.
+        let (spec, cands) = spec_and_cands();
+        let cfg0: Vec<f32> =
+            spec.groups.iter().map(|g| g.choices[0]).collect();
+        let (l0, p0) = spec.kind.eval(&NET, &cfg0);
+        let w = serve_worker("127.0.0.1:0", 1).unwrap();
+        let addrs = vec![w.addr.to_string()];
+        let engine = SelectEngine {
+            chunk: 16,
+            ..SelectEngine::sequential()
+        };
+        let serial = local_outcome(&spec, &cands, l0, p0, &NET, &engine);
+        for depth in [2usize, 4] {
+            let opts = DistOptions {
+                lease_depth: depth,
+                ..DistOptions::default()
+            };
+            let dist = run_distributed_with(
+                &spec, &cands, l0, p0, &NET, &engine, &addrs, &opts,
+            )
+            .expect("non-degenerate");
+            assert_bit_identical(&dist, &serial);
+            assert!(
+                dist.n_enumerated < cands.count() as usize,
+                "terminal state should stop the scan early"
+            );
+        }
+        w.shutdown();
+    }
+
+    /// A proto-1 worker that *withholds* replies until `batch` leases
+    /// have arrived on the connection, then answers them in order
+    /// (repeating until EOF).  Only a coordinator keeping ≥ `batch`
+    /// leases in flight makes progress against it — the teeth of the
+    /// pipelining tests.  Returns how many leases had arrived before
+    /// the first reply was flushed.
+    fn serve_batching_worker(
+        batch: usize,
+    ) -> (SocketAddr, std::thread::JoinHandle<usize>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            stream.set_nodelay(true).unwrap();
+            let mut w = io::BufWriter::new(stream.try_clone().unwrap());
+            let mut r = io::BufReader::new(stream);
+            let mut buf = Vec::new();
+            let mut sc = LeaseScratch::new(1);
+            let mut before_first_flush = 0usize;
+            let mut flushed = false;
+            let mut pending: Vec<String> = Vec::new();
+            while let Ok(LineRead::Line) =
+                read_bounded_line(&mut r, &mut buf, MAX_LINE_BYTES)
+            {
+                let line = String::from_utf8_lossy(&buf).trim().to_string();
+                if line.is_empty() {
+                    continue;
+                }
+                let is_hello = Json::parse(&line)
+                    .ok()
+                    .and_then(|v| v.get("hello").and_then(Json::as_bool))
+                    == Some(true);
+                let reply = match handle_line(&line, &mut sc) {
+                    Ok(s) => s,
+                    Err(m) => err_reply(&m),
+                };
+                if is_hello {
+                    // the handshake is ping-pong — never batched
+                    writeln!(w, "{reply}").unwrap();
+                    w.flush().unwrap();
+                    continue;
+                }
+                if !flushed {
+                    before_first_flush += 1;
+                }
+                pending.push(reply);
+                if pending.len() >= batch {
+                    for p in pending.drain(..) {
+                        writeln!(w, "{p}").unwrap();
+                    }
+                    w.flush().unwrap();
+                    flushed = true;
+                }
+            }
+            before_first_flush
+        });
+        (addr, h)
+    }
+
+    #[test]
+    fn pipeline_keeps_depth_leases_in_flight() {
+        // Against a worker that answers nothing until `depth` leases
+        // have arrived, a depth-4 coordinator completes (an
+        // unpipelined one would deadlock — this is the slow-worker
+        // guarantee: the merge never waits more than the lookahead
+        // bound on a reply the fetcher could have requested earlier).
+        // The scan is sized so every flush batch fills exactly:
+        // cap 128 / chunk 16 = 8 chunks, one fetcher, depth 4.
+        let (spec, cands) = spec_and_cands();
+        let depth = 4usize;
+        let (addr, fake) = serve_batching_worker(depth);
+        let addrs = vec![addr.to_string()];
+        let engine = SelectEngine {
+            cap: 128,
+            chunk: 16,
+            ..SelectEngine::sequential()
+        };
+        let opts = DistOptions {
+            lease_depth: depth,
+            ..DistOptions::default()
+        };
+        let serial =
+            local_outcome(&spec, &cands, 1e-30, 1e-30, &NET, &engine);
+        let dist = run_distributed_with(
+            &spec, &cands, 1e-30, 1e-30, &NET, &engine, &addrs, &opts,
+        )
+        .expect("non-degenerate");
+        assert_bit_identical(&dist, &serial);
+        let before_first_flush = fake.join().unwrap();
+        assert_eq!(
+            before_first_flush, depth,
+            "coordinator must have {depth} leases in flight before \
+             the first reply"
+        );
+    }
+
+    /// A proto-1 worker that accepts `accept_n` leases, answers only
+    /// the first `reply_n`, then drops the connection — and stops
+    /// listening the moment it accepts, so re-leases must go to another
+    /// address.
+    fn serve_dying_worker(
+        reply_n: usize,
+        accept_n: usize,
+    ) -> (SocketAddr, std::thread::JoinHandle<()>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            // Refuse reconnects from here on: the re-leased chunks
+            // must land on the healthy worker.
+            drop(listener);
+            stream.set_nodelay(true).unwrap();
+            let mut w = io::BufWriter::new(stream.try_clone().unwrap());
+            let mut r = io::BufReader::new(stream);
+            let mut buf = Vec::new();
+            let mut sc = LeaseScratch::new(1);
+            let mut leases = 0usize;
+            while let Ok(LineRead::Line) =
+                read_bounded_line(&mut r, &mut buf, MAX_LINE_BYTES)
+            {
+                let line = String::from_utf8_lossy(&buf).trim().to_string();
+                if line.is_empty() {
+                    continue;
+                }
+                let is_hello = Json::parse(&line)
+                    .ok()
+                    .and_then(|v| v.get("hello").and_then(Json::as_bool))
+                    == Some(true);
+                let reply = match handle_line(&line, &mut sc) {
+                    Ok(s) => s,
+                    Err(m) => err_reply(&m),
+                };
+                if is_hello {
+                    let _ = writeln!(w, "{reply}");
+                    let _ = w.flush();
+                    continue;
+                }
+                leases += 1;
+                if leases <= reply_n {
+                    let _ = writeln!(w, "{reply}");
+                    let _ = w.flush();
+                }
+                if leases == accept_n {
+                    break; // die with accept_n - reply_n unanswered
+                }
+            }
+        });
+        (addr, h)
+    }
+
+    #[test]
+    fn worker_death_with_leases_in_flight_re_leases_all() {
+        // A depth-4 fetcher loses its connection with multiple leases
+        // unanswered: every one of them (and every later chunk of that
+        // slot) must re-lease to the healthy worker, preserving order
+        // and bits.
+        let (spec, cands) = spec_and_cands();
+        let (dying_addr, fake) = serve_dying_worker(2, 4);
+        let healthy = serve_worker("127.0.0.1:0", 2).unwrap();
+        let addrs =
+            vec![dying_addr.to_string(), healthy.addr.to_string()];
+        let engine = SelectEngine {
+            cap: 256,
+            chunk: 16,
+            ..SelectEngine::sequential()
+        };
+        let opts = DistOptions {
+            lease_depth: 4,
+            connect_timeout: Duration::from_millis(500),
+            io_timeout: Duration::from_secs(10),
+        };
+        let serial =
+            local_outcome(&spec, &cands, 1e-30, 1e-30, &NET, &engine);
+        let dist = run_distributed_with(
+            &spec, &cands, 1e-30, 1e-30, &NET, &engine, &addrs, &opts,
+        )
+        .expect("non-degenerate");
+        assert_bit_identical(&dist, &serial);
+        let _ = fake.join();
+        healthy.shutdown();
     }
 }

@@ -98,7 +98,10 @@ const MIN_SHARD: usize = 4_096;
 /// point — enough to ride out merge-side jitter, small enough that
 /// in-flight memory stays O(workers x chunk).  Crate-visible so the
 /// distributed coordinator ([`dist`]) applies the identical lookahead
-/// bound to remote workers.
+/// bound to remote workers; there a fetcher additionally pipelines up
+/// to `DistOptions::lease_depth` leases on its connection, so the
+/// total per-connection lookahead is `lease_depth + CHUNKS_IN_FLIGHT`
+/// chunks.
 pub(crate) const CHUNKS_IN_FLIGHT: usize = 2;
 
 pub mod dist;

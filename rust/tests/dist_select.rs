@@ -30,12 +30,20 @@ struct WorkerProc {
 }
 
 impl WorkerProc {
-    /// Spawn `gandse worker --addr 127.0.0.1:0` and parse the bound
-    /// ephemeral address from its first stdout line (the line
-    /// `cmd_worker` prints for exactly this purpose).
-    fn spawn() -> WorkerProc {
+    /// Spawn `gandse worker --addr 127.0.0.1:0 --threads N` and parse
+    /// the bound ephemeral address from its first stdout line (the line
+    /// `cmd_worker` prints for exactly this purpose).  The banner also
+    /// carries the resolved thread count — asserted here so a worker
+    /// always runs the configuration the test launched.
+    fn spawn(threads: usize) -> WorkerProc {
         let mut child = Command::new(env!("CARGO_BIN_EXE_gandse"))
-            .args(["worker", "--addr", "127.0.0.1:0"])
+            .args([
+                "worker",
+                "--addr",
+                "127.0.0.1:0",
+                "--threads",
+                &threads.to_string(),
+            ])
             .stdout(Stdio::piped())
             .stderr(Stdio::null())
             .spawn()
@@ -49,11 +57,17 @@ impl WorkerProc {
             .rsplit("listening on ")
             .next()
             .expect("banner format")
-            .trim()
+            .split_whitespace()
+            .next()
+            .expect("banner address")
             .to_string();
         assert!(
             addr.starts_with("127.0.0.1:"),
             "unexpected worker banner: {line:?}"
+        );
+        assert!(
+            line.contains(&format!("(threads={threads})")),
+            "banner must name the launched thread count: {line:?}"
         );
         WorkerProc { child, addr }
     }
@@ -111,8 +125,8 @@ const NET: [f32; N_NET] = [64.0, 128.0, 28.0, 28.0, 3.0, 3.0];
 fn two_worker_processes_match_serial_scan() {
     let spec = builtin_spec("im2col").unwrap();
     let cands = full_candidates(&spec);
-    let w1 = WorkerProc::spawn();
-    let w2 = WorkerProc::spawn();
+    let w1 = WorkerProc::spawn(1);
+    let w2 = WorkerProc::spawn(1);
     let addrs = vec![w1.addr.clone(), w2.addr.clone()];
     let engine = SelectEngine {
         cap: 50_000,
@@ -128,6 +142,35 @@ fn two_worker_processes_match_serial_scan() {
     assert_eq!(dist.n_enumerated, 50_000, "cap must bound the scan");
 }
 
+/// The PR-9 matrix at the process level: multithreaded workers
+/// (`--threads 4`) under a pipelining coordinator (`--lease-depth 4`)
+/// — the scan that actually saturates a box — must still be bitwise
+/// equal to the serial scan.
+#[test]
+fn threaded_workers_and_deep_pipeline_match_serial_scan() {
+    let spec = builtin_spec("im2col").unwrap();
+    let cands = full_candidates(&spec);
+    let w1 = WorkerProc::spawn(4);
+    let w2 = WorkerProc::spawn(4);
+    let addrs = vec![w1.addr.clone(), w2.addr.clone()];
+    let engine = SelectEngine {
+        cap: 50_000,
+        chunk: 4096, // 4 × the worker threading floor: leases shard
+        ..SelectEngine::sequential()
+    };
+    let opts = DistOptions {
+        lease_depth: 4,
+        ..DistOptions::default()
+    };
+    let serial = local_outcome(&spec, &cands, 1e-30, 1e-30, &NET, &engine);
+    let dist = run_distributed_with(
+        &spec, &cands, 1e-30, 1e-30, &NET, &engine, &addrs, &opts,
+    )
+    .expect("non-degenerate");
+    assert_bit_identical(&dist, &serial);
+    assert_eq!(dist.n_enumerated, 50_000, "cap must bound the scan");
+}
+
 /// Kill one of two worker processes mid-scan: its outstanding and
 /// future chunks re-lease to the survivor (and, transiently, to the
 /// local fallback) and the result is still bitwise equal to serial.
@@ -138,17 +181,20 @@ fn two_worker_processes_match_serial_scan() {
 fn killing_a_worker_mid_scan_re_leases_and_matches_serial() {
     let spec = builtin_spec("im2col").unwrap();
     let cands = full_candidates(&spec);
-    let mut w1 = WorkerProc::spawn();
-    let w2 = WorkerProc::spawn();
+    let mut w1 = WorkerProc::spawn(1);
+    let w2 = WorkerProc::spawn(1);
     let addrs = vec![w1.addr.clone(), w2.addr.clone()];
     let engine = SelectEngine {
         cap: 120_000,
         chunk: 2048,
         ..SelectEngine::sequential()
     };
+    // Depth 4 puts multiple leases in flight on the doomed worker's
+    // connection when the kill lands; all of them must re-lease.
     let opts = DistOptions {
         connect_timeout: Duration::from_millis(500),
         io_timeout: Duration::from_secs(10),
+        lease_depth: 4,
     };
     let serial = local_outcome(&spec, &cands, 1e-30, 1e-30, &NET, &engine);
     let killer = std::thread::spawn(move || {
@@ -195,9 +241,10 @@ fn explorer_results_identical_with_and_without_dist_workers() {
         .collect();
     let local = ex.explore(&reqs).unwrap();
 
-    let w1 = WorkerProc::spawn();
-    let w2 = WorkerProc::spawn();
+    let w1 = WorkerProc::spawn(1);
+    let w2 = WorkerProc::spawn(2);
     ex.dist_workers = vec![w1.addr.clone(), w2.addr.clone()];
+    ex.dist_opts.lease_depth = 4;
     let dist = ex.explore(&reqs).unwrap();
 
     assert_eq!(local.len(), dist.len());

@@ -1,12 +1,14 @@
 #!/usr/bin/env bash
 # Distributed-selection smoke on the pure-Rust cpu backend: train a tiny
-# GAN, start two `gandse worker` evaluator processes on ephemeral ports,
-# then run the same explore twice — locally and with
-# `--workers host:port,host:port` — and require the *outputs to be
-# byte-identical* (modulo wall-clock lines).  That is the cluster-wide
-# bitwise contract (DESIGN.md §8) at the CLI level, which CI gates on.
-# Also exercises the degraded path: an explore pointed only at a dead
-# address must still succeed (local fallback) with identical output.
+# GAN, then drive the full PR-9 matrix — worker `--threads` {1,4} ×
+# coordinator `--lease-depth` {1,4} — over two `gandse worker` evaluator
+# processes on ephemeral ports, requiring every combination's explore
+# output to be *byte-identical* (modulo wall-clock lines) to the local
+# scan.  That is the cluster-wide bitwise contract (DESIGN.md §8) at the
+# CLI level, which CI gates on.  Also exercises the two degraded paths:
+# killing one worker mid-scan with depth > 1 (multiple leases in flight
+# must re-lease) and an explore pointed only at a dead address (local
+# fallback), both with identical output.
 #
 # Usage: scripts/dist_smoke.sh [path/to/gandse-binary]
 set -euo pipefail
@@ -19,19 +21,27 @@ WORK=$(mktemp -d)
 W1_PID=""
 W2_PID=""
 cleanup() {
-    [ -n "$W1_PID" ] && kill "$W1_PID" 2>/dev/null || true
-    [ -n "$W2_PID" ] && kill "$W2_PID" 2>/dev/null || true
+    if [ -n "$W1_PID" ]; then
+        kill "$W1_PID" 2>/dev/null || true
+    fi
+    if [ -n "$W2_PID" ]; then
+        kill "$W2_PID" 2>/dev/null || true
+    fi
     rm -rf "$WORK"
 }
 trap cleanup EXIT
 
-# Scrape "gandse worker listening on 127.0.0.1:PORT" from a worker log.
+# Scrape "gandse worker listening on 127.0.0.1:PORT (threads=N)" from a
+# worker log (the sed keys on the port, so the threads suffix is free to
+# grow).
 wait_port() { # $1 = logfile, $2 = pid
     local port=""
     for _ in $(seq 1 100); do
         port=$(sed -n 's/.*listening on 127\.0\.0\.1:\([0-9]*\).*/\1/p' \
             "$1" | head -1)
-        [ -n "$port" ] && break
+        if [ -n "$port" ]; then
+            break
+        fi
         if ! kill -0 "$2" 2>/dev/null; then
             echo "worker exited early:" >&2
             cat "$1" >&2
@@ -47,36 +57,91 @@ wait_port() { # $1 = logfile, $2 = pid
     echo "$port"
 }
 
+start_workers() { # $1 = worker --threads value
+    "$BIN" worker --addr 127.0.0.1:0 --threads "$1" \
+        >"$WORK/w1.log" 2>&1 &
+    W1_PID=$!
+    "$BIN" worker --addr 127.0.0.1:0 --threads "$1" \
+        >"$WORK/w2.log" 2>&1 &
+    W2_PID=$!
+    P1=$(wait_port "$WORK/w1.log" "$W1_PID")
+    P2=$(wait_port "$WORK/w2.log" "$W2_PID")
+    # The banner must name the thread count it resolved to — this is
+    # what keeps the matrix honest about which config actually ran.
+    grep -q "(threads=$1)" "$WORK/w1.log"
+    grep -q "(threads=$1)" "$WORK/w2.log"
+}
+
+stop_workers() {
+    if [ -n "$W1_PID" ]; then
+        kill "$W1_PID" 2>/dev/null || true
+        wait "$W1_PID" 2>/dev/null || true
+        W1_PID=""
+    fi
+    if [ -n "$W2_PID" ]; then
+        kill "$W2_PID" 2>/dev/null || true
+        wait "$W2_PID" 2>/dev/null || true
+        W2_PID=""
+    fi
+}
+
 echo "== train (cpu backend, no artifacts) =="
 "$BIN" train --model dnnweaver --backend cpu "${SIZES[@]}" \
     --train 256 --test 16 --epochs 2 --lr 1e-3 --log-every 0 \
     --ckpt "$WORK/smoke.ckpt"
 test -s "$WORK/smoke.ckpt"
 
-echo "== start 2 evaluator workers =="
-"$BIN" worker --addr 127.0.0.1:0 >"$WORK/w1.log" 2>&1 &
-W1_PID=$!
-"$BIN" worker --addr 127.0.0.1:0 >"$WORK/w2.log" 2>&1 &
-W2_PID=$!
-P1=$(wait_port "$WORK/w1.log" "$W1_PID")
-P2=$(wait_port "$WORK/w2.log" "$W2_PID")
-echo "workers on ports $P1 and $P2"
-
 # Several leases per scan: a small --chunk splits even the tiny builtin
-# space across both workers.
+# space across both workers (and, with --lease-depth 4, keeps several
+# leases in flight per connection).
 EXPLORE=(explore --model dnnweaver --backend cpu "${SIZES[@]}"
     --train 256 --test 16 --ckpt "$WORK/smoke.ckpt"
     --lo 0.01 --po 2.0 --chunk 64)
 
-echo "== explore: local vs 2-worker distributed (must be identical) =="
+echo "== explore: local reference =="
 "$BIN" "${EXPLORE[@]}" | grep -v "DSE time" >"$WORK/local.out"
-"$BIN" "${EXPLORE[@]}" --workers "127.0.0.1:$P1,127.0.0.1:$P2" \
-    | grep -v "DSE time" >"$WORK/dist.out"
-if ! diff -u "$WORK/local.out" "$WORK/dist.out"; then
-    echo "FAIL: distributed explore output differs from local" >&2
+test -s "$WORK/local.out"
+
+for T in 1 4; do
+    echo "== start 2 evaluator workers (--threads $T) =="
+    start_workers "$T"
+    echo "workers on ports $P1 and $P2"
+    for D in 1 4; do
+        echo "== explore: 2 workers, threads=$T depth=$D (must match local) =="
+        "$BIN" "${EXPLORE[@]}" \
+            --workers "127.0.0.1:$P1,127.0.0.1:$P2" --lease-depth "$D" \
+            | grep -v "DSE time" >"$WORK/dist_t${T}_d${D}.out"
+        if ! diff -u "$WORK/local.out" "$WORK/dist_t${T}_d${D}.out"; then
+            echo "FAIL: distributed explore (threads=$T depth=$D)" \
+                "differs from local" >&2
+            exit 1
+        fi
+    done
+    stop_workers
+done
+
+echo "== explore: kill one worker mid-scan (depth 4, must match local) =="
+start_workers 4
+"$BIN" "${EXPLORE[@]}" \
+    --workers "127.0.0.1:$P1,127.0.0.1:$P2" --lease-depth 4 \
+    >"$WORK/kill.raw" 2>"$WORK/kill.err" &
+EXPLORE_PID=$!
+# The tiny scan may finish before the kill lands; parity is asserted
+# either way, and the deterministic dead-worker path is covered below
+# and by the in-module re-lease tests.
+sleep 0.2
+kill "$W1_PID" 2>/dev/null || true
+if ! wait "$EXPLORE_PID"; then
+    echo "FAIL: explore failed after a worker was killed mid-scan" >&2
+    cat "$WORK/kill.err" >&2
     exit 1
 fi
-test -s "$WORK/local.out"
+grep -v "DSE time" "$WORK/kill.raw" >"$WORK/kill.out"
+if ! diff -u "$WORK/local.out" "$WORK/kill.out"; then
+    echo "FAIL: explore output differs after killing a worker mid-scan" >&2
+    exit 1
+fi
+stop_workers
 
 echo "== explore: dead worker address (must fall back, identically) =="
 "$BIN" "${EXPLORE[@]}" --workers 127.0.0.1:1 \

@@ -16,7 +16,9 @@ SIZES=(--width 32 --g-depth 2 --d-depth 2 --train-batch 32 --infer-batch 16)
 WORK=$(mktemp -d)
 SERVER_PID=""
 cleanup() {
-    [ -n "$SERVER_PID" ] && kill "$SERVER_PID" 2>/dev/null || true
+    if [ -n "$SERVER_PID" ]; then
+        kill "$SERVER_PID" 2>/dev/null || true
+    fi
     rm -rf "$WORK"
 }
 trap cleanup EXIT
