@@ -535,6 +535,123 @@ fn bench_selection_throughput(b: &mut Bench) -> anyhow::Result<()> {
             ("per_worker_speedup_threads4_vs_1", Json::Num(per_worker)),
         ]));
     }
+    // Pareto-archive scan rows: the same 250k-cap shape reduced into a
+    // 16-slot nondominated archive instead of Algorithm 2's single
+    // winner.  The archive never early-exits, so every run is a fixed
+    // 250k-candidate workload; rows key `threads` like the single-winner
+    // rows (`pareto_im2col_cap250k`), plus one 2-loopback-worker row
+    // (`dist_pareto_im2col_cap250k`).  Archive parity — point-for-point,
+    // bit-for-bit — is asserted across 1 vs 4 threads and local vs
+    // distributed, which makes this bench double as the determinism
+    // canary for capacity-bounded crowding pruning.
+    {
+        use gandse::model::NetChunkEval;
+        use gandse::select::dist::{run_pareto_distributed, serve_worker};
+        let cap = 250_000usize;
+        let archive = 16usize;
+        let engine1 = SelectEngine {
+            threads: 1,
+            cap,
+            chunk: 16_384,
+            ..SelectEngine::default()
+        };
+        let mut baseline: Option<gandse::select::ParetoOutcome> = None;
+        let mut cps_1thread = 0f64;
+        let mut best_cps = 0f64;
+        for threads in [1usize, 4] {
+            let engine = SelectEngine { threads, ..engine1 };
+            let mut out = None;
+            b.run(
+                &format!(
+                    "select_engine/pareto_im2col_cap250k threads={threads}"
+                ),
+                3,
+                cap,
+                || {
+                    let r = engine
+                        .run_pareto_chunked(
+                            &spec,
+                            &small,
+                            archive,
+                            NetChunkEval::new(kind, &net, engine.chunk),
+                        )
+                        .expect("non-empty candidates");
+                    out = Some(r);
+                },
+            );
+            let out = out.expect("bench ran at least once");
+            assert_eq!(
+                out.n_enumerated, cap,
+                "pareto scan must cover the whole capped space"
+            );
+            assert!(!out.points.is_empty() && out.points.len() <= archive);
+            if let Some(b0) = &baseline {
+                assert_eq!(
+                    &out, b0,
+                    "pareto archive lost thread parity at {threads}"
+                );
+            } else {
+                baseline = Some(out.clone());
+            }
+            let secs = b.rows.last().expect("bench recorded a row").1;
+            let cps = out.n_enumerated as f64 / secs;
+            if threads == 1 {
+                cps_1thread = cps;
+            }
+            best_cps = best_cps.max(cps);
+            rows.push(Json::obj(vec![
+                ("shape", Json::str("pareto_im2col_cap250k")),
+                ("threads", Json::Num(threads as f64)),
+                ("secs", Json::Num(secs)),
+                ("candidates", Json::Num(out.n_enumerated as f64)),
+                ("candidate_space", Json::Num(small.count())),
+                ("cands_per_sec", Json::Num(cps)),
+            ]));
+        }
+        println!(
+            "select_engine/pareto_im2col_cap250k: {:.2}x over 1 thread",
+            best_cps / cps_1thread.max(1e-12)
+        );
+        speedups.push(Json::obj(vec![
+            ("shape", Json::str("pareto_im2col_cap250k")),
+            ("speedup_best_vs_1thread", Json::Num(best_cps / cps_1thread.max(1e-12))),
+        ]));
+        // Distributed archive through 2 loopback worker processes —
+        // parity against the local serial archive.
+        let pool: Vec<_> = (0..2)
+            .map(|_| serve_worker("127.0.0.1:0", 1).unwrap())
+            .collect();
+        let addrs: Vec<String> =
+            pool.iter().map(|h| h.addr.to_string()).collect();
+        let serial = baseline.expect("local rows ran first");
+        let mut out = None;
+        b.run(
+            "select_engine/dist_pareto_im2col_cap250k workers=2",
+            3,
+            cap,
+            || {
+                let r = run_pareto_distributed(
+                    &spec, &small, archive, &net, &engine1, &addrs,
+                )
+                .expect("non-empty candidates");
+                out = Some(r);
+            },
+        );
+        let out = out.expect("bench ran at least once");
+        assert_eq!(out, serial, "distributed pareto archive lost parity");
+        let secs = b.rows.last().expect("bench recorded a row").1;
+        rows.push(Json::obj(vec![
+            ("shape", Json::str("dist_pareto_im2col_cap250k")),
+            ("threads", Json::Num(2.0)),
+            ("secs", Json::Num(secs)),
+            ("candidates", Json::Num(out.n_enumerated as f64)),
+            ("candidate_space", Json::Num(small.count())),
+            ("cands_per_sec", Json::Num(out.n_enumerated as f64 / secs)),
+        ]));
+        for h in pool {
+            h.shutdown();
+        }
+    }
     let doc = Json::obj(vec![
         ("bench", Json::str("select_throughput")),
         ("model", Json::str("im2col")),

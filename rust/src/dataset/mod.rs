@@ -74,7 +74,7 @@ pub fn generate(
 ) -> Dataset {
     let mut rng = Rng::new(seed);
     let n_groups = spec.groups.len();
-    let mut objs: Vec<(f32, f32)> = Vec::new();
+    let mut objs: Vec<f32> = Vec::new();
     let mut make = |n: usize| -> Vec<Sample> {
         let mut nets = Vec::with_capacity(n * N_NET);
         let mut cfgs = Vec::with_capacity(n * n_groups);
@@ -94,9 +94,9 @@ pub fn generate(
             });
         }
         spec.kind.eval_batch(&nets, &cfgs, &mut objs);
-        for (s, &(latency, power)) in samples.iter_mut().zip(&objs) {
-            s.latency = latency;
-            s.power = power;
+        for (s, o) in samples.iter_mut().zip(objs.chunks_exact(2)) {
+            s.latency = o[0];
+            s.power = o[1];
         }
         samples
     };

@@ -24,7 +24,8 @@ use crate::util::rng::Rng;
 // the explorer is where most callers first meet it.
 pub use crate::select::DEFAULT_CAP as MAX_ENUMERATED;
 pub use crate::select::{
-    CandidateCursor, CandidateIter, Candidates, SelectOutcome, Selector,
+    CandidateCursor, CandidateIter, Candidates, ObjectiveSelector,
+    ParetoOutcome, ParetoPoint, ParetoSelector, SelectOutcome, Selector,
 };
 
 /// Default probability threshold (Section 6.1's example value).
@@ -61,6 +62,33 @@ pub struct DseResult {
     /// Both objectives met (with the paper's 1% evaluation noise applied
     /// by the harness, not here).
     pub satisfied: bool,
+}
+
+/// Default Pareto-archive capacity for the `pareto` exploration mode.
+pub const DEFAULT_ARCHIVE: usize = 16;
+
+/// One point of a Pareto front, with its configuration resolved to
+/// indices and raw values (the front-facing sibling of [`ParetoPoint`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParetoFrontPoint {
+    pub cfg_idx: Vec<usize>,
+    pub cfg_raw: Vec<f32>,
+    /// The K design-model objectives, in model order
+    /// (latency, power for the builtin families).
+    pub objs: Vec<f32>,
+}
+
+/// Outcome of one `pareto` exploration task: the bounded nondominated
+/// archive over the request's candidate set, in first-seen candidate
+/// order (deterministic at any thread/worker count).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParetoResult {
+    pub front: Vec<ParetoFrontPoint>,
+    /// True uncapped candidate count implied by the threshold.
+    pub n_candidates: f64,
+    /// Candidates actually offered to the archive (`min(count, cap)` —
+    /// the archive never exits early).
+    pub n_scanned: usize,
 }
 
 /// The Design Explorer: batched G inference (through the execution
@@ -323,6 +351,74 @@ impl<'a> Explorer<'a> {
             n_candidates: count,
             n_scanned: out.n_enumerated,
             satisfied: out.latency <= req.lo && out.power <= req.po,
+        }
+    }
+
+    /// Pareto-front exploration for a batch of DSE tasks: the same
+    /// inference + candidate expansion as [`Explorer::explore`] (the
+    /// request's objectives still condition G — they shape which
+    /// candidates the generator proposes), but instead of Algorithm 2's
+    /// single winner the whole candidate set streams through a bounded
+    /// nondominated archive ([`ParetoSelector`]).  The archive is a
+    /// pure function of the candidate order, so replies are bitwise
+    /// identical at any thread or dist-worker count.
+    pub fn pareto(
+        &mut self,
+        reqs: &[DseRequest],
+        archive_cap: usize,
+    ) -> Result<Vec<ParetoResult>> {
+        let probs = self.infer_probs(reqs)?;
+        Ok(reqs
+            .iter()
+            .zip(&probs)
+            .map(|(r, p)| self.pareto_from_probs(r, p, archive_cap))
+            .collect())
+    }
+
+    /// Archive scan for one request given G's output (the Pareto
+    /// sibling of [`Explorer::select_from_probs`]).
+    pub fn pareto_from_probs(
+        &self,
+        req: &DseRequest,
+        probs: &[f32],
+        archive_cap: usize,
+    ) -> ParetoResult {
+        let spec = self.spec;
+        let engine = &self.engine;
+        let cands = Candidates::from_probs(spec, probs, self.threshold);
+        let count = cands.count();
+        let out = if self.dist_workers.is_empty() {
+            let rows_max = (engine.chunk.max(1) as f64)
+                .min(count.max(1.0))
+                .min(engine.cap.max(1) as f64) as usize;
+            let eval = crate::model::NetChunkEval::new(
+                spec.kind, &req.net, rows_max,
+            );
+            engine.run_pareto_chunked(spec, &cands, archive_cap, eval)
+        } else {
+            crate::select::dist::run_pareto_distributed_with(
+                spec,
+                &cands,
+                archive_cap,
+                &req.net,
+                engine,
+                &self.dist_workers,
+                &self.dist_opts,
+            )
+        }
+        .expect("at least one candidate is guaranteed");
+        ParetoResult {
+            front: out
+                .points
+                .iter()
+                .map(|p| ParetoFrontPoint {
+                    cfg_raw: spec.raw_values(&p.cfg_idx),
+                    cfg_idx: p.cfg_idx.clone(),
+                    objs: p.objs.clone(),
+                })
+                .collect(),
+            n_candidates: count,
+            n_scanned: out.n_enumerated,
         }
     }
 

@@ -432,6 +432,111 @@ pub fn ablate_threshold(
     Ok(out)
 }
 
+/// Largest space `pareto_report` will brute-force for the exact front.
+/// dnnweaver (750 points) is in; im2col (~293M) is far out.
+pub const MAX_EXACT_SPACE: u128 = 1 << 16;
+
+/// Objectives of *every* point in the space, enumeration order — the
+/// brute-force ground truth the archive is scored against.
+fn full_space_objs(
+    spec: &crate::space::SpaceSpec,
+    net: &[f32],
+) -> Vec<Vec<f32>> {
+    let sizes: Vec<usize> = spec.groups.iter().map(|g| g.size()).collect();
+    let mut idx = vec![0usize; sizes.len()];
+    let mut out = Vec::new();
+    'outer: loop {
+        let cfg = spec.raw_values(&idx);
+        let (l, p) = spec.kind.eval(net, &cfg);
+        out.push(vec![l, p]);
+        for g in (0..sizes.len()).rev() {
+            idx[g] += 1;
+            if idx[g] < sizes[g] {
+                continue 'outer;
+            }
+            idx[g] = 0;
+        }
+        break;
+    }
+    out
+}
+
+/// Pareto-mode report (`gandse bench --exp pareto`): per task, score the
+/// explorer's bounded nondominated archive against the **exact** front
+/// of the full design space (brute-forced — hence the
+/// [`MAX_EXACT_SPACE`] guard) with two standard multi-objective
+/// quality indicators:
+///
+/// * `hv_ratio` — archive hypervolume / exact-front hypervolume at a
+///   shared reference point (2x the space's worst objectives).  1.0
+///   means the bounded archive recovered the full front's dominated
+///   volume; lower means capacity pruning or the GAN's candidate filter
+///   cost coverage.
+/// * `gd` — generational distance from archive to exact front (0.0
+///   means every archive point *is* on the true front).
+#[allow(clippy::too_many_arguments)]
+pub fn pareto_report(
+    backend: &dyn Backend,
+    meta: &Meta,
+    model: &str,
+    ds: &Dataset,
+    tasks: &[DseRequest],
+    g_params: Vec<f32>,
+    archive: usize,
+    engine: SelectEngine,
+) -> Result<String> {
+    let spec = &meta.model(model)?.spec;
+    if spec.space_size() > MAX_EXACT_SPACE {
+        anyhow::bail!(
+            "--exp pareto brute-forces the exact front; {model} has {} \
+             points (max {MAX_EXACT_SPACE}) — use --model dnnweaver",
+            spec.space_size()
+        );
+    }
+    let mut ex =
+        Explorer::new(backend, meta, model, g_params, ds.stats.to_vec())?;
+    ex.engine = engine;
+    let results = ex.pareto(tasks, archive)?;
+    let mut out = String::from(
+        "task,lo,po,front_exact,front_archive,hv_exact,hv_archive,\
+         hv_ratio,gd\n",
+    );
+    for (t_i, (t, r)) in tasks.iter().zip(&results).enumerate() {
+        let objs = full_space_objs(spec, &t.net);
+        let exact: Vec<Vec<f32>> = metrics::nondominated_indices(&objs)
+            .into_iter()
+            .map(|i| objs[i].clone())
+            .collect();
+        // shared reference point, strictly dominated by every point in
+        // the space — deterministic, so rows are comparable across runs
+        let (mut rl, mut rp) = (f32::NEG_INFINITY, f32::NEG_INFINITY);
+        for o in &objs {
+            rl = rl.max(o[0]);
+            rp = rp.max(o[1]);
+        }
+        let r_ref = (rl * 2.0, rp * 2.0);
+        let exact_pairs: Vec<(f32, f32)> =
+            exact.iter().map(|o| (o[0], o[1])).collect();
+        let hv_exact = metrics::hypervolume2(&exact_pairs, r_ref);
+        let arch_pairs: Vec<(f32, f32)> =
+            r.front.iter().map(|p| (p.objs[0], p.objs[1])).collect();
+        let hv_archive = metrics::hypervolume2(&arch_pairs, r_ref);
+        let arch_objs: Vec<Vec<f32>> =
+            r.front.iter().map(|p| p.objs.clone()).collect();
+        let gd = metrics::generational_distance(&arch_objs, &exact);
+        let hv_ratio =
+            if hv_exact > 0.0 { hv_archive / hv_exact } else { 0.0 };
+        out.push_str(&format!(
+            "{t_i},{},{},{},{},{hv_exact},{hv_archive},{hv_ratio},{gd}\n",
+            t.lo,
+            t.po,
+            exact.len(),
+            r.front.len(),
+        ));
+    }
+    Ok(out)
+}
+
 /// Figs. 10/11: training loss curves (epoch series per method).
 pub fn fig1011_csv(results: &[MethodResult]) -> String {
     let mut out = String::from(
@@ -512,6 +617,22 @@ mod tests {
         let (l, p) = rs[0].error_stds();
         assert!(l.abs() < 1e-6 && p.abs() < 1e-6);
         assert!(fig5_csv(&rs).contains("x,0"));
+    }
+
+    #[test]
+    fn full_space_enumeration_covers_dnnweaver() {
+        let spec = crate::space::builtin_spec("dnnweaver").unwrap();
+        let net = [32.0, 32.0, 32.0, 32.0, 3.0, 3.0];
+        let objs = full_space_objs(&spec, &net);
+        assert_eq!(objs.len() as u128, spec.space_size());
+        // odometer order: first row is the all-zeros index, last row the
+        // all-max index — and each row is the scalar eval of that cfg
+        let first = spec.kind.eval(&net, &spec.raw_values(&[0, 0, 0, 0]));
+        assert_eq!(objs[0], vec![first.0, first.1]);
+        let top: Vec<usize> =
+            spec.groups.iter().map(|g| g.size() - 1).collect();
+        let last = spec.kind.eval(&net, &spec.raw_values(&top));
+        assert_eq!(objs.last().unwrap(), &vec![last.0, last.1]);
     }
 
     #[test]

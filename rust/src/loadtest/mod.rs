@@ -101,6 +101,12 @@ pub struct RoundSpec {
     /// inflate a later round's hit rate — uniform-vs-zipf comparisons
     /// stay apples-to-apples within one invocation.
     pub key_base: u64,
+    /// Issue `"pareto":true` archive requests instead of single-winner
+    /// DSE requests.  These bypass the server's response cache, so the
+    /// round measures the uncached K-objective scan path; replies carry
+    /// a `front` array but the same `ok`/`id` contract, so the
+    /// zero-error pipelining gate applies unchanged.
+    pub pareto: bool,
 }
 
 impl RoundSpec {
@@ -114,6 +120,7 @@ impl RoundSpec {
             dist: KeyDist::Uniform,
             universe: DEFAULT_UNIVERSE,
             key_base: 0,
+            pareto: false,
         }
     }
 }
@@ -210,7 +217,7 @@ fn client_loop(
     let window = spec.pipeline.max(1).min(n);
     for _ in 0..window {
         t_send[sent] = Some(Instant::now());
-        write_req(&mut w, keys.next_key(), sent)?;
+        write_req(&mut w, keys.next_key(), sent, spec.pareto)?;
         sent += 1;
     }
     let mut line = String::new();
@@ -240,7 +247,7 @@ fn client_loop(
             // arrive, so the read loop's end-of-stream accounting above
             // covers it exactly once (counting both would let errors
             // exceed `total` and push err_rate past 1.0)
-            let _ = write_req(&mut w, keys.next_key(), sent);
+            let _ = write_req(&mut w, keys.next_key(), sent, spec.pareto);
             sent += 1;
         }
     }
@@ -333,15 +340,24 @@ pub fn lo_for_key(key: u64) -> f64 {
     1e-3 * (1.0 + (key % MAX_KEY) as f64 / MAX_KEY as f64)
 }
 
-fn write_req(w: &mut TcpStream, key: u64, i: usize) -> Result<()> {
+fn write_req(
+    w: &mut TcpStream,
+    key: u64,
+    i: usize,
+    pareto: bool,
+) -> Result<()> {
     // the key varies the objective (so repeated keys are identical work
     // and distinct keys are not); one write_all per request — with
     // TCP_NODELAY a separate newline write would cost an extra syscall
     // (and possibly packet) inside the very round trip this measures
     let lo = lo_for_key(key);
-    let req = format!(
-        r#"{{"net":[32,32,32,32,3,3],"lo":{lo},"po":2.0,"id":{i}}}"#
-    ) + "\n";
+    let req = if pareto {
+        format!(
+            r#"{{"net":[32,32,32,32,3,3],"lo":{lo},"po":2.0,"pareto":true,"archive":16,"id":{i}}}"#
+        )
+    } else {
+        format!(r#"{{"net":[32,32,32,32,3,3],"lo":{lo},"po":2.0,"id":{i}}}"#)
+    } + "\n";
     w.write_all(req.as_bytes())?;
     Ok(())
 }
@@ -354,10 +370,11 @@ pub fn json_row(s: &RoundStats, server_workers: usize) -> Json {
         (
             "shape",
             Json::str(&format!(
-                "c{}_p{}{}",
+                "c{}_p{}{}{}",
                 s.spec.clients,
                 s.spec.pipeline,
-                s.spec.dist.shape_suffix()
+                s.spec.dist.shape_suffix(),
+                if s.spec.pareto { "_pareto" } else { "" }
             )),
         ),
         ("clients", Json::Num(s.spec.clients as f64)),
@@ -455,6 +472,23 @@ mod tests {
         s.spec.dist = KeyDist::Fixed;
         let v = json_row(&s, 2);
         assert_eq!(v.get("shape").unwrap().as_str(), Some("c64_p8_fixed"));
+    }
+
+    #[test]
+    fn pareto_rounds_get_their_own_shape_keys() {
+        // pareto rounds bypass the response cache, so their throughput
+        // must never be compared against cached single-winner rows —
+        // the `_pareto` suffix gives them a disjoint baseline key
+        let mut s = stats();
+        s.spec.pareto = true;
+        let v = json_row(&s, 2);
+        assert_eq!(v.get("shape").unwrap().as_str(), Some("c64_p8_pareto"));
+        s.spec.dist = KeyDist::Zipf(1.1);
+        let v = json_row(&s, 2);
+        assert_eq!(
+            v.get("shape").unwrap().as_str(),
+            Some("c64_p8_zipf1.1_pareto")
+        );
     }
 
     fn sampler(spec: &RoundSpec, client: usize) -> KeySampler {

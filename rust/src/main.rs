@@ -51,12 +51,16 @@ COMMANDS
             --ic .. --oc .. --ow .. --oh .. --kw .. --kh ..)
             [--network] [--rtl out.v] [--threshold T] [--threads N]
             [--cap C] [--chunk K] [--workers host:port,...]
-            [--lease-depth D]
+            [--lease-depth D] [--pareto] [--archive N]
             (--network selects ONE shared config for all layers;
              --workers distributes the scan across running
              `gandse worker` processes — bitwise-identical results;
              --lease-depth: leases pipelined per worker connection,
-             default 2 — results are identical at any depth)
+             default 2 — results are identical at any depth;
+             --pareto returns a bounded nondominated archive per layer
+             instead of the single Algorithm-2 winner — byte-identical
+             at any --threads/--workers; --archive: archive capacity,
+             default 16)
   eval      --model M --ckpt c.ckpt [--test N] [--threshold T] [--threads N]
             [--cap C] [--chunk K] [--workers host:port,...]
             [--lease-depth D]
@@ -69,15 +73,23 @@ COMMANDS
   loadtest  --model M [--ckpt c.ckpt] [--addr host:port]
             [--clients 4,16,64] [--pipeline 1,8] [--reqs 64]
             [--workers 2] [--max-queue 1024] [--out BENCH_serve.json]
-            [--zipf S] [--fixed-key] [--key-universe 65536]
+            [--zipf S] [--fixed-key] [--key-universe 65536] [--pareto]
             (without --addr, spawns an in-process cpu-backend server;
              exits non-zero on ANY dropped/out-of-order/error reply.
              --zipf S runs every (clients, pipeline) round twice —
              uniform keys, then zipf(S) keys — and reports the cache's
-             throughput multiplier; --fixed-key hammers a single key)
-  bench     --exp <table5|fig5|fig67|fig89|fig1011|all> --model M
-            [--train N] [--test N] [--epochs E] [--out-dir results/]
-            [--threads N] [--wcritics W1,W2,...]
+             throughput multiplier; --fixed-key hammers a single key;
+             --pareto issues archive requests instead — these bypass
+             the response cache, and their rows get a `_pareto` shape
+             suffix so they are their own baseline)
+  bench     --exp <table5|fig5|fig67|fig89|fig1011|ablate|pareto|all>
+            --model M [--train N] [--test N] [--epochs E]
+            [--out-dir results/] [--threads N] [--wcritics W1,W2,...]
+            [--archive N]
+            (--exp pareto scores the bounded nondominated archive per
+             task against the exact brute-forced front — hypervolume
+             ratio + generational distance; dnnweaver-sized spaces only.
+             --archive: archive capacity, default 16)
   worker    [--addr 127.0.0.1:7900] [--threads N]
             (remote chunk-lease evaluator for distributed selection;
              point explore/eval --workers at one or more of these.
@@ -354,6 +366,61 @@ fn cmd_explore(args: &Args) -> Result<()> {
     };
     if lo <= 0.0 || po <= 0.0 {
         bail!("--lo and --po (positive objectives) are required");
+    }
+    if args.has_flag("pareto") {
+        if network_mode {
+            bail!("--pareto and --network are mutually exclusive");
+        }
+        if args.get("rtl").is_some() {
+            bail!(
+                "--rtl picks one configuration; drop --pareto (or pick \
+                 a front point and run `gandse rtl --cfg ...`)"
+            );
+        }
+        let archive = args
+            .get_usize("archive", gandse::explorer::DEFAULT_ARCHIVE)?
+            .max(1);
+        let reqs: Vec<DseRequest> = layers
+            .iter()
+            .map(|l| DseRequest { net: l.net, lo, po })
+            .collect();
+        args.reject_unknown()?;
+        let t0 = std::time::Instant::now();
+        let results = ex.pareto(&reqs, archive)?;
+        let dt = t0.elapsed();
+        // One line per archive point, in first-seen candidate order —
+        // deterministic at any thread/worker count, which is what lets
+        // scripts/dist_smoke.sh byte-diff local vs distributed output
+        // (the trailing "DSE time" line is the only nondeterminism and
+        // is grepped out there).
+        for (layer, r) in layers.iter().zip(&results) {
+            println!(
+                "{}: front={} candidates={} scanned={}",
+                layer.name,
+                r.front.len(),
+                r.n_candidates,
+                r.n_scanned
+            );
+            for (i, p) in r.front.iter().enumerate() {
+                print!("  [{i}]");
+                if p.objs.len() == 2 {
+                    print!(
+                        " latency={:.6e}s power={:.4}W",
+                        p.objs[0], p.objs[1]
+                    );
+                } else {
+                    for (j, o) in p.objs.iter().enumerate() {
+                        print!(" obj{j}={o:.6e}");
+                    }
+                }
+                for (g, &v) in ex.spec.groups.iter().zip(&p.cfg_raw) {
+                    print!(" {}={}", g.name, v);
+                }
+                println!();
+            }
+        }
+        println!("DSE time: {:.3} ms total", dt.as_secs_f64() * 1e3);
+        return Ok(());
     }
     if network_mode {
         // One shared accelerator configuration for the whole network:
@@ -649,6 +716,7 @@ fn cmd_loadtest(args: &Args) -> Result<()> {
     let universe = args
         .get_usize("key-universe", DEFAULT_UNIVERSE)?
         .clamp(1, MAX_KEY as usize);
+    let pareto = args.has_flag("pareto");
 
     let (addr, handle, server_workers) = if let Some(a) = args.get("addr") {
         let addr = a
@@ -718,6 +786,7 @@ fn cmd_loadtest(args: &Args) -> Result<()> {
                     // cache fills must not inflate a later round's hit
                     // rate (keeps uniform vs zipf apples-to-apples)
                     key_base: (round_idx * universe as u64) % MAX_KEY,
+                    pareto,
                 };
                 round_idx += 1;
                 let stats = loadtest::run_round(addr, spec)?;
@@ -791,7 +860,34 @@ fn cmd_bench(args: &Args) -> Result<()> {
         .map(|s| s.parse().unwrap_or(0.5))
         .collect();
     let engine = engine_from_args(args)?;
+    let archive = args
+        .get_usize("archive", gandse::explorer::DEFAULT_ARCHIVE)?
+        .max(1);
     args.reject_unknown()?;
+
+    if exp == "pareto" {
+        // Archive-quality report: train one GAN, then score its bounded
+        // nondominated archive per task against the exact brute-forced
+        // front (hypervolume ratio + generational distance).
+        eprintln!("[bench] training GAN for pareto archive report...");
+        let mm = meta.model(&model)?;
+        let state = GanState::init(mm, &model, 22);
+        let mut tr = Trainer::new(backend.as_ref(), &meta, &model, state)?;
+        tr.train(&ds, &TrainConfig { epochs, ..Default::default() })?;
+        let csv = harness::pareto_report(
+            backend.as_ref(),
+            &meta,
+            &model,
+            &ds,
+            &tasks,
+            tr.state.g.clone(),
+            archive,
+            engine,
+        )?;
+        print!("{csv}");
+        std::fs::write(out_dir.join(format!("pareto_{model}.csv")), &csv)?;
+        return Ok(());
+    }
 
     if exp == "ablate" {
         // Threshold ablation: train one GAN, sweep the probability

@@ -96,6 +96,77 @@ pub fn pareto_frontier(samples: &[Sample]) -> Vec<(f32, f32)> {
     frontier
 }
 
+/// Brute-force K-dimensional nondominated filter: indices of the points
+/// in `pts` that no other point dominates (Pareto order from
+/// [`crate::select::dominates`]; minimization on every axis).  Exact
+/// duplicates all survive — this is the *reference* front for testing
+/// the archive, which keeps only the first-seen of an equal pair.
+pub fn nondominated_indices(pts: &[Vec<f32>]) -> Vec<usize> {
+    use crate::select::dominates;
+    (0..pts.len())
+        .filter(|&i| {
+            pts.iter().all(|other| !dominates(other, &pts[i]))
+        })
+        .collect()
+}
+
+/// Exact 2-D hypervolume of a (latency, power) front with respect to
+/// reference point `r`: the area dominated by the front and bounded by
+/// `r` (minimization; points outside the reference box contribute
+/// nothing).  The standard sorted sweep — O(n log n), exact in f64:
+/// sort the surviving nondominated points by latency ascending, then
+/// each point owns the rectangle from its latency to `r.0` between its
+/// power and the previous (higher-power) point's.
+pub fn hypervolume2(front: &[(f32, f32)], r: (f32, f32)) -> f64 {
+    let mut pts: Vec<(f32, f32)> = front
+        .iter()
+        .copied()
+        .filter(|&(l, p)| l < r.0 && p < r.1)
+        .collect();
+    pts.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.total_cmp(&b.1)));
+    let mut hv = 0f64;
+    let mut prev_p = r.1 as f64;
+    for (l, p) in pts {
+        let (l, p) = (l as f64, p as f64);
+        if p >= prev_p {
+            continue; // dominated by an earlier (lower-latency) point
+        }
+        hv += (r.0 as f64 - l) * (prev_p - p);
+        prev_p = p;
+    }
+    hv
+}
+
+/// Generational distance of an approximation front against a reference
+/// front: the mean Euclidean distance from each approximation point to
+/// its nearest reference point (0 = every point sits on the reference
+/// front).  K-dimensional; both fronts are slices of K-vectors.
+pub fn generational_distance(
+    front: &[Vec<f32>],
+    reference: &[Vec<f32>],
+) -> f64 {
+    if front.is_empty() || reference.is_empty() {
+        return f64::INFINITY;
+    }
+    let mut total = 0f64;
+    for a in front {
+        let mut best = f64::INFINITY;
+        for b in reference {
+            let d: f64 = a
+                .iter()
+                .zip(b)
+                .map(|(&x, &y)| {
+                    let dx = x as f64 - y as f64;
+                    dx * dx
+                })
+                .sum();
+            best = best.min(d);
+        }
+        total += best.sqrt();
+    }
+    total / front.len() as f64
+}
+
 /// Difficulty of an objective pair: Euclidean distance to the closest
 /// Pareto point, normalized by that point's module (Section 7.4).
 /// Smaller distance = harder objective.
@@ -338,6 +409,101 @@ mod tests {
         assert!(near < far);
         let order = rank_by_difficulty(&[(5.0, 5.0), (1.1, 1.1)], &frontier);
         assert_eq!(order, vec![1, 0]); // index of the nearer pair first
+    }
+
+    #[test]
+    fn hypervolume2_hand_computed_fixture() {
+        // (1,5) owns (10-1)*(10-5) = 45, (2,3) adds (10-2)*(5-3) = 16.
+        let front = vec![(1.0f32, 5.0f32), (2.0, 3.0)];
+        assert_eq!(hypervolume2(&front, (10.0, 10.0)), 61.0);
+        // Order-independent, and dominated points contribute nothing.
+        let shuffled = vec![(2.0f32, 3.0f32), (4.0, 6.0), (1.0, 5.0)];
+        assert_eq!(hypervolume2(&shuffled, (10.0, 10.0)), 61.0);
+        // Points outside the reference box contribute nothing.
+        assert_eq!(hypervolume2(&[(11.0, 1.0)], (10.0, 10.0)), 0.0);
+        assert_eq!(hypervolume2(&[], (10.0, 10.0)), 0.0);
+        // A single point is just its rectangle.
+        assert_eq!(hypervolume2(&[(1.0, 5.0)], (10.0, 10.0)), 45.0);
+    }
+
+    #[test]
+    fn generational_distance_hand_computed_fixture() {
+        let reference =
+            vec![vec![0.0f32, 0.0], vec![3.0, 4.0]];
+        // A point on the reference front scores 0.
+        assert_eq!(
+            generational_distance(&[vec![3.0, 4.0]], &reference),
+            0.0
+        );
+        // (3,4) is 5 from (0,0); mean over {(0,0) at 0, (6,8) at 5} = 2.5.
+        let front = vec![vec![0.0f32, 0.0], vec![6.0, 8.0]];
+        assert_eq!(generational_distance(&front, &reference), 2.5);
+        assert_eq!(
+            generational_distance(&[], &reference),
+            f64::INFINITY
+        );
+    }
+
+    #[test]
+    fn nondominated_indices_brute_force_semantics() {
+        let pts = vec![
+            vec![1.0f32, 10.0],
+            vec![2.0, 5.0],
+            vec![3.0, 6.0], // dominated by (2,5)
+            vec![4.0, 1.0],
+            vec![2.0, 5.0], // duplicate: survives (nothing dominates it)
+        ];
+        assert_eq!(nondominated_indices(&pts), vec![0, 1, 3, 4]);
+    }
+
+    #[test]
+    fn archive_recovers_exact_front_of_tiny_space() {
+        // A 4^3 space with genuine latency/power tradeoffs and an
+        // injective latency axis (so no exact-duplicate objective
+        // vectors).  An uncapped ParetoSelector scan must recover the
+        // brute-force nondominated set exactly, with hypervolume equal
+        // to the exact front's and generational distance zero.
+        use crate::select::{ObjectiveSelector, ParetoSelector};
+        let mut pts: Vec<Vec<f32>> = Vec::new();
+        for x in 0..4 {
+            for y in 0..4 {
+                for z in 0..4 {
+                    let l = (3 - x) as f32 * 4.0
+                        + y as f32
+                        + z as f32 * 0.125;
+                    let p = x as f32 * 3.0
+                        + (3 - y) as f32 * 1.5
+                        + (3 - z) as f32 * 0.25;
+                    pts.push(vec![l, p]);
+                }
+            }
+        }
+        let exact: Vec<Vec<f32>> = nondominated_indices(&pts)
+            .into_iter()
+            .map(|i| pts[i].clone())
+            .collect();
+        let mut sel = ParetoSelector::new(2, pts.len());
+        for (i, o) in pts.iter().enumerate() {
+            sel.offer(i, o);
+        }
+        let archive = sel.finish();
+        let mut got: Vec<Vec<f32>> =
+            archive.iter().map(|e| e.objs.clone()).collect();
+        let mut want = exact.clone();
+        let key = |v: &Vec<f32>| (v[0].to_bits(), v[1].to_bits());
+        got.sort_by_key(key);
+        want.sort_by_key(key);
+        assert_eq!(got, want);
+        let to_pairs = |vs: &[Vec<f32>]| -> Vec<(f32, f32)> {
+            vs.iter().map(|v| (v[0], v[1])).collect()
+        };
+        let r = (16.0f32, 16.0f32);
+        assert_eq!(
+            hypervolume2(&to_pairs(&got), r),
+            hypervolume2(&to_pairs(&exact), r)
+        );
+        assert_eq!(generational_distance(&got, &exact), 0.0);
+        assert!(hypervolume2(&to_pairs(&exact), r) > 0.0);
     }
 
     #[test]

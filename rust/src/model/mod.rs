@@ -20,7 +20,7 @@ pub mod im2col;
 pub use dnnweaver::dnnweaver_model;
 pub use im2col::im2col_model;
 
-use crate::space::N_NET;
+use crate::space::{N_NET, N_OBJ};
 
 /// 1 GHz target clock for both templates (matches design_models.CLOCK_HZ).
 pub const CLOCK_HZ: f32 = 1.0e9;
@@ -85,25 +85,36 @@ impl ModelKind {
         }
     }
 
+    /// Number of objective values each evaluation produces (latency and
+    /// power for both built-in models).  The flat `eval_batch` layout,
+    /// the selection engine's chunk buffers and the worker wire format
+    /// all size themselves off this `K`.
+    pub const fn n_objectives(self) -> usize {
+        N_OBJ
+    }
+
     /// Batched evaluation: `nets` is row-major `[B, 6]`, `cfgs` row-major
-    /// `[B, cfg_len]`; `out` is cleared and filled with one
-    /// `(latency, power)` pair per row.  Row i is evaluated with exactly
-    /// the same f32 operations as a scalar [`ModelKind::eval`] call, so
-    /// batch and scalar paths agree bit-for-bit.
+    /// `[B, cfg_len]`; `out` is cleared and filled with
+    /// [`ModelKind::n_objectives`] values per row, interleaved
+    /// `latency₀, power₀, latency₁, power₁, …`.  Row i is evaluated with
+    /// exactly the same f32 operations as a scalar [`ModelKind::eval`]
+    /// call, so batch and scalar paths agree bit-for-bit.
     pub fn eval_batch(
         self,
         nets: &[f32],
         cfgs: &[f32],
-        out: &mut Vec<(f32, f32)>,
+        out: &mut Vec<f32>,
     ) {
         let c = self.cfg_len();
         debug_assert_eq!(nets.len() % N_NET, 0);
         debug_assert_eq!(cfgs.len() % c, 0);
         debug_assert_eq!(nets.len() / N_NET, cfgs.len() / c);
         out.clear();
-        out.reserve(nets.len() / N_NET);
+        out.reserve((nets.len() / N_NET) * self.n_objectives());
         for (net, cfg) in nets.chunks_exact(N_NET).zip(cfgs.chunks_exact(c)) {
-            out.push(self.eval(net, cfg));
+            let (l, p) = self.eval(net, cfg);
+            out.push(l);
+            out.push(p);
         }
     }
 }
@@ -137,19 +148,32 @@ pub trait DesignModel: Sync {
     /// Evaluate one candidate; returns `(latency_seconds, power_watts)`.
     fn eval(&self, net: &[f32], cfg: &[f32]) -> (f32, f32);
 
+    /// Number of objective values per candidate.  Defaults to the
+    /// built-in `(latency, power)` pair; a model family with more
+    /// objectives overrides this together with
+    /// [`DesignModel::eval_batch`] (the scalar [`DesignModel::eval`]
+    /// stays the 2-objective entry point).
+    fn n_objectives(&self) -> usize {
+        N_OBJ
+    }
+
     /// Batched evaluation over row-major `[B, 6]` nets and `[B, cfg_len]`
-    /// configs; the default loops over [`DesignModel::eval`] row by row.
+    /// configs; `out` is cleared and filled with
+    /// [`DesignModel::n_objectives`] values per row, interleaved.  The
+    /// default loops over [`DesignModel::eval`] row by row.
     fn eval_batch(
         &self,
         nets: &[f32],
         cfgs: &[f32],
-        out: &mut Vec<(f32, f32)>,
+        out: &mut Vec<f32>,
     ) {
         let c = self.cfg_len();
         out.clear();
-        out.reserve(nets.len() / N_NET);
+        out.reserve((nets.len() / N_NET) * self.n_objectives());
         for (net, cfg) in nets.chunks_exact(N_NET).zip(cfgs.chunks_exact(c)) {
-            out.push(self.eval(net, cfg));
+            let (l, p) = self.eval(net, cfg);
+            out.push(l);
+            out.push(p);
         }
     }
 }
@@ -168,11 +192,15 @@ impl DesignModel for ModelKind {
         ModelKind::eval(*self, net, cfg)
     }
 
+    fn n_objectives(&self) -> usize {
+        ModelKind::n_objectives(*self)
+    }
+
     fn eval_batch(
         &self,
         nets: &[f32],
         cfgs: &[f32],
-        out: &mut Vec<(f32, f32)>,
+        out: &mut Vec<f32>,
     ) {
         ModelKind::eval_batch(*self, nets, cfgs, out)
     }
@@ -226,11 +254,15 @@ impl NetChunkEval {
 }
 
 impl crate::select::ChunkEval for NetChunkEval {
+    fn n_objectives(&self) -> usize {
+        self.kind.n_objectives()
+    }
+
     fn eval_chunk(
         &self,
         cfgs: &[f32],
         rows: usize,
-        out: &mut Vec<(f32, f32)>,
+        out: &mut Vec<f32>,
     ) {
         let cap_rows = self.nets.len() / N_NET;
         if rows <= cap_rows {
@@ -242,9 +274,10 @@ impl crate::select::ChunkEval for NetChunkEval {
         // through the identical f32 operations either way, so this path
         // only changes batching, not bits.
         let c = self.kind.cfg_len();
+        let k = self.kind.n_objectives();
         out.clear();
-        out.reserve(rows);
-        let mut slab_out = Vec::with_capacity(cap_rows);
+        out.reserve(rows * k);
+        let mut slab_out = Vec::with_capacity(cap_rows * k);
         for slab in cfgs.chunks(cap_rows * c) {
             let slab_rows = slab.len() / c;
             self.kind.eval_batch(
@@ -334,31 +367,39 @@ mod tests {
         }
     }
 
+    /// Row `i` of a flat K=2 objective buffer as a `(latency, power)`
+    /// pair, for comparing against scalar `eval` results.
+    fn pair(out: &[f32], i: usize) -> (f32, f32) {
+        (out[2 * i], out[2 * i + 1])
+    }
+
     #[test]
     fn net_chunk_eval_matches_scalar_and_reuses_rows() {
         use crate::select::ChunkEval;
         let net = [32.0, 32.0, 32.0, 32.0, 3.0, 3.0];
         let ev = NetChunkEval::new(ModelKind::Dnnweaver, &net, 4);
+        assert_eq!(ev.n_objectives(), 2);
         let cfgs = [
             32.0, 512.0, 512.0, 512.0, // row 0
             128.0, 2048.0, 128.0, 1024.0, // row 1
         ];
-        let mut out = vec![(9.0, 9.0)]; // stale contents must be cleared
+        let mut out = vec![9.0]; // stale contents must be cleared
         ev.eval_chunk(&cfgs, 2, &mut out);
-        assert_eq!(out.len(), 2);
-        assert_eq!(out[0], ModelKind::Dnnweaver.eval(&net, &cfgs[..4]));
-        assert_eq!(out[1], ModelKind::Dnnweaver.eval(&net, &cfgs[4..]));
+        assert_eq!(out.len(), 4);
+        assert_eq!(pair(&out, 0), ModelKind::Dnnweaver.eval(&net, &cfgs[..4]));
+        assert_eq!(pair(&out, 1), ModelKind::Dnnweaver.eval(&net, &cfgs[4..]));
         // a shorter chunk reuses the prefix of the replicated nets
         ev.eval_chunk(&cfgs[..4], 1, &mut out);
-        assert_eq!(out, vec![ModelKind::Dnnweaver.eval(&net, &cfgs[..4])]);
+        assert_eq!(out.len(), 2);
+        assert_eq!(pair(&out, 0), ModelKind::Dnnweaver.eval(&net, &cfgs[..4]));
         // an undersized buffer falls back to slab-wise evaluation with
         // identical results (robustness, not a supported fast path)
         let small = NetChunkEval::new(ModelKind::Dnnweaver, &net, 1);
-        let mut out2 = vec![(7.0, 7.0)];
+        let mut out2 = vec![7.0];
         small.eval_chunk(&cfgs, 2, &mut out2);
-        assert_eq!(out2.len(), 2);
-        assert_eq!(out2[0], ModelKind::Dnnweaver.eval(&net, &cfgs[..4]));
-        assert_eq!(out2[1], ModelKind::Dnnweaver.eval(&net, &cfgs[4..]));
+        assert_eq!(out2.len(), 4);
+        assert_eq!(pair(&out2, 0), ModelKind::Dnnweaver.eval(&net, &cfgs[..4]));
+        assert_eq!(pair(&out2, 1), ModelKind::Dnnweaver.eval(&net, &cfgs[4..]));
     }
 
     #[test]
@@ -373,14 +414,15 @@ mod tests {
         let mut cfgs = Vec::new();
         cfgs.extend_from_slice(&cfg_a);
         cfgs.extend_from_slice(&cfg_b);
-        let mut out = vec![(0.0, 0.0)]; // stale contents must be cleared
+        let mut out = vec![0.5]; // stale contents must be cleared
         ModelKind::Dnnweaver.eval_batch(&nets, &cfgs, &mut out);
-        assert_eq!(out.len(), 2);
-        assert_eq!(out[0], ModelKind::Dnnweaver.eval(&net_a, &cfg_a));
-        assert_eq!(out[1], ModelKind::Dnnweaver.eval(&net_b, &cfg_b));
+        assert_eq!(out.len(), 2 * ModelKind::Dnnweaver.n_objectives());
+        assert_eq!(pair(&out, 0), ModelKind::Dnnweaver.eval(&net_a, &cfg_a));
+        assert_eq!(pair(&out, 1), ModelKind::Dnnweaver.eval(&net_b, &cfg_b));
         // trait-object path agrees with the inherent path
         let dm: &dyn DesignModel = &ModelKind::Dnnweaver;
-        assert_eq!(dm.eval(&net_a, &cfg_a), out[0]);
+        assert_eq!(dm.n_objectives(), 2);
+        assert_eq!(dm.eval(&net_a, &cfg_a), pair(&out, 0));
         let mut out2 = Vec::new();
         dm.eval_batch(&nets, &cfgs, &mut out2);
         assert_eq!(out2, out);

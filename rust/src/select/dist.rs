@@ -61,7 +61,8 @@ use std::time::Duration;
 
 use crate::model::{ModelKind, NetChunkEval};
 use crate::select::{
-    fill_chunk, run_sharded, CandidateCursor, Candidates, ChunkEval,
+    fill_chunk, pareto_outcome, run_sharded, CandidateCursor, Candidates,
+    ChunkEval, ObjectiveSelector, ParetoOutcome, ParetoSelector,
     SelectEngine, SelectOutcome, Selector, CHUNKS_IN_FLIGHT,
 };
 use crate::server::{read_bounded_line, LineRead, MAX_LINE_BYTES};
@@ -75,11 +76,12 @@ use crate::util::json::Json;
 pub const PROTO_VERSION: u64 = 1;
 
 /// Hard cap on rows per lease.  Bounds a worker's per-lease memory and
-/// keeps the largest possible reply line (`2 * rows` u32 bit patterns,
-/// ≤ 10 digits + comma each) safely under [`MAX_REPLY_LINE_BYTES`].
+/// keeps the largest possible K=2 reply line (`K * rows` u32 bit
+/// patterns, ≤ 10 digits + comma each) safely under
+/// [`MAX_REPLY_LINE_BYTES`].
 pub const MAX_LEASE_ROWS: usize = 524_288;
 
-/// Bound on one reply line at the coordinator (a 524288-row lease
+/// Bound on one reply line at the coordinator (a 524288-row K=2 lease
 /// replies with ~11.5 MB of JSON).  Lease lines stay under the server's
 /// shared 64 KiB bound — kept sets are a few dozen numbers.
 pub const MAX_REPLY_LINE_BYTES: usize = 16 * 1024 * 1024;
@@ -169,6 +171,86 @@ pub fn run_distributed_with(
     workers: &[String],
     opts: &DistOptions,
 ) -> Option<SelectOutcome> {
+    let n = capped_count(spec, cands, engine)?;
+    // Zero-worker fallback, and the ordinal-exactness guard: candidate
+    // ordinals travel as JSON numbers (f64), exact only below 2^53.
+    if workers.is_empty() || n as u128 > MAX_EXACT_ORDINAL {
+        let rows_max = engine.chunk.max(1).min(n);
+        let eval = NetChunkEval::new(spec.kind, net, rows_max);
+        return engine.run_chunked(spec, cands, lo, po, eval);
+    }
+    let mut sel = Selector::new(lo, po);
+    let offered =
+        coordinate(spec, cands, net, engine, workers, opts, n, &mut sel);
+    let (ordinal, l_opt, p_opt) = sel.result()?;
+    let mut cur = cands.cursor();
+    cur.skip_to(ordinal as u128);
+    Some(SelectOutcome {
+        ordinal,
+        cfg_idx: cur.current().to_vec(),
+        latency: l_opt,
+        power: p_opt,
+        n_enumerated: offered,
+    })
+}
+
+/// Distributed Pareto-archive scan over `workers` with default
+/// [`DistOptions`]: the K-objective sibling of [`run_distributed`].
+///
+/// Bitwise-identical to `engine.run_pareto_chunked(spec, cands,
+/// archive_cap, NetChunkEval::new(spec.kind, net, …))` at any worker
+/// count: the archive consumes the identical in-order offer stream and
+/// never exits early, so the whole capped space is offered either way.
+pub fn run_pareto_distributed(
+    spec: &SpaceSpec,
+    cands: &Candidates,
+    archive_cap: usize,
+    net: &[f32; N_NET],
+    engine: &SelectEngine,
+    workers: &[String],
+) -> Option<ParetoOutcome> {
+    run_pareto_distributed_with(
+        spec,
+        cands,
+        archive_cap,
+        net,
+        engine,
+        workers,
+        &DistOptions::default(),
+    )
+}
+
+/// [`run_pareto_distributed`] with explicit networking options.
+#[allow(clippy::too_many_arguments)]
+pub fn run_pareto_distributed_with(
+    spec: &SpaceSpec,
+    cands: &Candidates,
+    archive_cap: usize,
+    net: &[f32; N_NET],
+    engine: &SelectEngine,
+    workers: &[String],
+    opts: &DistOptions,
+) -> Option<ParetoOutcome> {
+    let n = capped_count(spec, cands, engine)?;
+    if workers.is_empty() || n as u128 > MAX_EXACT_ORDINAL {
+        let rows_max = engine.chunk.max(1).min(n);
+        let eval = NetChunkEval::new(spec.kind, net, rows_max);
+        return engine.run_pareto_chunked(spec, cands, archive_cap, eval);
+    }
+    let mut sel =
+        ParetoSelector::new(spec.kind.n_objectives(), archive_cap);
+    let offered =
+        coordinate(spec, cands, net, engine, workers, opts, n, &mut sel);
+    Some(pareto_outcome(cands, sel.finish(), offered))
+}
+
+/// Validate the candidate set and resolve the capped scan length
+/// (shared by both distributed entry points; None = degenerate).
+fn capped_count(
+    spec: &SpaceSpec,
+    cands: &Candidates,
+    engine: &SelectEngine,
+) -> Option<usize> {
     if cands.kept.len() != spec.groups.len()
         || cands.kept.iter().any(|ks| ks.is_empty())
     {
@@ -183,13 +265,28 @@ pub fn run_distributed_with(
     if n == 0 {
         return None;
     }
-    // Zero-worker fallback, and the ordinal-exactness guard: candidate
-    // ordinals travel as JSON numbers (f64), exact only below 2^53.
-    if workers.is_empty() || n as u128 > MAX_EXACT_ORDINAL {
-        let rows_max = engine.chunk.max(1).min(n);
-        let eval = NetChunkEval::new(spec.kind, net, rows_max);
-        return engine.run_chunked(spec, cands, lo, po, eval);
-    }
+    Some(n)
+}
+
+/// The coordinator's fan-out + merge, generic over the selector: spawn
+/// one fetcher per worker address (capped by the chunk count) leasing
+/// chunks round-robin, and replay every reply strictly in candidate
+/// order through `sel` — the same merge shape as the local streaming
+/// scan, so any [`ObjectiveSelector`] gets the identical offer stream
+/// it would see locally.  Returns the number of candidates offered.
+#[allow(clippy::too_many_arguments)]
+fn coordinate<S: ObjectiveSelector>(
+    spec: &SpaceSpec,
+    cands: &Candidates,
+    net: &[f32; N_NET],
+    engine: &SelectEngine,
+    workers: &[String],
+    opts: &DistOptions,
+    n: usize,
+    sel: &mut S,
+) -> usize {
+    let nk = spec.kind.n_objectives();
+    debug_assert_eq!(nk, sel.n_objectives());
     let chunk = engine.chunk.max(1).min(MAX_LEASE_ROWS);
     let n_chunks = n / chunk + usize::from(n % chunk != 0);
     // One fetcher per worker address (capped by the chunk count):
@@ -200,13 +297,13 @@ pub fn run_distributed_with(
     let kept = &cands.kept;
     let groups = &spec.groups;
     let cancel = AtomicBool::new(false);
-    let (sel, offered) = std::thread::scope(|s| {
+    std::thread::scope(|s| {
         let mut chans = Vec::with_capacity(slots);
         for k in 0..slots {
             let (tx, rx) =
-                mpsc::sync_channel::<Vec<(f32, f32)>>(CHUNKS_IN_FLIGHT);
+                mpsc::sync_channel::<Vec<f32>>(CHUNKS_IN_FLIGHT);
             let (rec_tx, rec_rx) =
-                mpsc::sync_channel::<Vec<(f32, f32)>>(CHUNKS_IN_FLIGHT + 2);
+                mpsc::sync_channel::<Vec<f32>>(CHUNKS_IN_FLIGHT + 2);
             let cancel = &cancel;
             let tpl = &tpl;
             s.spawn(move || {
@@ -218,6 +315,7 @@ pub fn run_distributed_with(
                     kept,
                     groups,
                     kind: spec.kind,
+                    k: nk,
                     net,
                     max_rows: chunk.min(n),
                     depth: opts.lease_depth.max(1),
@@ -238,8 +336,7 @@ pub fn run_distributed_with(
         // streaming scan: chunk j comes off channel j % slots, each
         // channel delivers its fetcher's chunks in ascending order, so
         // cycling the channels replays the global enumeration order
-        // through one sequential Selector.
-        let mut sel = Selector::new(lo, po);
+        // through one sequential selector.
         let mut i = 0usize;
         let mut stopped = false;
         for j in 0..n_chunks {
@@ -248,8 +345,8 @@ pub fn run_distributed_with(
                 break; // producer cancelled (early exit already seen)
             };
             if !stopped {
-                for &(l, p) in buf.iter() {
-                    sel.offer(i, l, p);
+                for o in buf.chunks_exact(nk) {
+                    sel.offer(i, o);
                     i += 1;
                     if sel.is_terminal() {
                         stopped = true;
@@ -265,17 +362,7 @@ pub fn run_distributed_with(
         for (rx, _) in &chans {
             while rx.recv().is_ok() {}
         }
-        (sel, i)
-    });
-    let (ordinal, l_opt, p_opt) = sel.result()?;
-    let mut cur = cands.cursor();
-    cur.skip_to(ordinal as u128);
-    Some(SelectOutcome {
-        ordinal,
-        cfg_idx: cur.current().to_vec(),
-        latency: l_opt,
-        power: p_opt,
-        n_enumerated: offered,
+        i
     })
 }
 
@@ -312,6 +399,12 @@ impl LeaseTemplate {
         }
         s.push_str("],\"model\":");
         let _ = write!(s, "{}", Json::str(spec.kind.name()));
+        // K is derivable from the model name, so carrying it is
+        // redundant — but it lets a worker reject a K-mismatched lease
+        // outright instead of producing a reply the coordinator then
+        // rejects on length (PROTOCOL.md §4.3).  Additive within
+        // proto 1: workers ignore unknown lease fields.
+        let _ = write!(s, ",\"k\":{}", spec.kind.n_objectives());
         s.push_str(",\"net\":[");
         for (i, v) in net.iter().enumerate() {
             if i > 0 {
@@ -348,6 +441,8 @@ struct Fetcher<'a> {
     kept: &'a [Vec<usize>],
     groups: &'a [ConfigGroup],
     kind: ModelKind,
+    /// Objectives per candidate row (reply decode: `k * rows` values).
+    k: usize,
     net: &'a [f32; N_NET],
     /// Rows of the largest lease this scan produces (buffer sizing).
     max_rows: usize,
@@ -376,8 +471,8 @@ impl<'a> Fetcher<'a> {
         n_chunks: usize,
         slots: usize,
         cancel: &AtomicBool,
-        tx: &mpsc::SyncSender<Vec<(f32, f32)>>,
-        rec_rx: &mpsc::Receiver<Vec<(f32, f32)>>,
+        tx: &mpsc::SyncSender<Vec<f32>>,
+        rec_rx: &mpsc::Receiver<Vec<f32>>,
     ) {
         let mut cj = self.slot;
         let mut inflight: VecDeque<(usize, usize)> = VecDeque::new();
@@ -508,10 +603,10 @@ impl<'a> Fetcher<'a> {
         &mut self,
         start: usize,
         end: usize,
-        out: &mut Vec<(f32, f32)>,
+        out: &mut Vec<f32>,
     ) -> io::Result<()> {
         match self.conn.as_mut() {
-            Some(c) => c.recv_reply(start, end, out),
+            Some(c) => c.recv_reply(start, end, self.k, out),
             None => Err(io::Error::new(
                 io::ErrorKind::NotConnected,
                 "no worker connection",
@@ -526,13 +621,13 @@ impl<'a> Fetcher<'a> {
         &mut self,
         start: usize,
         end: usize,
-        out: &mut Vec<(f32, f32)>,
+        out: &mut Vec<f32>,
     ) {
         let line = self.tpl.lease_line(start, end);
         // 1. The connection this fetcher already holds.
         let mut conn_err: Option<io::Error> = None;
         if let Some(c) = self.conn.as_mut() {
-            match c.round_trip(&line, start, end, out) {
+            match c.round_trip(&line, start, end, self.k, out) {
                 Ok(()) => return,
                 Err(e) => conn_err = Some(e),
             }
@@ -556,7 +651,7 @@ impl<'a> Fetcher<'a> {
             let Ok(mut c) = WireConn::connect(a, self.opts) else {
                 continue;
             };
-            if c.round_trip(&line, start, end, out).is_ok() {
+            if c.round_trip(&line, start, end, self.k, out).is_ok() {
                 self.conn = Some(c);
                 return;
             }
@@ -577,7 +672,7 @@ impl<'a> Fetcher<'a> {
         &mut self,
         start: usize,
         end: usize,
-        out: &mut Vec<(f32, f32)>,
+        out: &mut Vec<f32>,
     ) {
         let (kept, kind, net, max_rows, gl) = (
             self.kept,
@@ -710,10 +805,11 @@ impl WireConn {
         lease_line: &str,
         start: usize,
         end: usize,
-        out: &mut Vec<(f32, f32)>,
+        k: usize,
+        out: &mut Vec<f32>,
     ) -> io::Result<()> {
         self.send_line(lease_line)?;
-        self.recv_reply(start, end, out)
+        self.recv_reply(start, end, k, out)
     }
 
     /// Decode the next reply line as the objectives of lease
@@ -724,7 +820,8 @@ impl WireConn {
         &mut self,
         start: usize,
         end: usize,
-        out: &mut Vec<(f32, f32)>,
+        k: usize,
+        out: &mut Vec<f32>,
     ) -> io::Result<()> {
         let rows = end - start;
         let what = format!("lease {start}..{end} ({rows} rows)");
@@ -745,23 +842,21 @@ impl WireConn {
                 "reply missing objs array",
             )
         })?;
-        if objs.len() != rows * 2 {
+        if objs.len() != rows * k {
             return Err(io::Error::new(
                 io::ErrorKind::InvalidData,
                 format!(
                     "reply has {} objective values, want {}",
                     objs.len(),
-                    rows * 2
+                    rows * k
                 ),
             ));
         }
         out.clear();
-        out.reserve(rows);
-        let mut it = objs.iter();
-        while let (Some(l), Some(p)) = (it.next(), it.next()) {
-            let lb = bits_u32(l).map_err(invalid_data)?;
-            let pb = bits_u32(p).map_err(invalid_data)?;
-            out.push((f32::from_bits(lb), f32::from_bits(pb)));
+        out.reserve(rows * k);
+        for v in objs {
+            let b = bits_u32(v).map_err(invalid_data)?;
+            out.push(f32::from_bits(b));
         }
         Ok(())
     }
@@ -877,7 +972,8 @@ struct LeaseScratch {
     threads: usize,
     eval: Option<NetChunkEval>,
     cfgs: Vec<f32>,
-    objs: Vec<(f32, f32)>,
+    /// Flat `K * rows` objective values (lease reply payload).
+    objs: Vec<f32>,
 }
 
 impl LeaseScratch {
@@ -965,6 +1061,7 @@ fn handle_line(line: &str, sc: &mut LeaseScratch) -> Result<String, String> {
     let (kind, net, kept_vals, start, end) = decode_lease(lease)?;
     let rows = (end - start) as usize;
     let gl = kept_vals.len();
+    let k = kind.n_objectives();
 
     // Rebuild the coordinator's kept sub-space: synthetic groups whose
     // choice lists are exactly the kept values, with identity kept
@@ -1012,7 +1109,7 @@ fn handle_line(line: &str, sc: &mut LeaseScratch) -> Result<String, String> {
             rows,
             sc.threads,
             WORKER_MIN_SHARD,
-            |s, e| -> Vec<(f32, f32)> {
+            |s, e| -> Vec<f32> {
                 let sub = e - s;
                 let mut cur = CandidateCursor::new(&kept_idx);
                 if !cur.skip_to(start as u128 + s as u128) {
@@ -1020,7 +1117,7 @@ fn handle_line(line: &str, sc: &mut LeaseScratch) -> Result<String, String> {
                 }
                 let mut cfgs = vec![0f32; sub * gl];
                 fill_chunk(&mut cur, &groups, &mut cfgs, sub, sub);
-                let mut out = Vec::with_capacity(sub);
+                let mut out = Vec::with_capacity(sub * k);
                 eval.eval_chunk(&cfgs, sub, &mut out);
                 out
             },
@@ -1030,13 +1127,14 @@ fn handle_line(line: &str, sc: &mut LeaseScratch) -> Result<String, String> {
             sc.objs.extend_from_slice(&shard);
         }
     }
-    if sc.objs.len() != rows {
+    if sc.objs.len() != rows * k {
         return Err(format!(
-            "model produced {} rows for a {rows}-row lease",
+            "model produced {} objective values for a {rows}-row lease \
+             ({k} objectives per row)",
             sc.objs.len()
         ));
     }
-    Ok(ok_reply(&sc.objs))
+    Ok(ok_reply(&sc.objs, k))
 }
 
 type LeaseFields = (ModelKind, [f32; N_NET], Vec<Vec<f32>>, u64, u64);
@@ -1057,6 +1155,19 @@ fn decode_lease(lease: &Json) -> Result<LeaseFields, String> {
         .and_then(Json::as_str)
         .ok_or("lease missing model")?;
     let kind = ModelKind::from_name(name).map_err(|e| e.to_string())?;
+    // Optional "k" field (PROTOCOL.md §4.3): K is derivable from the
+    // model name, so absence is fine (older coordinators), but a
+    // present-and-wrong K is a coordinator/worker model mismatch and
+    // must fail the lease, not produce a reply of surprising length.
+    if let Some(kv) = lease.get("k") {
+        let k = exact_u64(kv, "k")?;
+        if k as usize != kind.n_objectives() {
+            return Err(format!(
+                "lease k={k}, but model {name} has {} objectives",
+                kind.n_objectives()
+            ));
+        }
+    }
     let net_arr = lease
         .get("net")
         .and_then(Json::as_arr)
@@ -1118,20 +1229,20 @@ fn decode_lease(lease: &Json) -> Result<LeaseFields, String> {
     Ok((kind, net, kept_vals, start, end))
 }
 
-/// Success reply, hand-serialized: `objs` is ~2 numbers per row, so the
+/// Success reply, hand-serialized: `objs` is K numbers per row, so the
 /// generic `Json` tree (one boxed enum per number) would dominate the
 /// worker's allocation profile.
-fn ok_reply(objs: &[(f32, f32)]) -> String {
+fn ok_reply(objs: &[f32], k: usize) -> String {
     use std::fmt::Write as _;
-    let mut s = String::with_capacity(32 + objs.len() * 22);
+    let mut s = String::with_capacity(32 + objs.len() * 11);
     s.push_str("{\"objs\":[");
-    for (i, &(l, p)) in objs.iter().enumerate() {
+    for (i, &v) in objs.iter().enumerate() {
         if i > 0 {
             s.push(',');
         }
-        let _ = write!(s, "{},{}", l.to_bits(), p.to_bits());
+        let _ = write!(s, "{}", v.to_bits());
     }
-    let _ = write!(s, "],\"ok\":true,\"rows\":{}}}", objs.len());
+    let _ = write!(s, "],\"ok\":true,\"rows\":{}}}", objs.len() / k.max(1));
     s
 }
 
@@ -1238,6 +1349,10 @@ mod tests {
             "{\"lease\":{\"proto\":1,\"model\":\"dnnweaver\",\
              \"net\":[0,0,0,0,0,0],\"kept\":[[0],[0],[0],[0]],\
              \"start\":0,\"end\":2}}",
+            // "k" present but wrong for the model (PROTOCOL.md §4.3)
+            "{\"lease\":{\"proto\":1,\"model\":\"dnnweaver\",\"k\":3,\
+             \"net\":[0,0,0,0,0,0],\"kept\":[[0],[0],[0],[0]],\
+             \"start\":0,\"end\":1}}",
             "{\"nonsense\":true}",
         ] {
             assert!(handle_line(bad, &mut sc).is_err(), "{bad}");
@@ -1644,5 +1759,49 @@ mod tests {
         assert_bit_identical(&dist, &serial);
         let _ = fake.join();
         healthy.shutdown();
+    }
+
+    #[test]
+    fn distributed_pareto_matches_local_archive() {
+        // The K-objective acceptance contract: the Pareto archive a
+        // 2-worker coordinator assembles is bitwise identical to the
+        // local (zero-worker) archive — the same in-order merge feeds
+        // the same selector, so the archive cannot tell the difference.
+        let (spec, cands) = spec_and_cands();
+        let engine = SelectEngine {
+            chunk: 16,
+            ..SelectEngine::sequential()
+        };
+        let rows_max = engine.chunk.max(1);
+        let local = engine
+            .run_pareto_chunked(
+                &spec,
+                &cands,
+                8,
+                NetChunkEval::new(spec.kind, &NET, rows_max),
+            )
+            .expect("non-degenerate");
+        assert!(!local.points.is_empty() && local.points.len() <= 8);
+        // Zero workers must route through the same local engine.
+        let fallback = run_pareto_distributed(
+            &spec, &cands, 8, &NET, &engine, &[],
+        )
+        .expect("non-degenerate");
+        assert_eq!(fallback, local);
+        let w1 = serve_worker("127.0.0.1:0", 1).unwrap();
+        let w2 = serve_worker("127.0.0.1:0", 2).unwrap();
+        let addrs = vec![w1.addr.to_string(), w2.addr.to_string()];
+        let dist = run_pareto_distributed(
+            &spec, &cands, 8, &NET, &engine, &addrs,
+        )
+        .expect("non-degenerate");
+        assert_eq!(dist, local);
+        for (a, b) in dist.points.iter().zip(&local.points) {
+            for (x, y) in a.objs.iter().zip(&b.objs) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        w1.shutdown();
+        w2.shutdown();
     }
 }

@@ -404,23 +404,31 @@ impl<'a> Iterator for CandidateIter<'a> {
 ///
 /// `cfgs` is a row-major `[rows, cfg_len]` buffer of raw configuration
 /// values (one enumerated candidate per row, in enumeration order);
-/// implementations must clear `out` and push exactly one
-/// `(latency, power)` pair per row, computing row `i` with the same f32
-/// operations a scalar evaluation of that candidate would use — the
-/// engine's bit-exactness contract flows through this requirement.
-/// Implementations must be pure (same input → same output): the engine
-/// may evaluate chunks on any thread in any temporal order.
+/// implementations must clear `out` and push exactly
+/// [`ChunkEval::n_objectives`] values per row, interleaved
+/// (`latency₀, power₀, latency₁, …` for the built-in K=2 models),
+/// computing row `i` with the same f32 operations a scalar evaluation
+/// of that candidate would use — the engine's bit-exactness contract
+/// flows through this requirement.  Implementations must be pure (same
+/// input → same output): the engine may evaluate chunks on any thread
+/// in any temporal order.
 ///
 /// Any `Fn(&[f32]) -> (f32, f32) + Sync` closure implements the trait
-/// row-by-row; the serving hot path uses
+/// row-by-row with K=2; the serving hot path uses
 /// [`crate::model::NetChunkEval`], which dispatches whole chunks
 /// through the models' batched `eval_batch` instead.
 pub trait ChunkEval: Sync {
+    /// Objective values per row in `eval_chunk`'s output (the model's
+    /// `K`).  Defaults to the built-in `(latency, power)` pair.
+    fn n_objectives(&self) -> usize {
+        2
+    }
+
     fn eval_chunk(
         &self,
         cfgs: &[f32],
         rows: usize,
-        out: &mut Vec<(f32, f32)>,
+        out: &mut Vec<f32>,
     );
 }
 
@@ -432,23 +440,57 @@ where
         &self,
         cfgs: &[f32],
         rows: usize,
-        out: &mut Vec<(f32, f32)>,
+        out: &mut Vec<f32>,
     ) {
         out.clear();
-        out.reserve(rows);
+        out.reserve(rows * 2);
         if rows == 0 {
             return;
         }
         let w = cfgs.len() / rows;
         for row in cfgs.chunks_exact(w) {
-            out.push(self(row));
+            let (l, p) = self(row);
+            out.push(l);
+            out.push(p);
         }
     }
 }
 
 // ---------------------------------------------------------------------------
-// Algorithm 2
+// Selectors
 // ---------------------------------------------------------------------------
+
+/// The selector seam between the in-order merge and a selection policy:
+/// anything that consumes the enumeration-ordered stream of K-objective
+/// vectors and reduces it to an outcome.  The chunked streaming scan,
+/// the sequential scan, and the distributed coordinator are all generic
+/// over this trait, so Algorithm 2 ([`Selector`]) and the Pareto
+/// archive ([`ParetoSelector`]) share one scan/merge implementation —
+/// and inherit its determinism contract (offers arrive strictly in
+/// enumeration order at any thread or worker count).
+pub trait ObjectiveSelector {
+    /// What [`ObjectiveSelector::finish`] yields.
+    type Output;
+
+    /// Objective values per candidate this selector consumes (must
+    /// match the evaluator's [`ChunkEval::n_objectives`]).
+    fn n_objectives(&self) -> usize;
+
+    /// Consume candidate `i`'s objective vector (`objs.len()` is
+    /// exactly `n_objectives()`); `i` is the candidate's ordinal in
+    /// enumeration order, and offers arrive in ascending ordinal order.
+    fn offer(&mut self, i: usize, objs: &[f32]);
+
+    /// True once no later candidate can change the outcome — the scan
+    /// stops (and cancels outstanding workers) as soon as this holds.
+    /// Must be monotone: once true it stays true under further offers.
+    fn is_terminal(&self) -> bool;
+
+    /// Consume the selector and yield its outcome.
+    fn finish(self) -> Self::Output
+    where
+        Self: Sized;
+}
 
 /// Design Selector: Algorithm 2, verbatim.
 ///
@@ -458,58 +500,60 @@ where
 pub struct Selector {
     pub lo: f32,
     pub po: f32,
-    l_opt: f32,
-    p_opt: f32,
-    best: Option<usize>,
+    /// `(ordinal, l_opt, p_opt)` of the incumbent, `None` before the
+    /// first offer.  The paper's Lines 1-2 initialize `L_opt, P_opt` to
+    /// a `(0, 0)` sentinel instead; `Option` state fixes the sentinel's
+    /// misbehavior when a model legitimately emits zero objectives (a
+    /// `(0, 0)`-valued incumbent used to re-trigger the "first
+    /// candidate" branch on every later offer).
+    best: Option<(usize, f32, f32)>,
 }
 
 impl Selector {
     pub fn new(lo: f32, po: f32) -> Selector {
-        // Lines 1-2: L_opt <- 0, P_opt <- 0 (sentinel for "never updated").
-        Selector { lo, po, l_opt: 0.0, p_opt: 0.0, best: None }
+        // Lines 1-2 ("L_opt <- 0, P_opt <- 0"), as explicit absence.
+        Selector { lo, po, best: None }
     }
 
     /// Lines 4-30 for one candidate; `i` is the candidate's ordinal.
     pub fn offer(&mut self, i: usize, l_g: f32, p_g: f32) {
+        let Some((_, l_opt, p_opt)) = self.best else {
+            self.best = Some((i, l_g, p_g)); // Lines 7-8: first candidate
+            return;
+        };
         let (lo, po) = (self.lo, self.po);
         let mut update = false; // Line 6
-        if self.l_opt == 0.0 && self.p_opt == 0.0 {
-            update = true; // Lines 7-8: first candidate initializes
-        } else if (self.l_opt > lo && self.p_opt > po)
-            || (self.l_opt < lo && self.p_opt < po)
-        {
+        if (l_opt > lo && p_opt > po) || (l_opt < lo && p_opt < po) {
             // Scenario 1 (Line 10): both worse or both better than the
             // user's objectives — take strict improvements on both.
-            if l_g < self.l_opt && p_g < self.p_opt {
+            if l_g < l_opt && p_g < p_opt {
                 update = true; // Lines 11-13
             }
-        } else if self.l_opt > lo && self.p_opt < po {
+        } else if l_opt > lo && p_opt < po {
             // Scenario 2 (Lines 15-18): latency unsatisfied, power ok —
             // chase latency while power stays within the objective.
-            if l_g < self.l_opt && p_g < po {
+            if l_g < l_opt && p_g < po {
                 update = true;
             }
-        } else if p_g < self.p_opt && self.l_opt < lo && l_g < lo {
+        } else if p_g < p_opt && l_opt < lo && l_g < lo {
             // Scenario 3 (Lines 20-22), mirrored.
             update = true;
         }
         if update {
-            self.l_opt = l_g;
-            self.p_opt = p_g;
-            self.best = Some(i);
+            self.best = Some((i, l_g, p_g));
         }
     }
 
     pub fn result(&self) -> Option<(usize, f32, f32)> {
-        self.best.map(|i| (i, self.l_opt, self.p_opt))
+        self.best
     }
 
     /// True once **no** possible `(l_g, p_g)` can change the selection —
     /// Algorithm 2's terminal state, derived branch by branch from
     /// [`Selector::offer`]:
     ///
-    /// * the `(0, 0)` sentinel re-initializes on the next offer, so it
-    ///   is never terminal;
+    /// * before the first offer any candidate initializes, so the empty
+    ///   state is never terminal;
     /// * scenario 1 can fire whenever `(l_opt, p_opt)` is strictly on
     ///   one side of `(lo, po)` on both axes (a strictly smaller pair
     ///   always exists as an f32 input);
@@ -523,11 +567,181 @@ impl Selector {
     /// outstanding workers; because the predicate is independent of the
     /// inputs still to come, early exit is sound for any evaluator.
     pub fn is_terminal(&self) -> bool {
-        if self.best.is_none() || (self.l_opt == 0.0 && self.p_opt == 0.0) {
+        let Some((_, l_opt, p_opt)) = self.best else {
+            return false;
+        };
+        l_opt == self.lo || (l_opt > self.lo && p_opt == self.po)
+    }
+}
+
+impl ObjectiveSelector for Selector {
+    type Output = Option<(usize, f32, f32)>;
+
+    fn n_objectives(&self) -> usize {
+        2
+    }
+
+    fn offer(&mut self, i: usize, objs: &[f32]) {
+        debug_assert_eq!(objs.len(), 2);
+        Selector::offer(self, i, objs[0], objs[1]);
+    }
+
+    fn is_terminal(&self) -> bool {
+        Selector::is_terminal(self)
+    }
+
+    fn finish(self) -> Self::Output {
+        self.result()
+    }
+}
+
+/// True when objective vector `a` Pareto-dominates `b` under
+/// minimization: no worse on every objective and strictly better on at
+/// least one.  Comparisons are plain f32 `<`/`<=` (NaN objectives never
+/// dominate and are never dominated — a NaN-emitting evaluator is a bug
+/// upstream of this function).
+pub fn dominates(a: &[f32], b: &[f32]) -> bool {
+    debug_assert_eq!(a.len(), b.len());
+    let mut strict = false;
+    for (&x, &y) in a.iter().zip(b) {
+        if x > y {
             return false;
         }
-        self.l_opt == self.lo
-            || (self.l_opt > self.lo && self.p_opt == self.po)
+        if x < y {
+            strict = true;
+        }
+    }
+    strict
+}
+
+/// One archive member of a Pareto scan: the candidate's ordinal in
+/// enumeration order plus its K objective values.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParetoEntry {
+    pub ordinal: usize,
+    pub objs: Vec<f32>,
+}
+
+/// The K-objective sibling of [`Selector`]: a capacity-bounded
+/// nondominated archive over the enumeration-ordered candidate stream.
+///
+/// * **Insert rule** — a candidate is rejected iff some archive member
+///   dominates it *or equals it exactly* (first-seen wins among
+///   duplicates, keeping the archive's ordinal set deterministic);
+///   otherwise members it dominates are removed and it is appended.
+/// * **Capacity prune** — when an insert pushes the archive past
+///   `capacity`, the member with the smallest NSGA-II crowding distance
+///   is evicted (boundary members score `+inf` and are never evicted
+///   while an interior member exists; ties break toward evicting the
+///   **highest ordinal**, i.e. the latest arrival).  Pruning one member
+///   per overflow keeps eviction history — and therefore the final
+///   archive — a pure function of the offer sequence.
+/// * **Determinism** — `is_terminal` is always false (a nondominated
+///   front has no sound early exit: any later candidate may be
+///   nondominated), so every execution mode offers the identical full
+///   stream and the archive is bitwise identical at any thread, worker,
+///   or lease-depth count.
+///
+/// Archive order is ascending ordinal (inserts append and removals
+/// preserve order), matching enumeration order.
+pub struct ParetoSelector {
+    k: usize,
+    capacity: usize,
+    archive: Vec<ParetoEntry>,
+}
+
+impl ParetoSelector {
+    /// `k` objectives per candidate, at most `capacity` archive members
+    /// (floored to 1).
+    pub fn new(k: usize, capacity: usize) -> ParetoSelector {
+        ParetoSelector {
+            k,
+            capacity: capacity.max(1),
+            archive: Vec::new(),
+        }
+    }
+
+    /// The current archive, ascending by ordinal.
+    pub fn archive(&self) -> &[ParetoEntry] {
+        &self.archive
+    }
+
+    /// Evict the member with the smallest crowding distance (NSGA-II):
+    /// per objective, sort members by that objective's value; the two
+    /// boundary members get `+inf`, interior members accumulate the
+    /// normalized span of their neighbors.  All comparisons use
+    /// `total_cmp` with an ordinal tie-break, so the eviction choice is
+    /// a pure function of the archive contents.
+    fn prune_one(&mut self) {
+        let n = self.archive.len();
+        debug_assert!(n > 1);
+        let mut crowd = vec![0f64; n];
+        let mut order: Vec<usize> = (0..n).collect();
+        for m in 0..self.k {
+            order.sort_by(|&a, &b| {
+                self.archive[a].objs[m]
+                    .total_cmp(&self.archive[b].objs[m])
+                    .then(self.archive[a].ordinal.cmp(&self.archive[b].ordinal))
+            });
+            let lo = self.archive[order[0]].objs[m] as f64;
+            let hi = self.archive[order[n - 1]].objs[m] as f64;
+            let span = hi - lo;
+            crowd[order[0]] = f64::INFINITY;
+            crowd[order[n - 1]] = f64::INFINITY;
+            if span <= 0.0 {
+                continue; // degenerate axis: no interior contribution
+            }
+            for w in 1..n - 1 {
+                if crowd[order[w]].is_infinite() {
+                    continue;
+                }
+                let below = self.archive[order[w - 1]].objs[m] as f64;
+                let above = self.archive[order[w + 1]].objs[m] as f64;
+                crowd[order[w]] += (above - below) / span;
+            }
+        }
+        // Smallest crowding loses; among equals the latest arrival
+        // (highest ordinal) is evicted, keeping early members sticky.
+        let mut victim = 0usize;
+        for v in 1..n {
+            let c = crowd[v].total_cmp(&crowd[victim]).then(
+                self.archive[victim].ordinal.cmp(&self.archive[v].ordinal),
+            );
+            if c == std::cmp::Ordering::Less {
+                victim = v;
+            }
+        }
+        self.archive.remove(victim);
+    }
+}
+
+impl ObjectiveSelector for ParetoSelector {
+    type Output = Vec<ParetoEntry>;
+
+    fn n_objectives(&self) -> usize {
+        self.k
+    }
+
+    fn offer(&mut self, i: usize, objs: &[f32]) {
+        debug_assert_eq!(objs.len(), self.k);
+        for e in &self.archive {
+            if dominates(&e.objs, objs) || e.objs == objs {
+                return; // dominated, or a duplicate of a first-seen point
+            }
+        }
+        self.archive.retain(|e| !dominates(objs, &e.objs));
+        self.archive.push(ParetoEntry { ordinal: i, objs: objs.to_vec() });
+        if self.archive.len() > self.capacity {
+            self.prune_one();
+        }
+    }
+
+    fn is_terminal(&self) -> bool {
+        false // no sound early exit for a nondominated front
+    }
+
+    fn finish(self) -> Self::Output {
+        self.archive
     }
 }
 
@@ -648,6 +862,54 @@ impl SelectEngine {
         po: f32,
         eval: E,
     ) -> Option<SelectOutcome> {
+        let mut sel = Selector::new(lo, po);
+        let offered = self.scan_with(spec, cands, &eval, &mut sel)?;
+        let (ordinal, l_opt, p_opt) = sel.result()?;
+        let mut cur = cands.cursor();
+        cur.skip_to(ordinal as u128);
+        Some(SelectOutcome {
+            ordinal,
+            cfg_idx: cur.current().to_vec(),
+            latency: l_opt,
+            power: p_opt,
+            n_enumerated: offered,
+        })
+    }
+
+    /// Scan `cands` into a capacity-bounded nondominated archive
+    /// ([`ParetoSelector`]) through a chunk evaluator.
+    ///
+    /// Same enumeration, evaluation and in-order merge as
+    /// [`SelectEngine::run_chunked`], but the selector keeps a Pareto
+    /// archive instead of Algorithm 2's single incumbent and never
+    /// exits early, so the whole capped space is offered — the archive
+    /// is bitwise identical at any thread count.  Returns None only for
+    /// degenerate candidate sets.
+    pub fn run_pareto_chunked<E: ChunkEval>(
+        &self,
+        spec: &SpaceSpec,
+        cands: &Candidates,
+        archive_cap: usize,
+        eval: E,
+    ) -> Option<ParetoOutcome> {
+        let mut sel = ParetoSelector::new(eval.n_objectives(), archive_cap);
+        let offered = self.scan_with(spec, cands, &eval, &mut sel)?;
+        Some(pareto_outcome(cands, sel.finish(), offered))
+    }
+
+    /// The shared scan body: validate the candidate set, resolve the
+    /// cap and worker count, and stream every candidate's objective
+    /// vector through `sel` strictly in enumeration order.  Returns the
+    /// number of candidates offered, or None for degenerate candidate
+    /// sets.
+    fn scan_with<E: ChunkEval, S: ObjectiveSelector>(
+        &self,
+        spec: &SpaceSpec,
+        cands: &Candidates,
+        eval: &E,
+        sel: &mut S,
+    ) -> Option<usize> {
+        debug_assert_eq!(eval.n_objectives(), sel.n_objectives());
         if cands.kept.len() != spec.groups.len()
             || cands.kept.iter().any(|ks| ks.is_empty())
         {
@@ -667,24 +929,56 @@ impl SelectEngine {
         let min_shard = self.min_shard.max(1);
         let workers =
             self.resolved_threads().min((n / min_shard).max(1));
-        let (sel, offered) = if workers == 1 {
-            scan_sequential(spec, cands, lo, po, &eval, n, self.chunk)
+        Some(if workers == 1 {
+            scan_sequential(spec, cands, eval, n, self.chunk, sel)
         } else {
-            scan_streaming(
-                spec, cands, lo, po, &eval, n, self.chunk, workers,
-            )
-        };
-        let (ordinal, l_opt, p_opt) = sel.result()?;
-        let mut cur = cands.cursor();
-        cur.skip_to(ordinal as u128);
-        Some(SelectOutcome {
-            ordinal,
-            cfg_idx: cur.current().to_vec(),
-            latency: l_opt,
-            power: p_opt,
-            n_enumerated: offered,
+            scan_streaming(spec, cands, eval, n, self.chunk, workers, sel)
         })
     }
+}
+
+/// Outcome of one Pareto archive scan.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParetoOutcome {
+    /// Archive members in ascending enumeration order, with their
+    /// per-group choice indices resolved.
+    pub points: Vec<ParetoPoint>,
+    /// Candidates offered — always `min(count, cap)` (no early exit).
+    pub n_enumerated: usize,
+}
+
+/// One resolved member of a [`ParetoOutcome`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParetoPoint {
+    /// Position in enumeration order.
+    pub ordinal: usize,
+    /// Per-group choice indices.
+    pub cfg_idx: Vec<usize>,
+    /// The K objective values (latency, power for the built-in models).
+    pub objs: Vec<f32>,
+}
+
+/// Resolve an archive's ordinals back to per-group choice indices.
+/// Crate-visible: the distributed coordinator ([`dist`]) builds its
+/// outcome through the same path as the local engine.
+pub(crate) fn pareto_outcome(
+    cands: &Candidates,
+    archive: Vec<ParetoEntry>,
+    offered: usize,
+) -> ParetoOutcome {
+    let points = archive
+        .into_iter()
+        .map(|e| {
+            let mut cur = cands.cursor();
+            cur.skip_to(e.ordinal as u128);
+            ParetoPoint {
+                ordinal: e.ordinal,
+                cfg_idx: cur.current().to_vec(),
+                objs: e.objs,
+            }
+        })
+        .collect();
+    ParetoOutcome { points, n_enumerated: offered }
 }
 
 /// Fill `cfgs` (row-major `[rows, groups]`) with the raw values of the
@@ -721,35 +1015,34 @@ pub(crate) fn fill_chunk(
 /// The single-threaded scan (also the reference semantics): stream
 /// chunk-sized batches through the evaluator and the selector, with the
 /// same per-offer early-exit rule as the merge.
-fn scan_sequential<E: ChunkEval>(
+fn scan_sequential<E: ChunkEval, S: ObjectiveSelector>(
     spec: &SpaceSpec,
     cands: &Candidates,
-    lo: f32,
-    po: f32,
     eval: &E,
     n: usize,
     chunk: usize,
-) -> (Selector, usize) {
+    sel: &mut S,
+) -> usize {
     let gl = spec.groups.len();
+    let k = sel.n_objectives();
     let chunk = chunk.max(1).min(n);
     let mut cfgs = vec![0f32; chunk * gl];
-    let mut objs: Vec<(f32, f32)> = Vec::with_capacity(chunk);
+    let mut objs: Vec<f32> = Vec::with_capacity(chunk * k);
     let mut cur = cands.cursor();
-    let mut sel = Selector::new(lo, po);
     let mut i = 0usize;
     'scan: while i < n {
         let rows = chunk.min(n - i);
         fill_chunk(&mut cur, &spec.groups, &mut cfgs, rows, n - i);
         eval.eval_chunk(&cfgs[..rows * gl], rows, &mut objs);
-        for &(l, p) in objs.iter() {
-            sel.offer(i, l, p);
+        for o in objs.chunks_exact(k) {
+            sel.offer(i, o);
             i += 1;
             if sel.is_terminal() {
                 break 'scan; // no later candidate can win
             }
         }
     }
-    (sel, i)
+    i
 }
 
 /// The streaming parallel scan, with **round-robin chunk assignment**:
@@ -777,17 +1070,17 @@ fn scan_sequential<E: ChunkEval>(
 /// Once the selector turns terminal the merger raises `cancel`, stops
 /// offering, and drains the channels so blocked producers can exit.
 #[allow(clippy::too_many_arguments)]
-fn scan_streaming<E: ChunkEval>(
+fn scan_streaming<E: ChunkEval, S: ObjectiveSelector>(
     spec: &SpaceSpec,
     cands: &Candidates,
-    lo: f32,
-    po: f32,
     eval: &E,
     n: usize,
     chunk: usize,
     workers: usize,
-) -> (Selector, usize) {
+    sel: &mut S,
+) -> usize {
     let chunk = chunk.max(1);
+    let nk = sel.n_objectives();
     let kept = &cands.kept;
     let groups = &spec.groups;
     // Overflow-safe ceil-div: n can be usize::MAX (an uncapped scan of
@@ -801,9 +1094,9 @@ fn scan_streaming<E: ChunkEval>(
         let mut chans = Vec::with_capacity(workers);
         for k in 0..workers {
             let (tx, rx) =
-                mpsc::sync_channel::<Vec<(f32, f32)>>(CHUNKS_IN_FLIGHT);
+                mpsc::sync_channel::<Vec<f32>>(CHUNKS_IN_FLIGHT);
             let (rec_tx, rec_rx) =
-                mpsc::sync_channel::<Vec<(f32, f32)>>(CHUNKS_IN_FLIGHT + 2);
+                mpsc::sync_channel::<Vec<f32>>(CHUNKS_IN_FLIGHT + 2);
             let cancel = &cancel;
             s.spawn(move || {
                 let mut cur = CandidateCursor::new(kept);
@@ -841,7 +1134,6 @@ fn scan_streaming<E: ChunkEval>(
         // replays the global enumeration order.  After early exit the
         // drain loop keeps receiving (without offering) so producers
         // blocked on a full channel always complete.
-        let mut sel = Selector::new(lo, po);
         let mut i = 0usize;
         let mut stopped = false;
         for j in 0..n_chunks {
@@ -850,8 +1142,8 @@ fn scan_streaming<E: ChunkEval>(
                 break; // producer cancelled (early exit already seen)
             };
             if !stopped {
-                for &(l, p) in buf.iter() {
-                    sel.offer(i, l, p);
+                for o in buf.chunks_exact(nk) {
+                    sel.offer(i, o);
                     i += 1;
                     if sel.is_terminal() {
                         stopped = true;
@@ -870,7 +1162,7 @@ fn scan_streaming<E: ChunkEval>(
         for (rx, _) in &chans {
             while rx.recv().is_ok() {}
         }
-        (sel, i)
+        i
     })
 }
 
@@ -1253,14 +1545,183 @@ mod tests {
     #[test]
     fn chunk_eval_closure_matches_scalar_rows() {
         // the blanket ChunkEval impl must clear stale contents and
-        // evaluate row-by-row in order
+        // evaluate row-by-row in order, interleaving K=2 objectives
         let eval = |raw: &[f32]| (raw[0] * 2.0, raw[1] + 1.0);
+        assert_eq!(ChunkEval::n_objectives(&eval), 2);
         let cfgs = [1.0f32, 10.0, 2.0, 20.0, 3.0, 30.0];
-        let mut out = vec![(9.0, 9.0)];
+        let mut out = vec![9.0];
         ChunkEval::eval_chunk(&eval, &cfgs, 3, &mut out);
-        assert_eq!(out, vec![(2.0, 11.0), (4.0, 21.0), (6.0, 31.0)]);
+        assert_eq!(out, vec![2.0, 11.0, 4.0, 21.0, 6.0, 31.0]);
         ChunkEval::eval_chunk(&eval, &[], 0, &mut out);
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn selector_zero_objectives_are_not_a_sentinel() {
+        // Regression: the seed used `l_opt == 0 && p_opt == 0` as its
+        // "no best yet" state, so a legitimate (0, 0)-valued incumbent
+        // re-triggered the first-candidate branch and any later
+        // candidate (however bad) replaced it.  Option-backed state
+        // must keep the (0, 0) incumbent through the scenario rules.
+        let mut s = Selector::new(10.0, 10.0);
+        s.offer(0, 0.0, 0.0); // both better than the objectives
+        assert_eq!(s.result(), Some((0, 0.0, 0.0)));
+        assert!(!s.is_terminal());
+        s.offer(1, 20.0, 20.0); // strictly worse on both -> rejected
+        assert_eq!(s.result(), Some((0, 0.0, 0.0)));
+        s.offer(2, 5.0, 5.0); // scenario 1: not a strict improvement
+        assert_eq!(s.result(), Some((0, 0.0, 0.0)));
+        // a single zero objective is equally safe
+        let mut s = Selector::new(10.0, 10.0);
+        s.offer(0, 0.0, 20.0); // latency ok, power not (scenario 3 state)
+        s.offer(1, 30.0, 1.0); // latency would break LO -> rejected
+        assert_eq!(s.result(), Some((0, 0.0, 20.0)));
+        s.offer(2, 5.0, 15.0); // power improves, latency stays <= LO
+        assert_eq!(s.result(), Some((2, 5.0, 15.0)));
+    }
+
+    #[test]
+    fn selector_trait_view_matches_inherent() {
+        let mut a = Selector::new(10.0, 10.0);
+        let mut b = Selector::new(10.0, 10.0);
+        let stream = [(20.0, 5.0), (12.0, 9.0), (11.0, 11.0), (10.0, 6.0)];
+        for (i, &(l, p)) in stream.iter().enumerate() {
+            a.offer(i, l, p);
+            ObjectiveSelector::offer(&mut b, i, &[l, p]);
+            assert_eq!(
+                Selector::is_terminal(&a),
+                ObjectiveSelector::is_terminal(&b)
+            );
+        }
+        assert_eq!(ObjectiveSelector::n_objectives(&b), 2);
+        assert_eq!(a.result(), b.finish());
+    }
+
+    #[test]
+    fn dominates_is_strict_pareto_order() {
+        assert!(dominates(&[1.0, 2.0], &[2.0, 2.0]));
+        assert!(dominates(&[1.0, 1.0], &[2.0, 2.0]));
+        assert!(!dominates(&[1.0, 3.0], &[2.0, 2.0])); // trade-off
+        assert!(!dominates(&[2.0, 2.0], &[2.0, 2.0])); // equal: not strict
+        assert!(!dominates(&[f32::NAN, 1.0], &[2.0, 2.0]));
+        assert!(!dominates(&[1.0, 1.0], &[f32::NAN, 2.0]));
+    }
+
+    #[test]
+    fn pareto_selector_keeps_nondominated_set() {
+        let mut s = ParetoSelector::new(2, 16);
+        assert!(!s.is_terminal());
+        s.offer(0, &[4.0, 4.0]);
+        s.offer(1, &[2.0, 6.0]); // trade-off: both stay
+        s.offer(2, &[5.0, 5.0]); // dominated by ordinal 0 -> rejected
+        s.offer(3, &[4.0, 4.0]); // duplicate: first-seen (0) wins
+        s.offer(4, &[1.0, 1.0]); // dominates everything -> sole member
+        assert!(!s.is_terminal()); // never terminal, by construction
+        let arch = s.finish();
+        assert_eq!(arch.len(), 1);
+        assert_eq!(arch[0], ParetoEntry { ordinal: 4, objs: vec![1.0, 1.0] });
+    }
+
+    #[test]
+    fn pareto_selector_prunes_least_crowded_at_capacity() {
+        // a 4-point staircase with capacity 3: points (1,5),(2,4),
+        // (3,3),(5,1); the boundary points (1,5) and (5,1) score +inf;
+        // crowding of (2,4) = (3-1)/4 + (5-3)/4 = 1.0 and of (3,3) =
+        // (5-2)/4 + (4-1)/4 = 1.5, so (2,4) is evicted
+        let mut s = ParetoSelector::new(2, 3);
+        s.offer(0, &[1.0, 5.0]);
+        s.offer(1, &[2.0, 4.0]);
+        s.offer(2, &[3.0, 3.0]);
+        s.offer(3, &[5.0, 1.0]); // overflow -> prune
+        let ords: Vec<usize> =
+            s.archive().iter().map(|e| e.ordinal).collect();
+        assert_eq!(ords, vec![0, 2, 3]);
+        // archive stays ascending by ordinal and nondominated
+        let arch = s.finish();
+        for w in arch.windows(2) {
+            assert!(w[0].ordinal < w[1].ordinal);
+        }
+        for a in &arch {
+            for b in &arch {
+                assert!(
+                    a.ordinal == b.ordinal || !dominates(&a.objs, &b.objs)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pareto_engine_matches_brute_force_front() {
+        let spec = builtin_spec("dnnweaver").unwrap();
+        let p = probs_for(
+            &spec,
+            &[(0, &[0, 1, 2, 3]), (1, &[0, 1, 2]), (2, &[1, 4]), (3, &[0, 2])],
+        );
+        let cands = Candidates::from_probs(&spec, &p, 0.2);
+        let net = [32.0f32, 32.0, 32.0, 32.0, 3.0, 3.0];
+        let kind = spec.kind;
+        let eval = |raw: &[f32]| kind.eval(&net, raw);
+
+        // brute force: evaluate every candidate, keep the nondominated
+        let mut all: Vec<(usize, Vec<f32>)> = Vec::new();
+        let mut i = 0usize;
+        cands.for_each_capped(usize::MAX, |idx| {
+            let raw = spec.raw_values(idx);
+            let (l, p) = kind.eval(&net, &raw);
+            all.push((i, vec![l, p]));
+            i += 1;
+        });
+        let front: Vec<usize> = all
+            .iter()
+            .filter(|(_, o)| {
+                !all.iter().any(|(_, other)| dominates(other, o))
+            })
+            .map(|(ord, _)| *ord)
+            .collect();
+        // dedup exact duplicates the archive keeps first-seen
+        let mut seen: Vec<&Vec<f32>> = Vec::new();
+        let front: Vec<usize> = front
+            .into_iter()
+            .filter(|&ord| {
+                let o = &all[ord].1;
+                if seen.iter().any(|s| *s == o) {
+                    false
+                } else {
+                    seen.push(o);
+                    true
+                }
+            })
+            .collect();
+
+        let engine = SelectEngine::sequential();
+        let out = engine
+            .run_pareto_chunked(&spec, &cands, usize::MAX, eval)
+            .unwrap();
+        let got: Vec<usize> = out.points.iter().map(|e| e.ordinal).collect();
+        assert_eq!(got, front);
+        assert_eq!(out.n_enumerated, all.len());
+        // threaded runs are bitwise identical
+        for threads in [2usize, 8] {
+            let par = SelectEngine {
+                threads,
+                min_shard: 1,
+                chunk: 16,
+                ..SelectEngine::default()
+            }
+            .run_pareto_chunked(&spec, &cands, usize::MAX, eval)
+            .unwrap();
+            assert_eq!(par.n_enumerated, out.n_enumerated);
+            assert_eq!(par.points.len(), out.points.len());
+            for (a, b) in par.points.iter().zip(&out.points) {
+                assert_eq!(a.ordinal, b.ordinal);
+                assert_eq!(a.cfg_idx, b.cfg_idx);
+                let ab: Vec<u32> =
+                    a.objs.iter().map(|v| v.to_bits()).collect();
+                let bb: Vec<u32> =
+                    b.objs.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(ab, bb, "threads={threads}");
+            }
+        }
     }
 
     #[test]

@@ -28,6 +28,11 @@
 //! Protocol (one JSON object per line, newline-terminated):
 //!   request:  {"net": [ic,oc,ow,oh,kw,kh], "lo": <f>, "po": <f>,
 //!              "rtl": <bool, optional>, "id": <any, optional — echoed>}
+//!   pareto:   {"net": [...], "lo": <f>, "po": <f>, "pareto": true,
+//!              "archive": <n, optional>, "id": <optional>} — replies
+//!             with the nondominated front ("front": [{cfg, objs,
+//!             latency, power}, ...]) instead of a single winner;
+//!             bypasses the response cache (see handle_conn).
 //!   stats:    {"stats": true, "id": <optional>}
 //!   response: {"ok": true, "cfg": {...}, "latency": <f>, "power": <f>,
 //!              "satisfied": <bool>, "n_candidates": <f>,
@@ -46,7 +51,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::explorer::{DseRequest, DseResult, Explorer};
+use crate::explorer::{
+    DseRequest, DseResult, Explorer, ParetoResult, DEFAULT_ARCHIVE,
+};
 use crate::metrics::{BucketCounters, Counter, LogHistogram};
 use crate::rtl;
 use crate::space::{SpaceSpec, N_NET};
@@ -261,9 +268,19 @@ impl<T, R> Batcher<T, R> {
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
     Dse { req: DseRequest, want_rtl: bool },
+    /// Pareto-front exploration (`"pareto": true`): the same candidate
+    /// expansion as a DSE request, but the reply is the bounded
+    /// nondominated archive (`"front": [...]`) instead of Algorithm 2's
+    /// single winner.  `archive` is the archive capacity
+    /// (`"archive": N`, default [`DEFAULT_ARCHIVE`]).
+    Pareto { req: DseRequest, archive: usize },
     /// Live-counter probe; answered immediately, bypassing the queue.
     Stats,
 }
+
+/// Upper bound on a request's archive capacity: a client must not be
+/// able to pin `usize::MAX`-sized allocations per request.
+pub const MAX_ARCHIVE: usize = 1024;
 
 /// Parse one request line.  Returns the client-supplied `id` tag (echoed
 /// verbatim in the reply — the pipelining bookkeeping hook) alongside
@@ -303,7 +320,22 @@ fn parse_body(v: &Json) -> Result<Request, String> {
     let want_rtl = v.get("rtl").and_then(Json::as_bool).unwrap_or(false);
     let mut n = [0f32; N_NET];
     n.copy_from_slice(&net);
-    Ok(Request::Dse { req: DseRequest { net: n, lo, po }, want_rtl })
+    let req = DseRequest { net: n, lo, po };
+    if v.get("pareto").and_then(Json::as_bool) == Some(true) {
+        let archive = match v.get("archive") {
+            None => DEFAULT_ARCHIVE,
+            Some(a) => a
+                .as_usize()
+                .filter(|&a| (1..=MAX_ARCHIVE).contains(&a))
+                .ok_or_else(|| {
+                    format!(
+                        "\"archive\" must be an integer in 1..={MAX_ARCHIVE}"
+                    )
+                })?,
+        };
+        return Ok(Request::Pareto { req, archive });
+    }
+    Ok(Request::Dse { req, want_rtl })
 }
 
 /// Encode one success line (echoing the client `id` tag when present).
@@ -341,6 +373,54 @@ pub fn encode_response(
     Json::obj(fields).to_string()
 }
 
+/// Encode one Pareto-front reply: `"front"` is the archive in
+/// first-seen candidate order (deterministic at any thread/worker
+/// count), each point carrying the named configuration plus its
+/// K-objective vector — with `latency`/`power` convenience fields for
+/// the builtin 2-objective families.
+pub fn encode_pareto_response(
+    spec: &SpaceSpec,
+    res: &ParetoResult,
+    info: BatchInfo,
+    id: Option<&Json>,
+) -> String {
+    let front = Json::Arr(
+        res.front
+            .iter()
+            .map(|p| {
+                let cfg = Json::Obj(
+                    spec.groups
+                        .iter()
+                        .zip(&p.cfg_raw)
+                        .map(|(g, &v)| (g.name.clone(), Json::Num(v as f64)))
+                        .collect(),
+                );
+                let objs = Json::Arr(
+                    p.objs.iter().map(|&o| Json::Num(o as f64)).collect(),
+                );
+                let mut fields = vec![("cfg", cfg), ("objs", objs)];
+                if p.objs.len() == 2 {
+                    fields.push(("latency", Json::Num(p.objs[0] as f64)));
+                    fields.push(("power", Json::Num(p.objs[1] as f64)));
+                }
+                Json::obj(fields)
+            })
+            .collect(),
+    );
+    let mut fields = vec![
+        ("ok", Json::Bool(true)),
+        ("front", front),
+        ("n_candidates", Json::Num(res.n_candidates)),
+        ("n_scanned", Json::Num(res.n_scanned as f64)),
+        ("batch_size", Json::Num(info.batch_size as f64)),
+        ("queue_us", Json::Num(info.queue_us as f64)),
+    ];
+    if let Some(id) = id {
+        fields.push(("id", id.clone()));
+    }
+    Json::obj(fields).to_string()
+}
+
 pub fn encode_error(msg: &str, id: Option<&Json>) -> String {
     let mut fields =
         vec![("ok", Json::Bool(false)), ("error", Json::str(msg))];
@@ -354,10 +434,26 @@ pub fn encode_error(msg: &str, id: Option<&Json>) -> String {
 // TCP server
 // ---------------------------------------------------------------------------
 
+/// One unit of work crossing the batcher.  DSE and Pareto requests
+/// share the queue (and therefore the batching deadline, admission
+/// bound, and worker pool); the worker partitions each batch by kind.
+#[derive(Debug, Clone)]
+enum BatchItem {
+    Dse(DseRequest),
+    Pareto(DseRequest, usize),
+}
+
+/// The matching per-item outcome.
+#[derive(Debug, Clone)]
+enum BatchOutcome {
+    Dse(DseResult),
+    Pareto(ParetoResult),
+}
+
 /// Per-request outcome crossing the batcher: exploration can fail for one
 /// batch (artifact error, runtime fault) without killing the worker
 /// thread — affected requests get an `{"ok": false}` reply instead.
-type DseReply = Result<DseResult, String>;
+type BatchReply = Result<BatchOutcome, String>;
 
 // ---------------------------------------------------------------------------
 // Response cache + in-flight dedup
@@ -407,7 +503,7 @@ struct CacheShard {
     /// Keys with a leader submission in flight → the waiters parked on
     /// it.  An entry exists from leader admission until the batch
     /// worker publishes the reply (or `fail_all` on shutdown).
-    inflight: HashMap<CacheKey, Vec<mpsc::Sender<(DseReply, BatchInfo)>>>,
+    inflight: HashMap<CacheKey, Vec<mpsc::Sender<(BatchReply, BatchInfo)>>>,
     /// Monotone recency clock for exact LRU.
     tick: u64,
     bytes: usize,
@@ -420,7 +516,7 @@ enum Admitted {
     /// Wait on this channel — either the leader's own batcher receiver
     /// or a dedup waiter fed by the publishing batch worker (the two
     /// are indistinguishable to the connection, by design).
-    Wait(mpsc::Receiver<(DseReply, BatchInfo)>),
+    Wait(mpsc::Receiver<(BatchReply, BatchInfo)>),
     /// Leader admission whose batcher submission was refused.
     Rejected(SubmitError),
 }
@@ -507,7 +603,7 @@ impl ResponseCache {
         &self,
         key: CacheKey,
         submit: impl FnOnce() -> Result<
-            mpsc::Receiver<(DseReply, BatchInfo)>,
+            mpsc::Receiver<(BatchReply, BatchInfo)>,
             SubmitError,
         >,
     ) -> Admitted {
@@ -538,11 +634,15 @@ impl ResponseCache {
     /// Called by a batch worker for every completed reply: insert into
     /// the cache (success only) and fan the reply out to every waiter
     /// parked on the key.  The sends happen outside the shard lock.
-    fn publish(&self, key: CacheKey, reply: &DseReply, info: BatchInfo) {
+    fn publish(&self, key: CacheKey, reply: &BatchReply, info: BatchInfo) {
         let waiters = {
             let mut sh = self.shard(&key).lock().unwrap();
             let waiters = sh.inflight.remove(&key).unwrap_or_default();
-            if let Ok(res) = reply {
+            // Only single-winner DSE replies are cached: Pareto
+            // requests bypass admission entirely (see handle_conn), so
+            // a Pareto outcome can only reach here via a future caller
+            // bug — ignoring it keeps the cache type-homogeneous.
+            if let Ok(BatchOutcome::Dse(res)) = reply {
                 self.insert(&mut sh, key, res.clone(), info);
             }
             waiters
@@ -615,7 +715,7 @@ impl ResponseCache {
 
 /// Everything the connection and worker threads share.
 struct Shared {
-    batcher: Batcher<DseRequest, DseReply>,
+    batcher: Batcher<BatchItem, BatchReply>,
     spec: SpaceSpec,
     workers: usize,
     /// Response cache + in-flight dedup; `None` when disabled
@@ -768,11 +868,24 @@ pub fn serve(
             let stats_sh = sh.clone();
             let publish_sh = sh.clone();
             sh.batcher.run_worker_with(
-                |reqs: &[DseRequest]| {
-                    // A failed batch must not kill the worker: every
+                |items: &[BatchItem]| {
+                    // Partition the batch by kind: the DSE subset runs
+                    // through one batched explore() (keeping inference
+                    // batching), Pareto items run their archive scans
+                    // one by one; replies reassemble in batch order.
+                    // A failed subset must not kill the worker: every
                     // request in it gets an error reply and the loop
                     // keeps serving.
-                    match ex.explore(reqs) {
+                    let dse: Vec<DseRequest> = items
+                        .iter()
+                        .filter_map(|it| match it {
+                            BatchItem::Dse(r) => Some(*r),
+                            BatchItem::Pareto(..) => None,
+                        })
+                        .collect();
+                    let mut dse_replies: std::collections::VecDeque<
+                        BatchReply,
+                    > = match ex.explore(&dse) {
                         Ok(results) => results
                             .into_iter()
                             .map(|r| {
@@ -782,19 +895,51 @@ pub fn serve(
                                 stats_sh
                                     .scanned_hist
                                     .record(r.n_scanned as u64);
-                                Ok(r)
+                                Ok(BatchOutcome::Dse(r))
                             })
                             .collect(),
                         Err(e) => {
                             let msg = format!("exploration failed: {e:#}");
-                            reqs.iter().map(|_| Err(msg.clone())).collect()
+                            dse.iter().map(|_| Err(msg.clone())).collect()
                         }
-                    }
+                    };
+                    items
+                        .iter()
+                        .map(|it| match it {
+                            BatchItem::Dse(_) => dse_replies
+                                .pop_front()
+                                .expect("one reply per DSE item"),
+                            BatchItem::Pareto(req, cap) => {
+                                match ex.pareto(
+                                    std::slice::from_ref(req),
+                                    *cap,
+                                ) {
+                                    Ok(mut rs) => {
+                                        let r = rs.remove(0);
+                                        stats_sh.cand_hist.record(
+                                            r.n_candidates as u64,
+                                        );
+                                        stats_sh
+                                            .scanned_hist
+                                            .record(r.n_scanned as u64);
+                                        Ok(BatchOutcome::Pareto(r))
+                                    }
+                                    Err(e) => Err(format!(
+                                        "exploration failed: {e:#}"
+                                    )),
+                                }
+                            }
+                        })
+                        .collect()
                 },
                 // publish on the worker thread: cache the success,
-                // fan the reply (success or error) to dedup waiters
-                |req, reply, info| {
-                    if let Some(c) = &publish_sh.cache {
+                // fan the reply (success or error) to dedup waiters.
+                // Pareto items never enter the cache (they bypass
+                // admission), so only DSE items publish.
+                |item, reply, info| {
+                    if let (BatchItem::Dse(req), Some(c)) =
+                        (item, &publish_sh.cache)
+                    {
                         c.publish(CacheKey::of(req), reply, info);
                     }
                 },
@@ -957,7 +1102,7 @@ enum Pending {
     Ready(String),
     /// Waiting on a batch worker.
     Wait {
-        rx: mpsc::Receiver<(DseReply, BatchInfo)>,
+        rx: mpsc::Receiver<(BatchReply, BatchInfo)>,
         want_rtl: bool,
         id: Option<Json>,
     },
@@ -1021,7 +1166,7 @@ fn handle_conn(stream: TcpStream, sh: &Arc<Shared>) {
                 // batcher path, so write_replies preserves submission
                 // order for mixed cache/worker replies for free.
                 Some(c) => match c.admit(CacheKey::of(&req), || {
-                    sh.batcher.submit(req)
+                    sh.batcher.submit(BatchItem::Dse(req))
                 }) {
                     Admitted::Hit(res, info) => Pending::Ready(
                         render_reply(sh, &res, info, want_rtl, id.as_ref()),
@@ -1031,13 +1176,29 @@ fn handle_conn(stream: TcpStream, sh: &Arc<Shared>) {
                         encode_error(&e.to_string(), id.as_ref()),
                     ),
                 },
-                None => match sh.batcher.submit(req) {
+                None => match sh.batcher.submit(BatchItem::Dse(req)) {
                     Ok(rx) => Pending::Wait { rx, want_rtl, id },
                     Err(e) => Pending::Ready(
                         encode_error(&e.to_string(), id.as_ref()),
                     ),
                 },
             },
+            // Pareto requests bypass the response cache entirely: the
+            // front payload is unbounded relative to a single-winner
+            // entry and the CacheKey does not carry the archive cap, so
+            // caching them would either serve wrong-capacity fronts or
+            // blow the byte budget.  They still share the batcher (and
+            // its admission bound).
+            Ok(Request::Pareto { req, archive }) => {
+                match sh.batcher.submit(BatchItem::Pareto(req, archive)) {
+                    Ok(rx) => {
+                        Pending::Wait { rx, want_rtl: false, id }
+                    }
+                    Err(e) => Pending::Ready(
+                        encode_error(&e.to_string(), id.as_ref()),
+                    ),
+                }
+            }
         };
         if tx.send(pending).is_err() {
             break; // writer half died on a socket error
@@ -1095,8 +1256,11 @@ fn resolve(p: Pending, sh: &Shared) -> String {
         Pending::Wait { rx, want_rtl, id } => match rx.recv() {
             Err(_) => encode_error("server shutting down", id.as_ref()),
             Ok((Err(e), _)) => encode_error(&e, id.as_ref()),
-            Ok((Ok(res), info)) => {
+            Ok((Ok(BatchOutcome::Dse(res)), info)) => {
                 render_reply(sh, &res, info, want_rtl, id.as_ref())
+            }
+            Ok((Ok(BatchOutcome::Pareto(res)), info)) => {
+                encode_pareto_response(&sh.spec, &res, info, id.as_ref())
             }
         },
     }
@@ -1400,6 +1564,60 @@ mod tests {
             .is_err());
         let (id, parsed) = parse_request("not json");
         assert!(id.is_none() && parsed.is_err());
+        // pareto request: archive defaults, bounds are enforced
+        let (_, parsed) = parse_request(
+            r#"{"net":[16,32,28,28,3,3],"lo":0.01,"po":1.5,"pareto":true}"#,
+        );
+        let Ok(Request::Pareto { req, archive }) = parsed else {
+            panic!("expected a pareto request")
+        };
+        assert_eq!(req.lo, 0.01);
+        assert_eq!(archive, DEFAULT_ARCHIVE);
+        let (_, parsed) = parse_request(
+            r#"{"net":[16,32,28,28,3,3],"lo":0.01,"po":1.5,"pareto":true,"archive":4}"#,
+        );
+        assert!(
+            matches!(parsed, Ok(Request::Pareto { archive: 4, .. }))
+        );
+        for bad in ["0", "1000000", "2.5"] {
+            let line = format!(
+                r#"{{"net":[16,32,28,28,3,3],"lo":0.01,"po":1.5,"pareto":true,"archive":{bad}}}"#
+            );
+            assert!(parse_request(&line).1.is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn pareto_response_encoding() {
+        use crate::explorer::ParetoFrontPoint;
+        let spec = builtin_spec("dnnweaver").unwrap();
+        let res = ParetoResult {
+            front: vec![ParetoFrontPoint {
+                cfg_idx: vec![1, 2, 3, 4],
+                cfg_raw: spec.raw_values(&[1, 2, 3, 4]),
+                objs: vec![0.01, 1.0],
+            }],
+            n_candidates: 6.0,
+            n_scanned: 6,
+        };
+        let id = Json::Num(9.0);
+        let line = encode_pareto_response(
+            &spec,
+            &res,
+            BatchInfo { batch_size: 1, queue_us: 5 },
+            Some(&id),
+        );
+        let v = Json::parse(&line).unwrap();
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(true));
+        let front = v.get("front").unwrap().as_arr().unwrap();
+        assert_eq!(front.len(), 1);
+        let p = &front[0];
+        assert_eq!(p.get("cfg").unwrap().get("PEN").unwrap().as_f64(), Some(16.0));
+        assert_eq!(p.get("objs").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(p.get("latency").unwrap().as_f64(), Some(0.01f32 as f64));
+        assert_eq!(p.get("power").unwrap().as_f64(), Some(1.0));
+        assert_eq!(v.get("n_scanned").unwrap().as_usize(), Some(6));
+        assert_eq!(v.get("id").unwrap().as_f64(), Some(9.0));
     }
 
     #[test]
@@ -1462,8 +1680,8 @@ mod tests {
     /// A leader submission that always succeeds (the sender is kept
     /// alive so the receiver stays connected).
     fn ok_submit() -> (
-        mpsc::Sender<(DseReply, BatchInfo)>,
-        mpsc::Receiver<(DseReply, BatchInfo)>,
+        mpsc::Sender<(BatchReply, BatchInfo)>,
+        mpsc::Receiver<(BatchReply, BatchInfo)>,
     ) {
         mpsc::channel()
     }
@@ -1474,7 +1692,7 @@ mod tests {
         let k = key(0.01);
         let (_tx, rx) = ok_submit();
         assert!(matches!(c.admit(k, || Ok(rx)), Admitted::Wait(_)));
-        c.publish(k, &Ok(res(3.0)), INFO);
+        c.publish(k, &Ok(BatchOutcome::Dse(res(3.0))), INFO);
         match c.admit(k, || panic!("hit must not submit")) {
             Admitted::Hit(r, info) => {
                 assert_eq!(r.latency, 3.0);
@@ -1527,7 +1745,7 @@ mod tests {
         for k in [k1, k2] {
             let (_tx, rx) = ok_submit();
             c.admit(k, || Ok(rx));
-            c.publish(k, &Ok(res(1.0)), INFO);
+            c.publish(k, &Ok(BatchOutcome::Dse(res(1.0))), INFO);
         }
         // touch k1 so k2 becomes the LRU victim
         assert!(matches!(
@@ -1536,7 +1754,7 @@ mod tests {
         ));
         let (_tx, rx) = ok_submit();
         c.admit(k3, || Ok(rx));
-        c.publish(k3, &Ok(res(3.0)), INFO);
+        c.publish(k3, &Ok(BatchOutcome::Dse(res(3.0))), INFO);
         assert_eq!(c.evictions.get(), 1);
         assert_eq!(c.entries(), 2);
         assert!(matches!(c.admit(k1, || panic!("hit")), Admitted::Hit(..)));
@@ -1557,7 +1775,7 @@ mod tests {
             let k = key(0.01 * (i + 1) as f32);
             let (_tx, rx) = ok_submit();
             c.admit(k, || Ok(rx));
-            c.publish(k, &Ok(res(1.0)), INFO);
+            c.publish(k, &Ok(BatchOutcome::Dse(res(1.0))), INFO);
         }
         assert!(c.entries() <= 1, "byte bound not enforced");
         assert!(c.evictions.get() >= 3);

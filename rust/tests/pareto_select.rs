@@ -1,0 +1,275 @@
+//! Pareto-archive parity and property tests (DESIGN.md §9).
+//!
+//! The archive's contract is stronger than "some nondominated points":
+//! with capacity ≥ front size it recovers the **exact** brute-force
+//! nondominated set of the scanned space (first-seen member of each
+//! duplicate objective vector), and at *any* capacity the outcome is
+//! bitwise identical across serial scans, multithreaded scans, and the
+//! distributed coordinator over real `gandse worker` processes — the
+//! same in-order merge determinism the single-winner scan ships.
+
+use std::io::{BufRead, BufReader};
+use std::process::{Child, Command, Stdio};
+
+use gandse::model::NetChunkEval;
+use gandse::select::dist::run_pareto_distributed;
+use gandse::select::{
+    dominates, Candidates, ParetoOutcome, SelectEngine,
+};
+use gandse::space::{builtin_spec, SpaceSpec, N_NET};
+
+const NET: [f32; N_NET] = [64.0, 128.0, 28.0, 28.0, 3.0, 3.0];
+
+fn full_candidates(spec: &SpaceSpec) -> Candidates {
+    Candidates {
+        kept: spec
+            .groups
+            .iter()
+            .map(|g| (0..g.choices.len()).collect())
+            .collect(),
+    }
+}
+
+/// Objectives of every kept candidate, in enumeration (odometer) order.
+fn all_objs<F: Fn(&[f32]) -> (f32, f32)>(
+    spec: &SpaceSpec,
+    cands: &Candidates,
+    eval: F,
+) -> Vec<Vec<f32>> {
+    let mut pos = vec![0usize; cands.kept.len()];
+    let mut out = Vec::new();
+    'outer: loop {
+        let idx: Vec<usize> = pos
+            .iter()
+            .zip(&cands.kept)
+            .map(|(&p, ks)| ks[p])
+            .collect();
+        let (l, p) = eval(&spec.raw_values(&idx));
+        out.push(vec![l, p]);
+        for g in (0..pos.len()).rev() {
+            pos[g] += 1;
+            if pos[g] < cands.kept[g].len() {
+                continue 'outer;
+            }
+            pos[g] = 0;
+        }
+        break;
+    }
+    out
+}
+
+/// Brute-force reference semantics of an uncapped archive: ordinal `j`
+/// survives iff no point dominates it and no *earlier* point has
+/// exactly equal objectives (ties keep the first-seen candidate).
+fn exact_front(objs: &[Vec<f32>]) -> Vec<usize> {
+    (0..objs.len())
+        .filter(|&j| {
+            !objs.iter().enumerate().any(|(i, o)| {
+                (i != j && dominates(o, &objs[j]))
+                    || (i < j && o == &objs[j])
+            })
+        })
+        .collect()
+}
+
+fn assert_outcome_bits_eq(a: &ParetoOutcome, b: &ParetoOutcome, ctx: &str) {
+    assert_eq!(a.n_enumerated, b.n_enumerated, "{ctx}: n_enumerated");
+    assert_eq!(a.points.len(), b.points.len(), "{ctx}: archive size");
+    let bits =
+        |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<u32>>();
+    for (x, y) in a.points.iter().zip(&b.points) {
+        assert_eq!(x.ordinal, y.ordinal, "{ctx}: ordinal");
+        assert_eq!(x.cfg_idx, y.cfg_idx, "{ctx}: cfg_idx");
+        assert_eq!(bits(&x.objs), bits(&y.objs), "{ctx}: objective bits");
+    }
+}
+
+/// Deterministic pure pseudo-random objectives keyed on the raw config
+/// values — adversarial objective landscapes without model structure.
+fn hash_eval(salt: u64) -> impl Fn(&[f32]) -> (f32, f32) + Sync + Copy {
+    move |raw: &[f32]| {
+        let mut h = salt ^ 0x9E37_79B9_7F4A_7C15;
+        for &v in raw {
+            h ^= (v.to_bits() as u64).wrapping_mul(0xA24B_AED4_963E_E407);
+            h = h.rotate_left(23).wrapping_mul(0x9FB2_1C65_1E98_DF25);
+        }
+        let l = 1e-6 + (h >> 40) as f32 / (1u64 << 24) as f32;
+        let p = 1e-3
+            + (h.wrapping_mul(0x2545_F491_4F6C_DD1D) >> 40) as f32
+                / (1u64 << 24) as f32;
+        (l, p)
+    }
+}
+
+/// Uncapped archive over the full 750-point dnnweaver space == the
+/// brute-force nondominated set, point for point and bit for bit.
+#[test]
+fn uncapped_archive_is_the_exact_brute_force_front() {
+    let spec = builtin_spec("dnnweaver").unwrap();
+    let cands = full_candidates(&spec);
+    let objs = all_objs(&spec, &cands, |raw| spec.kind.eval(&NET, raw));
+    let want = exact_front(&objs);
+    assert!(!want.is_empty() && want.len() < objs.len());
+
+    let engine =
+        SelectEngine { chunk: 64, ..SelectEngine::sequential() };
+    let eval = NetChunkEval::new(spec.kind, &NET, engine.chunk);
+    let out = engine
+        .run_pareto_chunked(&spec, &cands, objs.len(), eval)
+        .expect("non-degenerate");
+    assert_eq!(out.n_enumerated, objs.len());
+    let got: Vec<usize> = out.points.iter().map(|p| p.ordinal).collect();
+    assert_eq!(got, want, "archive ordinals vs brute force");
+    for p in &out.points {
+        let bits =
+            |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<u32>>();
+        assert_eq!(bits(&p.objs), bits(&objs[p.ordinal]));
+    }
+}
+
+/// Capacity-pruned archives keep their invariants on adversarial
+/// objective landscapes: bounded size, mutually nondominated members,
+/// strictly ascending ordinals, and objectives that re-evaluate to the
+/// same bits from the recorded cfg.
+#[test]
+fn capped_archive_invariants_hold_on_hash_landscapes() {
+    let spec = builtin_spec("im2col").unwrap();
+    let cands = full_candidates(&spec);
+    for (seed, cap) in [(1u64, 4usize), (2, 8), (3, 1), (4, 16)] {
+        let eval = hash_eval(seed.wrapping_mul(0xB16_5CA1E));
+        let engine = SelectEngine {
+            cap: 20_000,
+            chunk: 512,
+            min_shard: 1,
+            ..SelectEngine::with_threads(4)
+        };
+        let out = engine
+            .run_pareto_chunked(&spec, &cands, cap, eval)
+            .expect("non-degenerate");
+        assert_eq!(out.n_enumerated, 20_000, "no early exit in pareto mode");
+        assert!(!out.points.is_empty() && out.points.len() <= cap);
+        for w in out.points.windows(2) {
+            assert!(w[0].ordinal < w[1].ordinal, "ordinals must ascend");
+        }
+        for (i, a) in out.points.iter().enumerate() {
+            let (l, p) = eval(&spec.raw_values(&a.cfg_idx));
+            assert_eq!(l.to_bits(), a.objs[0].to_bits(), "seed={seed}");
+            assert_eq!(p.to_bits(), a.objs[1].to_bits(), "seed={seed}");
+            for (j, b) in out.points.iter().enumerate() {
+                assert!(
+                    i == j || !dominates(&a.objs, &b.objs),
+                    "seed={seed}: archive members must be mutually \
+                     nondominated ({i} dominates {j})"
+                );
+            }
+        }
+    }
+}
+
+/// The archive is bitwise identical at 1, 2 and 8 threads — including
+/// under capacity pruning, where order-dependent crowding decisions
+/// would diverge on any out-of-order merge.
+#[test]
+fn thread_count_parity_at_1_2_8() {
+    let spec = builtin_spec("im2col").unwrap();
+    let cands = full_candidates(&spec);
+    let eval = hash_eval(0x16_000_000);
+    let run = |threads: usize, cap: usize| {
+        let engine = SelectEngine {
+            cap: 30_000,
+            chunk: 256,
+            min_shard: 1,
+            ..SelectEngine::with_threads(threads)
+        };
+        engine
+            .run_pareto_chunked(&spec, &cands, cap, eval)
+            .expect("non-degenerate")
+    };
+    for cap in [3usize, 16, 1000] {
+        let serial = run(1, cap);
+        for threads in [2usize, 8] {
+            let par = run(threads, cap);
+            assert_outcome_bits_eq(
+                &par,
+                &serial,
+                &format!("threads={threads} cap={cap}"),
+            );
+        }
+    }
+}
+
+/// A spawned `gandse worker` child process, killed on drop so a failing
+/// assertion cannot leak listeners.
+struct WorkerProc {
+    child: Child,
+    addr: String,
+}
+
+impl WorkerProc {
+    fn spawn(threads: usize) -> WorkerProc {
+        let mut child = Command::new(env!("CARGO_BIN_EXE_gandse"))
+            .args([
+                "worker",
+                "--addr",
+                "127.0.0.1:0",
+                "--threads",
+                &threads.to_string(),
+            ])
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawn gandse worker");
+        let stdout = child.stdout.take().expect("piped stdout");
+        let mut line = String::new();
+        BufReader::new(stdout)
+            .read_line(&mut line)
+            .expect("worker banner");
+        let addr = line
+            .rsplit("listening on ")
+            .next()
+            .expect("banner format")
+            .split_whitespace()
+            .next()
+            .expect("banner address")
+            .to_string();
+        assert!(
+            addr.starts_with("127.0.0.1:"),
+            "unexpected worker banner: {line:?}"
+        );
+        WorkerProc { child, addr }
+    }
+}
+
+impl Drop for WorkerProc {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+/// Two real worker processes (one of them multithreaded) produce the
+/// same archive bits as the serial local scan — the lease K-field and
+/// `K·rows` reply decode path under real TCP.
+#[test]
+fn two_worker_processes_match_serial_archive() {
+    let spec = builtin_spec("im2col").unwrap();
+    let cands = full_candidates(&spec);
+    let engine = SelectEngine {
+        cap: 50_000,
+        chunk: 1024,
+        ..SelectEngine::sequential()
+    };
+    let eval = NetChunkEval::new(spec.kind, &NET, engine.chunk);
+    let local = engine
+        .run_pareto_chunked(&spec, &cands, 8, eval)
+        .expect("non-degenerate");
+    assert_eq!(local.n_enumerated, 50_000, "cap must bound the scan");
+
+    let w1 = WorkerProc::spawn(1);
+    let w2 = WorkerProc::spawn(2);
+    let addrs = vec![w1.addr.clone(), w2.addr.clone()];
+    let dist =
+        run_pareto_distributed(&spec, &cands, 8, &NET, &engine, &addrs)
+            .expect("non-degenerate");
+    assert_outcome_bits_eq(&dist, &local, "2-worker dist vs serial");
+}

@@ -120,6 +120,23 @@ for T in 1 4; do
     stop_workers
 done
 
+echo "== pareto explore: local reference =="
+"$BIN" "${EXPLORE[@]}" --pareto --archive 8 \
+    | grep -v "DSE time" >"$WORK/pareto_local.out"
+test -s "$WORK/pareto_local.out"
+grep -q "front=" "$WORK/pareto_local.out"
+
+echo "== pareto explore: 2 workers (archive must byte-match local) =="
+start_workers 1
+"$BIN" "${EXPLORE[@]}" --pareto --archive 8 \
+    --workers "127.0.0.1:$P1,127.0.0.1:$P2" --lease-depth 4 \
+    | grep -v "DSE time" >"$WORK/pareto_dist.out"
+if ! diff -u "$WORK/pareto_local.out" "$WORK/pareto_dist.out"; then
+    echo "FAIL: distributed pareto archive differs from local" >&2
+    exit 1
+fi
+stop_workers
+
 echo "== explore: kill one worker mid-scan (depth 4, must match local) =="
 start_workers 4
 "$BIN" "${EXPLORE[@]}" \

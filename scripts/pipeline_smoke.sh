@@ -36,6 +36,14 @@ echo "== explore =="
 test -s "$WORK/smoke.v"
 grep -q "module gandse_acc" "$WORK/smoke.v"
 
+echo "== pareto explore (bounded nondominated archive) =="
+"$BIN" explore --model dnnweaver --backend cpu "${SIZES[@]}" \
+    --train 256 --test 16 \
+    --ckpt "$WORK/smoke.ckpt" --lo 0.01 --po 2.0 \
+    --pareto --archive 8 >"$WORK/pareto.out"
+grep -q "front=" "$WORK/pareto.out"
+grep -q "latency=" "$WORK/pareto.out"
+
 echo "== eval =="
 "$BIN" eval --model dnnweaver --backend cpu "${SIZES[@]}" \
     --train 256 --test 32 --ckpt "$WORK/smoke.ckpt"
